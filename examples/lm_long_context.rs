@@ -1,0 +1,38 @@
+//! Long-context language modeling example (the Fig. 6 scenario): trains
+//! sliding-window-only and sw+OVQ hybrids on the synthetic book corpus,
+//! then compares loss-vs-position curves at 2x the train length — showing
+//! the OVQ dictionary carrying information past the sliding window.
+//!
+//!     cargo run --release --example lm_long_context [STEPS]
+
+use anyhow::Result;
+
+use ovq::coordinator::{evaluator, trainer};
+use ovq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let rt = Runtime::from_env()?;
+
+    for name in ["lm-sw", "lm-sw-ovq"] {
+        let (model, state) =
+            trainer::ensure_trained(&rt, name, "lm", steps, "results")?;
+        let prog = "eval_512";
+        let curve = evaluator::nll_by_position(
+            &model, &state.params, prog, "lm", 3, 13, 64,
+        )?;
+        println!("\n== {name} — NLL by position (T=512, trained at 256) ==");
+        for (pos, nll, n) in &curve {
+            let bar = "#".repeat((nll * 12.0) as usize);
+            println!("  pos {pos:>4}  nll {nll:.3}  ({n:>5} tokens) {bar}");
+        }
+    }
+    println!(
+        "\n(expected shape: lm-sw flattens once the window saturates;\n\
+         lm-sw-ovq keeps improving with position — the paper's Fig. 6)"
+    );
+    Ok(())
+}

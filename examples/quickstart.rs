@@ -1,0 +1,60 @@
+//! Quickstart: load the `quickstart` artifact bundle, initialize a model,
+//! take a few training steps on the basic in-context-recall task, and
+//! evaluate — the minimal end-to-end tour of the runtime API.
+//!
+//!     make artifacts            # once (python, build-time only)
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use ovq::data::batch::Batch;
+use ovq::data::by_name;
+use ovq::runtime::Runtime;
+use ovq::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. the runtime: PJRT CPU client + artifact directory
+    let rt = Runtime::from_env()?;
+    println!("platform: {}", rt.client.platform_name());
+
+    // 2. a model: manifest-driven (shapes, programs, config all from JSON)
+    let model = rt.load_model("quickstart")?;
+    println!(
+        "model {} — {} parameters in {} leaves",
+        model.manifest.name,
+        model.manifest.total_param_elems(),
+        model.manifest.param_count(),
+    );
+
+    // 3. fresh training state (params on device, optimizer zeroed)
+    let mut state = model.init(42)?;
+
+    // 4. a task generator (pure Rust, deterministic)
+    let vocab = model.manifest.cfg_usize("vocab", 256);
+    let gen = by_name("icr", vocab);
+    let (b, t) = model.train_shape()?;
+    let mut rng = Rng::new(7);
+
+    // 5. train a few steps
+    for _ in 0..10 {
+        let batch = Batch::generate_train(gen.as_ref(), &mut rng, b, t);
+        let m = model.train_step(&mut state, &batch.tokens, &batch.targets, &batch.mask)?;
+        println!("step {:>2}  loss {:.4}  lr {:.2e}", m.step, m.loss, m.lr);
+    }
+
+    // 6. evaluate at the train length
+    let batch = Batch::generate(gen.as_ref(), &mut rng, 2, 128);
+    let ev = model.eval("eval_128", &state.params, &batch.tokens, &batch.targets, &batch.mask)?;
+    println!("eval loss {:.4}  recall accuracy {:.3}", ev.loss, {
+        let c: f32 = ev.correct.iter().sum();
+        let m: f32 = batch.mask.iter().sum();
+        c / m.max(1.0)
+    });
+
+    // 7. checkpoint round-trip
+    model.save_checkpoint(&state, "/tmp/quickstart.ckpt")?;
+    let restored = model.load_checkpoint("/tmp/quickstart.ckpt")?;
+    assert_eq!(restored.step, state.step);
+    println!("checkpoint round-trip OK (step {})", restored.step);
+    Ok(())
+}

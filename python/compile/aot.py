@@ -1,0 +1,191 @@
+"""AOT compiler: lowers every registered model's init / train / eval
+programs to HLO *text* + a JSON manifest the Rust runtime consumes.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Program signatures (flat-leaf convention, the contract with rust/src/runtime):
+  init : (seed u32[2]) -> (P param leaves)
+  train: (P params, P m, P v, step i32[], tokens i32[B,T], targets i32[B,T],
+          mask f32[B,T]) -> (P params', P m', P v', step', loss, lr)
+  eval : (P params, tokens, targets, mask) -> (loss, correct[B,T], nll[B,T])
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only a,b]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32",
+            "bfloat16": "bf16"}[jnp.dtype(dt).name]
+
+
+def param_layout(cfg):
+    """Flat leaf (name, ShapeDtypeStruct) list + treedef for config cfg."""
+    shapes = jax.eval_shape(
+        lambda k: model.init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    names = [jax.tree_util.keystr(path) for path, _ in leaves_p]
+    leaves = [leaf for _, leaf in leaves_p]
+    return names, leaves, treedef
+
+
+def spec(leaf):
+    return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+
+
+def lower_init(cfg):
+    def init_flat(seed):
+        key = jax.random.wrap_key_data(seed, impl="threefry2x32")
+        params = model.init_params(key, cfg)
+        return tuple(jax.tree_util.tree_leaves(params))
+    return jax.jit(init_flat).lower(jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def lower_train(cfg, leaves, treedef, B, T):
+    P = len(leaves)
+
+    def train_flat(*args):
+        params = jax.tree_util.tree_unflatten(treedef, args[:P])
+        m = jax.tree_util.tree_unflatten(treedef, args[P:2 * P])
+        v = jax.tree_util.tree_unflatten(treedef, args[2 * P:3 * P])
+        step, tokens, targets, mask = args[3 * P:]
+        p2, m2, v2, step2, loss, lr = train.train_step(
+            params, m, v, step, tokens, targets, mask, cfg)
+        return (tuple(jax.tree_util.tree_leaves(p2))
+                + tuple(jax.tree_util.tree_leaves(m2))
+                + tuple(jax.tree_util.tree_leaves(v2))
+                + (step2, loss, lr))
+
+    specs = ([spec(l) for l in leaves] * 3
+             + [jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((B, T), jnp.int32),
+                jax.ShapeDtypeStruct((B, T), jnp.int32),
+                jax.ShapeDtypeStruct((B, T), jnp.float32)])
+    return jax.jit(train_flat).lower(*specs)
+
+
+def lower_eval(cfg, leaves, treedef, B, T):
+    P = len(leaves)
+
+    def eval_flat(*args):
+        params = jax.tree_util.tree_unflatten(treedef, args[:P])
+        tokens, targets, mask = args[P:]
+        return model.eval_step(params, tokens, targets, mask, cfg)
+
+    specs = ([spec(l) for l in leaves]
+             + [jax.ShapeDtypeStruct((B, T), jnp.int32),
+                jax.ShapeDtypeStruct((B, T), jnp.int32),
+                jax.ShapeDtypeStruct((B, T), jnp.float32)])
+    return jax.jit(eval_flat).lower(*specs)
+
+
+def emit_entry(entry, out_dir, log=print):
+    name = entry["name"]
+    cfg = entry["config"]
+    names, leaves, treedef = param_layout(cfg)
+    B, T = entry["train_shape"]["batch"], entry["train_shape"]["seq"]
+    eb = entry["eval_batch"]
+
+    manifest = {
+        "name": name,
+        "config": cfg,
+        "params": [
+            {"name": n, "shape": list(l.shape), "dtype": _dtype_name(l.dtype)}
+            for n, l in zip(names, leaves)
+        ],
+        "programs": {},
+    }
+
+    def emit(prog_name, lowered, extra):
+        fname = f"{name}.{prog_name}.hlo.txt"
+        t0 = time.time()
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["programs"][prog_name] = {"file": fname, **extra}
+        log(f"  [{name}] {prog_name}: {len(text) / 1e6:.1f} MB "
+            f"({time.time() - t0:.1f}s)")
+
+    if "init" in entry["programs"]:
+        emit("init", lower_init(cfg), {})
+    if "train" in entry["programs"]:
+        emit("train", lower_train(cfg, leaves, treedef, B, T),
+             {"batch": B, "seq": T})
+    if "eval" in entry["programs"]:
+        for L in entry["eval_lens"]:
+            emit(f"eval_{L}", lower_eval(cfg, leaves, treedef, eb, L),
+                 {"batch": eb, "seq": L})
+        for nd in entry["eval_n_dicts"]:
+            if nd == cfg["n_dict"]:
+                continue
+            cfg_nd = dict(cfg, n_dict=nd)
+            for L in entry["eval_lens"]:
+                emit(f"eval_{L}_N{nd}",
+                     lower_eval(cfg_nd, leaves, treedef, eb, L),
+                     {"batch": eb, "seq": L, "n_dict": nd})
+
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated registry names (default: all)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for n in configs.REGISTRY:
+            print(n)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    wanted = [w for w in args.only.split(",") if w] or list(configs.REGISTRY)
+    # merge with any models already present (partial --only runs)
+    index_path = os.path.join(args.out, "index.json")
+    index = []
+    if os.path.exists(index_path):
+        with open(index_path) as f:
+            index = json.load(f).get("models", [])
+    t0 = time.time()
+    for name in wanted:
+        entry = configs.REGISTRY[name]
+        print(f"[aot] emitting {name} "
+              f"(pattern={entry['config']['pattern']})", flush=True)
+        emit_entry(entry, args.out)
+        if name not in index:
+            index.append(name)
+    with open(index_path, "w") as f:
+        json.dump({"models": index}, f, indent=1)
+    print(f"[aot] done: {len(index)} models in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

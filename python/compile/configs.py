@@ -1,0 +1,161 @@
+"""Experiment configuration registry.
+
+Every entry maps a model name to (model config, program shapes). The Rust
+coordinator is fully manifest-driven: adding an entry here and re-running
+`make artifacts` is all it takes to expose a new model to the runtime.
+
+Scaling note (DESIGN.md §3): the paper's 70M–480M models / 4k–64k contexts
+are scaled to CPU-PJRT-trainable sizes. All *relative* quantities (window
+vs chunk vs dictionary size vs train length ratios) follow the paper:
+window 128 ≈ chunk 128, N ≈ 0.5–4× train length, test length up to 16×
+train length.
+"""
+
+from __future__ import annotations
+
+import copy
+
+# ----------------------------------------------------------------- families
+
+BASE = {
+    "dim": 128,
+    "heads": 4,
+    "d_head": 32,
+    "mlp_hidden": 256,
+    "vocab": 512,
+    "window": 32,
+    "chunk": 32,
+    "n_dict": 128,
+    "tile_n": 128,
+    "tile_r": 64,
+    "aux_weight": 0.1,
+    # optimizer (overridable per entry)
+    "lr": 1e-3,
+    "warmup": 40,
+    "total_steps": 800,
+    "min_lr": 1e-5,
+    "weight_decay": 0.01,
+}
+
+TINY = dict(BASE, dim=64, heads=2, d_head=32, mlp_hidden=128, vocab=256,
+            n_dict=64, total_steps=200)
+
+
+def _cfg(pattern, **over):
+    c = copy.deepcopy(BASE)
+    c["pattern"] = list(pattern)
+    c.update(over)
+    return c
+
+
+# Standard shapes: train [B=8, T=256]; eval at the train length and the
+# length-extrapolation sweep. eval_n_dicts exposes the paper's test-time
+# dictionary scaling (Fig. 4): same params, bigger N at eval.
+TRAIN_SHAPE = {"batch": 4, "seq": 256}
+EVAL_LENS = [256, 512, 1024, 2048]
+EVAL_BATCH = 2
+
+REGISTRY = {}
+
+
+def register(name, cfg, train_shape=None, eval_lens=None, eval_batch=None,
+             eval_n_dicts=None, programs=("init", "train", "eval")):
+    REGISTRY[name] = {
+        "name": name,
+        "config": cfg,
+        "train_shape": train_shape or dict(TRAIN_SHAPE),
+        "eval_lens": list(eval_lens or EVAL_LENS),
+        "eval_batch": eval_batch or EVAL_BATCH,
+        "eval_n_dicts": list(eval_n_dicts or []),
+        "programs": list(programs),
+    }
+
+
+# ------------------------------------------------------------ quickstart
+
+register("quickstart",
+         _cfg(["swa", "ovq"], **{k: TINY[k] for k in
+                                 ("dim", "heads", "d_head", "mlp_hidden",
+                                  "vocab", "n_dict", "total_steps")}),
+         train_shape={"batch": 4, "seq": 128},
+         eval_lens=[128, 256], eval_batch=2)
+
+# ------------------------------------------- ICR family (Figs 1, 4, 7, 8)
+
+_ICR = dict(total_steps=400)
+
+register("icr-sw-nope", _cfg(["swa", "attn_nope", "swa", "attn_nope"], **_ICR))
+register("icr-sw-ovq", _cfg(["swa", "ovq", "swa", "ovq"], **_ICR),
+         eval_n_dicts=[64, 128, 256, 512])
+for n in (32, 64, 128):
+    register(f"icr-sw-vq{n}",
+             _cfg(["swa", "vq", "swa", "vq"], n_dict=n, **_ICR))
+
+# ablations (Fig 7): same parameter structure as icr-sw-ovq, different
+# online-learning rules — flags only affect the forward dynamics.
+register("icr-sw-ovq-randassign",
+         _cfg(["swa", "ovq", "swa", "ovq"], rand_assign=True, **_ICR))
+register("icr-sw-ovq-lineargrow",
+         _cfg(["swa", "ovq", "swa", "ovq"], linear_growth=True, **_ICR))
+register("icr-sw-ovq-constlr",
+         _cfg(["swa", "ovq", "swa", "ovq"], const_lr=True, **_ICR))
+
+# linear-attention / SSM baselines (Fig 8)
+register("icr-gdn", _cfg(["gdn", "gdn", "gdn", "gdn"], **_ICR))
+register("icr-ssd", _cfg(["ssd", "ssd", "ssd", "ssd"], **_ICR))
+register("icr-linattn", _cfg(["linattn"] * 4, **_ICR))
+
+# RoPE variant (Fig 10) + v-shift (Fig 13)
+register("icr-ovq-rope", _cfg(["ovq_rope"] * 4, **_ICR))
+register("icr-att-rope", _cfg(["attn_rope"] * 4, **_ICR))
+register("icr-sw-ovq-vshift",
+         _cfg(["swa", "ovq", "swa", "ovq"], vshift=True, **_ICR))
+
+# ----------------------------------------------- ICL family (Figs 5, 8)
+
+_ICL = dict(total_steps=500)
+register("icl-sw-nope", _cfg(["swa", "attn_nope", "swa", "attn_nope"], **_ICL))
+register("icl-sw-ovq", _cfg(["swa", "ovq", "swa", "ovq"], **_ICL),
+         eval_n_dicts=[128, 256])
+register("icl-sw-vq", _cfg(["swa", "vq", "swa", "vq"], **_ICL))
+register("icl-gdn", _cfg(["gdn"] * 4, **_ICL))
+register("icl-ssd", _cfg(["ssd"] * 4, **_ICL))
+
+# ----------------------------------------------- LM family (Figs 6, 9, 12)
+
+_LM = dict(total_steps=400, vocab=512)
+register("lm-sw", _cfg(["swa", "swa", "swa", "swa"], **_LM),
+         eval_lens=[256, 512, 1024])
+register("lm-sw-nope", _cfg(["swa", "attn_nope", "swa", "attn_nope"], **_LM),
+         eval_lens=[256, 512, 1024])
+register("lm-sw-ovq", _cfg(["swa", "ovq", "swa", "ovq"], **_LM),
+         eval_lens=[256, 512, 1024], eval_n_dicts=[128, 256])
+register("lm-sw-vq", _cfg(["swa", "vq", "swa", "vq"], **_LM),
+         eval_lens=[256, 512, 1024])
+register("lm-gdn", _cfg(["gdn"] * 4, **_LM), eval_lens=[256, 512, 1024])
+register("lm-gdn-ovq", _cfg(["gdn", "ovq", "gdn", "ovq"], **_LM),
+         eval_lens=[256, 512, 1024])
+register("lm-std-att", _cfg(["attn_rope"] * 4, **_LM),
+         eval_lens=[256, 512, 1024])
+register("lm-ovq-rope", _cfg(["ovq_rope"] * 4, **_LM),
+         eval_lens=[256, 512, 1024])
+# LM ablations (Fig 12)
+register("lm-sw-ovq-lineargrow",
+         _cfg(["swa", "ovq", "swa", "ovq"], linear_growth=True, **_LM),
+         eval_lens=[256, 512])
+register("lm-sw-ovq-constlr",
+         _cfg(["swa", "ovq", "swa", "ovq"], const_lr=True, **_LM),
+         eval_lens=[256, 512])
+register("lm-sw-ovq-randassign",
+         _cfg(["swa", "ovq", "swa", "ovq"], rand_assign=True, **_LM),
+         eval_lens=[256, 512])
+
+# ------------------------------------------- short-context family (Table 1)
+
+_SC = dict(total_steps=300)
+register("sc-std-att", _cfg(["attn_rope"] * 4, **_SC),
+         train_shape={"batch": 4, "seq": 192}, eval_lens=[192])
+register("sc-sw-nope", _cfg(["swa", "attn_nope", "swa", "attn_nope"], **_SC),
+         train_shape={"batch": 4, "seq": 192}, eval_lens=[192])
+register("sc-sw-ovq", _cfg(["swa", "ovq", "swa", "ovq"], **_SC),
+         train_shape={"batch": 4, "seq": 192}, eval_lens=[192])

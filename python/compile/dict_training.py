@@ -1,0 +1,107 @@
+"""Fig 14 reproduction: VQ dictionary-training methods compared by
+commitment error (mean cosine similarity between keys and their nearest
+centroid) over training iterations.
+
+The paper compares DiVeq, SF-DiVeq and DiVeq + a "no-use penalty". DiVeq
+itself is unavailable offline (DESIGN.md §2.3), so we compare the same
+*failure mode* (dead centroids) across our substitutions:
+
+  * ste        — classic VQ-VAE: STE + commitment + codebook loss
+  * ste_pen    — ste + the paper's no-use penalty (a growing similarity
+                 bonus for centroids that have not been selected recently)
+  * ema        — exponential-moving-average codebook (VQ-VAE-2 style)
+
+Usage: cd python && python -m compile.dict_training [--iters 300]
+Writes results/f14_dict_training.csv with columns
+  method,iter,commitment,dead_frac
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+
+def make_keys(rng, n, d, centers, drift=0.01):
+    """Synthetic key stream: mixture of slowly-drifting clusters (what a
+    real attention layer's keys look like: clustered, non-stationary).
+    Drifts `centers` in place."""
+    centers += drift * rng.normal(size=centers.shape)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    idx = rng.integers(0, centers.shape[0], n)
+    k = centers[idx] + 0.05 * rng.normal(size=(n, d))
+    return k / np.linalg.norm(k, axis=1, keepdims=True)
+
+
+def commitment(keys, dic):
+    sims = keys @ dic.T
+    return float(np.mean(sims.max(axis=1)))
+
+
+def train_dict(method, rng, iters, n_dict=64, d=32, batch=64, lr=0.1):
+    dic = rng.normal(size=(n_dict, d))
+    dic /= np.linalg.norm(dic, axis=1, keepdims=True)
+    usage = np.zeros(n_dict)
+    penalty = np.zeros(n_dict)
+    ema_c = np.zeros((n_dict, d))
+    ema_n = np.zeros(n_dict)
+    centers = rng.normal(size=(8, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    rows = []
+    for it in range(iters):
+        keys = make_keys(rng, batch, d, centers)
+        sims = keys @ dic.T
+        if method == "ste_pen":
+            sims = sims + penalty[None, :]
+        assign = sims.argmax(axis=1)
+
+        if method in ("ste", "ste_pen"):
+            # gradient of the codebook loss ||sg(k) - mu||^2 per assignment
+            for s in np.unique(assign):
+                sel = assign == s
+                grad = dic[s] - keys[sel].mean(axis=0)
+                dic[s] -= lr * grad
+        elif method == "ema":
+            decay = 0.95
+            onehot = np.zeros((batch, n_dict))
+            onehot[np.arange(batch), assign] = 1
+            ema_n = decay * ema_n + (1 - decay) * onehot.sum(0)
+            ema_c = decay * ema_c + (1 - decay) * (onehot.T @ keys)
+            nz = ema_n > 1e-3
+            dic[nz] = ema_c[nz] / ema_n[nz, None]
+        dic /= np.maximum(np.linalg.norm(dic, axis=1, keepdims=True), 1e-9)
+
+        used = np.zeros(n_dict, bool)
+        used[np.unique(assign)] = True
+        usage = 0.98 * usage + 0.02 * used
+        if method == "ste_pen":
+            # the paper's no-use penalty: grows while unused, resets on use
+            penalty = np.where(used, 0.0, penalty + 0.0025)
+
+        rows.append((it, commitment(keys, dic), float((usage < 0.005).mean())))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--out", default="../results/f14_dict_training.csv")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("method,iter,commitment,dead_frac\n")
+        for method in ("ste", "ste_pen", "ema"):
+            rng = np.random.default_rng(0)
+            rows = train_dict(method, rng, args.iters)
+            for it, com, dead in rows:
+                f.write(f"{method},{it},{com},{dead}\n")
+            print(f"{method:8} final commitment {rows[-1][1]:.4f} "
+                  f"dead {rows[-1][2] * 100:.1f}%")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Autodiff-capable wrappers around the Pallas kernels.
+
+pallas_call (even with interpret=True) does not define general VJP rules, so
+— exactly like production flash-attention kernels — we pair the Pallas
+forward with a hand-wired backward derived from the pure-jnp reference via
+jax.vjp. The forward that lands in the lowered HLO artifact is the Pallas
+kernel; the backward recomputes the (cheap, chunk-sized) reference
+attention. Numerically the two paths agree to float32 tolerance, which
+python/tests/test_kernel_ad.py asserts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .ovq_attn import ovq_chunk_attn
+from .swa_attn import swa_attn
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ovq_chunk_attn_ad(q, ke, ve, bias, beta, n_dict, tile_n=128):
+    """Differentiable OVQ chunk attention: Pallas fwd, reference-vjp bwd.
+
+    Gradients flow into q, ke, ve and beta (not bias: counts are discrete
+    statistics, matching the paper where the count vector is not a learned
+    quantity).
+    """
+    return ovq_chunk_attn(q, ke, ve, bias, beta, n_dict=n_dict, tile_n=tile_n)
+
+
+def _ovq_fwd(q, ke, ve, bias, beta, n_dict, tile_n):
+    out = ovq_chunk_attn(q, ke, ve, bias, beta, n_dict=n_dict, tile_n=tile_n)
+    return out, (q, ke, ve, bias, beta)
+
+
+def _ovq_bwd(n_dict, tile_n, res, g):
+    q, ke, ve, bias, beta = res
+    def f(q_, ke_, ve_, beta_):
+        return ref.ovq_chunk_attn_ref(q_, ke_, ve_, bias, beta_, n_dict)
+    _, vjp = jax.vjp(f, q, ke, ve, beta)
+    dq, dke, dve, dbeta = vjp(g)
+    return dq, dke, dve, jnp.zeros_like(bias), dbeta
+
+
+ovq_chunk_attn_ad.defvjp(_ovq_fwd, _ovq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def swa_attn_ad(q, k, v, beta, window, tile_r=64):
+    """Differentiable sliding-window attention: Pallas fwd, reference bwd."""
+    return swa_attn(q, k, v, beta, window=window, tile_r=tile_r)
+
+
+def _swa_fwd(q, k, v, beta, window, tile_r):
+    out = swa_attn(q, k, v, beta, window=window, tile_r=tile_r)
+    return out, (q, k, v, beta)
+
+
+def _swa_bwd(window, tile_r, res, g):
+    q, k, v, beta = res
+    def f(q_, k_, v_, beta_):
+        return ref.swa_attn_ref(q_, k_, v_, window, beta_)
+    _, vjp = jax.vjp(f, q, k, v, beta)
+    return vjp(g)
+
+
+swa_attn_ad.defvjp(_swa_fwd, _swa_bwd)

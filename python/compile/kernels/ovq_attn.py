@@ -1,0 +1,116 @@
+"""Pallas kernel for the OVQ chunk attention (paper eq. 15).
+
+Computes, per (batch, head):
+
+    O = softmax(beta * Q_c [D_k; K_c]^T + log[c; 1] + M) [D_v; V_c]
+
+with a flash-attention-style streaming softmax over column tiles so the
+logits matrix is never materialized at full [L, N+L] size. On a real TPU the
+two matmuls per tile map onto the MXU and the running max/denominator updates
+onto the VPU; the column-tile loop expresses the HBM->VMEM schedule the paper
+did with CUDA threadblocks (see DESIGN.md #Hardware-Adaptation).
+
+interpret=True is mandatory on this image: CPU PJRT cannot execute Mosaic
+custom-calls. Numerics are identical to the TPU lowering.
+
+Inputs (see kernels/ref.py for the shape conventions):
+  q    [B, H, L, d]
+  ke   [B, H, NT, d]   NT = n_dict + L, dictionary slots then raw chunk keys
+  ve   [B, H, NT, d]
+  bias [B, H, NT]      log-counts (NEG_INF for inactive slots), 0 for chunk
+beta is traced (scalar array); n_dict and tile_n are static.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _ovq_kernel(beta_ref, q_ref, ke_ref, ve_ref, bias_ref, o_ref, *, n_dict,
+                n_total, tile_n):
+    """One program instance handles one (batch, head) pair.
+
+    Streaming softmax over column tiles of size tile_n:
+      m   running row-max       [L, 1]
+      s   running denominator   [L, 1]
+      acc running weighted sum  [L, d]
+    """
+    L, d = q_ref.shape
+    beta = beta_ref[0]
+    q = q_ref[...]  # [L, d]
+
+    n_tiles = pl.cdiv(n_total, tile_n)
+    row = jax.lax.broadcasted_iota(jnp.int32, (L, tile_n), 0)
+
+    def body(i, carry):
+        m, s, acc = carry
+        start = i * tile_n
+        kt = pl.load(ke_ref, (pl.ds(start, tile_n), slice(None)))  # [tn, d]
+        bt = pl.load(bias_ref, (pl.ds(start, tile_n),))            # [tn]
+        logits = beta * jax.lax.dot_general(
+            q, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) + bt[None, :]  # [L, tn]
+        # Dictionary columns are always visible; chunk column j only to
+        # queries i >= j. The same predicate masks the cdiv padding tail
+        # (global col >= n_total fails both branches).
+        col = start + jax.lax.broadcasted_iota(jnp.int32, (L, tile_n), 1)
+        visible = (col < n_dict) | ((col - n_dict <= row) & (col < n_total))
+        logits = jnp.where(visible, logits, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(logits, axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)  # [L, tn]
+        vt = pl.load(ve_ref, (pl.ds(start, tile_n), slice(None)))  # [tn, d]
+        acc = acc * alpha + jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = s * alpha + jnp.sum(p, axis=1, keepdims=True)
+        return m_new, s, acc
+
+    m0 = jnp.full((L, 1), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((L, 1), jnp.float32)
+    acc0 = jnp.zeros((L, d), jnp.float32)
+    _, s, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, s0, acc0))
+    o_ref[...] = (acc / s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dict", "tile_n"))
+def ovq_chunk_attn(q, ke, ve, bias, beta, *, n_dict, tile_n=128):
+    """Pallas OVQ chunk attention. See module docstring for shapes."""
+    B, H, L, d = q.shape
+    n_total = ke.shape[2]
+    tile_n = int(min(tile_n, max(8, n_total)))
+    # Pad the column axis to a tile multiple: in-kernel dynamic slices must
+    # never clamp (a clamped slice would desynchronize loaded data from the
+    # global column indices used by the mask). The mask hides the pad tail.
+    if n_total % tile_n != 0:
+        cpad = tile_n - n_total % tile_n
+        ke = jnp.pad(ke, ((0, 0), (0, 0), (0, cpad), (0, 0)))
+        ve = jnp.pad(ve, ((0, 0), (0, 0), (0, cpad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, 0), (0, cpad)))
+    n_cols = ke.shape[2]
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1)
+
+    kernel = functools.partial(
+        _ovq_kernel, n_dict=n_dict, n_total=n_total, tile_n=tile_n
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (0,)),
+            pl.BlockSpec((None, None, L, d), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, n_cols, d), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, n_cols, d), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, n_cols), lambda b, h: (b, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, L, d), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, d), q.dtype),
+        interpret=True,
+    )(beta_arr, q, ke, ve, bias)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth for the whole stack: the Pallas
+kernels (interpret=True) are checked against these under pytest/hypothesis,
+and the lowered HLO artifacts inherit that guarantee.
+
+Shapes follow the paper's chunk-parallel formulation (eq. 15):
+  q     [B, H, L, d]      queries of the current chunk
+  ke    [B, H, N + L, d]  [D_k ; K_c]   (dictionary then raw chunk keys)
+  ve    [B, H, N + L, d]  [D_v ; V_c]
+  bias  [B, H, N + L]     log-counts for dictionary slots (-inf = inactive),
+                          zeros for the raw chunk positions
+The causal structure: every query sees all N dictionary slots; query i sees
+chunk position j iff j <= i.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps softmax NaN-free when a
+# row has no visible key (cannot happen here: chunk key i is always visible
+# to query i) and survives f32<->bf16 round trips.
+
+
+def ovq_chunk_attn_ref(q, ke, ve, bias, beta, n_dict):
+    """Reference for the OVQ chunk-attention kernel (paper eq. 15).
+
+    softmax(beta * q @ ke^T + bias + M) @ ve   with the dictionary-vs-chunk
+    causal mask M described in the module docstring.
+    """
+    B, H, L, d = q.shape
+    n_total = ke.shape[2]
+    logits = beta * jnp.einsum("bhld,bhnd->bhln", q, ke) + bias[:, :, None, :]
+    # mask: columns < n_dict always visible; column n_dict + j visible iff j <= i
+    col = jnp.arange(n_total)[None, :]
+    row = jnp.arange(L)[:, None]
+    visible = (col < n_dict) | ((col - n_dict) <= row)
+    logits = jnp.where(visible[None, None], logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhln,bhnd->bhld", p, ve)
+
+
+def swa_attn_ref(q, k, v, window, beta):
+    """Reference sliding-window causal attention.
+
+    q,k,v [B, H, T, d]; query i attends to keys j with i-window < j <= i.
+    """
+    T = q.shape[2]
+    logits = beta * jnp.einsum("bhtd,bhsd->bhts", q, k)
+    row = jnp.arange(T)[:, None]
+    col = jnp.arange(T)[None, :]
+    visible = (col <= row) & (col > row - window)
+    logits = jnp.where(visible[None, None], logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v)
+
+
+def full_attn_ref(q, k, v, beta, causal=True):
+    """Reference full (softmax) attention, optionally causal."""
+    T, S = q.shape[2], k.shape[2]
+    logits = beta * jnp.einsum("bhtd,bhsd->bhts", q, k)
+    if causal:
+        row = jnp.arange(T)[:, None]
+        col = jnp.arange(S)[None, :]
+        logits = jnp.where((col <= row)[None, None], logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v)

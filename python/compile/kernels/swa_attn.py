@@ -1,0 +1,93 @@
+"""Pallas kernel for sliding-window causal attention.
+
+Query i attends to keys j with  i - window < j <= i.  The grid tiles rows;
+each program loads the static-size column slab [row_start - window + 1,
+row_start + tile_r) that covers every key its row tile can see (clamped to 0
+with in-kernel masking for the left edge), so the work per program is
+O(tile_r * (tile_r + window)) regardless of sequence length — the banded
+structure of the paper's sw layers.
+
+interpret=True — see ovq_attn.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _swa_kernel(beta_ref, q_ref, k_ref, v_ref, o_ref, *, window, tile_r, seq_len):
+    r = pl.program_id(2)
+    row_start = r * tile_r
+    L, d = q_ref.shape  # L == tile_r
+    beta = beta_ref[0]
+    q = q_ref[...]
+
+    slab = tile_r + window  # static column slab size
+    # Desired global start is row_start - window + 1; clamp to 0 and mask.
+    start = jnp.maximum(row_start - window + 1, 0)
+    # Keep the slab fully in-bounds: pl.ds with a dynamic start clamps like
+    # lax.dynamic_slice, but we mask with *global* indices computed from the
+    # same clamped start so logits always match their true positions.
+    start = jnp.minimum(start, jnp.maximum(seq_len - slab, 0))
+    kt = pl.load(k_ref, (pl.ds(start, slab), slice(None)))  # [slab, d]
+    vt = pl.load(v_ref, (pl.ds(start, slab), slice(None)))
+
+    logits = beta * jax.lax.dot_general(
+        q, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [L, slab]
+    grow = row_start + jax.lax.broadcasted_iota(jnp.int32, (L, slab), 0)
+    gcol = start + jax.lax.broadcasted_iota(jnp.int32, (L, slab), 1)
+    visible = (gcol <= grow) & (gcol > grow - window) & (grow < seq_len)
+    logits = jnp.where(visible, logits, NEG_INF)
+
+    m = jnp.max(logits, axis=1, keepdims=True)
+    p = jnp.exp(logits - m)
+    s = jnp.sum(p, axis=1, keepdims=True)
+    o = jax.lax.dot_general(
+        p, vt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) / s
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "tile_r"))
+def swa_attn(q, k, v, beta, *, window, tile_r=64):
+    """Pallas sliding-window causal attention; q,k,v [B,H,T,d]."""
+    B, H, T, d = q.shape
+    tile_r = int(min(tile_r, T))
+    if T % tile_r != 0:
+        # pad rows to a tile multiple; masked out via grow < seq_len
+        pad = tile_r - T % tile_r
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        pad = 0
+        qp = q
+    Tp = T + pad
+    # K/V must be at least one column slab long so in-kernel dynamic slices
+    # stay in bounds; masking handles the padded tail (gcol < seq_len).
+    Tk = max(Tp, tile_r + int(window))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tk - T), (0, 0))) if Tk > T else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tk - T), (0, 0))) if Tk > T else v
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1)
+    kernel = functools.partial(
+        _swa_kernel, window=int(window), tile_r=tile_r, seq_len=T
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, Tp // tile_r),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, r: (0,)),
+            pl.BlockSpec((None, None, tile_r, d), lambda b, h, r: (b, h, r, 0)),
+            pl.BlockSpec((None, None, Tk, d), lambda b, h, r: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, Tk, d), lambda b, h, r: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, tile_r, d), lambda b, h, r: (b, h, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tp, d), q.dtype),
+        interpret=True,
+    )(beta_arr, qp, kp, vp)
+    return out[:, :, :T] if pad else out

@@ -1,0 +1,12 @@
+"""L2 layer library: mixers and building blocks for the hybrid transformer.
+
+Every mixer follows the same functional convention:
+
+    init_<mixer>(key, cfg)                  -> params (pytree of arrays)
+    <mixer>_forward(params, x, cfg)         -> (y, aux_loss)
+
+with x, y of shape [B, T, D]. aux_loss is a scalar (0.0 for mixers without
+auxiliary objectives; VQ-attention returns its commitment/codebook loss).
+"""
+
+from . import common, attn, ovq, vq, gdn, linattn, ssd  # noqa: F401

@@ -1,0 +1,46 @@
+"""Softmax attention mixers: full attention (NoPE or RoPE) and
+sliding-window attention (RoPE) backed by the Pallas SWA kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..kernels.ad import swa_attn_ad
+from ..kernels.ref import full_attn_ref
+from . import common
+
+
+def init_full_attn(key, cfg):
+    return common.qkv_init(key, cfg["dim"], cfg["heads"], cfg["d_head"])
+
+
+def full_attn_forward(params, x, cfg):
+    """Full causal attention. cfg['rope']: True -> RoPE, False -> NoPE.
+
+    The quadratic form is intentional: this is the paper's *baseline*
+    (std-att / the full-attention half of sw-nope), not the contribution.
+    """
+    heads, d_head = cfg["heads"], cfg["d_head"]
+    q, k, v = common.project_qkv(params, x, heads, d_head)
+    if cfg.get("rope", False):
+        pos = jnp.arange(x.shape[1])
+        q = common.apply_rope(q, pos)
+        k = common.apply_rope(k, pos)
+    o = full_attn_ref(q, k, v, 1.0, causal=True)  # beta pre-folded into q
+    return common.merge_heads(params, o), jnp.zeros(())
+
+
+def init_swa(key, cfg):
+    return common.qkv_init(key, cfg["dim"], cfg["heads"], cfg["d_head"])
+
+
+def swa_forward(params, x, cfg):
+    """Sliding-window attention with RoPE (window cfg['window'])."""
+    heads, d_head = cfg["heads"], cfg["d_head"]
+    q, k, v = common.project_qkv(params, x, heads, d_head)
+    pos = jnp.arange(x.shape[1])
+    q = common.apply_rope(q, pos)
+    k = common.apply_rope(k, pos)
+    o = swa_attn_ad(q, k, v, jnp.float32(1.0), cfg["window"],
+                    cfg.get("tile_r", 64))
+    return common.merge_heads(params, o), jnp.zeros(())

@@ -1,0 +1,175 @@
+"""Shared building blocks: norms, MLP, RoPE, projections, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, fan_in, fan_out, scale=1.0):
+    """Truncated-normal-ish dense init (normal / sqrt(fan_in))."""
+    return (scale / jnp.sqrt(fan_in)) * jax.random.normal(
+        key, (fan_in, fan_out), jnp.float32
+    )
+
+
+def embed_init(key, vocab, dim):
+    return 0.02 * jax.random.normal(key, (vocab, dim), jnp.float32)
+
+
+# ---------------------------------------------------------------------- norm
+
+def rmsnorm_init(dim):
+    return {"g": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return params["g"] * x * jax.lax.rsqrt(ms + eps)
+
+
+def unit_norm(x, eps=1e-6):
+    """L2-normalize the last axis (paper: unit-norm queries/keys/centroids)."""
+    n = jnp.sqrt(jnp.sum(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return x / n
+
+
+# ----------------------------------------------------------------------- mlp
+
+def mlp_init(key, dim, hidden):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, dim, hidden),
+        "w_up": dense_init(k2, dim, hidden),
+        "w_down": dense_init(k3, hidden, dim),
+    }
+
+
+def mlp(params, x):
+    """SwiGLU MLP."""
+    g = jax.nn.silu(x @ params["w_gate"])
+    u = x @ params["w_up"]
+    return (g * u) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_freqs(d_head, base=10000.0):
+    inv = 1.0 / (base ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+    return inv  # [d_head/2]
+
+
+def apply_rope(x, positions, base=10000.0):
+    """Rotate x [B, H, T, d] by per-position angles; positions [T] or [B,T]."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, base)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * inv[None, :]  # [T, d/2]
+        ang = ang[None, None]  # [1,1,T,d/2]
+    else:
+        ang = positions[:, :, None].astype(jnp.float32) * inv[None, None, :]
+        ang = ang[:, None]  # [B,1,T,d/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+
+
+# ------------------------------------------------------------- qkv plumbing
+
+def qkv_init(key, dim, heads, d_head, beta0=8.0):
+    """Projections + learned per-head scale beta (paper 8.1/8.2/8.3).
+
+    beta is stored as log(beta0) and exponentiated at use: keeps it positive
+    and gives multiplicative learning dynamics.
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    hd = heads * d_head
+    return {
+        "w_q": dense_init(k1, dim, hd),
+        "w_k": dense_init(k2, dim, hd),
+        "w_v": dense_init(k3, dim, hd),
+        "w_o": dense_init(k4, hd, dim),
+        "log_beta": jnp.full((heads,), jnp.log(beta0), jnp.float32),
+    }
+
+
+def project_qkv(params, x, heads, d_head, normalize_qk=True):
+    """x [B,T,D] -> q,k,v [B,H,T,d]; q is pre-scaled by per-head beta.
+
+    Pre-scaling q by beta is mathematically identical to passing a per-head
+    beta into the attention kernels (which take a single scalar).
+    """
+    B, T, _ = x.shape
+
+    def split(h):
+        return h.reshape(B, T, heads, d_head).transpose(0, 2, 1, 3)
+
+    q = split(x @ params["w_q"])
+    k = split(x @ params["w_k"])
+    v = split(x @ params["w_v"])
+    if normalize_qk:
+        q = unit_norm(q)
+        k = unit_norm(k)
+    beta = jnp.exp(params["log_beta"])  # [H]
+    q = q * beta[None, :, None, None]
+    return q, k, v
+
+
+def merge_heads(params, o):
+    """o [B,H,T,d] -> [B,T,D] through the output projection."""
+    B, H, T, d = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(B, T, H * d) @ params["w_o"]
+
+
+# ------------------------------------------------------- short conv / vshift
+
+def conv_shift_init():
+    """Learned mixing scalars for qk-conv + v-shift (paper App. C)."""
+    return {"alpha_qk": jnp.zeros(()), "alpha_v": jnp.zeros(())}
+
+
+def qk_short_conv(x, alpha):
+    """Depthwise width-2 causal conv: x_t' = s*x_t + (1-s)*x_{t-1}."""
+    s = jax.nn.sigmoid(alpha)
+    prev = jnp.pad(x, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+    return s * x + (1.0 - s) * prev
+
+
+def v_shift(v, alpha):
+    """Associate k_t with a mix of v_t and v_{t+1}, then shift to keep
+    causality (paper App. C: v_{t+1/2} construction, keys/values shifted)."""
+    s = jax.nn.sigmoid(alpha)
+    nxt = jnp.pad(v, ((0, 0), (0, 0), (0, 1), (0, 0)))[:, :, 1:]
+    mixed = s * v + (1.0 - s) * nxt
+    # shift one step so position t holds v_{t-1+1/2} (no future leakage)
+    return jnp.pad(mixed, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+
+
+# ------------------------------------------------------------------- growth
+
+def growth_schedule(n_max, chunk_len, n_chunks, linear=False):
+    """Paper eqs. 17-18: number of new centroids added per chunk.
+
+    Returns an int32 array [n_chunks]. Plateauing: N_t = t*N/(t+N); the
+    linear ablation divides the same final total evenly across chunks.
+    """
+    import numpy as np
+
+    t = np.arange(0, n_chunks + 1) * chunk_len
+    n_t = np.floor(t * n_max / np.maximum(t + n_max, 1)).astype(np.int64)
+    if linear:
+        total = int(n_t[-1])
+        base = total // n_chunks
+        extra = total % n_chunks
+        out = np.full(n_chunks, base, np.int64)
+        out[:extra] += 1
+    else:
+        out = n_t[1:] - n_t[:-1]
+    assert out.max() <= chunk_len, "growth cannot exceed chunk length"
+    return jnp.asarray(out, jnp.int32)

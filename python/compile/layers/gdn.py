@@ -1,0 +1,57 @@
+"""Gated Delta Net (Yang et al. 2024a) — the strongest constant-memory
+baseline in the paper (gdn / gdn-ovq interleaves, Figs. 6 and 8).
+
+Recurrence per token (delta rule with a scalar forget gate per head):
+
+    S_t = alpha_t * S_{t-1} + beta_t * k_t^T (v_t - k_t S_{t-1})
+    o_t = q_t S_t
+
+alpha_t = sigmoid(w_a x_t), beta_t = sigmoid(w_b x_t) are data-dependent.
+Implemented as a token-level lax.scan: exact, simple, and fast enough at
+this repo's scales (the chunkwise WY form is a pure-throughput optimization
+that does not change numerics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init_gdn(key, cfg):
+    p = common.qkv_init(key, cfg["dim"], cfg["heads"], cfg["d_head"])
+    k1, k2 = jax.random.split(key, 2)
+    p["w_alpha"] = common.dense_init(k1, cfg["dim"], cfg["heads"], scale=0.1)
+    p["w_beta"] = common.dense_init(k2, cfg["dim"], cfg["heads"], scale=0.1)
+    return p
+
+
+def gdn_forward(params, x, cfg):
+    B, T, D = x.shape
+    heads, d_head = cfg["heads"], cfg["d_head"]
+
+    q, k, v = common.project_qkv(params, x, heads, d_head)
+    # gates: bias toward remembering (alpha near 1) at init
+    alpha = jax.nn.sigmoid(x @ params["w_alpha"] + 4.0)  # [B,T,H]
+    beta = jax.nn.sigmoid(x @ params["w_beta"])          # [B,T,H]
+
+    qs = q.transpose(2, 0, 1, 3)  # [T,B,H,d]
+    ks = k.transpose(2, 0, 1, 3)
+    vs = v.transpose(2, 0, 1, 3)
+    als = alpha.transpose(1, 0, 2)  # [T,B,H]
+    bes = beta.transpose(1, 0, 2)
+
+    def step(S, xs):
+        qt, kt, vt, at, bt = xs  # [B,H,d], gates [B,H]
+        pred = jnp.einsum("bhd,bhde->bhe", kt, S)          # k_t S
+        S = at[..., None, None] * S + bt[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kt, vt - pred)
+        o = jnp.einsum("bhd,bhde->bhe", qt, S)
+        return S, o
+
+    S0 = jnp.zeros((B, heads, d_head, d_head), x.dtype)
+    _, outs = jax.lax.scan(step, S0, (qs, ks, vs, als, bes))
+    o = outs.transpose(1, 2, 0, 3)  # [B,H,T,d]
+    return common.merge_heads(params, o), jnp.zeros(())

@@ -1,0 +1,64 @@
+"""Vanilla linear attention (Katharopoulos et al. 2020) — constant-memory
+baseline with the dense rank-1 state update the paper contrasts against
+(Fig. 3 / §3.4).
+
+Chunk-parallel form: carry S = sum phi(k)^T v and z = sum phi(k); per chunk
+the intra-chunk causal part is a masked quadratic over the (small) chunk and
+the inter-chunk part reads the carried state. phi = elu + 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init_linattn(key, cfg):
+    return common.qkv_init(key, cfg["dim"], cfg["heads"], cfg["d_head"])
+
+
+def _phi(x):
+    return jax.nn.elu(x) + 1.0
+
+
+def linattn_forward(params, x, cfg):
+    B, T, D = x.shape
+    heads, d_head = cfg["heads"], cfg["d_head"]
+    L = cfg["chunk"]
+
+    q, k, v = common.project_qkv(params, x, heads, d_head, normalize_qk=False)
+    q, k = _phi(q), _phi(k)
+
+    pad = (-T) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    C = Tp // L
+
+    def chunked(a):
+        return a.reshape(B, heads, C, L, d_head).transpose(2, 0, 1, 3, 4)
+
+    qs, ks, vs = chunked(q), chunked(k), chunked(v)
+    mask = jnp.tril(jnp.ones((L, L), x.dtype))
+
+    def step(carry, xs):
+        S, z = carry  # S [B,H,d,d], z [B,H,d]
+        qc, kc, vc = xs
+        inter = jnp.einsum("bhld,bhde->bhle", qc, S)
+        intra_w = jnp.einsum("bhld,bhmd->bhlm", qc, kc) * mask[None, None]
+        intra = jnp.einsum("bhlm,bhme->bhle", intra_w, vc)
+        den = jnp.einsum("bhld,bhd->bhl", qc, z) + jnp.sum(intra_w, axis=-1)
+        o = (inter + intra) / jnp.maximum(den, 1e-6)[..., None]
+        S = S + jnp.einsum("bhld,bhle->bhde", kc, vc)
+        z = z + jnp.sum(kc, axis=2)
+        return (S, z), o
+
+    S0 = jnp.zeros((B, heads, d_head, d_head), x.dtype)
+    z0 = jnp.zeros((B, heads, d_head), x.dtype)
+    _, outs = jax.lax.scan(step, (S0, z0), (qs, ks, vs))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(B, heads, Tp, d_head)[:, :, :T]
+    return common.merge_heads(params, o), jnp.zeros(())

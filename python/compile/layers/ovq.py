@@ -1,0 +1,220 @@
+"""OVQ-attention — the paper's contribution (Section 3).
+
+Chunk-parallel online Gaussian-mixture-regression layer:
+
+  per chunk c (lax.scan):
+    1. predict  (eq. 15): Pallas chunk-attention over [D_k; K_c] with
+       log-count bias and causal in-chunk mask;
+    2. grow     (eqs. 17-18): n_new spread-maximizing new centroids
+       (lowest max-similarity items of the chunk);
+    3. update   (eq. 19): merge remaining items into their nearest centroid
+       with the adaptive 1/(c + c_chunk) learning rate — the online k-means
+       / single-EM / Newton step of Appendix A.
+
+State per (batch, head): D_k, D_v in R^{N x d}, counts in R^N, plus the
+scalar active-size driven by the plateauing growth schedule N_t = tN/(t+N).
+Inactive slots carry count 0 and are masked with a -inf bias; all shapes are
+static (jit-friendly), exactly the trick a TPU implementation needs.
+
+The scatter of the paper's pseudo-code (App. 8.3) is re-expressed as one-hot
+matmuls (A^T K_c), which is both MXU-friendly and differentiable: gradients
+flow into K_c/V_c through the weighted-sum merge — no straight-through
+estimator, as the paper highlights.
+
+Ablation flags (Fig. 7/11/12): cfg['rand_assign'], cfg['linear_growth'],
+cfg['const_lr']. Extensions (App. C): cfg['rope'] (rotate current+previous
+chunk, dictionary at position 0), cfg['vshift'] (v-shift + qk short conv).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ad import ovq_chunk_attn_ad
+from . import common
+from .common import NEG_INF
+
+
+def init_ovq(key, cfg):
+    p = common.qkv_init(key, cfg["dim"], cfg["heads"], cfg["d_head"])
+    if cfg.get("vshift", False):
+        p["conv"] = common.conv_shift_init()
+    return p
+
+
+def _rank(values, ascending=True):
+    """Rank of each element along the last axis (0 = smallest).
+
+    The clustering decision is hard/non-differentiable (paper §3.2):
+    stop_gradient keeps autodiff from tracing sort's JVP (gradients flow
+    through the count-weighted merge, not the assignment)."""
+    values = jax.lax.stop_gradient(values)
+    order = jnp.argsort(values if ascending else -values, axis=-1)
+    return jnp.argsort(order, axis=-1)
+
+
+def nn_assignments(D_k, counts, kc):
+    """Nearest active centroid for each chunk key: (best_idx, best_sim).
+
+    Key-only similarity, not [k,v]-similarity — the paper found this works
+    equally well at half the compute (App. 8.3)."""
+    sims = jnp.einsum("bhld,bhnd->bhln", kc, D_k)
+    sims = jnp.where((counts > 0)[:, :, None, :], sims, NEG_INF)
+    return jnp.argmax(sims, axis=-1), jnp.max(sims, axis=-1)
+
+
+def ovq_update(D_k, D_v, counts, n_active, kc, vc, n_new, best_idx, priority,
+               cfg):
+    """One online GMM update for chunk (kc, vc): grow + merge.
+
+    best_idx: [B,H,L] nearest-centroid assignment from nn_assignments.
+    priority: [B,H,L] values whose *lowest* n_new entries become the new
+    centroids. The paper's scheme passes the max-similarity to the existing
+    dictionary; the rand_assign ablation passes random values.
+    Returns the new (D_k, D_v, counts, n_active).
+    """
+    B, H, L, d = kc.shape
+    N = D_k.shape[2]
+
+    # spread-maximizing growth: lowest-priority items become new centroids
+    rank = _rank(priority, ascending=True)
+    is_new = rank < n_new  # [B,H,L]
+    new_ord = jnp.cumsum(is_new.astype(jnp.int32), axis=-1) - 1
+    assign = jnp.where(is_new, n_active + new_ord, best_idx)  # [B,H,L]
+
+    A = jax.nn.one_hot(assign, N, dtype=kc.dtype)  # [B,H,L,N]
+    cc = jnp.sum(A, axis=2)  # [B,H,N] chunk counts
+    sum_k = jnp.einsum("bhln,bhld->bhnd", A, kc)
+    sum_v = jnp.einsum("bhln,bhld->bhnd", A, vc)
+
+    counts_new = counts + cc
+    denom = jnp.maximum(counts_new, 1.0)[..., None]
+    touched = (cc > 0)[..., None]
+    if cfg.get("const_lr", False):
+        # first-order ablation: fixed-lr k-means step (gradient descent on
+        # the k-means loss instead of the Newton/EM step). Fresh slots are
+        # still seeded with the chunk mean (a zero vector is not a centroid).
+        lr = cfg.get("const_lr_value", 0.025)
+        fresh = ((counts == 0.0) & (cc > 0))[..., None]
+        ccn = jnp.maximum(cc, 1.0)[..., None]
+        seeded = sum_k / ccn
+        stepped = D_k + lr * (sum_k - cc[..., None] * D_k)
+        D_k_new = jnp.where(fresh, seeded, jnp.where(touched, stepped, D_k))
+        seeded_v = sum_v / ccn
+        stepped_v = D_v + lr * (sum_v - cc[..., None] * D_v)
+        D_v_new = jnp.where(fresh, seeded_v, jnp.where(touched, stepped_v, D_v))
+    else:
+        # eq. 19 in exact batch form: the count-weighted mean merge
+        # mu' = (c*mu + sum_x) / (c + c_chunk)  — adaptive lr 1/(c+cc).
+        D_k_new = jnp.where(touched, (counts[..., None] * D_k + sum_k) / denom, D_k)
+        D_v_new = jnp.where(touched, (counts[..., None] * D_v + sum_v) / denom, D_v)
+
+    if cfg.get("norm_dict", False):
+        D_k_new = jnp.where(counts_new[..., None] > 0,
+                            common.unit_norm(D_k_new), D_k_new)
+
+    return D_k_new, D_v_new, counts_new, n_active + n_new
+
+
+def ovq_forward(params, x, cfg):
+    """OVQ-attention over x [B,T,D]. Returns (y [B,T,D], aux_loss=0)."""
+    B, T, D = x.shape
+    heads, d_head = cfg["heads"], cfg["d_head"]
+    L = cfg["chunk"]
+    N = cfg["n_dict"]
+    tile_n = cfg.get("tile_n", 128)
+    use_rope = cfg.get("rope", False)
+
+    q, k, v = common.project_qkv(params, x, heads, d_head)
+    if cfg.get("vshift", False):
+        q = common.qk_short_conv(q, params["conv"]["alpha_qk"])
+        k = common.qk_short_conv(k, params["conv"]["alpha_qk"])
+        k = jnp.pad(k, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+        v = common.v_shift(v, params["conv"]["alpha_v"])
+
+    pad = (-T) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    C = Tp // L
+
+    n_new = common.growth_schedule(N, L, C, linear=cfg.get("linear_growth", False))
+    if cfg.get("rand_assign", False):
+        prio = jax.random.uniform(jax.random.PRNGKey(cfg.get("seed", 0)),
+                                  (C, B, heads, L))
+    else:
+        prio = None
+
+    # [C, B, H, L, d] chunked views as scan inputs
+    def chunked(a):
+        return a.reshape(B, heads, C, L, d_head).transpose(2, 0, 1, 3, 4)
+
+    qs, ks, vs = chunked(q), chunked(k), chunked(v)
+
+    D_k0 = jnp.zeros((B, heads, N, d_head), x.dtype)
+    D_v0 = jnp.zeros((B, heads, N, d_head), x.dtype)
+    counts0 = jnp.zeros((B, heads, N), jnp.float32)
+    n_active0 = jnp.zeros((), jnp.int32)
+    if use_rope:
+        pk0 = jnp.zeros((B, heads, L, d_head), x.dtype)
+        pv0 = jnp.zeros((B, heads, L, d_head), x.dtype)
+        pbias0 = jnp.full((B, heads, L), NEG_INF, jnp.float32)
+        carry0 = (D_k0, D_v0, counts0, n_active0, pk0, pv0, pbias0)
+    else:
+        carry0 = (D_k0, D_v0, counts0, n_active0)
+
+    pos_prev = jnp.arange(1, L + 1)
+    pos_cur = jnp.arange(L + 1, 2 * L + 1)
+
+    def step(carry, xs):
+        if cfg.get("rand_assign", False):
+            qc, kc, vc, nn, pr = xs
+        else:
+            qc, kc, vc, nn = xs
+            pr = None
+
+        if use_rope:
+            D_k, D_v, counts, n_active, pk, pv, pbias = carry
+            # dictionary at position 0 (identity rotation); previous chunk
+            # at positions 1..L; current chunk (and queries) at L+1..2L.
+            qr = common.apply_rope(qc, pos_cur)
+            kr = common.apply_rope(kc, pos_cur)
+            pkr = common.apply_rope(pk, pos_prev)
+            bias_d = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1e-9)),
+                               NEG_INF)
+            ke = jnp.concatenate([D_k, pkr, kr], axis=2)
+            ve = jnp.concatenate([D_v, pv, vc], axis=2)
+            bias = jnp.concatenate(
+                [bias_d, pbias, jnp.zeros((B, heads, L), jnp.float32)], axis=2)
+            o = ovq_chunk_attn_ad(qr, ke, ve, bias, jnp.float32(1.0),
+                                  N + L, tile_n)
+        else:
+            D_k, D_v, counts, n_active = carry
+            bias_d = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1e-9)),
+                               NEG_INF)
+            ke = jnp.concatenate([D_k, kc], axis=2)
+            ve = jnp.concatenate([D_v, vc], axis=2)
+            bias = jnp.concatenate(
+                [bias_d, jnp.zeros((B, heads, L), jnp.float32)], axis=2)
+            o = ovq_chunk_attn_ad(qc, ke, ve, bias, jnp.float32(1.0),
+                                  N, tile_n)
+
+        best_idx, best_sim = nn_assignments(D_k, counts, kc)
+        pr_eff = best_sim if pr is None else pr
+        D_k, D_v, counts, n_active = ovq_update(
+            D_k, D_v, counts, n_active, kc, vc, nn, best_idx, pr_eff, cfg)
+
+        if use_rope:
+            new_carry = (D_k, D_v, counts, n_active, kc, vc,
+                         jnp.zeros((B, heads, L), jnp.float32))
+        else:
+            new_carry = (D_k, D_v, counts, n_active)
+        return new_carry, o
+
+    xs = (qs, ks, vs, n_new) + ((prio,) if prio is not None else ())
+    _, outs = jax.lax.scan(step, carry0, xs)
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(B, heads, Tp, d_head)[:, :, :T]
+    return common.merge_heads(params, o), jnp.zeros(())

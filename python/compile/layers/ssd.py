@@ -1,0 +1,74 @@
+"""mamba2-lite: an SSD-style scalar-decay state-space mixer (Dao & Gu 2024).
+
+    S_t = a_t * S_{t-1} + k_t^T v_t         a_t = sigmoid(w_a x_t + b)
+    o_t = q_t S_t
+
+i.e. gated linear attention with a data-dependent scalar decay — the
+structured-state-space-duality core of mamba-2, without the conv/gating
+trimmings (those are orthogonal to the memory-capacity question the paper's
+Fig. 8 probes). Chunk-parallel implementation with exact intra-chunk decay
+weighting.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init_ssd(key, cfg):
+    p = common.qkv_init(key, cfg["dim"], cfg["heads"], cfg["d_head"])
+    k1 = jax.random.split(key, 1)[0]
+    p["w_a"] = common.dense_init(k1, cfg["dim"], cfg["heads"], scale=0.1)
+    return p
+
+
+def ssd_forward(params, x, cfg):
+    B, T, D = x.shape
+    heads, d_head = cfg["heads"], cfg["d_head"]
+    L = cfg["chunk"]
+
+    q, k, v = common.project_qkv(params, x, heads, d_head)
+    a = jax.nn.sigmoid(x @ params["w_a"] + 4.0)  # [B,T,H], decay near 1
+
+    pad = (-T) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    Tp = T + pad
+    C = Tp // L
+
+    def chunked(t):
+        return t.reshape(B, heads, C, L, d_head).transpose(2, 0, 1, 3, 4)
+
+    qs, ks, vs = chunked(q), chunked(k), chunked(v)
+    as_ = a.transpose(0, 2, 1).reshape(B, heads, C, L).transpose(2, 0, 1, 3)
+
+    def step(S, xs):
+        qc, kc, vc, ac = xs  # ac [B,H,L]
+        # cumulative decay within the chunk: g_i = prod_{j<=i} a_j
+        g = jnp.cumprod(ac, axis=-1)  # [B,H,L]
+        g_safe = jnp.maximum(g, 1e-20)
+        # inter-chunk: q_i reads S decayed by g_i
+        inter = g[..., None] * jnp.einsum("bhld,bhde->bhle", qc, S)
+        # intra-chunk: weight between i,j is g_i / g_j for j <= i
+        w = jnp.einsum("bhld,bhmd->bhlm", qc, kc)
+        ratio = g_safe[..., :, None] / g_safe[..., None, :]
+        mask = jnp.tril(jnp.ones((L, L), x.dtype))
+        w = w * ratio * mask[None, None]
+        intra = jnp.einsum("bhlm,bhme->bhle", w, vc)
+        o = inter + intra
+        # carry: decay whole chunk product, add decayed outer products
+        gL = g[..., -1:]  # [B,H,1]
+        S = gL[..., None] * S + jnp.einsum(
+            "bhl,bhld,bhle->bhde", gL / g_safe, kc, vc)
+        return S, o
+
+    S0 = jnp.zeros((B, heads, d_head, d_head), x.dtype)
+    _, outs = jax.lax.scan(step, S0, (qs, ks, vs, as_))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(B, heads, Tp, d_head)[:, :, :T]
+    return common.merge_heads(params, o), jnp.zeros(())

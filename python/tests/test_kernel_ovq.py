@@ -1,0 +1,101 @@
+"""L1 correctness: Pallas OVQ chunk-attention kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/tiles/dtypes; fixed-seed cases pin the edge
+geometry (non-multiple tiles, single-column dictionaries, all-inactive
+dictionaries, L=1).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ovq_chunk_attn_ref, NEG_INF
+from compile.kernels.ovq_attn import ovq_chunk_attn
+
+
+def make_inputs(rng, B, H, L, d, N, frac_active=0.7, dtype=np.float32):
+    q = rng.normal(size=(B, H, L, d)).astype(dtype)
+    ke = rng.normal(size=(B, H, N + L, d)).astype(dtype)
+    ve = rng.normal(size=(B, H, N + L, d)).astype(dtype)
+    counts = rng.integers(0, 6, size=(B, H, N)).astype(np.float32)
+    counts *= (rng.random(size=counts.shape) < frac_active)
+    bias = np.where(counts > 0, np.log(np.maximum(counts, 1e-9)), NEG_INF)
+    bias = np.concatenate([bias, np.zeros((B, H, L), np.float32)], axis=2)
+    return map(jnp.asarray, (q, ke, ve, bias))
+
+
+def check(q, ke, ve, bias, beta, n_dict, tile_n, atol=2e-5):
+    got = ovq_chunk_attn(q, ke, ve, bias, beta, n_dict=n_dict, tile_n=tile_n)
+    want = ovq_chunk_attn_ref(q, ke, ve, bias, beta, n_dict)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    H=st.integers(1, 3),
+    L=st.sampled_from([1, 4, 16, 32]),
+    d=st.sampled_from([8, 16, 32]),
+    N=st.sampled_from([1, 5, 16, 40, 100]),
+    tile_n=st.sampled_from([8, 16, 128]),
+    beta=st.floats(0.1, 2.0),
+)
+def test_ovq_kernel_matches_ref_hypothesis(B, H, L, d, N, tile_n, beta):
+    rng = np.random.default_rng(B * 1000 + H * 100 + L + N)
+    q, ke, ve, bias = make_inputs(rng, B, H, L, d, N)
+    check(q, ke, ve, bias, beta, N, tile_n)
+
+
+def test_ovq_kernel_non_multiple_tiles(rng):
+    q, ke, ve, bias = make_inputs(rng, 2, 3, 16, 32, 40)
+    check(q, ke, ve, bias, 0.7, 40, 16)
+
+
+def test_ovq_kernel_all_dictionary_inactive(rng):
+    # Fresh state: every dictionary slot has count 0 -> attention must fall
+    # back to the causal in-chunk part only and stay NaN-free.
+    q, ke, ve, bias = make_inputs(rng, 1, 2, 8, 16, 24, frac_active=0.0)
+    assert np.all(np.asarray(bias)[:, :, :24] == NEG_INF)
+    check(q, ke, ve, bias, 1.0, 24, 8)
+
+
+def test_ovq_kernel_single_query(rng):
+    q, ke, ve, bias = make_inputs(rng, 1, 1, 1, 8, 7)
+    check(q, ke, ve, bias, 1.3, 7, 8)
+
+
+def test_ovq_kernel_first_query_sees_only_self_and_dict(rng):
+    # Query 0 must not see chunk keys 1..L-1: perturbing them cannot change
+    # row 0 of the output.
+    q, ke, ve, bias = make_inputs(rng, 1, 1, 8, 16, 12)
+    out1 = ovq_chunk_attn(q, ke, ve, bias, 1.0, n_dict=12, tile_n=8)
+    ke2 = ke.at[:, :, 13:, :].add(100.0)
+    ve2 = ve.at[:, :, 13:, :].add(-50.0)
+    out2 = ovq_chunk_attn(q, ke2, ve2, bias, 1.0, n_dict=12, tile_n=8)
+    np.testing.assert_allclose(np.asarray(out1)[0, 0, 0],
+                               np.asarray(out2)[0, 0, 0], atol=2e-5)
+    assert not np.allclose(np.asarray(out1)[0, 0, -1],
+                           np.asarray(out2)[0, 0, -1], atol=1e-3)
+
+
+def test_ovq_kernel_inactive_slot_is_ignored(rng):
+    # Slot with count 0 must contribute nothing even with a huge key match.
+    q, ke, ve, bias = make_inputs(rng, 1, 1, 4, 8, 6, frac_active=1.0)
+    b = np.asarray(bias).copy()
+    b[0, 0, 3] = NEG_INF  # deactivate slot 3
+    ke_hot = ke.at[0, 0, 3].set(q[0, 0, 0] * 10.0)  # would dominate if active
+    out = ovq_chunk_attn(q, ke_hot, ve, jnp.asarray(b), 1.0, n_dict=6, tile_n=8)
+    want = ovq_chunk_attn_ref(q, ke_hot, ve, jnp.asarray(b), 1.0, 6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_ovq_kernel_rows_are_convex_combinations(rng):
+    # Softmax output lies in the convex hull of ve rows: with all-equal
+    # values the output equals that value exactly.
+    B, H, L, d, N = 1, 2, 8, 16, 10
+    q, ke, _, bias = make_inputs(rng, B, H, L, d, N)
+    ve = jnp.ones((B, H, N + L, d), jnp.float32) * 3.25
+    out = ovq_chunk_attn(q, ke, ve, bias, 1.0, n_dict=N, tile_n=8)
+    np.testing.assert_allclose(np.asarray(out), 3.25, atol=1e-5)

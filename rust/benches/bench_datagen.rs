@@ -1,0 +1,31 @@
+//! Task-generator throughput: the data pipeline must outrun the device
+//! (one prefetch thread feeds the trainer), so generators are benched in
+//! tokens/second at the training sequence length.
+
+use ovq::data::by_name;
+use ovq::util::bench::Bench;
+use ovq::util::rng::Rng;
+
+fn main() {
+    let b = if std::env::args().any(|a| a == "--quick") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let t = 256usize;
+    for task in ["icr", "picr", "icl", "lm", "shortctx"] {
+        let gen = by_name(task, 512);
+        let mut rng = Rng::new(1);
+        b.run_throughput(&format!("gen_{task}_T{t}"), t as f64, "tok/s", || {
+            gen.generate(&mut rng, t)
+        });
+    }
+    // long-context generation (the eval sweep path)
+    for t in [1024usize, 4096] {
+        let gen = by_name("lm", 512);
+        let mut rng = Rng::new(2);
+        b.run_throughput(&format!("gen_lm_T{t}"), t as f64, "tok/s", || {
+            gen.generate(&mut rng, t)
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! Analytical-model evaluation speed (trivial, but keeps the App. D
+//! sweep honest: the FLOPs model is called once per point per figure and
+//! must stay O(chunks)) + prints the Fig. 15/16 crossover summary used in
+//! EXPERIMENTS.md.
+
+use ovq::analysis::flops::{attn_flops, gdn_flops, ovq_flops, Geom};
+use ovq::util::bench::Bench;
+
+fn main() {
+    let b = if std::env::args().any(|a| a == "--quick") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let g = Geom::default();
+    b.run("flops_model_sweep_1k_128k", || {
+        let mut acc = 0.0;
+        for p in 10..=17 {
+            let t = (1usize << p) as f64;
+            acc += attn_flops(g, t, false)
+                + ovq_flops(g, t, 8192, false)
+                + gdn_flops(g, t, false);
+        }
+        acc
+    });
+
+    // report the crossover length (where OVQ FLOPs dip below attention)
+    for n in [2048usize, 8192, 16384] {
+        let mut cross = None;
+        for t in (256..1 << 18).step_by(256) {
+            if ovq_flops(g, t as f64, n, false) < attn_flops(g, t as f64, false) {
+                cross = Some(t);
+                break;
+            }
+        }
+        println!(
+            "crossover N={n}: OVQ cheaper than attention beyond T={}",
+            cross.map(|t| t.to_string()).unwrap_or_else(|| ">256k".into())
+        );
+    }
+}

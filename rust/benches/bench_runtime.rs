@@ -1,0 +1,64 @@
+//! Runtime hot-path latency: train-step and eval-step HLO execution on
+//! the quickstart model, plus the literal-building overhead in isolation —
+//! the L3 numbers for EXPERIMENTS.md §Perf.
+
+use ovq::data::batch::Batch;
+use ovq::data::by_name;
+use ovq::runtime::{literal_f32, literal_i32, Runtime};
+use ovq::util::bench::Bench;
+use ovq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bench::quick() } else { Bench::default() };
+
+    let rt = Runtime::from_env()?;
+    let model = rt.load_model("quickstart")?;
+    let (bs, t) = model.train_shape()?;
+    let vocab = model.manifest.cfg_usize("vocab", 256);
+    let gen = by_name("icr", vocab);
+    let mut rng = Rng::new(1);
+    let batch = Batch::generate_train(gen.as_ref(), &mut rng, bs, t);
+
+    // literal building overhead in isolation
+    b.run_throughput("literal_build_batch", (bs * t) as f64, "tok/s", || {
+        (
+            literal_i32(&[bs, t], &batch.tokens),
+            literal_i32(&[bs, t], &batch.targets),
+            literal_f32(&[bs, t], &batch.mask),
+        )
+    });
+
+    // full train step (params round-trip + execute)
+    let mut state = model.init(3)?;
+    b.run_throughput(
+        &format!("train_step_{}x{}", bs, t),
+        (bs * t) as f64,
+        "tok/s",
+        || {
+            model
+                .train_step(&mut state, &batch.tokens, &batch.targets, &batch.mask)
+                .unwrap()
+                .loss
+        },
+    );
+
+    // eval step
+    let eb = Batch::generate(gen.as_ref(), &mut rng, 2, 128);
+    b.run_throughput("eval_step_2x128", (2 * 128) as f64, "tok/s", || {
+        model
+            .eval("eval_128", &state.params, &eb.tokens, &eb.targets, &eb.mask)
+            .unwrap()
+            .loss
+    });
+
+    // param host round-trip cost (the carry overhead per step)
+    b.run("param_state_clone", || {
+        state
+            .params
+            .iter()
+            .map(|l| l.to_vec::<f32>().unwrap().len())
+            .sum::<usize>()
+    });
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Serving-path throughput: dynamic batcher end-to-end (client -> queue ->
+//! batched HLO execute -> reply) at different offered loads, on the
+//! quickstart model.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use ovq::coordinator::server::{serve_loop, ScoreRequest};
+use ovq::runtime::Runtime;
+use ovq::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::from_env()?;
+    let model = rt.load_model("quickstart")?;
+    let prog = "eval_128";
+    let t = 128usize;
+    let vocab = model.manifest.cfg_usize("vocab", 256);
+
+    for n_requests in [16usize, 64] {
+        let (tx, rx) = mpsc::channel::<ScoreRequest>();
+        let producer = std::thread::spawn(move || {
+            let gen = ovq::data::by_name("icr", vocab);
+            let mut rng = Rng::new(9);
+            let mut replies = Vec::new();
+            for _ in 0..n_requests {
+                let ex = gen.generate(&mut rng, t);
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(ScoreRequest {
+                    tokens: ex.tokens[..t].to_vec(),
+                    targets: ex.tokens[1..t + 1].to_vec(),
+                    mask: ex
+                        .score
+                        .iter()
+                        .map(|&s| if s { 1.0 } else { 0.0 })
+                        .collect(),
+                    reply: rtx,
+                    submitted: Instant::now(),
+                })
+                .unwrap();
+                replies.push(rrx);
+            }
+            drop(tx);
+            replies.into_iter().filter_map(|r| r.recv().ok()).count()
+        });
+        let t0 = Instant::now();
+        let stats = serve_loop(&model, prog, rx, Duration::from_millis(2))?;
+        let done = producer.join().unwrap();
+        print!("offered={n_requests:>3} completed={done:>3}  ");
+        stats.report(t0.elapsed());
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Appendix D FLOPs model — exact implementation of Tables 7-8 and
+//! eqs. 55-58, regenerating Figs. 15 (FLOPs vs context length) and 16
+//! (FLOPs ratio vs standard attention).
+
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+
+use crate::ovqcore::growth_n_t;
+
+/// Shared workload geometry (paper Table 6 notation).
+#[derive(Debug, Clone, Copy)]
+pub struct Geom {
+    pub b: f64,     // batch
+    pub h: f64,     // heads
+    pub d: f64,     // head dim
+    pub l: f64,     // chunk size
+}
+
+impl Default for Geom {
+    fn default() -> Self {
+        // paper's setup: H=8, d=128, L=128 (App. D plots)
+        Geom { b: 1.0, h: 8.0, d: 128.0, l: 128.0 }
+    }
+}
+
+/// Causal self-attention FLOPs (paper Table 7).
+pub fn attn_flops(g: Geom, t: f64, train: bool) -> f64 {
+    // inference total: 2 B H T^2 d / 2 = B H T^2 d   (QK^T causal) plus AV
+    // (B H T^2 d); the paper's table folds to: infer = 2BHT^2d/2, train 3x.
+    let infer = 2.0 * g.b * g.h * t * t * g.d / 2.0  // S = QK^T (causal)
+        + g.b * g.h * t * t * g.d; // AV
+    if train {
+        3.0 * infer
+    } else {
+        infer
+    }
+}
+
+/// OVQ-attention FLOPs (paper Table 8 / eqs. 55-56): sum over chunks of
+/// BHLd(6N_c + 2L) at inference, BHLd(12N_c + 6L) in training.
+pub fn ovq_flops(g: Geom, t: f64, n_max: usize, train: bool) -> f64 {
+    let l = g.l as usize;
+    let chunks = (t as usize).div_ceil(l);
+    let mut total = 0.0;
+    for c in 0..chunks {
+        let n_c = growth_n_t(c * l, n_max) as f64;
+        let per = if train {
+            g.b * g.h * g.l * g.d * (12.0 * n_c + 6.0 * g.l)
+        } else {
+            g.b * g.h * g.l * g.d * (6.0 * n_c + 2.0 * g.l)
+        };
+        total += per;
+    }
+    total
+}
+
+/// Gated delta net FLOPs (paper eqs. 57-58, following Lufkin et al. /
+/// Yang et al. accounting).
+pub fn gdn_flops(g: Geom, t: f64, train: bool) -> f64 {
+    let infer = 6.0 * g.b * t * g.h * g.d * g.d
+        + g.b * t * g.h * (6.0 * g.d * g.d + 2.0 * g.l * 5.0 * g.d + g.l * g.l / 3.0);
+    if train {
+        18.0 * g.b * t * g.h * g.d * g.d
+            + 3.0 * g.b
+                * t
+                * g.h
+                * (6.0 * g.d * g.d + 2.0 * g.l * 5.0 * g.d + g.l * g.l / 3.0)
+    } else {
+        infer
+    }
+}
+
+/// One row of the Fig. 15/16 sweep.
+#[derive(Debug, Clone)]
+pub struct FlopsRow {
+    pub t: usize,
+    pub attn: f64,
+    pub ovq: f64,
+    pub gdn: f64,
+}
+
+pub fn sweep(g: Geom, n_max: usize, lengths: &[usize], train: bool) -> Vec<FlopsRow> {
+    lengths
+        .iter()
+        .map(|&t| FlopsRow {
+            t,
+            attn: attn_flops(g, t as f64, train),
+            ovq: ovq_flops(g, t as f64, n_max, train),
+            gdn: gdn_flops(g, t as f64, train),
+        })
+        .collect()
+}
+
+/// `ovq flops` CLI: prints Fig. 15 (absolute) and Fig. 16 (ratio) series
+/// and writes CSVs under --out (default results/).
+pub fn cmd_flops(args: &Args) -> anyhow::Result<()> {
+    let out_dir = args.opt_or("out", "results");
+    let n_max = args.opt_usize("n-dict", 8192);
+    let g = Geom::default();
+    let lengths: Vec<usize> =
+        (10..=17).map(|p| 1usize << p).collect(); // 1k .. 128k
+
+    for (label, train) in [("inference", false), ("training", true)] {
+        let rows = sweep(g, n_max, &lengths, train);
+        println!("\n== Fig 15 ({label}) — FLOPs vs context length (H=8 d=128 L=128 N={n_max}) ==");
+        println!("{:>8} {:>14} {:>14} {:>14} | {:>10} {:>10}", "T", "attn", "ovq", "gdn", "ovq/attn", "gdn/attn");
+        let mut csv = CsvWriter::create(
+            format!("{out_dir}/flops_{label}.csv"),
+            &["T", "attn", "ovq", "gdn", "ovq_ratio", "gdn_ratio"],
+        )?;
+        for r in &rows {
+            let ro = r.ovq / r.attn;
+            let rg = r.gdn / r.attn;
+            println!(
+                "{:>8} {:>14.3e} {:>14.3e} {:>14.3e} | {:>10.4} {:>10.4}",
+                r.t, r.attn, r.ovq, r.gdn, ro, rg
+            );
+            csv.rowf(&[r.t as f64, r.attn, r.ovq, r.gdn, ro, rg])?;
+        }
+        csv.flush()?;
+    }
+    println!("\n(Fig 16 = the ratio columns; csv written to {out_dir}/)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const G: Geom = Geom { b: 1.0, h: 8.0, d: 128.0, l: 128.0 };
+
+    #[test]
+    fn attention_is_quadratic() {
+        let a = attn_flops(G, 1024.0, false);
+        let b = attn_flops(G, 2048.0, false);
+        assert!((b / a - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ovq_is_asymptotically_linear() {
+        // once the dictionary saturates, doubling T doubles FLOPs
+        let n = 2048;
+        let a = ovq_flops(G, (1u32 << 16) as f64, n, false);
+        let b = ovq_flops(G, (1u32 << 17) as f64, n, false);
+        let ratio = b / a;
+        assert!((ratio - 2.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn crossover_exists() {
+        // the paper's headline: OVQ beats attention beyond some length
+        let n = 8192;
+        let short = 1usize << 10;
+        let long = 1usize << 17;
+        assert!(ovq_flops(G, short as f64, n, false) > attn_flops(G, short as f64, false) * 0.5);
+        assert!(ovq_flops(G, long as f64, n, false) < attn_flops(G, long as f64, false));
+    }
+
+    #[test]
+    fn train_is_3x_inference_for_attention() {
+        let t = 4096.0;
+        assert!((attn_flops(G, t, true) / attn_flops(G, t, false) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ovq_train_ratio_matches_table8() {
+        // per chunk: train/infer = (12N + 6L)/(6N + 2L); at saturation with
+        // N >> L this tends to 2
+        let n = 1 << 14;
+        let t = 1 << 18;
+        let r = ovq_flops(G, t as f64, n, true) / ovq_flops(G, t as f64, n, false);
+        assert!(r > 1.9 && r < 3.01, "ratio {r}");
+    }
+
+    #[test]
+    fn gdn_is_linear() {
+        let a = gdn_flops(G, 1024.0, false);
+        let b = gdn_flops(G, 2048.0, false);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,104 @@
+//! Memory-growth model — Fig. 4 (right): how the per-layer memory state
+//! (kv-cache / dictionary / fast-weight matrix) grows with context length
+//! for each mixer family, using the exact byte accounting in
+//! ovqcore::memstate.
+
+use crate::ovqcore::memstate::{MixerGeom, MixerKind};
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Clone)]
+pub struct MemRow {
+    pub t: usize,
+    pub bytes: Vec<(String, usize)>,
+}
+
+pub fn sweep(g: MixerGeom, kinds: &[(&str, MixerKind)], lengths: &[usize]) -> Vec<MemRow> {
+    lengths
+        .iter()
+        .map(|&t| MemRow {
+            t,
+            bytes: kinds
+                .iter()
+                .map(|(n, k)| (n.to_string(), k.state_bytes(g, t)))
+                .collect(),
+        })
+        .collect()
+}
+
+/// The Fig. 4-right reproduction: full attention vs sw vs OVQ at several N.
+pub fn fig4_right(out_dir: &str) -> anyhow::Result<()> {
+    let g = MixerGeom { heads: 8, d_head: 128 };
+    let kinds: Vec<(&str, MixerKind)> = vec![
+        ("full_attn", MixerKind::FullAttention),
+        ("sw128", MixerKind::SlidingWindow { window: 128 }),
+        ("ovq_N2k", MixerKind::Ovq { n_max: 2048 }),
+        ("ovq_N8k", MixerKind::Ovq { n_max: 8192 }),
+        ("ovq_N16k", MixerKind::Ovq { n_max: 16384 }),
+        ("gdn", MixerKind::Gdn),
+    ];
+    let lengths: Vec<usize> = (9..=16).map(|p| 1usize << p).collect();
+    let rows = sweep(g, &kinds, &lengths);
+
+    let mut header: Vec<&str> = vec!["T"];
+    header.extend(kinds.iter().map(|(n, _)| *n));
+    let mut csv = CsvWriter::create(format!("{out_dir}/fig4_right_memory.csv"), &header)?;
+    println!("\n== Fig 4 (right) — memory state bytes vs context length ==");
+    print!("{:>8}", "T");
+    for (n, _) in &kinds {
+        print!(" {n:>12}");
+    }
+    println!();
+    for r in &rows {
+        print!("{:>8}", r.t);
+        let mut fields = vec![r.t as f64];
+        for (_, b) in &r.bytes {
+            print!(" {:>12}", human(*b));
+            fields.push(*b as f64);
+        }
+        println!();
+        csv.rowf(&fields)?;
+    }
+    csv.flush()?;
+
+    // the paper's compression headline: OVQ at 64k ~ 10-25% of full attn
+    let t = 65536;
+    let full = MixerKind::FullAttention.state_bytes(g, t);
+    let ovq = MixerKind::Ovq { n_max: 16384 }.state_bytes(g, t);
+    println!(
+        "\nat T=64k: ovq_N16k/full = {:.1}% (paper: state 10-25% of self-attention)",
+        100.0 * ovq as f64 / full as f64
+    );
+    Ok(())
+}
+
+pub fn human(b: usize) -> String {
+    if b < 1 << 10 {
+        format!("{b} B")
+    } else if b < 1 << 20 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else if b < 1 << 30 {
+        format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.2} GiB", b as f64 / (1 << 30) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ovq_compresses_at_64k() {
+        let g = MixerGeom { heads: 8, d_head: 128 };
+        let full = MixerKind::FullAttention.state_bytes(g, 65536);
+        let ovq = MixerKind::Ovq { n_max: 16384 }.state_bytes(g, 65536);
+        let frac = ovq as f64 / full as f64;
+        assert!(frac > 0.05 && frac < 0.30, "fraction {frac} out of the paper's band");
+    }
+
+    #[test]
+    fn human_formatting() {
+        assert_eq!(human(512), "512 B");
+        assert_eq!(human(2048), "2.0 KiB");
+    }
+}

@@ -1,0 +1,5 @@
+//! Analytical models from the paper's Appendix D (FLOPs) and Fig. 4-right
+//! (memory growth) — exact reimplementations of the published formulas.
+
+pub mod flops;
+pub mod memory;

@@ -1,0 +1,163 @@
+//! Length-sweep evaluator: runs every eval_* program of a model on freshly
+//! generated task batches and aggregates accuracy / loss, including the
+//! paper's test-time dictionary scaling (eval_{T}_N{n} programs) and the
+//! per-position curves for Fig. 5 / Fig. 6.
+
+use anyhow::Result;
+
+use crate::data::batch::Batch;
+use crate::data::{by_name, icl};
+use crate::runtime::Model;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::metrics::Accuracy;
+
+/// One point of the sweep: an eval program evaluated on n batches.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub program: String,
+    pub seq: usize,
+    pub n_dict: Option<usize>,
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n_scored: f64,
+}
+
+/// Filter predicate over program names; None = all eval programs.
+pub type ProgFilter<'a> = Option<&'a dyn Fn(&str) -> bool>;
+
+pub fn length_sweep(
+    model: &Model<'_>,
+    params: &[xla::Literal],
+    task: &str,
+    n_batches: usize,
+    seed: u64,
+    filter: ProgFilter<'_>,
+) -> Result<Vec<EvalPoint>> {
+    let vocab = model.manifest.cfg_usize("vocab", 512);
+    let gen = by_name(task, vocab);
+    let mut points = Vec::new();
+    let evals: Vec<(String, crate::runtime::ProgramSpec)> = model
+        .manifest
+        .eval_programs()
+        .into_iter()
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    for (name, spec) in evals {
+        if let Some(f) = filter {
+            if !f(&name) {
+                continue;
+            }
+        }
+        let (b, t) = (spec.batch.unwrap_or(2), spec.seq.unwrap_or(256));
+        let mut rng = Rng::new(seed ^ (t as u64) << 8);
+        let mut acc = Accuracy::default();
+        let mut losses = Vec::new();
+        for _ in 0..n_batches {
+            let batch = Batch::generate(gen.as_ref(), &mut rng, b, t);
+            let out = model.eval(&name, params, &batch.tokens, &batch.targets, &batch.mask)?;
+            acc.add(&out.correct, &batch.mask);
+            losses.push(out.loss as f64);
+        }
+        points.push(EvalPoint {
+            program: name.clone(),
+            seq: t,
+            n_dict: spec.n_dict,
+            loss: stats::mean(&losses),
+            accuracy: acc.value(),
+            n_scored: acc.total,
+        });
+    }
+    Ok(points)
+}
+
+pub fn print_sweep(model_name: &str, points: &[EvalPoint]) {
+    println!("\n== {model_name} length sweep ==");
+    println!(
+        "{:>20} {:>6} {:>6} {:>9} {:>9} {:>8}",
+        "program", "T", "N", "loss", "acc", "scored"
+    );
+    for p in points {
+        println!(
+            "{:>20} {:>6} {:>6} {:>9.4} {:>9.4} {:>8}",
+            p.program,
+            p.seq,
+            p.n_dict.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
+            p.loss,
+            p.accuracy,
+            p.n_scored
+        );
+    }
+}
+
+/// Per-position curves: mean nll (LM, Fig. 6) binned by position.
+pub fn nll_by_position(
+    model: &Model<'_>,
+    params: &[xla::Literal],
+    prog: &str,
+    task: &str,
+    n_batches: usize,
+    seed: u64,
+    bin: usize,
+) -> Result<Vec<(usize, f64, usize)>> {
+    let vocab = model.manifest.cfg_usize("vocab", 512);
+    let gen = by_name(task, vocab);
+    let spec = model.manifest.programs.get(prog).unwrap().clone();
+    let (b, t) = (spec.batch.unwrap_or(2), spec.seq.unwrap_or(256));
+    let mut rng = Rng::new(seed);
+    let mut pairs: Vec<(usize, f64)> = Vec::new();
+    for _ in 0..n_batches {
+        let batch = Batch::generate(gen.as_ref(), &mut rng, b, t);
+        let out = model.eval(prog, params, &batch.tokens, &batch.targets, &batch.mask)?;
+        for row in 0..b {
+            for pos in 0..t {
+                let i = row * t + pos;
+                if batch.mask[i] > 0.0 {
+                    pairs.push((pos, out.nll[i] as f64));
+                }
+            }
+        }
+    }
+    Ok(stats::binned_means(&pairs, bin, t))
+}
+
+/// Per-example-ordinal accuracy for the ICL task (Fig. 5): accuracy of the
+/// n-th example of each function, averaged over functions and batches.
+pub fn icl_accuracy_by_ordinal(
+    model: &Model<'_>,
+    params: &[xla::Literal],
+    prog: &str,
+    n_funcs: usize,
+    n_batches: usize,
+    seed: u64,
+) -> Result<Vec<(usize, f64, usize)>> {
+    let vocab = model.manifest.cfg_usize("vocab", 512);
+    let gen = icl::IclTask::new(vocab, n_funcs);
+    let spec = model.manifest.programs.get(prog).unwrap().clone();
+    let (b, t) = (spec.batch.unwrap_or(2), spec.seq.unwrap_or(256));
+    let mut rng = Rng::new(seed);
+    let mut sums: Vec<(f64, usize)> = Vec::new();
+    for _ in 0..n_batches {
+        let examples: Vec<crate::data::Example> = (0..b)
+            .map(|_| crate::data::TaskGen::generate(&gen, &mut rng, t))
+            .collect();
+        let batch = Batch::from_examples(&examples, t);
+        let out = model.eval(prog, params, &batch.tokens, &batch.targets, &batch.mask)?;
+        for (row, ex) in examples.iter().enumerate() {
+            for (pos, ord) in icl::example_ordinals(&ex.tokens, &ex.score) {
+                if sums.len() <= ord {
+                    sums.resize(ord + 1, (0.0, 0));
+                }
+                sums[ord].0 += out.correct[row * t + pos] as f64;
+                sums[ord].1 += 1;
+            }
+        }
+    }
+    Ok(sums
+        .into_iter()
+        .enumerate()
+        .filter(|(_, (_, n))| *n > 0)
+        .map(|(ord, (c, n))| (ord, c / n as f64, n))
+        .collect())
+}

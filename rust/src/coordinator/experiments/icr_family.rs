@@ -1,0 +1,221 @@
+//! In-context-recall experiments: Fig 1 (prelim VQ), Fig 4 (basic +
+//! positional ICR, test-time N scaling), Fig 7 (ablations), Fig 8 (linear
+//! baselines), Fig 10 (RoPE variant), Fig 13 (v-shift), §3.4 (s34).
+
+use anyhow::Result;
+
+use crate::ovqcore::memstate::{MixerGeom, MixerKind};
+use crate::util::csv::CsvWriter;
+
+use super::{sweep_models, write_matrix, ExpCtx};
+
+/// Fig 1: sw-vq with growing dictionaries vs sw-nope on basic ICR.
+/// Paper shape: baseline near-perfect with length extrapolation; VQ decays
+/// before train length; more centroids give diminishing returns.
+pub fn exp_f1(ctx: &ExpCtx) -> Result<()> {
+    let pairs = [
+        ("icr-sw-nope", "icr"),
+        ("icr-sw-vq32", "icr"),
+        ("icr-sw-vq64", "icr"),
+        ("icr-sw-vq128", "icr"),
+    ];
+    let results = sweep_models(ctx, &pairs)?;
+    write_matrix(
+        &format!("{}/f1_prelim_icr.csv", ctx.out_dir),
+        &results,
+        |p| p.accuracy,
+    )?;
+    println!("\n== Fig 1 — per-token recall accuracy vs test length ==");
+    summary_table(&results);
+    Ok(())
+}
+
+/// Fig 4 (left, middle): basic + positional ICR with sw-nope / sw-vq /
+/// sw-ovq, including sw-ovq evaluated at larger test-time dictionaries.
+pub fn exp_f4(ctx: &ExpCtx) -> Result<()> {
+    println!("\n######## basic ICR (Fig 4 left) ########");
+    let basic = sweep_models(
+        ctx,
+        &[
+            ("icr-sw-nope", "icr"),
+            ("icr-sw-vq128", "icr"),
+            ("icr-sw-ovq", "icr"),
+        ],
+    )?;
+    write_matrix(&format!("{}/f4_basic_icr.csv", ctx.out_dir), &basic, |p| {
+        p.accuracy
+    })?;
+    summary_table(&basic);
+
+    println!("\n######## positional ICR (Fig 4 middle) ########");
+    let pos = sweep_models(
+        ctx,
+        &[
+            ("icr-sw-nope", "picr"),
+            ("icr-sw-vq128", "picr"),
+            ("icr-sw-ovq", "picr"),
+        ],
+    )?;
+    write_matrix(&format!("{}/f4_positional_icr.csv", ctx.out_dir), &pos, |p| {
+        p.accuracy
+    })?;
+    summary_table(&pos);
+    println!("(right panel = `ovq exp f4r`, analytical memory growth)");
+    Ok(())
+}
+
+/// Fig 7: ablations on basic ICR (random assignment / linear growth /
+/// constant lr) — each should underperform full OVQ beyond train length.
+pub fn exp_f7(ctx: &ExpCtx) -> Result<()> {
+    let results = sweep_models(
+        ctx,
+        &[
+            ("icr-sw-ovq", "icr"),
+            ("icr-sw-ovq-randassign", "icr"),
+            ("icr-sw-ovq-lineargrow", "icr"),
+            ("icr-sw-ovq-constlr", "icr"),
+        ],
+    )?;
+    write_matrix(&format!("{}/f7_ablations_icr.csv", ctx.out_dir), &results, |p| {
+        p.accuracy
+    })?;
+    println!("\n== Fig 7 — OVQ ablations on basic ICR ==");
+    summary_table(&results);
+    Ok(())
+}
+
+/// Fig 8: equal-parameter linear-attention/SSM baselines on ICR + ICL.
+pub fn exp_f8(ctx: &ExpCtx) -> Result<()> {
+    println!("\n######## basic ICR (Fig 8 right) ########");
+    let icr = sweep_models(
+        ctx,
+        &[
+            ("icr-sw-ovq", "icr"),
+            ("icr-gdn", "icr"),
+            ("icr-ssd", "icr"),
+            ("icr-linattn", "icr"),
+        ],
+    )?;
+    write_matrix(&format!("{}/f8_linear_icr.csv", ctx.out_dir), &icr, |p| {
+        p.accuracy
+    })?;
+    summary_table(&icr);
+
+    println!("\n######## ICL (Fig 8 left) ########");
+    let icl = sweep_models(
+        ctx,
+        &[
+            ("icl-sw-ovq", "icl"),
+            ("icl-gdn", "icl"),
+            ("icl-ssd", "icl"),
+        ],
+    )?;
+    write_matrix(&format!("{}/f8_linear_icl.csv", ctx.out_dir), &icl, |p| {
+        p.accuracy
+    })?;
+    summary_table(&icl);
+    Ok(())
+}
+
+/// Fig 10 (App C): OVQ w/ RoPE length generalization on basic ICR.
+pub fn exp_f10(ctx: &ExpCtx) -> Result<()> {
+    let results = sweep_models(
+        ctx,
+        &[
+            ("icr-ovq-rope", "icr"),
+            ("icr-att-rope", "icr"),
+            ("icr-sw-ovq", "icr"),
+        ],
+    )?;
+    write_matrix(&format!("{}/f10_rope_icr.csv", ctx.out_dir), &results, |p| {
+        p.accuracy
+    })?;
+    println!("\n== Fig 10 — RoPE variants on basic ICR ==");
+    summary_table(&results);
+    Ok(())
+}
+
+/// Fig 13 (App C): v-shift + qk-conv on positional ICR.
+pub fn exp_f13(ctx: &ExpCtx) -> Result<()> {
+    let results = sweep_models(
+        ctx,
+        &[
+            ("icr-sw-ovq", "picr"),
+            ("icr-sw-ovq-vshift", "picr"),
+        ],
+    )?;
+    write_matrix(&format!("{}/f13_vshift_picr.csv", ctx.out_dir), &results, |p| {
+        p.accuracy
+    })?;
+    println!("\n== Fig 13 — v-shift/qk-conv on positional ICR ==");
+    summary_table(&results);
+    Ok(())
+}
+
+/// §3.4 / Fig 3: state-update footprint — ΔS bytes per chunk as the state
+/// grows; OVQ's is constant in N, linear attention's scales with d_k*d_v.
+pub fn exp_s34(out_dir: &str) -> Result<()> {
+    let g = MixerGeom { heads: 8, d_head: 128 };
+    let l = 128;
+    let mut csv = CsvWriter::create(
+        format!("{out_dir}/s34_update_footprint.csv"),
+        &["mixer", "param", "state_bytes", "update_bytes_per_chunk"],
+    )?;
+    println!("\n== §3.4 — state size vs state-update footprint (chunk L={l}) ==");
+    println!("{:>16} {:>10} {:>14} {:>16}", "mixer", "param", "state", "update/chunk");
+    for n in [1024usize, 4096, 16384, 65536] {
+        let k = MixerKind::Ovq { n_max: n };
+        let s = k.state_bytes(g, usize::MAX / 2);
+        let u = k.update_bytes(g, l);
+        println!("{:>16} {:>10} {:>14} {:>16}", "ovq", format!("N={n}"), s, u);
+        csv.row(&["ovq".into(), format!("N={n}"), s.to_string(), u.to_string()])?;
+    }
+    for d in [64usize, 128, 256] {
+        let g2 = MixerGeom { heads: 8, d_head: d };
+        let k = MixerKind::LinearAttention;
+        let s = k.state_bytes(g2, usize::MAX / 2);
+        let u = k.update_bytes(g2, l);
+        println!("{:>16} {:>10} {:>14} {:>16}", "linear-attn", format!("d={d}"), s, u);
+        csv.row(&["linear-attn".into(), format!("d={d}"), s.to_string(), u.to_string()])?;
+    }
+    csv.flush()?;
+    println!(
+        "\nOVQ update footprint is INDEPENDENT of N (sparse row writes);\n\
+         linear attention's grows with the state (dense [L,dk,dv] tensor).\n\
+         This is the paper's §3.4 claim, verified as exact byte accounting\n\
+         and as measured throughput in benches/bench_ovqcore.rs."
+    );
+    Ok(())
+}
+
+/// Compact model-by-length accuracy table.
+fn summary_table(results: &[(String, Vec<crate::coordinator::evaluator::EvalPoint>)]) {
+    // columns = distinct (seq, n_dict)
+    let mut cols: Vec<(usize, Option<usize>)> = results
+        .iter()
+        .flat_map(|(_, ps)| ps.iter().map(|p| (p.seq, p.n_dict)))
+        .collect();
+    cols.sort();
+    cols.dedup();
+    print!("{:>26}", "model");
+    for (t, n) in &cols {
+        let label = match n {
+            Some(n) => format!("{t}/N{n}"),
+            None => format!("{t}"),
+        };
+        print!(" {label:>10}");
+    }
+    println!();
+    for (model, ps) in results {
+        print!("{model:>26}");
+        for (t, n) in &cols {
+            let v = ps
+                .iter()
+                .find(|p| p.seq == *t && p.n_dict == *n)
+                .map(|p| format!("{:.3}", p.accuracy))
+                .unwrap_or_else(|| "-".into());
+            print!(" {v:>10}");
+        }
+        println!();
+    }
+}

@@ -1,0 +1,87 @@
+//! Long-context language modeling: Fig 6 (sw/gdn interleaves on the
+//! synthetic book corpus), Fig 9 (OVQ w/ RoPE), Fig 12 (LM ablations).
+
+use anyhow::Result;
+
+use crate::coordinator::{evaluator, trainer};
+use crate::util::csv::CsvWriter;
+
+use super::ExpCtx;
+
+fn lm_curves(ctx: &ExpCtx, models: &[&str], tag: &str) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        format!("{}/{tag}_lm_position.csv", ctx.out_dir),
+        &["model", "T", "position", "nll", "count"],
+    )?;
+    let mut finals: Vec<(String, usize, f64)> = Vec::new();
+    for model in models {
+        let (m, st) =
+            trainer::ensure_trained(&ctx.rt, model, "lm", ctx.steps, &ctx.out_dir)?;
+        // loss-vs-position on the longest eval program (the paper's plot),
+        // plus the summary loss at each length
+        let progs: Vec<String> = m
+            .manifest
+            .eval_programs()
+            .iter()
+            .filter(|(k, _)| !k.contains("_N"))
+            .map(|(k, _)| k.to_string())
+            .collect();
+        for prog in &progs {
+            let t = m.manifest.programs[prog].seq.unwrap_or(0);
+            let curve = evaluator::nll_by_position(
+                &m, &st.params, prog, "lm", ctx.eval_batches, 13, (t / 8).max(32),
+            )?;
+            for (pos, nll, n) in &curve {
+                csv.row(&[
+                    model.to_string(),
+                    t.to_string(),
+                    pos.to_string(),
+                    format!("{nll}"),
+                    n.to_string(),
+                ])?;
+            }
+            if let Some((_, nll, _)) = curve.last() {
+                finals.push((model.to_string(), t, *nll));
+            }
+        }
+    }
+    csv.flush()?;
+    println!("\n== {tag} — mean NLL in the final position bin, per test length ==");
+    println!("{:>26} {:>6} {:>9}", "model", "T", "nll");
+    for (m, t, nll) in &finals {
+        println!("{m:>26} {t:>6} {nll:>9.4}");
+    }
+    Ok(())
+}
+
+/// Fig 6: sliding-window and GDN interleaves on long-context LM.
+pub fn exp_f6(ctx: &ExpCtx) -> Result<()> {
+    let models: Vec<&str> = if ctx.quick {
+        vec!["lm-sw", "lm-sw-ovq"]
+    } else {
+        vec!["lm-sw", "lm-sw-nope", "lm-sw-ovq", "lm-sw-vq", "lm-gdn", "lm-gdn-ovq"]
+    };
+    lm_curves(ctx, &models, "f6")?;
+    println!(
+        "\n(paper shape: adding OVQ layers to sw and gdn models drastically\n\
+         improves long-context LM; sw-ovq ~ sw-nope > sw ~ gdn alone)"
+    );
+    Ok(())
+}
+
+/// Fig 9 (App C): pure OVQ w/ RoPE vs std-att w/ RoPE vs pure GDN.
+pub fn exp_f9(ctx: &ExpCtx) -> Result<()> {
+    let models = ["lm-ovq-rope", "lm-std-att", "lm-gdn"];
+    lm_curves(ctx, &models, "f9")
+}
+
+/// Fig 12 (App C): LM ablations.
+pub fn exp_f12(ctx: &ExpCtx) -> Result<()> {
+    let models = [
+        "lm-sw-ovq",
+        "lm-sw-ovq-lineargrow",
+        "lm-sw-ovq-constlr",
+        "lm-sw-ovq-randassign",
+    ];
+    lm_curves(ctx, &models, "f12")
+}

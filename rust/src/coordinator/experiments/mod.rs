@@ -1,0 +1,125 @@
+//! Paper-experiment drivers: `ovq exp <id>` regenerates each table/figure
+//! (DESIGN.md §4 maps ids to the paper). Every driver trains (or reuses)
+//! the models it needs, runs the evaluation protocol, prints the paper-
+//! style rows and writes a CSV under --out (default results/).
+//!
+//! `--quick` shrinks step counts/batches for CI-style smoke runs.
+
+mod icr_family;
+mod icl_family;
+mod lm_family;
+mod shortctx_t1;
+
+use anyhow::Result;
+
+use crate::analysis::{flops, memory};
+use crate::util::cli::Args;
+
+pub struct ExpCtx {
+    pub rt: crate::runtime::Runtime,
+    pub out_dir: String,
+    pub quick: bool,
+    pub steps: usize,
+    pub eval_batches: usize,
+}
+
+impl ExpCtx {
+    pub fn from_args(args: &Args) -> Result<ExpCtx> {
+        let quick = args.has_flag("quick");
+        Ok(ExpCtx {
+            rt: super::runtime_from(args)?,
+            out_dir: args.opt_or("out", "results"),
+            quick,
+            steps: args.opt_usize("steps", if quick { 120 } else { 0 }),
+            eval_batches: args.opt_usize("batches", if quick { 2 } else { 4 }),
+        })
+    }
+}
+
+pub fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("")
+        .to_lowercase();
+    match id.as_str() {
+        // analytical experiments need no runtime/training
+        "f15" | "f16" => return flops::cmd_flops(args),
+        "f4r" => return memory::fig4_right(&args.opt_or("out", "results")),
+        "s34" => return icr_family::exp_s34(&args.opt_or("out", "results")),
+        _ => {}
+    }
+    let ctx = ExpCtx::from_args(args)?;
+    match id.as_str() {
+        "f1" => icr_family::exp_f1(&ctx),
+        "f4" => icr_family::exp_f4(&ctx),
+        "f7" => icr_family::exp_f7(&ctx),
+        "f8" => icr_family::exp_f8(&ctx),
+        "f10" => icr_family::exp_f10(&ctx),
+        "f13" => icr_family::exp_f13(&ctx),
+        "f5" => icl_family::exp_f5(&ctx),
+        "f6" => lm_family::exp_f6(&ctx),
+        "f9" => lm_family::exp_f9(&ctx),
+        "f12" => lm_family::exp_f12(&ctx),
+        "t1" => shortctx_t1::exp_t1(&ctx),
+        "all" => {
+            for id in [
+                "f15", "f4r", "s34", "f1", "f4", "f7", "f8", "f10", "f13",
+                "f5", "f6", "f9", "f12", "t1",
+            ] {
+                crate::info!("=== exp {id} ===");
+                let mut sub_args = args.clone();
+                sub_args.positional = vec![id.to_string()];
+                cmd_exp(&sub_args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (f1 f4 f4r f5 f6 f7 f8 f9 f10 f12 f13 f15 f16 t1 s34 all)"
+        ),
+    }
+}
+
+/// Shared: train-or-reuse a set of (model, task) pairs and length-sweep
+/// each; returns (label, sweep points) per model.
+pub fn sweep_models(
+    ctx: &ExpCtx,
+    pairs: &[(&str, &str)],
+) -> Result<Vec<(String, Vec<super::evaluator::EvalPoint>)>> {
+    let mut out = Vec::new();
+    for (model, task) in pairs {
+        let (m, st) = super::trainer::ensure_trained(
+            &ctx.rt, model, task, ctx.steps, &ctx.out_dir,
+        )?;
+        let points = super::evaluator::length_sweep(
+            &m, &st.params, task, ctx.eval_batches, 7, None,
+        )?;
+        super::evaluator::print_sweep(model, &points);
+        out.push((model.to_string(), points));
+    }
+    Ok(out)
+}
+
+/// Shared: write a (model x program) accuracy matrix CSV.
+pub fn write_matrix(
+    path: &str,
+    results: &[(String, Vec<super::evaluator::EvalPoint>)],
+    metric: impl Fn(&super::evaluator::EvalPoint) -> f64,
+) -> Result<()> {
+    use crate::util::csv::CsvWriter;
+    let mut csv = CsvWriter::create(path, &["model", "program", "T", "N", "value"])?;
+    for (model, points) in results {
+        for p in points {
+            csv.row(&[
+                model.clone(),
+                p.program.clone(),
+                p.seq.to_string(),
+                p.n_dict.map(|n| n.to_string()).unwrap_or_default(),
+                format!("{}", metric(p)),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}

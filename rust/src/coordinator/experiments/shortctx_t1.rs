@@ -1,0 +1,56 @@
+//! Table 1: short-context parity — std-att vs sw-nope vs sw-ovq on the
+//! short-context probe suite (the PIQA/HellaSwag/... substitution; the
+//! claim under test is that all three models score within noise of each
+//! other at short context).
+
+use anyhow::Result;
+
+use crate::coordinator::{evaluator, trainer};
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+use super::ExpCtx;
+
+pub fn exp_t1(ctx: &ExpCtx) -> Result<()> {
+    let models = ["sc-std-att", "sc-sw-nope", "sc-sw-ovq"];
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let mut csv = CsvWriter::create(
+        format!("{}/t1_shortctx.csv", ctx.out_dir),
+        &["model", "accuracy", "std"],
+    )?;
+
+    for model in models {
+        let (m, st) = trainer::ensure_trained(
+            &ctx.rt, model, "shortctx", ctx.steps, &ctx.out_dir,
+        )?;
+        // several independent eval draws -> mean +/- std (the paper
+        // averages the last three checkpoints; we average eval seeds)
+        let mut accs = Vec::new();
+        for seed in 0..5u64 {
+            let pts = evaluator::length_sweep(
+                &m, &st.params, "shortctx", ctx.eval_batches, 100 + seed, None,
+            )?;
+            accs.push(pts[0].accuracy);
+        }
+        let mean = stats::mean(&accs);
+        let sd = stats::std_dev(&accs);
+        rows.push((model.to_string(), mean, sd));
+        csv.row(&[model.to_string(), format!("{mean}"), format!("{sd}")])?;
+    }
+    csv.flush()?;
+
+    println!("\n== Table 1 — short-context probe accuracy (mean ± std over eval seeds) ==");
+    println!("{:>14} {:>12}", "model", "accuracy");
+    for (m, acc, sd) in &rows {
+        println!("{m:>14} {:>8.3}±{:.3}", acc, sd);
+    }
+    let accs: Vec<f64> = rows.iter().map(|r| r.1).collect();
+    let spread = accs.iter().cloned().fold(f64::MIN, f64::max)
+        - accs.iter().cloned().fold(f64::MAX, f64::min);
+    let mean_sd = stats::mean(&rows.iter().map(|r| r.2).collect::<Vec<_>>());
+    println!(
+        "\nspread across models = {spread:.4}; mean per-model std = {mean_sd:.4}\n\
+         (paper claim: parity — spread should be within ~1-2 stds)"
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Metrics logging: per-step CSV + simple aggregation helpers.
+
+use anyhow::Result;
+
+use crate::util::csv::CsvWriter;
+
+pub struct MetricsLog {
+    csv: CsvWriter,
+    keys: Vec<String>,
+}
+
+impl MetricsLog {
+    pub fn create(path: &str) -> Result<MetricsLog> {
+        let csv = CsvWriter::create(path, &["step", "key", "value"])?;
+        Ok(MetricsLog { csv, keys: Vec::new() })
+    }
+
+    pub fn record(&mut self, step: usize, kv: &[(&str, f64)]) -> Result<()> {
+        for (k, v) in kv {
+            if !self.keys.iter().any(|x| x == k) {
+                self.keys.push(k.to_string());
+            }
+            self.csv
+                .row(&[step.to_string(), k.to_string(), format!("{v}")])?;
+        }
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.csv.flush()?;
+        Ok(())
+    }
+}
+
+/// Accuracy accumulator over eval batches: sum(correct)/sum(mask).
+#[derive(Debug, Clone, Default)]
+pub struct Accuracy {
+    pub correct: f64,
+    pub total: f64,
+}
+
+impl Accuracy {
+    pub fn add(&mut self, correct: &[f32], mask: &[f32]) {
+        self.correct += correct.iter().map(|&c| c as f64).sum::<f64>();
+        self.total += mask.iter().map(|&m| m as f64).sum::<f64>();
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total > 0.0 {
+            self.correct / self.total
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_accumulates() {
+        let mut a = Accuracy::default();
+        a.add(&[1.0, 0.0, 1.0], &[1.0, 1.0, 1.0]);
+        a.add(&[0.0, 0.0], &[1.0, 0.0]);
+        assert!((a.value() - 0.5).abs() < 1e-12);
+    }
+}

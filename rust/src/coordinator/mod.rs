@@ -1,0 +1,62 @@
+//! L3 coordinator: the training loop, length-sweep evaluator, experiment
+//! drivers (one per paper figure/table) and the batched scoring server.
+
+pub mod evaluator;
+pub mod experiments;
+pub mod metrics;
+pub mod server;
+pub mod trainer;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+
+pub fn runtime_from(args: &Args) -> Result<Runtime> {
+    match args.opt("artifacts") {
+        Some(dir) => Runtime::new(dir),
+        None => Runtime::from_env(),
+    }
+}
+
+/// `ovq train --model M --task T [--steps N] [--seed S] [--out DIR]`
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let rt = runtime_from(args)?;
+    let model = args.opt("model").expect("--model required");
+    let task = args.opt("task").expect("--task required");
+    let cfg = trainer::TrainConfig {
+        model: model.to_string(),
+        task: task.to_string(),
+        steps: args.opt_usize("steps", 0), // 0 = manifest total_steps
+        seed: args.opt_u64("seed", 42),
+        log_every: args.opt_usize("log-every", 25),
+        out_dir: args.opt_or("out", "results"),
+        resume: args.opt("ckpt").map(String::from),
+    };
+    let summary = trainer::train(&rt, &cfg)?;
+    println!(
+        "trained {model} on {task}: final loss {:.4} ({} steps, {:.2} s/step) -> {}",
+        summary.final_loss, summary.steps, summary.sec_per_step, summary.ckpt_path
+    );
+    Ok(())
+}
+
+/// `ovq eval --model M --task T --ckpt F [--batches N]`
+pub fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = runtime_from(args)?;
+    let model_name = args.opt("model").expect("--model required");
+    let task = args.opt("task").expect("--task required");
+    let ckpt = args.opt("ckpt").expect("--ckpt required");
+    let model = rt.load_model(model_name)?;
+    let state = model.load_checkpoint(ckpt)?;
+    let points = evaluator::length_sweep(
+        &model,
+        &state.params,
+        task,
+        args.opt_usize("batches", 4),
+        args.opt_u64("seed", 7),
+        None,
+    )?;
+    evaluator::print_sweep(model_name, &points);
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Batched scoring server — the serving-side demonstration of the stack
+//! (vLLM-router-style, scaled to this repo): clients submit sequences to
+//! score; a dynamic batcher groups them up to the eval program's batch
+//! size or a timeout, executes one HLO call per group, and returns
+//! per-request results. Reports latency percentiles + throughput.
+//!
+//! Architecture: N client threads -> mpsc request queue -> batcher loop
+//! (single device owner) -> per-request oneshot-style channels back.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::Model;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+pub struct ScoreRequest {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub reply: mpsc::Sender<ScoreResponse>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScoreResponse {
+    pub loss: f32,
+    pub accuracy: f64,
+    pub latency: Duration,
+}
+
+/// The dynamic batcher: drains the queue up to `max_batch` requests or
+/// `max_wait`, pads the batch with repeats of the last request, executes,
+/// and fans results back out.
+pub fn serve_loop(
+    model: &Model<'_>,
+    prog: &str,
+    rx: mpsc::Receiver<ScoreRequest>,
+    max_wait: Duration,
+) -> Result<ServeStats> {
+    let spec = model.manifest.programs[prog].clone();
+    let (bmax, t) = (spec.batch.unwrap_or(2), spec.seq.unwrap_or(256));
+    let state = model.init(1)?; // serving demo scores under fresh params
+    let params = state.params;
+
+    let mut stats_out = ServeStats::default();
+    'outer: loop {
+        // collect up to bmax requests (blocking on the first)
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break 'outer, // all clients done
+        };
+        let mut group = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while group.len() < bmax {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(r) => group.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // assemble the padded batch
+        let n = group.len();
+        let mut tokens = Vec::with_capacity(bmax * t);
+        let mut targets = Vec::with_capacity(bmax * t);
+        let mut mask = Vec::with_capacity(bmax * t);
+        for r in &group {
+            assert_eq!(r.tokens.len(), t, "request length must match program");
+            tokens.extend_from_slice(&r.tokens);
+            targets.extend_from_slice(&r.targets);
+            mask.extend_from_slice(&r.mask);
+        }
+        for _ in n..bmax {
+            tokens.extend_from_slice(&group[n - 1].tokens);
+            targets.extend_from_slice(&group[n - 1].targets);
+            mask.extend(std::iter::repeat(0.0).take(t));
+        }
+
+        let out = model.eval(prog, &params, &tokens, &targets, &mask)?;
+        let now = Instant::now();
+        for (i, r) in group.into_iter().enumerate() {
+            let row = &out.correct[i * t..(i + 1) * t];
+            let mrow = &r.mask;
+            let correct: f64 = row.iter().map(|&c| c as f64).sum();
+            let total: f64 = mrow.iter().map(|&m| m as f64).sum();
+            let resp = ScoreResponse {
+                loss: out.loss,
+                accuracy: if total > 0.0 { correct / total } else { 0.0 },
+                latency: now.duration_since(r.submitted),
+            };
+            stats_out.latencies_ns.push(resp.latency.as_nanos() as f64);
+            stats_out.served += 1;
+            stats_out.batches += 1 * usize::from(i == 0);
+            let _ = r.reply.send(resp);
+        }
+    }
+    Ok(stats_out)
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub latencies_ns: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn report(&self, wall: Duration) {
+        println!(
+            "served {} requests in {} batches over {:.2}s  ({:.1} req/s, mean batch {:.2})",
+            self.served,
+            self.batches,
+            wall.as_secs_f64(),
+            self.served as f64 / wall.as_secs_f64(),
+            self.served as f64 / self.batches.max(1) as f64,
+        );
+        println!(
+            "latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
+            stats::percentile(&self.latencies_ns, 50.0) / 1e6,
+            stats::percentile(&self.latencies_ns, 90.0) / 1e6,
+            stats::percentile(&self.latencies_ns, 99.0) / 1e6,
+        );
+    }
+}
+
+/// `ovq serve --model M [--requests N] [--clients C] [--task T]`
+/// Demo driver: spins up client threads that generate and submit task
+/// sequences, runs the batcher until all are served, reports stats.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = super::runtime_from(args)?;
+    let model_name = args.opt_or("model", "quickstart");
+    let task = args.opt_or("task", "icr");
+    let n_requests = args.opt_usize("requests", 32);
+    let n_clients = args.opt_usize("clients", 4);
+    let model = rt.load_model(&model_name)?;
+    let prog = model
+        .manifest
+        .eval_programs()
+        .first()
+        .map(|(k, _)| k.to_string())
+        .expect("model has no eval programs");
+    let t = model.manifest.programs[&prog].seq.unwrap_or(256);
+    let vocab = model.manifest.cfg_usize("vocab", 512);
+
+    crate::info!(
+        "serving {model_name}/{prog} (T={t}) with {n_clients} clients x {} requests",
+        n_requests / n_clients
+    );
+
+    let (tx, rx) = mpsc::channel::<ScoreRequest>();
+    let mut client_handles = Vec::new();
+    for c in 0..n_clients {
+        let tx = tx.clone();
+        let task = task.clone();
+        let per = n_requests / n_clients;
+        client_handles.push(std::thread::spawn(move || {
+            let gen = crate::data::by_name(&task, vocab);
+            let mut rng = Rng::new(0xC11E07 + c as u64);
+            let mut responses = Vec::new();
+            for _ in 0..per {
+                let ex = gen.generate(&mut rng, t);
+                let (rtx, rrx) = mpsc::channel();
+                let req = ScoreRequest {
+                    tokens: ex.tokens[..t].to_vec(),
+                    targets: ex.tokens[1..t + 1].to_vec(),
+                    mask: ex.score.iter().map(|&s| if s { 1.0 } else { 0.0 }).collect(),
+                    reply: rtx,
+                    submitted: Instant::now(),
+                };
+                tx.send(req).unwrap();
+                responses.push(rrx.recv().unwrap());
+            }
+            responses
+        }));
+    }
+    drop(tx);
+
+    let t0 = Instant::now();
+    let stats_out = serve_loop(&model, &prog, rx, Duration::from_millis(5))?;
+    let wall = t0.elapsed();
+    for h in client_handles {
+        h.join().unwrap();
+    }
+    stats_out.report(wall);
+    Ok(())
+}

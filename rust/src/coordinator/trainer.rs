@@ -1,0 +1,142 @@
+//! The training orchestrator: owns the loop, the threaded data pipeline,
+//! metrics and checkpointing. One `train()` call = one model x task run.
+//!
+//! Hot-loop structure (see EXPERIMENTS.md §Perf):
+//!   [prefetch thread] --batch--> [train_step HLO execute] --metrics-->
+//! Data generation runs strictly ahead of the device so the step time is
+//! the XLA execute time, not generator time.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::batch::Prefetcher;
+use crate::runtime::{Model, Runtime, TrainState};
+use crate::util::stats::Ema;
+
+use super::metrics::MetricsLog;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub task: String,
+    /// 0 = use the manifest's total_steps
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub out_dir: String,
+    /// optional checkpoint to resume from
+    pub resume: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainSummary {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub ema_loss: f64,
+    pub sec_per_step: f64,
+    pub ckpt_path: String,
+}
+
+/// Canonical checkpoint path for a (model, task) pair.
+pub fn ckpt_path(out_dir: &str, model: &str, task: &str) -> String {
+    format!("{out_dir}/ckpt/{model}--{task}.ckpt")
+}
+
+pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainSummary> {
+    let model = rt.load_model(&cfg.model)?;
+    let (b, t) = model.train_shape()?;
+    let vocab = model.manifest.cfg_usize("vocab", 512);
+    let total_steps = if cfg.steps > 0 {
+        cfg.steps
+    } else {
+        model.manifest.cfg_usize("total_steps", 400)
+    };
+
+    let mut state = match &cfg.resume {
+        Some(p) => model
+            .load_checkpoint(p)
+            .with_context(|| format!("resuming from {p}"))?,
+        None => model.init(cfg.seed)?,
+    };
+
+    let gen = crate::data::by_name(&cfg.task, vocab);
+    let prefetch = Prefetcher::spawn(gen, cfg.seed ^ 0xDA7A, b, t, 4);
+
+    std::fs::create_dir_all(format!("{}/ckpt", cfg.out_dir))?;
+    let mut log = MetricsLog::create(&format!(
+        "{}/train_{}_{}.csv",
+        cfg.out_dir, cfg.model, cfg.task
+    ))?;
+
+    let mut ema = Ema::new(0.05);
+    let mut final_loss = f32::NAN;
+    let t0 = Instant::now();
+    let start_step = state.step as usize;
+    crate::info!(
+        "training {} on {} [{}x{}] for {} steps",
+        cfg.model, cfg.task, b, t, total_steps
+    );
+    while (state.step as usize) < total_steps {
+        let batch = prefetch.next();
+        let m = model
+            .train_step(&mut state, &batch.tokens, &batch.targets, &batch.mask)
+            .with_context(|| format!("train step {}", state.step))?;
+        final_loss = m.loss;
+        let e = ema.update(m.loss as f64);
+        log.record(m.step as usize, &[("loss", m.loss as f64), ("lr", m.lr as f64)])?;
+        if (m.step as usize) % cfg.log_every == 0 || (m.step as usize) == total_steps {
+            crate::info!(
+                "  {} step {:>5} loss {:.4} (ema {:.4}) lr {:.2e}",
+                cfg.model, m.step, m.loss, e, m.lr
+            );
+        }
+        if !m.loss.is_finite() {
+            anyhow::bail!("loss diverged (NaN/inf) at step {}", m.step);
+        }
+    }
+    let steps_done = state.step as usize - start_step;
+    let sec_per_step = t0.elapsed().as_secs_f64() / steps_done.max(1) as f64;
+
+    let path = ckpt_path(&cfg.out_dir, &cfg.model, &cfg.task);
+    model.save_checkpoint(&state, &path)?;
+    log.flush()?;
+
+    Ok(TrainSummary {
+        steps: steps_done,
+        final_loss,
+        ema_loss: ema.value.unwrap_or(f64::NAN),
+        sec_per_step,
+        ckpt_path: path,
+    })
+}
+
+/// Train-if-needed: reuse an existing checkpoint when present (experiments
+/// share trained models; delete results/ckpt to retrain).
+pub fn ensure_trained<'rt>(
+    rt: &'rt Runtime,
+    model: &str,
+    task: &str,
+    steps: usize,
+    out_dir: &str,
+) -> Result<(Model<'rt>, TrainState)> {
+    let path = ckpt_path(out_dir, model, task);
+    let m = rt.load_model(model)?;
+    if std::path::Path::new(&path).exists() {
+        crate::info!("reusing checkpoint {path}");
+        let st = m.load_checkpoint(&path)?;
+        return Ok((m, st));
+    }
+    let cfg = TrainConfig {
+        model: model.to_string(),
+        task: task.to_string(),
+        steps,
+        seed: 42,
+        log_every: 50,
+        out_dir: out_dir.to_string(),
+        resume: None,
+    };
+    train(rt, &cfg)?;
+    let st = m.load_checkpoint(&path)?;
+    Ok((m, st))
+}

@@ -1,0 +1,175 @@
+//! Basic in-context recall (paper §4.1 / App. 8.5).
+//!
+//! The context is filled with unique key→value pairs (`K ASSIGN V SEP`);
+//! after a QUERY marker, a random sample of pairs reappears and the model
+//! must reproduce the value tokens. Scored positions are exactly the value
+//! tokens of the query section (per-token accuracy, as in Fig. 4 left).
+//!
+//! Scaling: the paper uses 8-token keys/values over vocab 10k; we use
+//! 4-token keys/values over the item range of vocab 512.
+
+use std::collections::HashSet;
+
+use crate::util::rng::Rng;
+
+use super::vocab::{self, ASSIGN, QUERY, SEP};
+use super::{Example, TaskGen};
+
+pub struct BasicIcr {
+    pub vocab: usize,
+    pub key_len: usize,
+    pub val_len: usize,
+    pub n_queries: usize,
+    /// item tokens are drawn from a pool of this size: a small pool makes
+    /// the task learnable in few steps at this repo's scale (DESIGN.md §3)
+    pub item_pool: usize,
+}
+
+impl BasicIcr {
+    pub fn new(vocab: usize) -> BasicIcr {
+        BasicIcr { vocab, key_len: 2, val_len: 2, n_queries: 6, item_pool: 64 }
+    }
+
+    fn fresh_tuple(
+        &self,
+        rng: &mut Rng,
+        len: usize,
+        used: &mut HashSet<Vec<i32>>,
+        n_items: usize,
+    ) -> Vec<i32> {
+        loop {
+            let t: Vec<i32> = (0..len)
+                .map(|_| vocab::item(rng.usize_below(n_items)))
+                .collect();
+            if used.insert(t.clone()) {
+                return t;
+            }
+        }
+    }
+}
+
+impl TaskGen for BasicIcr {
+    fn name(&self) -> &'static str {
+        "icr"
+    }
+
+    fn generate(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        let n_items = vocab::item_count(self.vocab).min(self.item_pool);
+        let pair_len = self.key_len + self.val_len + 2; // K → V |
+        let query_len = self.n_queries * pair_len + 1; // QUERY marker
+        assert!(
+            seq_len > query_len + pair_len,
+            "seq_len {seq_len} too short for ICR"
+        );
+        let n_pairs = (seq_len - query_len) / pair_len;
+
+        let mut used = HashSet::new();
+        let mut keys = Vec::with_capacity(n_pairs);
+        let mut vals = Vec::with_capacity(n_pairs);
+        for _ in 0..n_pairs {
+            keys.push(self.fresh_tuple(rng, self.key_len, &mut used, n_items));
+            vals.push(self.fresh_tuple(rng, self.val_len, &mut used, n_items));
+        }
+
+        let mut tokens = Vec::with_capacity(seq_len + 1);
+        for i in 0..n_pairs {
+            tokens.extend_from_slice(&keys[i]);
+            tokens.push(ASSIGN);
+            tokens.extend_from_slice(&vals[i]);
+            tokens.push(SEP);
+        }
+        tokens.push(QUERY);
+
+        // query section: sample distinct pairs to probe
+        let probes = rng.sample_indices(n_pairs, self.n_queries.min(n_pairs));
+        let mut value_spans = Vec::new(); // (start, len) of value tokens
+        for &p in &probes {
+            tokens.extend_from_slice(&keys[p]);
+            tokens.push(ASSIGN);
+            value_spans.push((tokens.len(), self.val_len));
+            tokens.extend_from_slice(&vals[p]);
+            tokens.push(SEP);
+        }
+        // pad front if short (keep the query section at the end)
+        while tokens.len() < seq_len + 1 {
+            tokens.insert(0, SEP);
+            for s in &mut value_spans {
+                s.0 += 1;
+            }
+        }
+        tokens.truncate(seq_len + 1);
+
+        // score the prediction of each value token: position t predicts
+        // tokens[t+1], so a value token at index i is scored at t = i-1.
+        let mut score = vec![false; seq_len];
+        for (start, len) in value_spans {
+            for i in start..start + len {
+                if i >= 1 && i - 1 < seq_len {
+                    score[i - 1] = true;
+                }
+            }
+        }
+        Example { tokens, score }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn generates_valid_examples() {
+        let g = BasicIcr::new(512);
+        let mut rng = Rng::new(1);
+        for t in [128, 256, 512] {
+            let ex = g.generate(&mut rng, t);
+            ex.assert_valid(t, 512);
+            let scored = ex.score.iter().filter(|&&s| s).count();
+            assert_eq!(scored, g.n_queries * g.val_len);
+        }
+    }
+
+    #[test]
+    fn queried_values_exist_in_context() {
+        let g = BasicIcr::new(512);
+        let mut rng = Rng::new(2);
+        let ex = g.generate(&mut rng, 256);
+        let qpos = ex.tokens.iter().position(|&t| t == QUERY).unwrap();
+        // every scored target token must also appear before the query marker
+        for t in 0..ex.score.len() {
+            if ex.score[t] {
+                let tok = ex.tokens[t + 1];
+                assert!(
+                    ex.tokens[..qpos].contains(&tok),
+                    "scored token {tok} not in context"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_score_only_after_query_marker() {
+        Prop::new(3).cases(24).check(|c| {
+            let g = BasicIcr::new(512);
+            let t = 128 + c.rng.usize_below(256);
+            let ex = g.generate(&mut c.rng, t);
+            let qpos = ex.tokens.iter().position(|&x| x == QUERY).unwrap();
+            for (i, &s) in ex.score.iter().enumerate() {
+                if s && i < qpos {
+                    return Err(format!("scored position {i} before query at {qpos}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = BasicIcr::new(512);
+        let a = g.generate(&mut Rng::new(7), 256);
+        let b = g.generate(&mut Rng::new(7), 256);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.score, b.score);
+    }
+}

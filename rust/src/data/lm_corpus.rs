@@ -1,0 +1,163 @@
+//! Synthetic "book" corpus — the PG19 substitution (DESIGN.md §3).
+//!
+//! PG19's property that matters for Fig. 6 is long-range reuse: a book
+//! introduces entities and topic vocabulary early and keeps reusing them,
+//! so a reader with long memory predicts later text better than one
+//! without. The generator reproduces exactly that structure:
+//!
+//!  * per document: 2 topics (disjoint word subsets), 6 named entities
+//!    (unique 2-token names sampled per document);
+//!  * sentences mix Zipfian function words, Zipfian topic words and entity
+//!    mentions; EOS-terminated;
+//!  * the second token of an entity name is deterministic given the first
+//!    within a document, and topic words are drawn from the document's
+//!    small subset — both predictable only by remembering the document
+//!    history (constant-memory mixers forget; attention/OVQ does not).
+
+use crate::util::rng::Rng;
+
+use super::vocab::{self, EOS};
+use super::{Example, TaskGen};
+
+pub struct BookCorpus {
+    pub vocab: usize,
+    pub n_topics: usize,
+    pub topic_size: usize,
+    pub n_function_words: usize,
+    pub n_entities: usize,
+}
+
+impl BookCorpus {
+    pub fn new(vocab: usize) -> BookCorpus {
+        BookCorpus {
+            vocab,
+            n_topics: 16,
+            topic_size: 20,
+            n_function_words: 24,
+            n_entities: 6,
+        }
+    }
+
+    fn layout(&self) -> (usize, usize, usize) {
+        let items = vocab::item_count(self.vocab);
+        let fw = self.n_function_words;
+        let tw = self.n_topics * self.topic_size;
+        assert!(fw + tw + 64 <= items, "vocab too small for corpus layout");
+        // [0,fw) function words, [fw, fw+tw) topic words, rest = name pool
+        (fw, tw, items - fw - tw)
+    }
+}
+
+impl TaskGen for BookCorpus {
+    fn name(&self) -> &'static str {
+        "lm"
+    }
+
+    fn generate(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        let (fw, _tw, names) = self.layout();
+        let name_base = fw + self.n_topics * self.topic_size;
+
+        // document-level state
+        let t1 = rng.usize_below(self.n_topics);
+        let t2 = (t1 + 1 + rng.usize_below(self.n_topics - 1)) % self.n_topics;
+        let entities: Vec<(usize, usize)> = (0..self.n_entities)
+            .map(|_| {
+                (
+                    name_base + rng.usize_below(names),
+                    name_base + rng.usize_below(names),
+                )
+            })
+            .collect();
+
+        let mut tokens = Vec::with_capacity(seq_len + 1);
+        while tokens.len() < seq_len + 1 {
+            // one sentence: 6..14 content slots then EOS
+            let slots = 6 + rng.usize_below(9);
+            for _ in 0..slots {
+                let r = rng.f64();
+                if r < 0.35 {
+                    tokens.push(vocab::item(rng.zipf(fw, 1.2)));
+                } else if r < 0.80 {
+                    let topic = if rng.bool(0.5) { t1 } else { t2 };
+                    let w = fw + topic * self.topic_size
+                        + rng.zipf(self.topic_size, 1.1);
+                    tokens.push(vocab::item(w));
+                } else {
+                    let (a, b) = entities[rng.usize_below(self.n_entities)];
+                    tokens.push(vocab::item(a));
+                    tokens.push(vocab::item(b));
+                }
+            }
+            tokens.push(EOS);
+        }
+        tokens.truncate(seq_len + 1);
+
+        // language modeling scores every position
+        Example { tokens, score: vec![true; seq_len] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn valid_and_fully_scored() {
+        let g = BookCorpus::new(512);
+        let mut rng = Rng::new(1);
+        let ex = g.generate(&mut rng, 1024);
+        ex.assert_valid(1024, 512);
+        assert!(ex.score.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn entity_second_token_is_predictable() {
+        // within one document, each entity first-token maps to exactly one
+        // second-token (the long-range signal the corpus is built around)
+        let g = BookCorpus::new(512);
+        let mut rng = Rng::new(2);
+        let ex = g.generate(&mut rng, 2048);
+        let name_base = vocab::item(
+            g.n_function_words + g.n_topics * g.topic_size,
+        );
+        let mut map: HashMap<i32, i32> = HashMap::new();
+        let toks = &ex.tokens;
+        let mut consistent = 0;
+        for i in 0..toks.len() - 1 {
+            if toks[i] >= name_base {
+                if let Some(&b) = map.get(&toks[i]) {
+                    if b == toks[i + 1] {
+                        consistent += 1;
+                    }
+                } else {
+                    map.insert(toks[i], toks[i + 1]);
+                }
+            }
+        }
+        // most entity repeats should be consistent (collisions between the
+        // name pool and second tokens can add noise but must be rare)
+        assert!(consistent > 10, "too few entity repeats: {consistent}");
+    }
+
+    #[test]
+    fn documents_use_topic_subsets() {
+        let g = BookCorpus::new(512);
+        let mut rng = Rng::new(3);
+        let ex = g.generate(&mut rng, 2048);
+        let fw = g.n_function_words;
+        let tw_lo = vocab::item(fw);
+        let tw_hi = vocab::item(fw + g.n_topics * g.topic_size);
+        let mut topics_seen = std::collections::HashSet::new();
+        for &t in &ex.tokens {
+            if t >= tw_lo && t < tw_hi {
+                topics_seen.insert((t - tw_lo) as usize / g.topic_size);
+            }
+        }
+        assert!(
+            topics_seen.len() <= 2,
+            "document used {} topics, expected <= 2",
+            topics_seen.len()
+        );
+    }
+}

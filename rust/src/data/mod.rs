@@ -1,0 +1,58 @@
+//! Task generators — the paper's synthetic workload suite, generated in
+//! Rust on the request path (no Python involvement).
+//!
+//! Every generator implements [`TaskGen`]: it produces a token sequence of
+//! length T+1 plus a boolean "score" mask of length T, where score[t] means
+//! "the prediction of tokens[t+1] at position t counts toward the metric".
+//! [`batch::Batch`] assembles these into the (tokens, targets, mask) triple
+//! the train/eval HLO programs take.
+
+pub mod batch;
+pub mod icl;
+pub mod icr;
+pub mod lm_corpus;
+pub mod picr;
+pub mod shortctx;
+pub mod vocab;
+
+use crate::util::rng::Rng;
+
+/// A generated example: tokens has length seq_len + 1 (so every position
+/// has a next-token target), score has length seq_len.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub score: Vec<bool>,
+}
+
+impl Example {
+    pub fn assert_valid(&self, seq_len: usize, vocab: i32) {
+        assert_eq!(self.tokens.len(), seq_len + 1, "tokens length");
+        assert_eq!(self.score.len(), seq_len, "score length");
+        assert!(
+            self.tokens.iter().all(|&t| t >= 0 && t < vocab),
+            "token out of vocab range"
+        );
+    }
+}
+
+/// A task generator. Implementations must be deterministic in (rng, seq_len).
+pub trait TaskGen: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn generate(&self, rng: &mut Rng, seq_len: usize) -> Example;
+}
+
+/// Construct a generator by task name (the CLI contract).
+pub fn by_name(task: &str, vocab: usize) -> Box<dyn TaskGen> {
+    match task {
+        "icr" => Box::new(icr::BasicIcr::new(vocab)),
+        "picr" => Box::new(picr::PositionalIcr::new(vocab)),
+        "icl" => Box::new(icl::IclTask::new(vocab, 4)),
+        "icl1" => Box::new(icl::IclTask::new(vocab, 1)),
+        "icl8" => Box::new(icl::IclTask::new(vocab, 8)),
+        "icl16" => Box::new(icl::IclTask::new(vocab, 16)),
+        "lm" => Box::new(lm_corpus::BookCorpus::new(vocab)),
+        "shortctx" => Box::new(shortctx::ShortCtx::new(vocab)),
+        other => panic!("unknown task '{other}' (icr|picr|icl[1|8|16]|lm|shortctx)"),
+    }
+}

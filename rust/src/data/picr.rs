@@ -1,0 +1,157 @@
+//! Positional in-context recall (paper §4.1, Fig. 4 middle).
+//!
+//! Same layout as basic ICR except each key appears `n_copies` (=4) times
+//! in the context, each copy bound to a distinct value. The query presents
+//! the copies of one key in order and the model must emit the values in
+//! their order of first appearance — requiring global relative-position
+//! information, the regime where OVQ lags slightly (Fig. 4 middle).
+
+use std::collections::HashSet;
+
+use crate::util::rng::Rng;
+
+use super::vocab::{self, ASSIGN, QUERY, SEP};
+use super::{Example, TaskGen};
+
+pub struct PositionalIcr {
+    pub vocab: usize,
+    pub key_len: usize,
+    pub val_len: usize,
+    pub n_copies: usize,
+    pub item_pool: usize,
+}
+
+impl PositionalIcr {
+    pub fn new(vocab: usize) -> PositionalIcr {
+        PositionalIcr { vocab, key_len: 2, val_len: 2, n_copies: 4, item_pool: 64 }
+    }
+}
+
+impl TaskGen for PositionalIcr {
+    fn name(&self) -> &'static str {
+        "picr"
+    }
+
+    fn generate(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        let n_items = vocab::item_count(self.vocab).min(self.item_pool);
+        let pair_len = self.key_len + self.val_len + 2;
+        let query_len = self.n_copies * pair_len + 1;
+        assert!(seq_len > query_len + self.n_copies * pair_len, "seq too short");
+        let n_groups = (seq_len - query_len) / (pair_len * self.n_copies);
+        let n_groups = n_groups.max(1);
+
+        let mut used = HashSet::new();
+        let mut fresh = |rng: &mut Rng, len: usize| -> Vec<i32> {
+            loop {
+                let t: Vec<i32> = (0..len)
+                    .map(|_| vocab::item(rng.usize_below(n_items)))
+                    .collect();
+                if used.insert(t.clone()) {
+                    return t;
+                }
+            }
+        };
+
+        // one key per group, n_copies distinct values per key
+        let keys: Vec<Vec<i32>> =
+            (0..n_groups).map(|_| fresh(rng, self.key_len)).collect();
+        let vals: Vec<Vec<Vec<i32>>> = (0..n_groups)
+            .map(|_| (0..self.n_copies).map(|_| fresh(rng, self.val_len)).collect())
+            .collect();
+
+        // interleave the copies of all groups in random order, but the
+        // c-th copy of a key is always bound to its c-th value (order of
+        // appearance defines the binding, as in the paper).
+        let mut slots: Vec<usize> = (0..n_groups)
+            .flat_map(|g| std::iter::repeat(g).take(self.n_copies))
+            .collect();
+        rng.shuffle(&mut slots);
+        let mut copy_counter = vec![0usize; n_groups];
+
+        let mut tokens = Vec::with_capacity(seq_len + 1);
+        for &g in &slots {
+            let c = copy_counter[g];
+            copy_counter[g] += 1;
+            tokens.extend_from_slice(&keys[g]);
+            tokens.push(ASSIGN);
+            tokens.extend_from_slice(&vals[g][c]);
+            tokens.push(SEP);
+        }
+        tokens.push(QUERY);
+
+        // probe one key: all copies in order
+        let probe = rng.usize_below(n_groups);
+        let mut value_spans = Vec::new();
+        for c in 0..self.n_copies {
+            tokens.extend_from_slice(&keys[probe]);
+            tokens.push(ASSIGN);
+            value_spans.push((tokens.len(), self.val_len));
+            tokens.extend_from_slice(&vals[probe][c]);
+            tokens.push(SEP);
+        }
+
+        while tokens.len() < seq_len + 1 {
+            tokens.insert(0, SEP);
+            for s in &mut value_spans {
+                s.0 += 1;
+            }
+        }
+        tokens.truncate(seq_len + 1);
+
+        let mut score = vec![false; seq_len];
+        for (start, len) in value_spans {
+            for i in start..start + len {
+                if i >= 1 && i - 1 < seq_len {
+                    score[i - 1] = true;
+                }
+            }
+        }
+        Example { tokens, score }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_and_scores_all_copies() {
+        let g = PositionalIcr::new(512);
+        let mut rng = Rng::new(1);
+        let ex = g.generate(&mut rng, 512);
+        ex.assert_valid(512, 512);
+        let scored = ex.score.iter().filter(|&&s| s).count();
+        assert_eq!(scored, g.n_copies * g.val_len);
+    }
+
+    #[test]
+    fn probe_values_appear_in_context_in_order() {
+        let g = PositionalIcr::new(512);
+        let mut rng = Rng::new(3);
+        let ex = g.generate(&mut rng, 512);
+        let qpos = ex.tokens.iter().position(|&t| t == QUERY).unwrap();
+        // collect the scored spans (the probe's values, in query order)
+        let mut spans: Vec<Vec<i32>> = Vec::new();
+        let mut cur = Vec::new();
+        for t in 0..ex.score.len() {
+            if ex.score[t] {
+                cur.push(ex.tokens[t + 1]);
+                if cur.len() == g.val_len {
+                    spans.push(std::mem::take(&mut cur));
+                }
+            }
+        }
+        assert_eq!(spans.len(), g.n_copies);
+        // their first occurrences in the context must be strictly increasing
+        let ctx = &ex.tokens[..qpos];
+        let mut last = 0usize;
+        for span in &spans {
+            let pos = ctx
+                .windows(g.val_len)
+                .position(|w| w == span.as_slice())
+                .expect("probe value not found in context");
+            assert!(pos >= last, "values out of appearance order");
+            last = pos;
+        }
+    }
+}

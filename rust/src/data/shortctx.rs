@@ -1,0 +1,70 @@
+//! Short-context probe suite — the Table 1 substitution (DESIGN.md §3).
+//!
+//! Table 1's claim is *parity*: at short context, sw-ovq matches std-att
+//! and sw-nope because OVQ barely compresses. We probe that with a mixed
+//! short-context task: LM-style filler plus a small recall probe, scored
+//! like the paper's benchmarks (accuracy over answer tokens).
+
+use crate::util::rng::Rng;
+
+use super::icr::BasicIcr;
+use super::lm_corpus::BookCorpus;
+use super::{Example, TaskGen};
+
+pub struct ShortCtx {
+    icr: BasicIcr,
+    lm: BookCorpus,
+}
+
+impl ShortCtx {
+    pub fn new(vocab: usize) -> ShortCtx {
+        let mut icr = BasicIcr::new(vocab);
+        icr.key_len = 2;
+        icr.val_len = 2;
+        icr.n_queries = 3;
+        ShortCtx { icr, lm: BookCorpus::new(vocab) }
+    }
+}
+
+impl TaskGen for ShortCtx {
+    fn name(&self) -> &'static str {
+        "shortctx"
+    }
+
+    fn generate(&self, rng: &mut Rng, seq_len: usize) -> Example {
+        // half LM filler, half recall probe, concatenated
+        let lm_len = seq_len / 2;
+        let icr_len = seq_len - lm_len;
+        let lm_ex = self.lm.generate(rng, lm_len);
+        let icr_ex = self.icr.generate(rng, icr_len);
+
+        let mut tokens = lm_ex.tokens[..lm_len].to_vec();
+        tokens.extend_from_slice(&icr_ex.tokens);
+        tokens.truncate(seq_len + 1);
+
+        // score only the probe answers (benchmark-style accuracy)
+        let mut score = vec![false; seq_len];
+        for (i, &s) in icr_ex.score.iter().enumerate() {
+            let t = lm_len + i;
+            if s && t < seq_len {
+                score[t] = true;
+            }
+        }
+        Example { tokens, score }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_example() {
+        let g = ShortCtx::new(512);
+        let mut rng = Rng::new(1);
+        let ex = g.generate(&mut rng, 192);
+        ex.assert_valid(192, 512);
+        let scored = ex.score.iter().filter(|&&s| s).count();
+        assert_eq!(scored, 3 * 2); // n_queries * val_len (set below)
+    }
+}

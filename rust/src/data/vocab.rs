@@ -1,0 +1,62 @@
+//! Shared token-id conventions across all synthetic tasks.
+//!
+//! The layout is scaled from the paper's vocab-10k setup to the repo's
+//! default vocab of 512 (DESIGN.md §3): a handful of structural specials,
+//! a block of function-identifier tokens for the ICL task, then the item
+//! range used for keys/values/words/integers.
+
+/// Padding / "don't care" token.
+pub const PAD: i32 = 0;
+/// Next-pair separator ('|' in the paper's diagrams).
+pub const SEP: i32 = 1;
+/// Key->value assignment marker ('→' in the paper's diagrams).
+pub const ASSIGN: i32 = 2;
+/// Start-of-query-section marker.
+pub const QUERY: i32 = 3;
+/// End-of-sentence marker for the LM corpus.
+pub const EOS: i32 = 4;
+/// Function-identifier tokens for ICL: FUNC_BASE..FUNC_BASE+MAX_FUNCS.
+pub const FUNC_BASE: i32 = 8;
+pub const MAX_FUNCS: usize = 32;
+/// First free token usable as task content.
+pub const ITEM_BASE: i32 = FUNC_BASE + MAX_FUNCS as i32; // = 40
+
+/// Number of item tokens available for a given model vocab size.
+pub fn item_count(vocab: usize) -> usize {
+    assert!(
+        vocab as i32 > ITEM_BASE + 64,
+        "vocab {vocab} too small for the task token layout"
+    );
+    vocab - ITEM_BASE as usize
+}
+
+/// Map an item index to its token id.
+pub fn item(idx: usize) -> i32 {
+    ITEM_BASE + idx as i32
+}
+
+/// ICL function-identifier token.
+pub fn func_token(f: usize) -> i32 {
+    assert!(f < MAX_FUNCS);
+    FUNC_BASE + f as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_disjoint() {
+        assert!(PAD < SEP && SEP < ASSIGN && ASSIGN < QUERY && QUERY < EOS);
+        assert!(EOS < FUNC_BASE);
+        assert_eq!(ITEM_BASE, FUNC_BASE + MAX_FUNCS as i32);
+        assert_eq!(item(0), ITEM_BASE);
+        assert_eq!(func_token(0), FUNC_BASE);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        item_count(64);
+    }
+}

@@ -1,0 +1,17 @@
+//! OVQ-attention: a Rust + JAX + Pallas reproduction of
+//! "Online Vector Quantized Attention" (Alonso, Figliolia, Millidge 2026).
+//!
+//! Layer map (DESIGN.md):
+//!  - [`runtime`]     — PJRT client + manifest-driven HLO execution
+//!  - [`coordinator`] — training/eval/serving orchestration
+//!  - [`data`]        — task generators (ICR, positional ICR, ICL, LM, ...)
+//!  - [`ovqcore`]     — pure-Rust OVQ + baseline state machines
+//!  - [`analysis`]    — analytical FLOPs / memory models (App. D)
+//!  - [`util`]        — zero-dependency JSON/RNG/CLI/bench/prop utilities
+
+pub mod analysis;
+pub mod coordinator;
+pub mod data;
+pub mod ovqcore;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,99 @@
+//! `ovq` — the leader binary: training, evaluation, serving and
+//! paper-experiment drivers, all through AOT-compiled XLA artifacts.
+
+use anyhow::Result;
+
+use ovq::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ovq <subcommand> [options]\n\
+         \n\
+         subcommands:\n\
+           smoke                        PJRT round-trip check on the quickstart artifact\n\
+           models                       list models available in artifacts/\n\
+           train   --model M --task T   train a model on a task [--steps N] [--seed S]\n\
+           eval    --model M --task T --ckpt F   length-sweep evaluation\n\
+           exp <id>                     reproduce a paper figure/table (f1 f4 f4r f5 f6\n\
+                                        t1 f7 f8 f9 f10 f12 f13 f14 f15 f16 s34) [--quick]\n\
+           serve   --model M --ckpt F   batched scoring server demo\n\
+           flops                        print the App. D FLOPs tables\n\
+         \n\
+         options: --artifacts DIR (or $OVQ_ARTIFACTS), --out DIR (results)\n"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_str() {
+        "smoke" => cmd_smoke(&args),
+        "models" => cmd_models(&args),
+        "train" => ovq::coordinator::cmd_train(&args),
+        "eval" => ovq::coordinator::cmd_eval(&args),
+        "exp" => ovq::coordinator::experiments::cmd_exp(&args),
+        "serve" => ovq::coordinator::server::cmd_serve(&args),
+        "flops" => ovq::analysis::flops::cmd_flops(&args),
+        _ => usage(),
+    }
+}
+
+fn runtime_from(args: &Args) -> Result<ovq::runtime::Runtime> {
+    match args.opt("artifacts") {
+        Some(dir) => ovq::runtime::Runtime::new(dir),
+        None => ovq::runtime::Runtime::from_env(),
+    }
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let rt = runtime_from(args)?;
+    for name in rt.list_models()? {
+        let m = rt.load_model(&name)?;
+        println!(
+            "{:28} {:>9} params in {:>3} leaves  programs: {}",
+            name,
+            m.manifest.total_param_elems(),
+            m.manifest.param_count(),
+            m.manifest
+                .programs
+                .keys()
+                .cloned()
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let rt = runtime_from(args)?;
+    let model = rt.load_model("quickstart")?;
+    println!("platform = {}", rt.client.platform_name());
+    println!(
+        "model    = {} ({} param leaves)",
+        model.manifest.name,
+        model.manifest.param_count()
+    );
+
+    let mut state = model.init(42)?;
+    let (b, t) = model.train_shape()?;
+    let tokens: Vec<i32> = (0..(b * t) as i32).map(|i| i % 17).collect();
+    let mask = vec![1.0f32; b * t];
+    let m0 = model.train_step(&mut state, &tokens, &tokens, &mask)?;
+    let m1 = model.train_step(&mut state, &tokens, &tokens, &mask)?;
+    println!("step {} loss {:.4} lr {:.2e}", m0.step, m0.loss, m0.lr);
+    println!("step {} loss {:.4} lr {:.2e}", m1.step, m1.loss, m1.lr);
+    assert!(m1.loss.is_finite());
+
+    let et = 128.min(t) * 2;
+    let ev = model.eval(
+        "eval_128",
+        &state.params,
+        &tokens[..et],
+        &tokens[..et],
+        &mask[..et],
+    )?;
+    println!("eval_128 loss {:.4}", ev.loss);
+    println!("smoke OK");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Full-attention KV cache — the memory-accounting baseline for
+//! Fig. 4-right (kv-cache growth is linear in context length) and the
+//! exact-softmax reference for the serving example.
+
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub d: usize,
+    pub keys: Vec<f32>,
+    pub values: Vec<f32>,
+    pub beta: f32,
+}
+
+impl KvCache {
+    pub fn new(d: usize) -> KvCache {
+        KvCache { d, keys: Vec::new(), values: Vec::new(), beta: 8.0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        (self.keys.len() + self.values.len()) * 4
+    }
+
+    pub fn write(&mut self, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.d);
+        self.keys.extend_from_slice(k);
+        self.values.extend_from_slice(v);
+    }
+
+    /// Causal softmax read over everything written so far.
+    pub fn read(&self, q: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let n = self.len();
+        out.iter_mut().for_each(|o| *o = 0.0);
+        if n == 0 {
+            return;
+        }
+        let mut logits = Vec::with_capacity(n);
+        let mut m = f32::NEG_INFINITY;
+        for i in 0..n {
+            let l: f32 = self.beta
+                * q.iter()
+                    .zip(&self.keys[i * d..(i + 1) * d])
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>();
+            m = m.max(l);
+            logits.push(l);
+        }
+        let mut z = 0.0;
+        for i in 0..n {
+            let w = (logits[i] - m).exp();
+            z += w;
+            for (o, &v) in out.iter_mut().zip(&self.values[i * d..(i + 1) * d]) {
+                *o += w * v;
+            }
+        }
+        out.iter_mut().for_each(|o| *o /= z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_grows_linearly() {
+        let mut c = KvCache::new(16);
+        assert_eq!(c.state_bytes(), 0);
+        for _ in 0..100 {
+            c.write(&[0.1; 16], &[0.2; 16]);
+        }
+        assert_eq!(c.state_bytes(), 100 * 2 * 16 * 4);
+        assert_eq!(c.len(), 100);
+    }
+
+    #[test]
+    fn sharp_read_returns_best_match() {
+        let mut c = KvCache::new(4);
+        c.beta = 50.0;
+        c.write(&[1.0, 0.0, 0.0, 0.0], &[1.0; 4]);
+        c.write(&[0.0, 1.0, 0.0, 0.0], &[5.0; 4]);
+        let mut out = [0.0; 4];
+        c.read(&[0.0, 1.0, 0.0, 0.0], &mut out);
+        for &o in &out {
+            assert!((o - 5.0).abs() < 1e-3);
+        }
+    }
+}

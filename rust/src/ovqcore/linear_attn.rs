@@ -1,0 +1,110 @@
+//! Linear-attention state machine (the §3.4 / Fig. 3 contrast case):
+//! dense state S [d_k, d_v], rank-1 update per token — every update writes
+//! the WHOLE state, so the chunk update tensor is [L, d_k, d_v], growing
+//! with state size, unlike OVQ's [L, 2, d].
+
+#[derive(Debug, Clone)]
+pub struct LinearAttnState {
+    pub dk: usize,
+    pub dv: usize,
+    /// S = sum phi(k)^T v, row-major [dk, dv]
+    pub s: Vec<f32>,
+    /// z = sum phi(k)
+    pub z: Vec<f32>,
+    pub t: usize,
+}
+
+fn phi(x: f32) -> f32 {
+    // elu(x) + 1
+    if x >= 0.0 {
+        x + 1.0
+    } else {
+        x.exp()
+    }
+}
+
+impl LinearAttnState {
+    pub fn new(dk: usize, dv: usize) -> LinearAttnState {
+        LinearAttnState { dk, dv, s: vec![0.0; dk * dv], z: vec![0.0; dk], t: 0 }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        (self.s.len() + self.z.len()) * 4
+    }
+
+    /// Bytes materialized per chunk of length l in the standard
+    /// chunk-parallel implementation (paper §3.4): ΔS is [L, dk, dv].
+    pub fn update_bytes_per_chunk(&self, l: usize) -> usize {
+        l * self.dk * self.dv * 4
+    }
+
+    pub fn write(&mut self, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.dk);
+        debug_assert_eq!(v.len(), self.dv);
+        for i in 0..self.dk {
+            let ki = phi(k[i]);
+            self.z[i] += ki;
+            let row = &mut self.s[i * self.dv..(i + 1) * self.dv];
+            for (sj, &vj) in row.iter_mut().zip(v) {
+                *sj += ki * vj;
+            }
+        }
+        self.t += 1;
+    }
+
+    pub fn read(&self, q: &[f32], out: &mut [f32]) {
+        let mut den = 1e-6f32;
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..self.dk {
+            let qi = phi(q[i]);
+            den += qi * self.z[i];
+            let row = &self.s[i * self.dv..(i + 1) * self.dv];
+            for (o, &sj) in out.iter_mut().zip(row) {
+                *o += qi * sj;
+            }
+        }
+        out.iter_mut().for_each(|o| *o /= den);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_write_read_recovers_value() {
+        // with one stored pair and q == k, the normalized read returns v
+        let mut st = LinearAttnState::new(8, 4);
+        let k: Vec<f32> = (0..8).map(|i| (i as f32) / 8.0).collect();
+        let v = vec![1.0, -2.0, 3.0, 0.5];
+        st.write(&k, &v);
+        let mut out = vec![0.0; 4];
+        st.read(&k, &mut out);
+        for (o, &vi) in out.iter().zip(&v) {
+            assert!((o - vi).abs() < 1e-3, "{o} vs {vi}");
+        }
+    }
+
+    #[test]
+    fn state_size_independent_of_tokens() {
+        let mut st = LinearAttnState::new(16, 16);
+        let b0 = st.state_bytes();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let k: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            st.write(&k, &v);
+        }
+        assert_eq!(st.state_bytes(), b0);
+        assert_eq!(st.t, 1000);
+    }
+
+    #[test]
+    fn update_tensor_grows_with_state() {
+        // the paper's §3.4 point, as arithmetic
+        let small = LinearAttnState::new(64, 64);
+        let big = LinearAttnState::new(128, 128);
+        assert!(big.update_bytes_per_chunk(32) > small.update_bytes_per_chunk(32));
+    }
+}

@@ -1,0 +1,121 @@
+//! Memory-state accounting — reproduces Fig. 4 (right: kv-cache/state size
+//! vs context length) and the §3.4 ΔS-footprint comparison (Fig. 3).
+//!
+//! All quantities are exact byte counts from the layer definitions; the
+//! per-layer/per-head factors use the paper's architecture conventions
+//! (state per head, H heads, f32).
+
+/// Memory state of one sequence-mixing layer, bytes, as a function of the
+/// context length t.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixerKind {
+    /// full attention: K and V cached for every position
+    FullAttention,
+    /// sliding window w: K/V for the last w positions
+    SlidingWindow { window: usize },
+    /// OVQ: D_k, D_v [N_t, d] + counts, N_t = growth(t) -> N
+    Ovq { n_max: usize },
+    /// VQ (Lingle): static D_k + online D_v + counts (constant N)
+    Vq { n: usize },
+    /// linear attention / SSD: S [d, d] (+ z [d])
+    LinearAttention,
+    /// gated delta net: S [d, d]
+    Gdn,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct MixerGeom {
+    pub heads: usize,
+    pub d_head: usize,
+}
+
+impl MixerKind {
+    /// State bytes per layer at context length t.
+    pub fn state_bytes(&self, g: MixerGeom, t: usize) -> usize {
+        let hd4 = g.heads * g.d_head * 4;
+        match *self {
+            MixerKind::FullAttention => 2 * t * hd4,
+            MixerKind::SlidingWindow { window } => 2 * t.min(window) * hd4,
+            MixerKind::Ovq { n_max } => {
+                let n_t = super::growth_n_t(t, n_max);
+                2 * n_t * hd4 + n_t * g.heads * 4 // D_k + D_v + counts
+            }
+            MixerKind::Vq { n } => 2 * n * hd4 + n * g.heads * 4,
+            MixerKind::LinearAttention => {
+                g.heads * (g.d_head * g.d_head + g.d_head) * 4
+            }
+            MixerKind::Gdn => g.heads * g.d_head * g.d_head * 4,
+        }
+    }
+
+    /// Bytes of the per-chunk state-update tensor ΔS (chunk length l) in
+    /// the standard chunk-parallel implementation — the §3.4 comparison.
+    pub fn update_bytes(&self, g: MixerGeom, l: usize) -> usize {
+        let hd4 = g.heads * g.d_head * 4;
+        match *self {
+            // appending l keys+values
+            MixerKind::FullAttention | MixerKind::SlidingWindow { .. } => 2 * l * hd4,
+            // sparse: each token touches one row of D_k and one of D_v
+            // (ΔS in R^{L x 2 x d}) — INDEPENDENT of N
+            MixerKind::Ovq { .. } | MixerKind::Vq { .. } => 2 * l * hd4,
+            // dense: each token materializes a full [d_k, d_v] update
+            MixerKind::LinearAttention | MixerKind::Gdn => {
+                l * g.heads * g.d_head * g.d_head * 4
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const G: MixerGeom = MixerGeom { heads: 4, d_head: 32 };
+
+    #[test]
+    fn full_attention_grows_linearly() {
+        let a = MixerKind::FullAttention.state_bytes(G, 1000);
+        let b = MixerKind::FullAttention.state_bytes(G, 2000);
+        assert_eq!(b, 2 * a);
+    }
+
+    #[test]
+    fn ovq_state_plateaus() {
+        let k = MixerKind::Ovq { n_max: 256 };
+        let early = k.state_bytes(G, 256);
+        let late = k.state_bytes(G, 1 << 20);
+        let cap = k.state_bytes(G, usize::MAX / 2);
+        assert!(early < late);
+        assert!(late <= cap);
+        // the asymptote approaches (but never exceeds) the N_max dictionary
+        let bound = 2 * 256 * 4 * 32 * 4 + 256 * 4 * 4;
+        assert!(cap <= bound && cap >= bound * 9 / 10, "cap {cap} vs bound {bound}");
+    }
+
+    #[test]
+    fn ovq_update_independent_of_n() {
+        let small = MixerKind::Ovq { n_max: 128 };
+        let big = MixerKind::Ovq { n_max: 1 << 16 };
+        assert_eq!(small.update_bytes(G, 32), big.update_bytes(G, 32));
+    }
+
+    #[test]
+    fn linear_attention_update_grows_with_d() {
+        let g2 = MixerGeom { heads: 4, d_head: 64 };
+        assert!(
+            MixerKind::LinearAttention.update_bytes(g2, 32)
+                > MixerKind::LinearAttention.update_bytes(G, 32)
+        );
+        // and exceeds OVQ's for any realistic d
+        assert!(
+            MixerKind::LinearAttention.update_bytes(G, 32)
+                > MixerKind::Ovq { n_max: 4096 }.update_bytes(G, 32)
+        );
+    }
+
+    #[test]
+    fn sliding_window_saturates() {
+        let k = MixerKind::SlidingWindow { window: 128 };
+        assert_eq!(k.state_bytes(G, 128), k.state_bytes(G, 10_000));
+    }
+}

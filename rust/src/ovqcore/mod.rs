@@ -1,0 +1,66 @@
+//! Pure-Rust implementations of the paper's sequence-mixing state machines.
+//!
+//! These mirror the L2 JAX semantics (same growth schedule, same merge
+//! rule, same masking) in plain Rust. They serve three roles:
+//!  1. the serving path of `examples/serve_ovq.rs` (single-token decode
+//!     without re-running a whole HLO program),
+//!  2. the §3.4 / Fig. 3 / Fig. 4-right memory-accounting experiments
+//!     ([`memstate`]),
+//!  3. criterion-style throughput benches of the state update — the
+//!     paper's core systems claim that the OVQ update cost is independent
+//!     of the dictionary size N while linear attention's is not.
+
+pub mod gdn;
+pub mod kvcache;
+pub mod linear_attn;
+pub mod memstate;
+pub mod ovq;
+pub mod vq;
+
+/// Growth schedule (paper eqs. 17-18): N_t = floor(t*N / (t+N)).
+pub fn growth_n_t(t: usize, n_max: usize) -> usize {
+    if t == 0 {
+        return 0;
+    }
+    // u128 intermediate: t * n_max overflows usize for large sweeps
+    ((t as u128 * n_max as u128) / (t as u128 + n_max as u128)) as usize
+}
+
+/// Number of new centroids for chunk c (1-based end position = c*chunk).
+pub fn growth_n_new(chunk_idx: usize, chunk_len: usize, n_max: usize) -> usize {
+    growth_n_t((chunk_idx + 1) * chunk_len, n_max)
+        - growth_n_t(chunk_idx * chunk_len, n_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn growth_plateaus_at_n() {
+        assert_eq!(growth_n_t(0, 128), 0);
+        assert!(growth_n_t(1_000_000, 128) <= 128);
+        assert_eq!(growth_n_t(1_000_000_000, 128), 127); // asymptote
+        // monotone
+        let mut prev = 0;
+        for t in 0..10_000 {
+            let n = growth_n_t(t, 128);
+            assert!(n >= prev);
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn n_new_sums_to_n_t() {
+        let (l, n) = (32, 256);
+        let total: usize = (0..100).map(|c| growth_n_new(c, l, n)).sum();
+        assert_eq!(total, growth_n_t(100 * l, n));
+    }
+
+    #[test]
+    fn n_new_never_exceeds_chunk() {
+        for c in 0..1000 {
+            assert!(growth_n_new(c, 16, 4096) <= 16);
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! Pure-Rust OVQ-attention state machine (single head) — the paper's
+//! §3.2 algorithm: chunk prediction (eq. 15), spread-maximizing growth
+//! (eqs. 17-18), adaptive-lr online k-means merge (eq. 19).
+//!
+//! Semantics match python/compile/layers/ovq.py; the integration test
+//! rust/tests/golden.rs cross-checks outputs against the HLO path.
+
+use super::{growth_n_new};
+
+#[derive(Debug, Clone)]
+pub struct OvqConfig {
+    pub d: usize,
+    pub n_max: usize,
+    pub chunk: usize,
+    pub beta: f32,
+    /// Fig. 7 ablations
+    pub const_lr: Option<f32>,
+    pub linear_growth: bool,
+    pub rand_assign: bool,
+    /// horizon used by the linear-growth ablation to spread centroids
+    pub linear_growth_chunks: usize,
+}
+
+impl OvqConfig {
+    pub fn new(d: usize, n_max: usize, chunk: usize) -> OvqConfig {
+        OvqConfig {
+            d,
+            n_max,
+            chunk,
+            beta: 8.0,
+            const_lr: None,
+            linear_growth: false,
+            rand_assign: false,
+            linear_growth_chunks: 64,
+        }
+    }
+}
+
+/// The constant-size OVQ memory state.
+#[derive(Debug, Clone)]
+pub struct OvqState {
+    pub cfg: OvqConfig,
+    /// [n_max, d] row-major key centroids
+    pub dk: Vec<f32>,
+    /// [n_max, d] value centroids
+    pub dv: Vec<f32>,
+    /// per-slot assignment counts (0 = inactive)
+    pub counts: Vec<f32>,
+    pub n_active: usize,
+    /// tokens absorbed so far
+    pub t: usize,
+    chunk_idx: usize,
+}
+
+impl OvqState {
+    pub fn new(cfg: OvqConfig) -> OvqState {
+        let n = cfg.n_max;
+        let d = cfg.d;
+        OvqState {
+            cfg,
+            dk: vec![0.0; n * d],
+            dv: vec![0.0; n * d],
+            counts: vec![0.0; n],
+            n_active: 0,
+            t: 0,
+            chunk_idx: 0,
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        (self.dk.len() + self.dv.len() + self.counts.len()) * 4
+    }
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    /// Attention of one query over the current dictionary + an in-chunk
+    /// prefix (keys[..upto], values[..upto]) — eq. 15 for a single row.
+    pub fn attend(
+        &self,
+        q: &[f32],
+        chunk_k: &[f32],
+        chunk_v: &[f32],
+        upto: usize,
+        out: &mut [f32],
+    ) {
+        let d = self.cfg.d;
+        let beta = self.cfg.beta;
+        debug_assert_eq!(q.len(), d);
+        let n = self.n_active;
+
+        // logits over active slots + visible chunk items, streaming softmax
+        let mut m = f32::NEG_INFINITY;
+        let mut logits: Vec<f32> = Vec::with_capacity(n + upto);
+        for s in 0..n {
+            if self.counts[s] > 0.0 {
+                let l = beta * Self::dot(q, &self.dk[s * d..(s + 1) * d])
+                    + self.counts[s].ln();
+                logits.push(l);
+                m = m.max(l);
+            } else {
+                logits.push(f32::NEG_INFINITY);
+            }
+        }
+        for j in 0..upto {
+            let l = beta * Self::dot(q, &chunk_k[j * d..(j + 1) * d]);
+            logits.push(l);
+            m = m.max(l);
+        }
+
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut z = 0.0f32;
+        for (s, &l) in logits.iter().enumerate().take(n) {
+            if l > f32::NEG_INFINITY {
+                let w = (l - m).exp();
+                z += w;
+                let row = &self.dv[s * d..(s + 1) * d];
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o += w * v;
+                }
+            }
+        }
+        for j in 0..upto {
+            let w = (logits[n + j] - m).exp();
+            z += w;
+            let row = &chunk_v[j * d..(j + 1) * d];
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += w * v;
+            }
+        }
+        if z > 0.0 {
+            out.iter_mut().for_each(|o| *o /= z);
+        }
+    }
+
+    /// Process one chunk: returns outputs [len, d] and performs the state
+    /// update (grow + merge). keys/values are [len, d] row-major, len <=
+    /// cfg.chunk (the last chunk may be short).
+    pub fn process_chunk(&mut self, queries: &[f32], keys: &[f32], values: &[f32]) -> Vec<f32> {
+        let d = self.cfg.d;
+        let len = keys.len() / d;
+        debug_assert!(len <= self.cfg.chunk);
+
+        // 1. predict
+        let mut out = vec![0.0f32; len * d];
+        for i in 0..len {
+            let (head, tail) = out.split_at_mut(i * d);
+            let _ = head;
+            self.attend(
+                &queries[i * d..(i + 1) * d],
+                keys,
+                values,
+                i + 1,
+                &mut tail[..d],
+            );
+        }
+
+        // 2. grow + 3. merge
+        self.update_chunk(keys, values);
+        out
+    }
+
+    /// The state update only (used by the benches to isolate update cost).
+    pub fn update_chunk(&mut self, keys: &[f32], values: &[f32]) {
+        let d = self.cfg.d;
+        let len = keys.len() / d;
+
+        // nearest active centroid per item
+        let mut best_idx = vec![0usize; len];
+        let mut best_sim = vec![f32::NEG_INFINITY; len];
+        for i in 0..len {
+            let k = &keys[i * d..(i + 1) * d];
+            for s in 0..self.n_active {
+                if self.counts[s] > 0.0 {
+                    let sim = Self::dot(k, &self.dk[s * d..(s + 1) * d]);
+                    if sim > best_sim[i] {
+                        best_sim[i] = sim;
+                        best_idx[i] = s;
+                    }
+                }
+            }
+        }
+
+        // growth count for this chunk
+        let n_new = if self.cfg.linear_growth {
+            let per = self.cfg.n_max / self.cfg.linear_growth_chunks;
+            per.min(self.cfg.n_max - self.n_active).min(len)
+        } else {
+            growth_n_new(self.chunk_idx, self.cfg.chunk, self.cfg.n_max)
+                .min(self.cfg.n_max - self.n_active)
+                .min(len)
+        };
+
+        // choose new centroids: lowest best-similarity (or pseudo-random)
+        let mut order: Vec<usize> = (0..len).collect();
+        if self.cfg.rand_assign {
+            // deterministic pseudo-random priority from position + time
+            order.sort_by_key(|&i| {
+                (i as u64)
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(self.t as u64)
+                    .rotate_left(17)
+            });
+        } else {
+            order.sort_by(|&a, &b| best_sim[a].partial_cmp(&best_sim[b]).unwrap());
+        }
+        let mut is_new = vec![false; len];
+        for &i in order.iter().take(n_new) {
+            is_new[i] = true;
+        }
+
+        // assignments: new items claim fresh slots in position order
+        let mut next_slot = self.n_active;
+        let mut assign = vec![0usize; len];
+        for i in 0..len {
+            if is_new[i] {
+                assign[i] = next_slot;
+                next_slot += 1;
+            } else if self.n_active > 0 {
+                assign[i] = best_idx[i];
+            } else {
+                assign[i] = 0; // degenerate cold start: merge into slot 0
+            }
+        }
+        self.n_active = next_slot;
+
+        // merge: exact count-weighted mean (eq. 19 batch form) or const-lr
+        // accumulate per-slot chunk sums first
+        let mut touched: Vec<usize> = assign.clone();
+        touched.sort_unstable();
+        touched.dedup();
+        for &s in &touched {
+            let mut cc = 0.0f32;
+            let mut sum_k = vec![0.0f32; d];
+            let mut sum_v = vec![0.0f32; d];
+            for i in 0..len {
+                if assign[i] == s {
+                    cc += 1.0;
+                    for j in 0..d {
+                        sum_k[j] += keys[i * d + j];
+                        sum_v[j] += values[i * d + j];
+                    }
+                }
+            }
+            let c_old = self.counts[s];
+            match self.cfg.const_lr {
+                Some(lr) if c_old > 0.0 => {
+                    for j in 0..d {
+                        self.dk[s * d + j] +=
+                            lr * (sum_k[j] - cc * self.dk[s * d + j]);
+                        self.dv[s * d + j] +=
+                            lr * (sum_v[j] - cc * self.dv[s * d + j]);
+                    }
+                }
+                _ => {
+                    let denom = c_old + cc;
+                    for j in 0..d {
+                        self.dk[s * d + j] =
+                            (c_old * self.dk[s * d + j] + sum_k[j]) / denom;
+                        self.dv[s * d + j] =
+                            (c_old * self.dv[s * d + j] + sum_v[j]) / denom;
+                    }
+                }
+            }
+            self.counts[s] = c_old + cc;
+        }
+
+        self.t += len;
+        self.chunk_idx += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn counts_equal_tokens_processed() {
+        let mut st = OvqState::new(OvqConfig::new(8, 64, 16));
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let k = rand_vec(&mut rng, 16 * 8);
+            let v = rand_vec(&mut rng, 16 * 8);
+            let q = rand_vec(&mut rng, 16 * 8);
+            st.process_chunk(&q, &k, &v);
+        }
+        assert_eq!(st.t, 160);
+        let total: f32 = st.counts.iter().sum();
+        assert_eq!(total as usize, 160);
+        assert!(st.n_active <= 64);
+        assert!(st.n_active > 0);
+    }
+
+    #[test]
+    fn active_slots_track_growth_schedule() {
+        let mut st = OvqState::new(OvqConfig::new(4, 128, 32));
+        let mut rng = Rng::new(2);
+        for c in 0..20 {
+            let k = rand_vec(&mut rng, 32 * 4);
+            let v = rand_vec(&mut rng, 32 * 4);
+            st.update_chunk(&k, &v);
+            assert_eq!(
+                st.n_active,
+                super::super::growth_n_t((c + 1) * 32, 128),
+                "chunk {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn output_is_convex_combination() {
+        // all values equal => output equals that value
+        let mut st = OvqState::new(OvqConfig::new(4, 32, 8));
+        let mut rng = Rng::new(3);
+        for _ in 0..4 {
+            let k = rand_vec(&mut rng, 8 * 4);
+            let v = vec![2.5f32; 8 * 4];
+            let q = rand_vec(&mut rng, 8 * 4);
+            let out = st.process_chunk(&q, &k, &v);
+            for &o in &out {
+                assert!((o - 2.5).abs() < 1e-4, "o={o}");
+            }
+        }
+    }
+
+    #[test]
+    fn centroid_is_mean_of_assigned() {
+        // one chunk, everything forced into fresh slots or slot 0: the
+        // count-weighted invariant sum(counts_s * mu_s) == sum(inputs)
+        let mut st = OvqState::new(OvqConfig::new(2, 16, 8));
+        let mut rng = Rng::new(4);
+        let k = rand_vec(&mut rng, 8 * 2);
+        let v = rand_vec(&mut rng, 8 * 2);
+        st.update_chunk(&k, &v);
+        let mut weighted = vec![0.0f32; 2];
+        for s in 0..st.cfg.n_max {
+            for j in 0..2 {
+                weighted[j] += st.counts[s] * st.dk[s * 2 + j];
+            }
+        }
+        let mut total = vec![0.0f32; 2];
+        for i in 0..8 {
+            for j in 0..2 {
+                total[j] += k[i * 2 + j];
+            }
+        }
+        for j in 0..2 {
+            assert!((weighted[j] - total[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn prop_mass_conservation_over_time() {
+        // the count-weighted centroid sum always equals the running input
+        // sum (exact-merge mode) — the EM/k-means invariant.
+        Prop::new(5).cases(16).check(|c| {
+            let d = 2 + c.rng.usize_below(6);
+            let chunk = 4 + c.rng.usize_below(12);
+            let n = 8 + c.rng.usize_below(64);
+            let mut st = OvqState::new(OvqConfig::new(d, n, chunk));
+            let mut run_sum = vec![0.0f64; d];
+            for _ in 0..6 {
+                let k: Vec<f32> =
+                    (0..chunk * d).map(|_| c.rng.normal() as f32).collect();
+                let v: Vec<f32> =
+                    (0..chunk * d).map(|_| c.rng.normal() as f32).collect();
+                for i in 0..chunk {
+                    for j in 0..d {
+                        run_sum[j] += k[i * d + j] as f64;
+                    }
+                }
+                st.update_chunk(&k, &v);
+                let mut w = vec![0.0f64; d];
+                for s in 0..n {
+                    for j in 0..d {
+                        w[j] += (st.counts[s] * st.dk[s * d + j]) as f64;
+                    }
+                }
+                for j in 0..d {
+                    if (w[j] - run_sum[j]).abs() > 1e-2 {
+                        return Err(format!(
+                            "mass not conserved: {} vs {}",
+                            w[j], run_sum[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn const_lr_differs_from_exact_merge() {
+        let mut a = OvqState::new(OvqConfig::new(4, 16, 8));
+        let mut cfg = OvqConfig::new(4, 16, 8);
+        cfg.const_lr = Some(0.025);
+        let mut b = OvqState::new(cfg);
+        let mut rng = Rng::new(6);
+        for _ in 0..6 {
+            let k = rand_vec(&mut rng, 8 * 4);
+            let v = rand_vec(&mut rng, 8 * 4);
+            a.update_chunk(&k, &v);
+            b.update_chunk(&k, &v);
+        }
+        // same growth, different centroids
+        assert_eq!(a.n_active, b.n_active);
+        let diff: f32 = a
+            .dk
+            .iter()
+            .zip(&b.dk)
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        assert!(diff > 1e-3, "ablation should change the state");
+    }
+}

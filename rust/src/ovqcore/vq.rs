@@ -1,0 +1,157 @@
+//! Original VQ-attention state machine (Lingle 2023) — static pretrained
+//! key dictionary, online value dictionary + counts. The Fig. 1 baseline.
+
+#[derive(Debug, Clone)]
+pub struct VqState {
+    pub d: usize,
+    pub n: usize,
+    /// static pretrained key centroids [n, d] (unit-norm)
+    pub dk: Vec<f32>,
+    /// online value centroids [n, d]
+    pub dv: Vec<f32>,
+    pub counts: Vec<f32>,
+    pub beta: f32,
+}
+
+impl VqState {
+    pub fn new(d: usize, dk: Vec<f32>) -> VqState {
+        let n = dk.len() / d;
+        VqState { d, n, dk, dv: vec![0.0; n * d], counts: vec![0.0; n], beta: 8.0 }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        (self.dk.len() + self.dv.len() + self.counts.len()) * 4
+    }
+
+    pub fn nearest(&self, k: &[f32]) -> usize {
+        let d = self.d;
+        let mut best = 0;
+        let mut best_sim = f32::NEG_INFINITY;
+        for s in 0..self.n {
+            let sim: f32 = k
+                .iter()
+                .zip(&self.dk[s * d..(s + 1) * d])
+                .map(|(a, b)| a * b)
+                .sum();
+            if sim > best_sim {
+                best_sim = sim;
+                best = s;
+            }
+        }
+        best
+    }
+
+    /// Absorb one (k, v): count-weighted mean into the assigned slot.
+    pub fn write(&mut self, k: &[f32], v: &[f32]) {
+        let s = self.nearest(k);
+        let d = self.d;
+        let c = self.counts[s];
+        for j in 0..d {
+            self.dv[s * d + j] = (c * self.dv[s * d + j] + v[j]) / (c + 1.0);
+        }
+        self.counts[s] = c + 1.0;
+    }
+
+    /// Linear-form read (paper eq. 6): softmax(beta q Dk^T + log c) Dv.
+    pub fn read(&self, q: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let mut m = f32::NEG_INFINITY;
+        let mut logits = vec![f32::NEG_INFINITY; self.n];
+        for s in 0..self.n {
+            if self.counts[s] > 0.0 {
+                let sim: f32 = q
+                    .iter()
+                    .zip(&self.dk[s * d..(s + 1) * d])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                logits[s] = self.beta * sim + self.counts[s].ln();
+                m = m.max(logits[s]);
+            }
+        }
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut z = 0.0;
+        for s in 0..self.n {
+            if logits[s] > f32::NEG_INFINITY {
+                let w = (logits[s] - m).exp();
+                z += w;
+                for (o, &v) in out.iter_mut().zip(&self.dv[s * d..(s + 1) * d]) {
+                    *o += w * v;
+                }
+            }
+        }
+        if z > 0.0 {
+            out.iter_mut().for_each(|o| *o /= z);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn unit_dict(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        let mut dk = vec![0.0f32; n * d];
+        for s in 0..n {
+            let mut norm = 0.0;
+            for j in 0..d {
+                dk[s * d + j] = rng.normal() as f32;
+                norm += dk[s * d + j] * dk[s * d + j];
+            }
+            let norm = norm.sqrt();
+            for j in 0..d {
+                dk[s * d + j] /= norm;
+            }
+        }
+        dk
+    }
+
+    #[test]
+    fn quantization_loses_offcluster_information() {
+        // two keys assigned to the same centroid become indistinguishable —
+        // the failure mode Fig. 1 demonstrates
+        let mut rng = Rng::new(1);
+        let dk = unit_dict(&mut rng, 2, 4);
+        let mut st = VqState::new(4, dk.clone());
+        let k = &dk[0..4];
+        st.write(k, &[1.0; 4]);
+        st.write(k, &[3.0; 4]); // same slot: value becomes the mean
+        let mut out = [0.0; 4];
+        st.beta = 100.0;
+        st.read(k, &mut out);
+        for &o in &out {
+            assert!((o - 2.0).abs() < 1e-3, "expected mean 2.0, got {o}");
+        }
+    }
+
+    #[test]
+    fn counts_bias_toward_heavy_clusters() {
+        let mut rng = Rng::new(2);
+        let dk = unit_dict(&mut rng, 2, 4);
+        let mut st = VqState::new(4, dk.clone());
+        // 9 writes to slot A with value 1, 1 write to slot B with value -1
+        for _ in 0..9 {
+            st.write(&dk[0..4].to_vec(), &[1.0; 4]);
+        }
+        st.write(&dk[4..8].to_vec(), &[-1.0; 4]);
+        // an ambiguous query (sum of centroids) leans toward the heavy slot
+        let q: Vec<f32> = (0..4).map(|j| dk[j] + dk[4 + j]).collect();
+        st.beta = 0.0; // ignore similarity; counts only
+        let mut out = [0.0; 4];
+        st.read(&q, &mut out);
+        assert!(out[0] > 0.5, "count prior should dominate: {}", out[0]);
+    }
+
+    #[test]
+    fn state_is_constant_size() {
+        let mut rng = Rng::new(3);
+        let dk = unit_dict(&mut rng, 8, 4);
+        let mut st = VqState::new(4, dk);
+        let b0 = st.state_bytes();
+        for _ in 0..500 {
+            let k: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            st.write(&k, &[0.5; 4]);
+        }
+        assert_eq!(st.state_bytes(), b0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Literal construction/extraction helpers around the xla crate.
+
+use anyhow::{bail, Context, Result};
+
+/// The dtypes the artifact manifests use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "bf16" => DType::Bf16,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+            DType::Bf16 => xla::ElementType::Bf16,
+        }
+    }
+
+    pub fn byte_width(&self) -> usize {
+        match self {
+            DType::Bf16 => 2,
+            _ => 4,
+        }
+    }
+}
+
+fn bytes_of<T: Copy>(data: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr() as *const u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+fn make_literal(ty: xla::ElementType, dims: &[usize], bytes: &[u8]) -> xla::Literal {
+    xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+        .expect("shape/data size mismatch building literal")
+}
+
+/// f32 literal of the given shape from a flat row-major slice.
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> xla::Literal {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    make_literal(xla::ElementType::F32, dims, bytes_of(data))
+}
+
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> xla::Literal {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    make_literal(xla::ElementType::S32, dims, bytes_of(data))
+}
+
+pub fn literal_u32(dims: &[usize], data: &[u32]) -> xla::Literal {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    make_literal(xla::ElementType::U32, dims, bytes_of(data))
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    literal_i32(&[], &[v])
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    literal_f32(&[], &[v])
+}
+
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().context("literal -> Vec<f32>")
+}
+
+pub fn to_vec_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    l.to_vec::<i32>().context("literal -> Vec<i32>")
+}
+
+pub fn scalar_from(l: &xla::Literal) -> Result<f32> {
+    Ok(to_vec_f32(l)?[0])
+}
+
+/// Raw bytes of a literal (for checkpointing).
+pub fn literal_bytes(l: &xla::Literal) -> Result<Vec<u8>> {
+    let n = l.size_bytes();
+    let mut buf = vec![0u8; n];
+    // copy_raw_to is typed; go through the element type
+    match l.ty().context("literal element type")? {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>()?;
+            buf.copy_from_slice(bytes_of(&v));
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>()?;
+            buf.copy_from_slice(bytes_of(&v));
+        }
+        xla::ElementType::U32 => {
+            let v = l.to_vec::<u32>()?;
+            buf.copy_from_slice(bytes_of(&v));
+        }
+        other => bail!("unsupported checkpoint dtype {other:?}"),
+    }
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let l = literal_i32(&[4], &[-1, 0, 1, 2]);
+        assert_eq!(to_vec_i32(&l).unwrap(), vec![-1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn scalar() {
+        let l = scalar_i32(42);
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(to_vec_i32(&l).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

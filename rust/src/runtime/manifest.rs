@@ -1,0 +1,158 @@
+//! Manifest parsing: the JSON contract emitted by python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::literal::DType;
+
+/// One parameter leaf (name, shape, dtype) in flat order.
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered program (init / train / eval_*).
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub n_dict: Option<usize>,
+}
+
+/// The full model manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub config: Json,
+    pub params: Vec<LeafSpec>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, model: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{model}.manifest.json"));
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} (run `make artifacts`)", path.display())
+        })?;
+        let j = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let name = j
+            .get("name")
+            .and_then(|n| n.as_str())
+            .context("manifest missing 'name'")?
+            .to_string();
+        let mut params = Vec::new();
+        for p in j.get("params").and_then(|p| p.as_arr()).context("params")? {
+            params.push(LeafSpec {
+                name: p.get("name").and_then(|x| x.as_str()).context("leaf name")?.into(),
+                shape: p
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .context("leaf shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: DType::parse(
+                    p.get("dtype").and_then(|x| x.as_str()).context("leaf dtype")?,
+                )?,
+            });
+        }
+        let mut programs = BTreeMap::new();
+        for (k, v) in j.get("programs").and_then(|p| p.as_obj()).context("programs")? {
+            programs.insert(
+                k.clone(),
+                ProgramSpec {
+                    file: v.get("file").and_then(|x| x.as_str()).context("file")?.into(),
+                    batch: v.get("batch").and_then(|x| x.as_usize()),
+                    seq: v.get("seq").and_then(|x| x.as_usize()),
+                    n_dict: v.get("n_dict").and_then(|x| x.as_usize()),
+                },
+            );
+        }
+        Ok(Manifest {
+            name,
+            config: j.get("config").cloned().unwrap_or(Json::Null),
+            params,
+            programs,
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Config accessor with default.
+    pub fn cfg_usize(&self, key: &str, default: usize) -> usize {
+        self.config.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn cfg_f64(&self, key: &str, default: f64) -> f64 {
+        self.config.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    /// The eval program names sorted by sequence length.
+    pub fn eval_programs(&self) -> Vec<(&String, &ProgramSpec)> {
+        let mut v: Vec<_> = self
+            .programs
+            .iter()
+            .filter(|(k, _)| k.starts_with("eval"))
+            .collect();
+        v.sort_by_key(|(_, p)| (p.seq.unwrap_or(0), p.n_dict.unwrap_or(0)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "m1",
+      "config": {"dim": 64, "chunk": 32, "lr": 0.001},
+      "params": [
+        {"name": "['embed']", "shape": [256, 64], "dtype": "f32"},
+        {"name": "['head']", "shape": [64, 256], "dtype": "f32"}
+      ],
+      "programs": {
+        "init": {"file": "m1.init.hlo.txt"},
+        "train": {"file": "m1.train.hlo.txt", "batch": 4, "seq": 128},
+        "eval_256": {"file": "m1.eval_256.hlo.txt", "batch": 2, "seq": 256}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.name, "m1");
+        assert_eq!(m.param_count(), 2);
+        assert_eq!(m.total_param_elems(), 256 * 64 * 2);
+        assert_eq!(m.programs["train"].batch, Some(4));
+        assert_eq!(m.cfg_usize("dim", 0), 64);
+        assert!((m.cfg_f64("lr", 0.0) - 0.001).abs() < 1e-12);
+        let evals = m.eval_programs();
+        assert_eq!(evals.len(), 1);
+        assert_eq!(evals[0].1.seq, Some(256));
+    }
+}

@@ -1,0 +1,132 @@
+//! L3 runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `*.manifest.json`) produced by `python/compile/aot.py` and executes them
+//! on the PJRT CPU client via the `xla` crate. Python is never on this
+//! path — the Rust binary is self-contained once artifacts exist.
+//!
+//! Program signature convention (must match python/compile/aot.py):
+//!   init : (seed u32[2]) -> (P param leaves)
+//!   train: (P params, P m, P v, step i32[], tokens i32[B,T],
+//!           targets i32[B,T], mask f32[B,T])
+//!          -> (P params', P m', P v', step', loss f32[], lr f32[])
+//!   eval : (P params, tokens, targets, mask)
+//!          -> (loss f32[], correct f32[B,T], nll f32[B,T])
+
+pub mod literal;
+pub mod manifest;
+pub mod model;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+pub use literal::{literal_f32, literal_i32, literal_u32, to_vec_f32, DType};
+pub use manifest::{LeafSpec, Manifest, ProgramSpec};
+pub use model::{Model, TrainState};
+
+/// A compiled, loaded HLO program.
+pub struct Program {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute; the artifact convention is return_tuple=True, so the single
+    /// output buffer is a tuple literal that we decompose into leaves.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing program {}", self.name))?;
+        let mut out = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        Ok(out.decompose_tuple()?)
+    }
+
+    /// Execute with borrowed inputs — avoids cloning long-lived argument
+    /// literals (e.g. model parameters during an eval sweep). §Perf: this
+    /// removed the per-eval-call host copy of every parameter leaf.
+    pub fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing program {}", self.name))?;
+        let mut out = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        Ok(out.decompose_tuple()?)
+    }
+}
+
+/// The runtime: one PJRT client + a compiled-program cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Program>>>,
+}
+
+impl Runtime {
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Resolve the artifacts directory: $OVQ_ARTIFACTS or ./artifacts.
+    pub fn from_env() -> Result<Runtime> {
+        let dir = std::env::var("OVQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Runtime::new(dir)
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load_program(&self, file: &str) -> Result<std::sync::Arc<Program>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(p) = cache.get(file) {
+                return Ok(p.clone());
+            }
+        }
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let prog = std::sync::Arc::new(Program { name: file.to_string(), exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Load a model (manifest + lazily compiled programs).
+    pub fn load_model(&self, name: &str) -> Result<Model<'_>> {
+        let manifest = Manifest::load(&self.artifacts_dir, name)?;
+        Ok(Model { rt: self, manifest })
+    }
+
+    /// All model names present in artifacts/index.json.
+    pub fn list_models(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.artifacts_dir.join("index.json"))
+            .context("reading artifacts/index.json (run `make artifacts`)")?;
+        let j = crate::util::json::parse(&text).map_err(anyhow::Error::msg)?;
+        Ok(j.get("models")
+            .and_then(|m| m.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default())
+    }
+}

@@ -1,0 +1,238 @@
+//! Model-level runtime API: typed wrappers over the init/train/eval
+//! programs plus checkpointing of the training state.
+
+use anyhow::{bail, Context, Result};
+
+use super::literal::{literal_f32, literal_i32, literal_u32, scalar_from, scalar_i32, to_vec_f32};
+use super::{Manifest, Runtime};
+
+/// The carried training state: flat parameter/optimizer leaves as literals.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    pub step: i32,
+}
+
+/// Result of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub lr: f32,
+    pub step: i32,
+}
+
+/// One eval batch result.
+#[derive(Debug, Clone)]
+pub struct EvalOut {
+    pub loss: f32,
+    /// per-position correctness [B*T] row-major, 0 where masked out
+    pub correct: Vec<f32>,
+    /// per-position masked nll [B*T]
+    pub nll: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+pub struct Model<'rt> {
+    pub rt: &'rt Runtime,
+    pub manifest: Manifest,
+}
+
+impl<'rt> Model<'rt> {
+    /// Run the init program: fresh params + zeroed optimizer state.
+    pub fn init(&self, seed: u64) -> Result<TrainState> {
+        let prog = self.program("init")?;
+        let seed_lit = literal_u32(&[2], &[(seed >> 32) as u32, seed as u32]);
+        let params = prog.run(&[seed_lit])?;
+        if params.len() != self.manifest.param_count() {
+            bail!(
+                "init returned {} leaves, manifest says {}",
+                params.len(),
+                self.manifest.param_count()
+            );
+        }
+        let mk_zeros = || -> Vec<xla::Literal> {
+            self.manifest
+                .params
+                .iter()
+                .map(|spec| literal_f32(&spec.shape, &vec![0.0; spec.numel()]))
+                .collect()
+        };
+        Ok(TrainState { params, m: mk_zeros(), v: mk_zeros(), step: 0 })
+    }
+
+    fn program(&self, name: &str) -> Result<std::sync::Arc<super::Program>> {
+        let spec = self
+            .manifest
+            .programs
+            .get(name)
+            .with_context(|| format!("model {} has no program '{name}'", self.manifest.name))?;
+        self.rt.load_program(&spec.file)
+    }
+
+    /// Shapes the train program expects for (tokens, targets, mask).
+    pub fn train_shape(&self) -> Result<(usize, usize)> {
+        let spec = self.manifest.programs.get("train").context("no train program")?;
+        Ok((spec.batch.context("batch")?, spec.seq.context("seq")?))
+    }
+
+    /// One training step. Consumes and replaces the state leaves.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+    ) -> Result<StepMetrics> {
+        let (b, t) = self.train_shape()?;
+        debug_assert_eq!(tokens.len(), b * t);
+        let prog = self.program("train")?;
+        let p = self.manifest.param_count();
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * p + 4);
+        args.extend(state.params.drain(..));
+        args.extend(state.m.drain(..));
+        args.extend(state.v.drain(..));
+        args.push(scalar_i32(state.step));
+        args.push(literal_i32(&[b, t], tokens));
+        args.push(literal_i32(&[b, t], targets));
+        args.push(literal_f32(&[b, t], mask));
+
+        let mut out = prog.run(&args)?;
+        if out.len() != 3 * p + 3 {
+            bail!("train returned {} outputs, expected {}", out.len(), 3 * p + 3);
+        }
+        let lr = scalar_from(&out.pop().unwrap())?;
+        let loss = scalar_from(&out.pop().unwrap())?;
+        let step_lit = out.pop().unwrap();
+        let step = step_lit.to_vec::<i32>()?[0];
+        state.v = out.split_off(2 * p);
+        state.m = out.split_off(p);
+        state.params = out;
+        state.step = step;
+        Ok(StepMetrics { loss, lr, step })
+    }
+
+    /// Run an eval program by name (e.g. "eval_512" or "eval_512_N256").
+    pub fn eval(
+        &self,
+        prog_name: &str,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+    ) -> Result<EvalOut> {
+        let spec = self
+            .manifest
+            .programs
+            .get(prog_name)
+            .with_context(|| format!("no program '{prog_name}'"))?;
+        let (b, t) = (spec.batch.context("batch")?, spec.seq.context("seq")?);
+        debug_assert_eq!(tokens.len(), b * t);
+        let prog = self.program(prog_name)?;
+
+        // Borrow the parameter literals directly (no host copy) and only
+        // materialize the three small batch inputs.
+        let tok_lit = literal_i32(&[b, t], tokens);
+        let tgt_lit = literal_i32(&[b, t], targets);
+        let msk_lit = literal_f32(&[b, t], mask);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 3);
+        args.extend(params.iter());
+        args.push(&tok_lit);
+        args.push(&tgt_lit);
+        args.push(&msk_lit);
+
+        let out = prog.run_refs(&args)?;
+        if out.len() != 3 {
+            bail!("eval returned {} outputs, expected 3", out.len());
+        }
+        Ok(EvalOut {
+            loss: scalar_from(&out[0])?,
+            correct: to_vec_f32(&out[1])?,
+            nll: to_vec_f32(&out[2])?,
+            batch: b,
+            seq: t,
+        })
+    }
+
+    // ------------------------------------------------------- checkpointing
+
+    /// Binary checkpoint: magic, step, leaf count, then per leaf
+    /// (name len, name, byte len, raw f32 bytes) for params/m/v.
+    pub fn save_checkpoint(&self, state: &TrainState, path: &str) -> Result<()> {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(b"OVQCKPT1")?;
+        w.write_all(&state.step.to_le_bytes())?;
+        w.write_all(&(self.manifest.param_count() as u32).to_le_bytes())?;
+        for group in [&state.params, &state.m, &state.v] {
+            for (lit, spec) in group.iter().zip(&self.manifest.params) {
+                let data = to_vec_f32(lit)?;
+                w.write_all(&(spec.name.len() as u32).to_le_bytes())?;
+                w.write_all(spec.name.as_bytes())?;
+                w.write_all(&(data.len() as u64).to_le_bytes())?;
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len() * 4,
+                    )
+                };
+                w.write_all(bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load_checkpoint(&self, path: &str) -> Result<TrainState> {
+        use std::io::Read;
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != b"OVQCKPT1" {
+            bail!("bad checkpoint magic");
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let step = i32::from_le_bytes(b4);
+        r.read_exact(&mut b4)?;
+        let count = u32::from_le_bytes(b4) as usize;
+        if count != self.manifest.param_count() {
+            bail!("checkpoint leaf count {count} != manifest {}", self.manifest.param_count());
+        }
+        let mut groups = Vec::new();
+        for _ in 0..3 {
+            let mut leaves = Vec::with_capacity(count);
+            for spec in &self.manifest.params {
+                r.read_exact(&mut b4)?;
+                let nlen = u32::from_le_bytes(b4) as usize;
+                let mut name = vec![0u8; nlen];
+                r.read_exact(&mut name)?;
+                let name = String::from_utf8_lossy(&name).to_string();
+                if name != spec.name {
+                    bail!("checkpoint leaf '{name}' != manifest '{}'", spec.name);
+                }
+                let mut b8 = [0u8; 8];
+                r.read_exact(&mut b8)?;
+                let n = u64::from_le_bytes(b8) as usize;
+                if n != spec.numel() {
+                    bail!("checkpoint leaf '{name}' has {n} elems, expected {}", spec.numel());
+                }
+                let mut data = vec![0f32; n];
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        data.as_mut_ptr() as *mut u8,
+                        n * 4,
+                    )
+                };
+                r.read_exact(bytes)?;
+                leaves.push(literal_f32(&spec.shape, &data));
+            }
+            groups.push(leaves);
+        }
+        let v = groups.pop().unwrap();
+        let m = groups.pop().unwrap();
+        let params = groups.pop().unwrap();
+        Ok(TrainState { params, m, v, step })
+    }
+}

@@ -1,0 +1,152 @@
+//! Custom micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `benches/*` targets (all declared with `harness = false`):
+//! warmup, fixed-duration timed phase, mean/p50/p99 and throughput
+//! reporting, plus a machine-readable one-line summary for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let thr = match self.throughput {
+            Some((v, unit)) => format!("  {v:12.1} {unit}"),
+            None => String::new(),
+        };
+        println!(
+            "bench {:40} {:10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            thr
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 100_000,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` returns a value that is black-boxed.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while (t1.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p99_ns: stats::percentile(&samples, 99.0),
+            throughput: None,
+        };
+        r.report();
+        r
+    }
+
+    /// Like run, but reports `units_per_iter / time` as throughput.
+    pub fn run_throughput<T, F: FnMut() -> T>(
+        &self,
+        name: &str,
+        units_per_iter: f64,
+        unit: &'static str,
+        f: F,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.throughput = Some((units_per_iter / (r.mean_ns / 1e9), unit));
+        r.report();
+        r
+    }
+}
+
+/// Prevent the optimizer from eliding benchmark bodies.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 10_000,
+        };
+        let r = b.run("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn formats_ns() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+    }
+}

@@ -1,0 +1,118 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `ovq <subcommand> [positional...] [--key value | --flag]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                a.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    a.options
+                        .insert(key.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(key.to_string());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // note: a bare --flag consumes the next token as its value unless
+        // that token is another --option; positionals go before flags.
+        let a = Args::parse(&s(&["train", "taskname", "--model",
+                                 "icr-sw-ovq", "--steps=100", "--quick"]));
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.opt("model"), Some("icr-sw-ovq"));
+        assert_eq!(a.opt_usize("steps", 0), 100);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.positional, vec!["taskname"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&s(&["x"]));
+        assert_eq!(a.opt_or("missing", "d"), "d");
+        assert_eq!(a.opt_usize("n", 7), 7);
+        assert!(!a.has_flag("q"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&s(&["exp", "f4", "--quick"]));
+        assert_eq!(a.subcommand, "exp");
+        assert_eq!(a.positional, vec!["f4"]);
+        assert!(a.has_flag("quick"));
+    }
+}

@@ -1,0 +1,64 @@
+//! CSV writer for experiment outputs (each figure/table driver emits a CSV
+//! that EXPERIMENTS.md references).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "csv row width mismatch");
+        let escaped: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        writeln!(self.w, "{}", escaped.join(","))
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        self.row(&fields.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_escaped_rows() {
+        let path = std::env::temp_dir().join("ovq_csv_test.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["x,y".into(), "plain".into()]).unwrap();
+            w.rowf(&[1.5, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n\"x,y\",plain\n1.5,2\n");
+        std::fs::remove_file(&path).ok();
+    }
+}

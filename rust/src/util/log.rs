@@ -1,0 +1,37 @@
+//! Minimal leveled logger with wall-clock timestamps relative to startup.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=error 1=info 2=debug
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(level: u8, tag: &str, msg: &str) {
+    if level <= LEVEL.load(Ordering::Relaxed) {
+        eprintln!("[{:9.3}s] {:5} {}", elapsed(), tag, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log(1, "INFO", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log(2, "DEBUG", &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::log::log(0, "ERROR", &format!($($arg)*)) };
+}

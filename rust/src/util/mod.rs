@@ -1,0 +1,11 @@
+//! Zero-dependency utilities (serde/clap/criterion/proptest/rand are not
+//! available offline; DESIGN.md documents each substitution).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,114 @@
+//! Small statistics helpers used by metrics, benches and experiments.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Simple exponential moving average accumulator.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    pub alpha: f64,
+    pub value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+}
+
+/// Bin a (position, value) stream into fixed-width position bins and
+/// report per-bin means — used for loss-vs-token-position curves (Fig. 6).
+pub fn binned_means(pairs: &[(usize, f64)], bin: usize, max_pos: usize) -> Vec<(usize, f64, usize)> {
+    let nbins = max_pos.div_ceil(bin);
+    let mut sum = vec![0.0; nbins];
+    let mut cnt = vec![0usize; nbins];
+    for &(p, v) in pairs {
+        if p < max_pos {
+            sum[p / bin] += v;
+            cnt[p / bin] += 1;
+        }
+    }
+    (0..nbins)
+        .filter(|&i| cnt[i] > 0)
+        .map(|i| (i * bin + bin / 2, sum[i] / cnt[i] as f64, cnt[i]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.2909944487).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        e.update(0.0);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!((e.value.unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn binning() {
+        let pairs = [(0, 1.0), (1, 3.0), (10, 5.0)];
+        let bins = binned_means(&pairs, 8, 16);
+        assert_eq!(bins.len(), 2);
+        assert!((bins[0].1 - 2.0).abs() < 1e-12);
+        assert!((bins[1].1 - 5.0).abs() < 1e-12);
+    }
+}
