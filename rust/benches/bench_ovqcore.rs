@@ -1,19 +1,238 @@
-//! §3.4 systems claim, measured: the OVQ state-update throughput is
-//! independent of dictionary size N, while linear attention's write cost
-//! scales with the state. Also benches the forward (attend) path vs N —
-//! which SHOULD scale with N (it's two matmuls) — and the KV-cache
-//! baseline which scales with context length.
+//! §3.4 systems claim, measured through the unified SeqMixer interface:
+//!
+//!  - blocked-kernel OVQ update+attend vs the seed's scalar loops
+//!    (the `scalar_baseline` module preserves the pre-kernel
+//!    implementation verbatim as the comparison floor);
+//!  - single-token decode throughput per mixer x dictionary size N,
+//!    via the MixerKind factory — every mixer measured through the trait;
+//!  - multi-stream, multi-head decode through MixerBank across N and
+//!    across context depth: per-token ΔS bytes are exactly flat in N
+//!    (the paper's claim) and wall-clock per token stays flat as context
+//!    grows, unlike the KV-cache baseline;
+//!  - emits machine-readable BENCH_ovqcore.json so the perf trajectory is
+//!    tracked across PRs.
 //!
 //! Run: cargo bench --offline  (or: cargo bench --bench bench_ovqcore)
 
-use ovq::ovqcore::linear_attn::LinearAttnState;
-use ovq::ovqcore::kvcache::KvCache;
+use std::collections::BTreeMap;
+
+use ovq::ovqcore::bank::{DecodeChunk, MixerBank};
+use ovq::ovqcore::memstate::MixerKind;
+use ovq::ovqcore::mixer::{Scratch, SeqMixer};
 use ovq::ovqcore::ovq::{OvqConfig, OvqState};
 use ovq::util::bench::Bench;
+use ovq::util::json::Json;
 use ovq::util::rng::Rng;
 
 fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// The seed's scalar OVQ implementation, preserved verbatim as the
+/// speedup baseline: one-element-at-a-time dots, a fresh logits Vec per
+/// query, scalar nearest-centroid search, per-touched-slot chunk rescan
+/// in the merge. Operates on its own copy of the state so the comparison
+/// against the blocked-kernel path is apples-to-apples.
+mod scalar_baseline {
+    use ovq::ovqcore::growth_n_new;
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[derive(Clone)]
+    pub struct ScalarOvq {
+        pub d: usize,
+        pub n_max: usize,
+        pub chunk: usize,
+        pub beta: f32,
+        pub dk: Vec<f32>,
+        pub dv: Vec<f32>,
+        pub counts: Vec<f32>,
+        pub n_active: usize,
+        pub t: usize,
+        chunk_idx: usize,
+    }
+
+    impl ScalarOvq {
+        /// Copy a (saturated, flushed) state out of the real machine. The
+        /// seed allocated the full n_max dictionary eagerly, so pad the
+        /// (lazily-grown) live storage back out to capacity.
+        pub fn from_state(st: &super::OvqState) -> ScalarOvq {
+            let (d, n_max) = (st.cfg.d, st.cfg.n_max);
+            let mut dk = st.dk.clone();
+            let mut dv = st.dv.clone();
+            let mut counts = st.counts.clone();
+            dk.resize(n_max * d, 0.0);
+            dv.resize(n_max * d, 0.0);
+            counts.resize(n_max, 0.0);
+            ScalarOvq {
+                d,
+                n_max,
+                chunk: st.cfg.chunk,
+                beta: st.cfg.beta,
+                dk,
+                dv,
+                counts,
+                n_active: st.n_active,
+                t: st.t,
+                chunk_idx: st.t / st.cfg.chunk,
+            }
+        }
+
+        pub fn attend(&self, q: &[f32], chunk_k: &[f32], chunk_v: &[f32], upto: usize, out: &mut [f32]) {
+            let d = self.d;
+            let beta = self.beta;
+            let n = self.n_active;
+            let mut m = f32::NEG_INFINITY;
+            let mut logits: Vec<f32> = Vec::with_capacity(n + upto);
+            for s in 0..n {
+                if self.counts[s] > 0.0 {
+                    let l = beta * dot(q, &self.dk[s * d..(s + 1) * d]) + self.counts[s].ln();
+                    logits.push(l);
+                    m = m.max(l);
+                } else {
+                    logits.push(f32::NEG_INFINITY);
+                }
+            }
+            for j in 0..upto {
+                let l = beta * dot(q, &chunk_k[j * d..(j + 1) * d]);
+                logits.push(l);
+                m = m.max(l);
+            }
+            out.iter_mut().for_each(|o| *o = 0.0);
+            let mut z = 0.0f32;
+            for (s, &l) in logits.iter().enumerate().take(n) {
+                if l > f32::NEG_INFINITY {
+                    let w = (l - m).exp();
+                    z += w;
+                    let row = &self.dv[s * d..(s + 1) * d];
+                    for (o, &v) in out.iter_mut().zip(row) {
+                        *o += w * v;
+                    }
+                }
+            }
+            for j in 0..upto {
+                let w = (logits[n + j] - m).exp();
+                z += w;
+                let row = &chunk_v[j * d..(j + 1) * d];
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o += w * v;
+                }
+            }
+            if z > 0.0 {
+                out.iter_mut().for_each(|o| *o /= z);
+            }
+        }
+
+        pub fn process_chunk(&mut self, queries: &[f32], keys: &[f32], values: &[f32]) -> Vec<f32> {
+            let d = self.d;
+            let len = keys.len() / d;
+            let mut out = vec![0.0f32; len * d];
+            for i in 0..len {
+                let (head, tail) = out.split_at_mut(i * d);
+                let _ = head;
+                self.attend(&queries[i * d..(i + 1) * d], keys, values, i + 1, &mut tail[..d]);
+            }
+            self.update_chunk(keys, values);
+            out
+        }
+
+        pub fn update_chunk(&mut self, keys: &[f32], values: &[f32]) {
+            let d = self.d;
+            let len = keys.len() / d;
+            let mut best_idx = vec![0usize; len];
+            let mut best_sim = vec![f32::NEG_INFINITY; len];
+            for i in 0..len {
+                let k = &keys[i * d..(i + 1) * d];
+                for s in 0..self.n_active {
+                    if self.counts[s] > 0.0 {
+                        let sim = dot(k, &self.dk[s * d..(s + 1) * d]);
+                        if sim > best_sim[i] {
+                            best_sim[i] = sim;
+                            best_idx[i] = s;
+                        }
+                    }
+                }
+            }
+            let n_new = growth_n_new(self.chunk_idx, self.chunk, self.n_max)
+                .min(self.n_max - self.n_active)
+                .min(len);
+            let mut order: Vec<usize> = (0..len).collect();
+            order.sort_by(|&a, &b| best_sim[a].partial_cmp(&best_sim[b]).unwrap());
+            let mut is_new = vec![false; len];
+            for &i in order.iter().take(n_new) {
+                is_new[i] = true;
+            }
+            let mut next_slot = self.n_active;
+            let mut assign = vec![0usize; len];
+            for i in 0..len {
+                if is_new[i] {
+                    assign[i] = next_slot;
+                    next_slot += 1;
+                } else if self.n_active > 0 {
+                    assign[i] = best_idx[i];
+                } else {
+                    assign[i] = 0;
+                }
+            }
+            self.n_active = next_slot;
+            let mut touched: Vec<usize> = assign.clone();
+            touched.sort_unstable();
+            touched.dedup();
+            for &s in &touched {
+                let mut cc = 0.0f32;
+                let mut sum_k = vec![0.0f32; d];
+                let mut sum_v = vec![0.0f32; d];
+                for i in 0..len {
+                    if assign[i] == s {
+                        cc += 1.0;
+                        for j in 0..d {
+                            sum_k[j] += keys[i * d + j];
+                            sum_v[j] += values[i * d + j];
+                        }
+                    }
+                }
+                let c_old = self.counts[s];
+                let denom = c_old + cc;
+                for j in 0..d {
+                    self.dk[s * d + j] = (c_old * self.dk[s * d + j] + sum_k[j]) / denom;
+                    self.dv[s * d + j] = (c_old * self.dv[s * d + j] + sum_v[j]) / denom;
+                }
+                self.counts[s] = c_old + cc;
+            }
+            self.t += len;
+            self.chunk_idx += 1;
+        }
+    }
+}
+
+struct Row {
+    name: String,
+    mixer: &'static str,
+    n: usize,
+    mean_ns: f64,
+    tok_per_s: f64,
+}
+
+fn push_row(rows: &mut Vec<Row>, name: &str, mixer: &'static str, n: usize, mean_ns: f64, toks: f64) {
+    rows.push(Row {
+        name: name.to_string(),
+        mixer,
+        n,
+        mean_ns,
+        tok_per_s: toks / (mean_ns / 1e9),
+    });
+}
+
+fn saturated_ovq(rng: &mut Rng, d: usize, n: usize, chunk: usize) -> OvqState {
+    let mut st = OvqState::new(OvqConfig::new(d, n, chunk));
+    for _ in 0..(2 * n / chunk).max(4) {
+        let k = randv(rng, chunk * d);
+        let v = randv(rng, chunk * d);
+        st.update_chunk(&k, &v);
+    }
+    st
 }
 
 fn main() {
@@ -25,63 +244,204 @@ fn main() {
     let d = 64;
     let chunk = 32;
     let mut rng = Rng::new(1);
+    let mut rows: Vec<Row> = Vec::new();
 
-    println!("\n-- OVQ state update: cost vs dictionary size N (claim: flat) --");
+    // ---- blocked kernels vs the seed scalar path: update + attend ------
+    println!("\n-- OVQ chunk update+attend: blocked kernels vs seed scalar (d={d}) --");
+    let mut speedup_at_4096 = 0.0f64;
     for n in [256usize, 1024, 4096, 16384] {
-        // pre-saturate the dictionary so the update hits the steady state
-        let mut st = OvqState::new(OvqConfig::new(d, n, chunk));
-        for _ in 0..(2 * n / chunk) {
-            let k = randv(&mut rng, chunk * d);
-            let v = randv(&mut rng, chunk * d);
-            st.update_chunk(&k, &v);
-        }
+        let st = saturated_ovq(&mut rng, d, n, chunk);
+        let scalar = scalar_baseline::ScalarOvq::from_state(&st);
+        let q = randv(&mut rng, chunk * d);
         let k = randv(&mut rng, chunk * d);
         let v = randv(&mut rng, chunk * d);
+        let mut scratch = Scratch::new();
+        let mut out = vec![0.0f32; chunk * d];
+
         // NOTE: nearest-neighbour search is O(N_active * d) — the paper
         // counts it as matmul FLOPs (K_c D_k^T). What must NOT grow with N
-        // is the *write* footprint; see the memstate figures. We bench both
-        // the full update and the write-only path.
-        b.run_throughput(&format!("ovq_update_full_N{n}"), chunk as f64, "tok/s", || {
+        // is the *write* footprint; see the memstate figures and the ΔS
+        // column below. Both paths do identical work: attend every token
+        // against dict+prefix, then merge the chunk.
+        let r_new = b.run_throughput(&format!("ovq_chunk_blocked_N{n}"), chunk as f64, "tok/s", || {
             let mut s2 = st.clone();
-            s2.update_chunk(&k, &v);
-            s2.counts[0]
+            s2.process_chunk(&q, &k, &v, &mut out, &mut scratch);
+            s2.flush();
+            out[0]
         });
+        push_row(&mut rows, &format!("ovq_chunk_blocked_N{n}"), "ovq", n, r_new.mean_ns, chunk as f64);
+
+        let r_old = b.run_throughput(&format!("ovq_chunk_scalar_N{n}"), chunk as f64, "tok/s", || {
+            let mut s2 = scalar.clone();
+            let o = s2.process_chunk(&q, &k, &v);
+            o[0]
+        });
+        push_row(&mut rows, &format!("ovq_chunk_scalar_N{n}"), "ovq_scalar", n, r_old.mean_ns, chunk as f64);
+        let speedup = r_old.mean_ns / r_new.mean_ns;
+        if n == 4096 {
+            speedup_at_4096 = speedup;
+        }
+        println!("   N={n:>6}: blocked is {speedup:.2}x the scalar path");
     }
 
-    println!("\n-- linear attention write: cost vs state size (claim: grows) --");
-    for dk in [64usize, 128, 256, 512] {
-        let mut st = LinearAttnState::new(dk, d);
-        let k = randv(&mut rng, dk);
+    // ---- single-token decode per mixer x N, through the trait ----------
+    println!("\n-- single-token decode (write+read) per mixer x N, via SeqMixer --");
+    let context = 2048usize;
+    let mut kinds: Vec<(&'static str, usize, MixerKind)> = Vec::new();
+    for n in [256usize, 1024, 4096] {
+        kinds.push(("ovq", n, MixerKind::Ovq { n_max: n }));
+        kinds.push(("vq", n, MixerKind::Vq { n }));
+    }
+    kinds.push(("linear_attn", 0, MixerKind::LinearAttention));
+    kinds.push(("gdn", 0, MixerKind::Gdn));
+    kinds.push(("sliding_window", 0, MixerKind::SlidingWindow { window: 128 }));
+    kinds.push(("kv_cache", 0, MixerKind::FullAttention));
+    for (label, n, kind) in kinds {
+        let mut m = kind.build(d, chunk, 7);
+        for _ in 0..context {
+            let k = randv(&mut rng, d);
+            let v = randv(&mut rng, d);
+            m.write(&k, &v);
+        }
+        m.flush();
+        let q = randv(&mut rng, d);
+        let k = randv(&mut rng, d);
         let v = randv(&mut rng, d);
-        b.run_throughput(&format!("linattn_write_dk{dk}"), 1.0, "tok/s", || {
-            st.write(&k, &v);
-            st.s[0]
-        });
+        let mut out = vec![0.0f32; m.d_out()];
+        let mut scratch = Scratch::new();
+        let name = if n > 0 {
+            format!("decode_{label}_N{n}")
+        } else {
+            format!("decode_{label}_T{context}")
+        };
+        // full attention is benched read-only: a timed write would grow
+        // the cache by one token per sample and the labeled context T
+        // would be a lie by the end of the measure window. All other
+        // mixers have constant (or saturating) state, so write+read is
+        // the honest amortized decode cost.
+        let r = if matches!(kind, MixerKind::FullAttention) {
+            b.run_throughput(&name, 1.0, "tok/s", || {
+                m.read(&q, &mut out, &mut scratch);
+                out[0]
+            })
+        } else {
+            b.run_throughput(&name, 1.0, "tok/s", || {
+                m.write(&k, &v);
+                m.read(&q, &mut out, &mut scratch);
+                out[0]
+            })
+        };
+        push_row(&mut rows, &name, label, n, r.mean_ns, 1.0);
     }
 
-    println!("\n-- OVQ attend vs KV-cache read at long context --");
-    let n = 1024;
-    let mut st = OvqState::new(OvqConfig::new(d, n, chunk));
-    let mut cache = KvCache::new(d);
-    for _ in 0..(16 * 1024 / chunk) {
-        let k = randv(&mut rng, chunk * d);
-        let v = randv(&mut rng, chunk * d);
-        st.update_chunk(&k, &v);
-        for i in 0..chunk {
-            cache.write(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+    // ---- multi-stream multi-head decode through MixerBank --------------
+    println!("\n-- MixerBank: 8 streams x 4 heads, d=32 — per-token cost vs N --");
+    let (streams, heads, dh, blen) = (8usize, 4usize, 32usize, 32usize);
+    for n in [256usize, 1024, 4096] {
+        let mut bank = MixerBank::new(streams, heads, |_, _| {
+            Box::new(OvqState::new(OvqConfig::new(dh, n, blen)))
+        });
+        // warm every stream to a steady serving context
+        let hd = heads * dh;
+        for _ in 0..(1024 / blen) {
+            for s in 0..streams {
+                bank.submit(
+                    s,
+                    DecodeChunk {
+                        queries: randv(&mut rng, blen * hd),
+                        keys: randv(&mut rng, blen * hd),
+                        values: randv(&mut rng, blen * hd),
+                    },
+                );
+            }
+            bank.drain();
+        }
+        // pre-generate the measured chunk so the timed loop is pure decode
+        let q = randv(&mut rng, blen * hd);
+        let k = randv(&mut rng, blen * hd);
+        let v = randv(&mut rng, blen * hd);
+        let toks = (streams * blen) as f64;
+        let dsu = bank.mixer(0, 0).update_bytes_per_chunk(blen) / blen;
+        let r = b.run_throughput(&format!("bank_decode_N{n}"), toks, "tok/s", || {
+            for s in 0..streams {
+                bank.submit(
+                    s,
+                    DecodeChunk { queries: q.clone(), keys: k.clone(), values: v.clone() },
+                );
+            }
+            bank.drain().len()
+        });
+        push_row(&mut rows, &format!("bank_decode_N{n}"), "ovq_bank", n, r.mean_ns, toks);
+        println!(
+            "   N={n:>5}: ΔS = {dsu} B/token (flat in N)  total state {} KiB",
+            bank.state_bytes() / 1024
+        );
+    }
+
+    // ---- per-token cost vs context depth: OVQ flat, KV cache grows -----
+    println!("\n-- decode cost vs context depth (the deployment claim) --");
+    for depth in [1024usize, 4096, 16384] {
+        for kind in [MixerKind::Ovq { n_max: 1024 }, MixerKind::FullAttention] {
+            let mut m = kind.build(d, chunk, 7);
+            for _ in 0..depth {
+                let k = randv(&mut rng, d);
+                let v = randv(&mut rng, d);
+                m.write(&k, &v);
+            }
+            m.flush();
+            let q = randv(&mut rng, d);
+            let k = randv(&mut rng, d);
+            let v = randv(&mut rng, d);
+            let mut out = vec![0.0f32; d];
+            let mut scratch = Scratch::new();
+            let label = m.kind_name();
+            let name = format!("depth_{label}_T{depth}");
+            // read-only for the kv cache, same reasoning as above: keep
+            // the measured context pinned at the labeled depth
+            let r = if matches!(kind, MixerKind::FullAttention) {
+                b.run_throughput(&name, 1.0, "tok/s", || {
+                    m.read(&q, &mut out, &mut scratch);
+                    out[0]
+                })
+            } else {
+                b.run_throughput(&name, 1.0, "tok/s", || {
+                    m.write(&k, &v);
+                    m.read(&q, &mut out, &mut scratch);
+                    out[0]
+                })
+            };
+            push_row(&mut rows, &name, label, depth, r.mean_ns, 1.0);
         }
     }
-    let q = randv(&mut rng, d);
-    let ck = randv(&mut rng, chunk * d);
-    let cv = randv(&mut rng, chunk * d);
-    let mut out = vec![0.0f32; d];
-    b.run(&format!("ovq_attend_T16k_N{n}"), || {
-        st.attend(&q, &ck, &cv, chunk, &mut out);
-        out[0]
-    });
-    b.run("kvcache_read_T16k", || {
-        cache.read(&q, &mut out);
-        out[0]
-    });
-    println!("\n(expected: ovq_update flat in N modulo the NN matmul; linattn write\n grows ~linearly with dk; ovq attend is ~16x cheaper than the 16k kv read)");
+
+    // ---- machine-readable summary --------------------------------------
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(r.name.clone()));
+            o.insert("mixer".to_string(), Json::Str(r.mixer.to_string()));
+            o.insert("n".to_string(), Json::Num(r.n as f64));
+            o.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+            o.insert("tok_per_s".to_string(), Json::Num(r.tok_per_s));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("ovqcore".to_string()));
+    top.insert("d".to_string(), Json::Num(d as f64));
+    top.insert("chunk".to_string(), Json::Num(chunk as f64));
+    top.insert(
+        "speedup_blocked_vs_scalar_N4096".to_string(),
+        Json::Num(speedup_at_4096),
+    );
+    top.insert("results".to_string(), Json::Arr(json_rows));
+    let path = "BENCH_ovqcore.json";
+    match std::fs::write(path, format!("{}\n", Json::Obj(top))) {
+        Ok(()) => println!("\nwrote {path} ({} rows)", rows.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+    println!(
+        "\n(expected: blocked >= 2x scalar at N=4096; ΔS flat in N; ovq decode\n flat in context depth while kv_cache grows ~linearly)"
+    );
 }

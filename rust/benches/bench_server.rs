@@ -1,16 +1,64 @@
-//! Serving-path throughput: dynamic batcher end-to-end (client -> queue ->
-//! batched HLO execute -> reply) at different offered loads, on the
-//! quickstart model.
+//! Serving-path throughput, both halves:
+//!
+//!  1. dynamic batcher end-to-end (client -> queue -> batched HLO execute
+//!     -> reply) at different offered loads, on the quickstart model —
+//!     skipped with a notice when no PJRT backend/artifacts are present;
+//!  2. the streaming-decode engine: MixerBank multi-stream x multi-head
+//!     sweeps over dictionary size N and engine shape, reporting
+//!     aggregate tok/s and per-stream chunk-latency percentiles.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use ovq::coordinator::server::{serve_loop, ScoreRequest};
+use ovq::coordinator::server::{run_decode_engine, serve_loop, DecodeConfig, ScoreRequest};
 use ovq::runtime::Runtime;
 use ovq::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::from_env()?;
+    match Runtime::from_env().and_then(|rt| bench_batched(&rt)) {
+        Ok(()) => {}
+        Err(e) => println!("batched HLO serving bench skipped: {e}"),
+    }
+
+    println!("\n-- streaming decode: MixerBank sweeps --");
+    // dictionary-size sweep at a fixed engine shape
+    for n_max in [256usize, 1024, 4096] {
+        let mut cfg = DecodeConfig::new(n_max);
+        cfg.streams = 8;
+        cfg.heads = 4;
+        cfg.d_head = 32;
+        cfg.tokens = 1024;
+        let r = run_decode_engine(&cfg);
+        println!(
+            "N={n_max:>5}  8x4 d32: {:>10.0} tok/s  state {:>8} B  p99(stream0) {:>8.1} us",
+            r.tokens_per_sec(),
+            r.state_bytes,
+            r.per_stream[0].p99_us
+        );
+    }
+    // engine-shape sweep at a fixed dictionary
+    for (streams, heads) in [(1usize, 1usize), (4, 4), (16, 4), (32, 8)] {
+        let mut cfg = DecodeConfig::new(1024);
+        cfg.streams = streams;
+        cfg.heads = heads;
+        cfg.d_head = 32;
+        cfg.tokens = 512;
+        let r = run_decode_engine(&cfg);
+        let worst_p99 = r
+            .per_stream
+            .iter()
+            .map(|s| s.p99_us)
+            .fold(0.0f64, f64::max);
+        println!(
+            "{streams:>3} streams x {heads} heads: {:>10.0} tok/s aggregate  worst p99 {:>8.1} us",
+            r.tokens_per_sec(),
+            worst_p99
+        );
+    }
+    Ok(())
+}
+
+fn bench_batched(rt: &Runtime) -> anyhow::Result<()> {
     let model = rt.load_model("quickstart")?;
     let prog = "eval_128";
     let t = 128usize;

@@ -7,6 +7,7 @@ use anyhow::Result;
 
 use crate::data::batch::Batch;
 use crate::data::{by_name, icl};
+use crate::ovqcore::memstate::{MixerGeom, MixerKind};
 use crate::runtime::Model;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -22,6 +23,22 @@ pub struct EvalPoint {
     pub loss: f64,
     pub accuracy: f64,
     pub n_scored: f64,
+    /// decode-time OVQ mixer state at this (N, T), bytes per layer —
+    /// computed through the unified memstate/SeqMixer accounting. Only
+    /// populated for dictionary-scaled eval programs (`eval_{T}_N{n}`),
+    /// which are the paper's OVQ test-time dictionary-scaling sweep; the
+    /// column is labeled accordingly in [`print_sweep`].
+    pub decode_state_bytes: Option<usize>,
+}
+
+/// Geometry of the model's sequence-mixing heads, from the manifest.
+/// Prefers the explicit `d_head` config key (the projections may be
+/// rectangular); falls back to dim/heads.
+pub fn mixer_geom(model: &Model<'_>) -> MixerGeom {
+    let heads = model.manifest.cfg_usize("heads", 1).max(1);
+    let dim = model.manifest.cfg_usize("dim", 64);
+    let d_head = model.manifest.cfg_usize("d_head", (dim / heads).max(1));
+    MixerGeom { heads, d_head }
 }
 
 /// Filter predicate over program names; None = all eval programs.
@@ -60,6 +77,7 @@ pub fn length_sweep(
             acc.add(&out.correct, &batch.mask);
             losses.push(out.loss as f64);
         }
+        let geom = mixer_geom(model);
         points.push(EvalPoint {
             program: name.clone(),
             seq: t,
@@ -67,6 +85,9 @@ pub fn length_sweep(
             loss: stats::mean(&losses),
             accuracy: acc.value(),
             n_scored: acc.total,
+            decode_state_bytes: spec
+                .n_dict
+                .map(|n| MixerKind::Ovq { n_max: n }.state_bytes(geom, t)),
         });
     }
     Ok(points)
@@ -75,18 +96,21 @@ pub fn length_sweep(
 pub fn print_sweep(model_name: &str, points: &[EvalPoint]) {
     println!("\n== {model_name} length sweep ==");
     println!(
-        "{:>20} {:>6} {:>6} {:>9} {:>9} {:>8}",
-        "program", "T", "N", "loss", "acc", "scored"
+        "{:>20} {:>6} {:>6} {:>9} {:>9} {:>8} {:>10}",
+        "program", "T", "N", "loss", "acc", "scored", "ovq st/lyr"
     );
     for p in points {
         println!(
-            "{:>20} {:>6} {:>6} {:>9.4} {:>9.4} {:>8}",
+            "{:>20} {:>6} {:>6} {:>9.4} {:>9.4} {:>8} {:>10}",
             p.program,
             p.seq,
             p.n_dict.map(|n| n.to_string()).unwrap_or_else(|| "-".into()),
             p.loss,
             p.accuracy,
-            p.n_scored
+            p.n_scored,
+            p.decode_state_bytes
+                .map(|b| format!("{:.1}K", b as f64 / 1024.0))
+                .unwrap_or_else(|| "-".into()),
         );
     }
 }

@@ -5,7 +5,9 @@
 //!  - [`runtime`]     — PJRT client + manifest-driven HLO execution
 //!  - [`coordinator`] — training/eval/serving orchestration
 //!  - [`data`]        — task generators (ICR, positional ICR, ICL, LM, ...)
-//!  - [`ovqcore`]     — pure-Rust OVQ + baseline state machines
+//!  - [`ovqcore`]     — pure-Rust OVQ + baseline state machines behind the
+//!    [`ovqcore::mixer::SeqMixer`] trait, blocked microkernels, and the
+//!    [`ovqcore::bank::MixerBank`] multi-stream decode engine
 //!  - [`analysis`]    — analytical FLOPs / memory models (App. D)
 //!  - [`util`]        — zero-dependency JSON/RNG/CLI/bench/prop utilities
 

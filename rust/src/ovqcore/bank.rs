@@ -1,0 +1,370 @@
+//! Multi-stream, multi-head decode engine over [`SeqMixer`] — the serving
+//! counterpart of a batched attention layer. A [`MixerBank`] owns
+//! `streams x heads` mixer states in one flat slab (index
+//! `stream * heads + head`), a shared kernel [`Scratch`], and per-stream
+//! chunk queues drained by a round-robin scheduler. Inputs and outputs
+//! use the packed head-interleaved layout `[len, heads, d]` (one row per
+//! token holding every head's slice, the layout a fused QKV projection
+//! emits); the bank de-interleaves into contiguous per-head panels so
+//! each mixer's blocked kernels see unit-stride rows.
+//!
+//! This is the layer the paper's systems claim cashes out at: per-token
+//! decode cost through an OVQ bank is flat in the dictionary size N while
+//! state stays constant, so one engine sustains many concurrent streams.
+
+use std::collections::VecDeque;
+
+use super::mixer::{Scratch, SeqMixer};
+
+/// One queued decode chunk for a stream, packed `[len, heads, d]`.
+pub struct DecodeChunk {
+    pub queries: Vec<f32>,
+    pub keys: Vec<f32>,
+    pub values: Vec<f32>,
+}
+
+/// Completed chunk: which stream, its packed outputs, and the engine-side
+/// processing latency.
+pub struct DecodeOut {
+    pub stream: usize,
+    pub out: Vec<f32>,
+    pub elapsed_ns: f64,
+}
+
+/// Latency samples retained per stream — a bounded ring so telemetry
+/// stays O(1) per stream no matter how long the session decodes (the
+/// engine's whole point is constant-memory serving).
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Per-stream serving telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub tokens: usize,
+    pub chunks: usize,
+    /// engine latency of the most recent [`LATENCY_WINDOW`] processed
+    /// chunks, nanoseconds (ring-buffered; percentiles are over this
+    /// window)
+    pub chunk_ns: Vec<f64>,
+}
+
+pub struct MixerBank {
+    heads: usize,
+    d_in: usize,
+    d_out: usize,
+    /// slab of streams x heads mixer states, [stream * heads + head]
+    mixers: Vec<Box<dyn SeqMixer>>,
+    queues: Vec<VecDeque<DecodeChunk>>,
+    pub stats: Vec<StreamStats>,
+    scratch: Scratch,
+    /// de-interleave staging: per-head q/k/v/out panels
+    panel: Vec<f32>,
+    /// round-robin cursor (next stream to serve)
+    rr: usize,
+}
+
+impl MixerBank {
+    /// Build a bank of `streams x heads` mixers from a factory; the
+    /// factory receives `(stream, head)` so callers can vary per-head
+    /// state (e.g. per-head VQ dictionaries) — but every mixer must
+    /// share the same d_in/d_out (asserted).
+    pub fn new(
+        streams: usize,
+        heads: usize,
+        mk: impl Fn(usize, usize) -> Box<dyn SeqMixer>,
+    ) -> MixerBank {
+        assert!(streams > 0 && heads > 0);
+        let mut mixers = Vec::with_capacity(streams * heads);
+        for s in 0..streams {
+            for h in 0..heads {
+                mixers.push(mk(s, h));
+            }
+        }
+        let d_in = mixers[0].d_in();
+        let d_out = mixers[0].d_out();
+        // hard assert: process() strides every head's panel with these
+        // dims, so a mismatched factory would silently corrupt outputs
+        assert!(
+            mixers.iter().all(|m| m.d_in() == d_in && m.d_out() == d_out),
+            "all mixers in a bank must share d_in/d_out"
+        );
+        MixerBank {
+            heads,
+            d_in,
+            d_out,
+            mixers,
+            queues: (0..streams).map(|_| VecDeque::new()).collect(),
+            stats: vec![StreamStats::default(); streams],
+            scratch: Scratch::new(),
+            panel: Vec::new(),
+            rr: 0,
+        }
+    }
+
+    pub fn streams(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    pub fn mixer(&self, stream: usize, head: usize) -> &dyn SeqMixer {
+        self.mixers[stream * self.heads + head].as_ref()
+    }
+
+    /// Total live state across every stream and head.
+    pub fn state_bytes(&self) -> usize {
+        self.mixers.iter().map(|m| m.state_bytes()).sum()
+    }
+
+    /// Queued chunks across all streams.
+    pub fn pending_chunks(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Enqueue one packed `[len, heads, d]` chunk for a stream.
+    pub fn submit(&mut self, stream: usize, chunk: DecodeChunk) {
+        let hd = self.heads * self.d_in;
+        debug_assert_eq!(chunk.queries.len() % hd, 0);
+        debug_assert_eq!(chunk.keys.len(), chunk.queries.len());
+        debug_assert_eq!(chunk.values.len() / (self.heads * self.d_out), chunk.keys.len() / hd);
+        self.queues[stream].push_back(chunk);
+    }
+
+    /// Process one chunk from the next non-empty stream queue in
+    /// round-robin order. Returns None when every queue is empty.
+    pub fn step(&mut self) -> Option<DecodeOut> {
+        let n = self.streams();
+        for probe in 0..n {
+            let s = (self.rr + probe) % n;
+            if let Some(chunk) = self.queues[s].pop_front() {
+                self.rr = (s + 1) % n;
+                let t0 = std::time::Instant::now();
+                let out = self.process(s, &chunk);
+                let elapsed_ns = t0.elapsed().as_nanos() as f64;
+                let len = chunk.keys.len() / (self.heads * self.d_in);
+                let st = &mut self.stats[s];
+                st.tokens += len;
+                st.chunks += 1;
+                if st.chunk_ns.len() < LATENCY_WINDOW {
+                    st.chunk_ns.push(elapsed_ns);
+                } else {
+                    st.chunk_ns[(st.chunks - 1) % LATENCY_WINDOW] = elapsed_ns;
+                }
+                return Some(DecodeOut { stream: s, out, elapsed_ns });
+            }
+        }
+        None
+    }
+
+    /// Drain every queue to completion, returning outputs in completion
+    /// (scheduling) order.
+    pub fn drain(&mut self) -> Vec<DecodeOut> {
+        let mut done = Vec::new();
+        while let Some(o) = self.step() {
+            done.push(o);
+        }
+        done
+    }
+
+    /// Force every stream's buffered chunk tail into long-term state.
+    pub fn flush_all(&mut self) {
+        for m in &mut self.mixers {
+            m.flush();
+        }
+    }
+
+    /// Batched per-chunk attend/update across this stream's heads: packed
+    /// `[len, heads, d]` in, packed out. Heads are processed back-to-back
+    /// against contiguous per-head panels so the whole chunk for one head
+    /// (and its dictionary tile) stays cache-resident.
+    fn process(&mut self, stream: usize, chunk: &DecodeChunk) -> Vec<f32> {
+        let (h, di, dv) = (self.heads, self.d_in, self.d_out);
+        let len = chunk.keys.len() / (h * di);
+        let mut out = vec![0.0f32; len * h * dv];
+
+        // panel layout: q [len*di] | k [len*di] | v [len*dv] | o [len*dv]
+        let need = len * (2 * di + 2 * dv);
+        if self.panel.len() < need {
+            self.panel.resize(need, 0.0);
+        }
+        for head in 0..h {
+            let panel = &mut self.panel[..need];
+            let (pq, rest) = panel.split_at_mut(len * di);
+            let (pk, rest) = rest.split_at_mut(len * di);
+            let (pv, po) = rest.split_at_mut(len * dv);
+            let po = &mut po[..len * dv];
+            // gather this head's strided rows into contiguous panels
+            for i in 0..len {
+                let qrow = (i * h + head) * di;
+                pq[i * di..(i + 1) * di].copy_from_slice(&chunk.queries[qrow..qrow + di]);
+                pk[i * di..(i + 1) * di].copy_from_slice(&chunk.keys[qrow..qrow + di]);
+                let vrow = (i * h + head) * dv;
+                pv[i * dv..(i + 1) * dv].copy_from_slice(&chunk.values[vrow..vrow + dv]);
+            }
+            let mixer = &mut self.mixers[stream * h + head];
+            mixer.process_chunk(pq, pk, pv, po, &mut self.scratch);
+            // scatter back
+            for i in 0..len {
+                let orow = (i * h + head) * dv;
+                out[orow..orow + dv].copy_from_slice(&po[i * dv..(i + 1) * dv]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ovqcore::ovq::{OvqConfig, OvqState};
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn ovq_bank(streams: usize, heads: usize, d: usize, n: usize, chunk: usize) -> MixerBank {
+        MixerBank::new(streams, heads, |_, _| {
+            Box::new(OvqState::new(OvqConfig::new(d, n, chunk)))
+        })
+    }
+
+    #[test]
+    fn bank_matches_single_mixer_per_head() {
+        // a 2-head 1-stream bank must produce, per head, exactly what a
+        // standalone mixer fed that head's slice produces
+        let (d, n, chunk, len) = (8, 64, 16, 16);
+        let mut rng = Rng::new(1);
+        let mut bank = ovq_bank(1, 2, d, n, chunk);
+        let mut solo0 = OvqState::new(OvqConfig::new(d, n, chunk));
+        let mut solo1 = OvqState::new(OvqConfig::new(d, n, chunk));
+        let mut scratch = Scratch::new();
+
+        for _ in 0..3 {
+            let q = randv(&mut rng, len * 2 * d);
+            let k = randv(&mut rng, len * 2 * d);
+            let v = randv(&mut rng, len * 2 * d);
+            bank.submit(
+                0,
+                DecodeChunk { queries: q.clone(), keys: k.clone(), values: v.clone() },
+            );
+            let got = bank.step().unwrap();
+            assert_eq!(got.stream, 0);
+
+            // reference: de-interleave by hand, run each solo mixer
+            for (head, solo) in [(0usize, &mut solo0), (1usize, &mut solo1)] {
+                let mut hq = vec![0.0; len * d];
+                let mut hk = vec![0.0; len * d];
+                let mut hv = vec![0.0; len * d];
+                for i in 0..len {
+                    let row = (i * 2 + head) * d;
+                    hq[i * d..(i + 1) * d].copy_from_slice(&q[row..row + d]);
+                    hk[i * d..(i + 1) * d].copy_from_slice(&k[row..row + d]);
+                    hv[i * d..(i + 1) * d].copy_from_slice(&v[row..row + d]);
+                }
+                let mut want = vec![0.0; len * d];
+                solo.process_chunk(&hq, &hk, &hv, &mut want, &mut scratch);
+                for i in 0..len {
+                    let row = (i * 2 + head) * d;
+                    for j in 0..d {
+                        assert!(
+                            (got.out[row + j] - want[i * d + j]).abs() < 1e-6,
+                            "head {head} token {i} dim {j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_interleaves_streams() {
+        let (d, len) = (4, 8);
+        let mut rng = Rng::new(2);
+        let mut bank = ovq_bank(3, 1, d, 32, 8);
+        // two chunks per stream
+        for s in 0..3 {
+            for _ in 0..2 {
+                bank.submit(
+                    s,
+                    DecodeChunk {
+                        queries: randv(&mut rng, len * d),
+                        keys: randv(&mut rng, len * d),
+                        values: randv(&mut rng, len * d),
+                    },
+                );
+            }
+        }
+        assert_eq!(bank.pending_chunks(), 6);
+        let order: Vec<usize> = bank.drain().iter().map(|o| o.stream).collect();
+        assert_eq!(order, vec![0, 1, 2, 0, 1, 2], "round-robin order");
+        assert_eq!(bank.pending_chunks(), 0);
+        for s in 0..3 {
+            assert_eq!(bank.stats[s].tokens, 2 * len);
+            assert_eq!(bank.stats[s].chunks, 2);
+        }
+    }
+
+    #[test]
+    fn state_is_flat_across_long_decode() {
+        let mut rng = Rng::new(3);
+        let mut bank = ovq_bank(2, 2, 8, 32, 16);
+        let mut cap = 0usize;
+        for round in 0..20 {
+            for s in 0..2 {
+                bank.submit(
+                    s,
+                    DecodeChunk {
+                        queries: randv(&mut rng, 16 * 2 * 8),
+                        keys: randv(&mut rng, 16 * 2 * 8),
+                        values: randv(&mut rng, 16 * 2 * 8),
+                    },
+                );
+            }
+            bank.drain();
+            if round == 10 {
+                cap = bank.state_bytes();
+            }
+        }
+        // OVQ state saturates: late-decode state is no bigger than mid-decode
+        assert!(bank.state_bytes() <= cap + 2 * 2 * 16 * 2 * 8 * 4, "state must plateau");
+        assert_eq!(bank.stats[0].tokens, 20 * 16);
+    }
+
+    #[test]
+    fn skewed_queues_still_drain_fairly() {
+        let (d, len) = (4, 4);
+        let mut rng = Rng::new(4);
+        let mut bank = ovq_bank(2, 1, d, 16, 4);
+        for _ in 0..3 {
+            bank.submit(
+                0,
+                DecodeChunk {
+                    queries: randv(&mut rng, len * d),
+                    keys: randv(&mut rng, len * d),
+                    values: randv(&mut rng, len * d),
+                },
+            );
+        }
+        bank.submit(
+            1,
+            DecodeChunk {
+                queries: randv(&mut rng, len * d),
+                keys: randv(&mut rng, len * d),
+                values: randv(&mut rng, len * d),
+            },
+        );
+        let order: Vec<usize> = bank.drain().iter().map(|o| o.stream).collect();
+        // stream 1's single chunk is served second, not last
+        assert_eq!(order, vec![0, 1, 0, 0]);
+    }
+}

@@ -1,6 +1,11 @@
 //! Gated-delta-net state machine (Yang et al. 2024a), token recurrence
 //!    S_t = a_t S_{t-1} + b_t k_t^T (v_t - k_t S_{t-1}),  o_t = q_t S_t.
-//! Used for serving-side decode and memory accounting.
+//! Used for serving-side decode and memory accounting, through
+//! [`SeqMixer`]. The trait's ungated `write` applies the configured
+//! default gates (`alpha`, `beta`); [`GdnState::write_gated`] exposes the
+//! full per-token recurrence.
+
+use super::mixer::{Scratch, SeqMixer};
 
 #[derive(Debug, Clone)]
 pub struct GdnState {
@@ -8,22 +13,18 @@ pub struct GdnState {
     /// [d, d] row-major fast-weight matrix
     pub s: Vec<f32>,
     pub t: usize,
+    /// default decay gate used by the trait-level `write`
+    pub alpha: f32,
+    /// default write-strength gate used by the trait-level `write`
+    pub beta: f32,
 }
 
 impl GdnState {
     pub fn new(d: usize) -> GdnState {
-        GdnState { d, s: vec![0.0; d * d], t: 0 }
+        GdnState { d, s: vec![0.0; d * d], t: 0, alpha: 1.0, beta: 1.0 }
     }
 
-    pub fn state_bytes(&self) -> usize {
-        self.s.len() * 4
-    }
-
-    pub fn update_bytes_per_chunk(&self, l: usize) -> usize {
-        l * self.d * self.d * 4
-    }
-
-    pub fn write(&mut self, k: &[f32], v: &[f32], alpha: f32, beta: f32) {
+    pub fn write_gated(&mut self, k: &[f32], v: &[f32], alpha: f32, beta: f32) {
         let d = self.d;
         // pred = k S  (length d)
         let mut pred = vec![0.0f32; d];
@@ -45,8 +46,39 @@ impl GdnState {
         }
         self.t += 1;
     }
+}
 
-    pub fn read(&self, q: &[f32], out: &mut [f32]) {
+impl SeqMixer for GdnState {
+    fn kind_name(&self) -> &'static str {
+        "gdn"
+    }
+
+    fn d_in(&self) -> usize {
+        self.d
+    }
+
+    fn d_out(&self) -> usize {
+        self.d
+    }
+
+    fn tokens(&self) -> usize {
+        self.t
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.s.len() * 4
+    }
+
+    fn update_bytes_per_chunk(&self, l: usize) -> usize {
+        l * self.d * self.d * 4
+    }
+
+    fn write(&mut self, k: &[f32], v: &[f32]) {
+        let (a, b) = (self.alpha, self.beta);
+        self.write_gated(k, v, a, b);
+    }
+
+    fn read(&self, q: &[f32], out: &mut [f32], _scratch: &mut Scratch) {
         let d = self.d;
         out.iter_mut().for_each(|o| *o = 0.0);
         for i in 0..d {
@@ -74,9 +106,10 @@ mod tests {
         let norm = (d as f32).sqrt().recip();
         let k: Vec<f32> = vec![norm; d];
         let v: Vec<f32> = (0..d).map(|i| i as f32).collect();
-        st.write(&k, &v, 1.0, 1.0);
+        st.write_gated(&k, &v, 1.0, 1.0);
         let mut out = vec![0.0; d];
-        st.read(&k, &mut out);
+        let mut scratch = Scratch::new();
+        st.read(&k, &mut out, &mut scratch);
         for (o, &vi) in out.iter().zip(&v) {
             assert!((o - vi).abs() < 1e-4);
         }
@@ -85,14 +118,16 @@ mod tests {
     #[test]
     fn rewrite_overwrites_not_accumulates() {
         // writing a new value under the same key replaces the old one —
-        // the delta rule's advantage over plain linear attention
+        // the delta rule's advantage over plain linear attention. The
+        // trait-level write uses the default gates alpha=1, beta=1.
         let d = 4;
         let mut st = GdnState::new(d);
         let k = vec![0.5; d];
-        st.write(&k, &[1.0, 1.0, 1.0, 1.0], 1.0, 1.0);
-        st.write(&k, &[9.0, 9.0, 9.0, 9.0], 1.0, 1.0);
+        st.write(&k, &[1.0, 1.0, 1.0, 1.0]);
+        st.write(&k, &[9.0, 9.0, 9.0, 9.0]);
         let mut out = vec![0.0; d];
-        st.read(&k, &mut out);
+        let mut scratch = Scratch::new();
+        st.read(&k, &mut out, &mut scratch);
         for &o in &out {
             assert!((o - 9.0).abs() < 1e-3, "expected overwrite, got {o}");
         }
@@ -103,13 +138,14 @@ mod tests {
         let d = 4;
         let mut st = GdnState::new(d);
         let k = vec![0.5; d];
-        st.write(&k, &[4.0; 4], 1.0, 1.0);
+        st.write_gated(&k, &[4.0; 4], 1.0, 1.0);
         // decay-only steps (beta=0 write with zero k/v contribution)
         for _ in 0..10 {
-            st.write(&[0.0; 4], &[0.0; 4], 0.5, 0.0);
+            st.write_gated(&[0.0; 4], &[0.0; 4], 0.5, 0.0);
         }
         let mut out = vec![0.0; d];
-        st.read(&k, &mut out);
+        let mut scratch = Scratch::new();
+        st.read(&k, &mut out, &mut scratch);
         assert!(out[0].abs() < 4.0 * 0.5f32.powi(9));
     }
 }

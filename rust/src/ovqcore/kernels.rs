@@ -1,0 +1,306 @@
+//! Blocked row-major microkernels shared by every [`super::mixer::SeqMixer`]
+//! implementation: dot products with multi-accumulator ILP, dictionary ×
+//! vector similarity (the eq. 6/15 logit matvec), weighted row reduction
+//! (the softmax value gather), and the tiled nearest-centroid search that
+//! replaces the seed's one-element-at-a-time scalar loops.
+//!
+//! Layout convention: all matrices are row-major `[rows, d]` f32 slices,
+//! matching the dictionary storage in `ovq`/`vq` and the KV storage in
+//! `kvcache`. Tiles are sized so a slot block (`SLOT_BLOCK` rows at
+//! d <= 128) stays resident in L1 while it is swept by every query of a
+//! chunk.
+
+/// Rows per dictionary tile in [`nearest_rows`]; 64 rows x 128 dims x 4 B
+/// = 32 KiB, the common L1 size.
+pub const SLOT_BLOCK: usize = 64;
+
+/// Dot product with four independent accumulators. The seed's
+/// `iter().zip().map().sum()` chains the f32 adds serially (FP addition is
+/// non-associative, so LLVM cannot reorder them); splitting the
+/// accumulation into four lanes makes the reduction associative-by-
+/// construction and lets the backend vectorize it.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// `out[r] = dot(m[r], x)` for `r in 0..rows` — the dictionary-logit
+/// matvec, blocked four rows at a time so each load of `x` feeds four
+/// accumulating lanes.
+pub fn matvec(m: &[f32], rows: usize, d: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert!(m.len() >= rows * d);
+    debug_assert!(out.len() >= rows);
+    debug_assert_eq!(x.len(), d);
+    let x = &x[..d];
+    let mut r = 0;
+    while r + 4 <= rows {
+        let m0 = &m[r * d..r * d + d];
+        let m1 = &m[(r + 1) * d..(r + 1) * d + d];
+        let m2 = &m[(r + 2) * d..(r + 2) * d + d];
+        let m3 = &m[(r + 3) * d..(r + 3) * d + d];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for j in 0..d {
+            let xj = x[j];
+            a0 += m0[j] * xj;
+            a1 += m1[j] * xj;
+            a2 += m2[j] * xj;
+            a3 += m3[j] * xj;
+        }
+        out[r] = a0;
+        out[r + 1] = a1;
+        out[r + 2] = a2;
+        out[r + 3] = a3;
+        r += 4;
+    }
+    while r < rows {
+        out[r] = dot(&m[r * d..r * d + d], x);
+        r += 1;
+    }
+}
+
+/// `acc[..d] += sum_r w[r] * m[r]`, skipping rows with zero weight — the
+/// softmax value gather. Rows are walked in pairs so the two row streams
+/// overlap loads.
+pub fn axpy_rows(m: &[f32], rows: usize, d: usize, w: &[f32], acc: &mut [f32]) {
+    debug_assert!(m.len() >= rows * d);
+    debug_assert!(w.len() >= rows);
+    debug_assert!(acc.len() >= d);
+    let acc = &mut acc[..d];
+    let mut r = 0;
+    while r + 2 <= rows {
+        let (w0, w1) = (w[r], w[r + 1]);
+        if w0 != 0.0 || w1 != 0.0 {
+            let m0 = &m[r * d..r * d + d];
+            let m1 = &m[(r + 1) * d..(r + 1) * d + d];
+            for j in 0..d {
+                acc[j] += w0 * m0[j] + w1 * m1[j];
+            }
+        }
+        r += 2;
+    }
+    if r < rows && w[r] != 0.0 {
+        let m0 = &m[r * d..r * d + d];
+        for j in 0..d {
+            acc[j] += w[r] * m0[j];
+        }
+    }
+}
+
+/// Tiled nearest-row search: for each of `len` keys, the index and value
+/// of the maximum inner product over `n` dictionary rows. The dictionary
+/// is swept in [`SLOT_BLOCK`]-row tiles and each tile is reused by every
+/// key before moving on, so the O(len * n * d) similarity matmul streams
+/// the dictionary exactly once per [`SLOT_BLOCK`] keys instead of once
+/// per key. `best_idx`/`best_sim` must hold `len` entries and arrive
+/// initialized (NEG_INFINITY sims to search from scratch) — callers can
+/// seed them to fold an external candidate in.
+pub fn nearest_rows(
+    dict: &[f32],
+    n: usize,
+    d: usize,
+    keys: &[f32],
+    len: usize,
+    best_idx: &mut [usize],
+    best_sim: &mut [f32],
+) {
+    debug_assert!(dict.len() >= n * d);
+    debug_assert!(keys.len() >= len * d);
+    debug_assert!(best_idx.len() >= len && best_sim.len() >= len);
+    let mut s0 = 0;
+    while s0 < n {
+        let sn = (s0 + SLOT_BLOCK).min(n);
+        let block = &dict[s0 * d..sn * d];
+        let rows = sn - s0;
+        for i in 0..len {
+            let k = &keys[i * d..(i + 1) * d];
+            let (mut bi, mut bv) = (best_idx[i], best_sim[i]);
+            let mut r = 0;
+            // four-row blocks: one pass of k feeds four similarity lanes
+            while r + 4 <= rows {
+                let m0 = &block[r * d..r * d + d];
+                let m1 = &block[(r + 1) * d..(r + 1) * d + d];
+                let m2 = &block[(r + 2) * d..(r + 2) * d + d];
+                let m3 = &block[(r + 3) * d..(r + 3) * d + d];
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for j in 0..d {
+                    let kj = k[j];
+                    a0 += m0[j] * kj;
+                    a1 += m1[j] * kj;
+                    a2 += m2[j] * kj;
+                    a3 += m3[j] * kj;
+                }
+                for (off, a) in [a0, a1, a2, a3].into_iter().enumerate() {
+                    if a > bv {
+                        bv = a;
+                        bi = s0 + r + off;
+                    }
+                }
+                r += 4;
+            }
+            while r < rows {
+                let a = dot(&block[r * d..r * d + d], k);
+                if a > bv {
+                    bv = a;
+                    bi = s0 + r;
+                }
+                r += 1;
+            }
+            best_idx[i] = bi;
+            best_sim[i] = bv;
+        }
+        s0 = sn;
+    }
+}
+
+/// Streaming-softmax combine over a logit slice and its value rows:
+/// `out += sum_s exp(logits[s] - m) * values[s]`, returning the partial
+/// normalizer. `NEG_INFINITY` logits are skipped. Weights are materialized
+/// into `w_scratch` (len >= rows) so the value gather runs through the
+/// blocked [`axpy_rows`].
+pub fn softmax_accumulate(
+    logits: &[f32],
+    values: &[f32],
+    rows: usize,
+    d: usize,
+    m: f32,
+    w_scratch: &mut [f32],
+    out: &mut [f32],
+) -> f32 {
+    debug_assert!(logits.len() >= rows);
+    debug_assert!(w_scratch.len() >= rows);
+    let mut z = 0.0f32;
+    for s in 0..rows {
+        let w = if logits[s] > f32::NEG_INFINITY { (logits[s] - m).exp() } else { 0.0 };
+        w_scratch[s] = w;
+        z += w;
+    }
+    axpy_rows(values, rows, d, w_scratch, out);
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 3, 4, 7, 64, 129] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let got = dot(&a, &b);
+            let want = naive_dot(&a, &b);
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        let mut rng = Rng::new(2);
+        for (rows, d) in [(1usize, 5usize), (4, 8), (7, 16), (130, 64)] {
+            let m = randv(&mut rng, rows * d);
+            let x = randv(&mut rng, d);
+            let mut out = vec![0.0f32; rows];
+            matvec(&m, rows, d, &x, &mut out);
+            for r in 0..rows {
+                let want = naive_dot(&m[r * d..(r + 1) * d], &x);
+                assert!((out[r] - want).abs() < 1e-3 * (1.0 + want.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_rows_matches_naive() {
+        let mut rng = Rng::new(3);
+        for (rows, d) in [(1usize, 3usize), (2, 8), (9, 16)] {
+            let m = randv(&mut rng, rows * d);
+            let w = randv(&mut rng, rows);
+            let mut acc = vec![0.5f32; d];
+            let mut want = acc.clone();
+            axpy_rows(&m, rows, d, &w, &mut acc);
+            for r in 0..rows {
+                for j in 0..d {
+                    want[j] += w[r] * m[r * d + j];
+                }
+            }
+            for j in 0..d {
+                assert!((acc[j] - want[j]).abs() < 1e-3 * (1.0 + want[j].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_matches_exhaustive() {
+        let mut rng = Rng::new(4);
+        for (n, d, len) in [(1usize, 4usize, 3usize), (63, 8, 5), (64, 16, 9), (257, 32, 17)] {
+            let dict = randv(&mut rng, n * d);
+            let keys = randv(&mut rng, len * d);
+            let mut idx = vec![0usize; len];
+            let mut sim = vec![f32::NEG_INFINITY; len];
+            nearest_rows(&dict, n, d, &keys, len, &mut idx, &mut sim);
+            for i in 0..len {
+                let k = &keys[i * d..(i + 1) * d];
+                let mut bv = f32::NEG_INFINITY;
+                for s in 0..n {
+                    bv = bv.max(naive_dot(&dict[s * d..(s + 1) * d], k));
+                }
+                // the chosen row must achieve the max similarity (argmax
+                // compared by value, not index — blocked accumulation may
+                // legitimately break FP near-ties differently)
+                assert!(idx[i] < n);
+                let chosen = naive_dot(&dict[idx[i] * d..(idx[i] + 1) * d], k);
+                let tol = 1e-3 * (1.0 + bv.abs());
+                assert!(chosen >= bv - tol, "key {i} (n={n} d={d}): {chosen} vs max {bv}");
+                assert!((sim[i] - chosen).abs() < tol);
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_respects_seeded_candidate() {
+        // a pre-seeded best_sim above every dictionary similarity survives
+        let dict = vec![0.0f32; 8 * 4];
+        let keys = vec![1.0f32; 4];
+        let mut idx = vec![99usize];
+        let mut sim = vec![1e9f32];
+        nearest_rows(&dict, 8, 4, &keys, 1, &mut idx, &mut sim);
+        assert_eq!(idx[0], 99);
+        assert_eq!(sim[0], 1e9);
+    }
+
+    #[test]
+    fn softmax_accumulate_normalizes() {
+        let logits = [0.0f32, 0.0, f32::NEG_INFINITY];
+        let values = [1.0f32, 2.0, 3.0, 4.0, 99.0, 99.0]; // d=2
+        let mut w = [0.0f32; 3];
+        let mut out = [0.0f32; 2];
+        let z = softmax_accumulate(&logits, &values, 3, 2, 0.0, &mut w, &mut out);
+        assert!((z - 2.0).abs() < 1e-6);
+        // masked row contributes nothing; (1+3)/2, (2+4)/2 after /z
+        assert!((out[0] / z - 2.0).abs() < 1e-6);
+        assert!((out[1] / z - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,6 +1,12 @@
 //! Full-attention KV cache — the memory-accounting baseline for
 //! Fig. 4-right (kv-cache growth is linear in context length) and the
-//! exact-softmax reference for the serving example.
+//! exact-softmax reference for the serving example. Optionally windowed
+//! (sliding-window attention: keep only the last `window` positions),
+//! which makes it the live counterpart of
+//! [`super::memstate::MixerKind::SlidingWindow`]. Served through
+//! [`SeqMixer`].
+
+use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
 
 #[derive(Debug, Clone)]
 pub struct KvCache {
@@ -8,13 +14,23 @@ pub struct KvCache {
     pub keys: Vec<f32>,
     pub values: Vec<f32>,
     pub beta: f32,
+    /// None = full attention; Some(w) = sliding window of w positions
+    pub window: Option<usize>,
+    /// total tokens ever written (>= len() when windowed)
+    pub t: usize,
 }
 
 impl KvCache {
     pub fn new(d: usize) -> KvCache {
-        KvCache { d, keys: Vec::new(), values: Vec::new(), beta: 8.0 }
+        KvCache { d, keys: Vec::new(), values: Vec::new(), beta: 8.0, window: None, t: 0 }
     }
 
+    pub fn with_window(d: usize, window: usize) -> KvCache {
+        assert!(window > 0, "sliding window must be > 0");
+        KvCache { window: Some(window), ..KvCache::new(d) }
+    }
+
+    /// Cached positions (<= window when windowed).
     pub fn len(&self) -> usize {
         self.keys.len() / self.d
     }
@@ -22,45 +38,74 @@ impl KvCache {
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }
+}
 
-    pub fn state_bytes(&self) -> usize {
+impl SeqMixer for KvCache {
+    fn kind_name(&self) -> &'static str {
+        if self.window.is_some() {
+            "sliding_window"
+        } else {
+            "kv_cache"
+        }
+    }
+
+    fn d_in(&self) -> usize {
+        self.d
+    }
+
+    fn d_out(&self) -> usize {
+        self.d
+    }
+
+    fn tokens(&self) -> usize {
+        self.t
+    }
+
+    fn state_bytes(&self) -> usize {
         (self.keys.len() + self.values.len()) * 4
     }
 
-    pub fn write(&mut self, k: &[f32], v: &[f32]) {
-        debug_assert_eq!(k.len(), self.d);
-        self.keys.extend_from_slice(k);
-        self.values.extend_from_slice(v);
+    /// Appending l keys + values.
+    fn update_bytes_per_chunk(&self, l: usize) -> usize {
+        2 * l * self.d * 4
     }
 
-    /// Causal softmax read over everything written so far.
-    pub fn read(&self, q: &[f32], out: &mut [f32]) {
-        let d = self.d;
-        let n = self.len();
-        out.iter_mut().for_each(|o| *o = 0.0);
-        if n == 0 {
-            return;
-        }
-        let mut logits = Vec::with_capacity(n);
-        let mut m = f32::NEG_INFINITY;
-        for i in 0..n {
-            let l: f32 = self.beta
-                * q.iter()
-                    .zip(&self.keys[i * d..(i + 1) * d])
-                    .map(|(a, b)| a * b)
-                    .sum::<f32>();
-            m = m.max(l);
-            logits.push(l);
-        }
-        let mut z = 0.0;
-        for i in 0..n {
-            let w = (logits[i] - m).exp();
-            z += w;
-            for (o, &v) in out.iter_mut().zip(&self.values[i * d..(i + 1) * d]) {
-                *o += w * v;
+    fn write(&mut self, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.d);
+        if let Some(w) = self.window {
+            if self.len() == w {
+                // front drain is an O(w*d) memmove — same order as the
+                // O(w*d) read every decode step already pays, and it keeps
+                // state exactly 2*min(t,w)*d*4 bytes (the memstate
+                // contract). A ring buffer would cut the constant but
+                // split reads into two segments.
+                self.keys.drain(..self.d);
+                self.values.drain(..self.d);
             }
         }
-        out.iter_mut().for_each(|o| *o /= z);
+        self.keys.extend_from_slice(k);
+        self.values.extend_from_slice(v);
+        self.t += 1;
+    }
+
+    /// Causal softmax read over everything cached (no count bias — every
+    /// cached position is its own "slot" with count 1).
+    fn read(&self, q: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        let n = self.len();
+        dict_softmax_read(
+            q,
+            &[],
+            &[],
+            &[],
+            0,
+            self.d,
+            self.beta,
+            &self.keys,
+            &self.values,
+            n,
+            out,
+            scratch,
+        );
     }
 }
 
@@ -77,6 +122,7 @@ mod tests {
         }
         assert_eq!(c.state_bytes(), 100 * 2 * 16 * 4);
         assert_eq!(c.len(), 100);
+        assert_eq!(c.tokens(), 100);
     }
 
     #[test]
@@ -86,9 +132,31 @@ mod tests {
         c.write(&[1.0, 0.0, 0.0, 0.0], &[1.0; 4]);
         c.write(&[0.0, 1.0, 0.0, 0.0], &[5.0; 4]);
         let mut out = [0.0; 4];
-        c.read(&[0.0, 1.0, 0.0, 0.0], &mut out);
+        let mut scratch = Scratch::new();
+        c.read(&[0.0, 1.0, 0.0, 0.0], &mut out, &mut scratch);
         for &o in &out {
             assert!((o - 5.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn window_caps_state_and_evicts_oldest() {
+        let mut c = KvCache::with_window(4, 8);
+        c.beta = 50.0;
+        c.write(&[1.0, 0.0, 0.0, 0.0], &[7.0; 4]); // will be evicted
+        for _ in 0..8 {
+            c.write(&[0.0, 1.0, 0.0, 0.0], &[2.0; 4]);
+        }
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.tokens(), 9);
+        assert_eq!(c.state_bytes(), 8 * 2 * 4 * 4);
+        // the evicted key no longer matches anything sharp
+        let mut out = [0.0; 4];
+        let mut scratch = Scratch::new();
+        c.read(&[1.0, 0.0, 0.0, 0.0], &mut out, &mut scratch);
+        // all remaining values are 2.0, so any softmax mix returns 2.0
+        for &o in &out {
+            assert!((o - 2.0).abs() < 1e-3, "{o}");
         }
     }
 }

@@ -1,7 +1,9 @@
 //! Linear-attention state machine (the §3.4 / Fig. 3 contrast case):
 //! dense state S [d_k, d_v], rank-1 update per token — every update writes
 //! the WHOLE state, so the chunk update tensor is [L, d_k, d_v], growing
-//! with state size, unlike OVQ's [L, 2, d].
+//! with state size, unlike OVQ's [L, 2, d]. Served through [`SeqMixer`].
+
+use super::mixer::{Scratch, SeqMixer};
 
 #[derive(Debug, Clone)]
 pub struct LinearAttnState {
@@ -27,18 +29,36 @@ impl LinearAttnState {
     pub fn new(dk: usize, dv: usize) -> LinearAttnState {
         LinearAttnState { dk, dv, s: vec![0.0; dk * dv], z: vec![0.0; dk], t: 0 }
     }
+}
 
-    pub fn state_bytes(&self) -> usize {
+impl SeqMixer for LinearAttnState {
+    fn kind_name(&self) -> &'static str {
+        "linear_attn"
+    }
+
+    fn d_in(&self) -> usize {
+        self.dk
+    }
+
+    fn d_out(&self) -> usize {
+        self.dv
+    }
+
+    fn tokens(&self) -> usize {
+        self.t
+    }
+
+    fn state_bytes(&self) -> usize {
         (self.s.len() + self.z.len()) * 4
     }
 
     /// Bytes materialized per chunk of length l in the standard
     /// chunk-parallel implementation (paper §3.4): ΔS is [L, dk, dv].
-    pub fn update_bytes_per_chunk(&self, l: usize) -> usize {
+    fn update_bytes_per_chunk(&self, l: usize) -> usize {
         l * self.dk * self.dv * 4
     }
 
-    pub fn write(&mut self, k: &[f32], v: &[f32]) {
+    fn write(&mut self, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), self.dk);
         debug_assert_eq!(v.len(), self.dv);
         for i in 0..self.dk {
@@ -52,7 +72,7 @@ impl LinearAttnState {
         self.t += 1;
     }
 
-    pub fn read(&self, q: &[f32], out: &mut [f32]) {
+    fn read(&self, q: &[f32], out: &mut [f32], _scratch: &mut Scratch) {
         let mut den = 1e-6f32;
         out.iter_mut().for_each(|o| *o = 0.0);
         for i in 0..self.dk {
@@ -80,7 +100,8 @@ mod tests {
         let v = vec![1.0, -2.0, 3.0, 0.5];
         st.write(&k, &v);
         let mut out = vec![0.0; 4];
-        st.read(&k, &mut out);
+        let mut scratch = Scratch::new();
+        st.read(&k, &mut out, &mut scratch);
         for (o, &vi) in out.iter().zip(&v) {
             assert!((o - vi).abs() < 1e-3, "{o} vs {vi}");
         }

@@ -3,7 +3,19 @@
 //!
 //! All quantities are exact byte counts from the layer definitions; the
 //! per-layer/per-head factors use the paper's architecture conventions
-//! (state per head, H heads, f32).
+//! (state per head, H heads, f32). [`MixerKind::build`] instantiates the
+//! live [`SeqMixer`] state machine each kind describes, and the tests
+//! cross-check the analytical byte counts against the machines' actual
+//! `state_bytes()` — the accounting and the serving path can no longer
+//! drift apart.
+
+use super::gdn::GdnState;
+use super::kvcache::KvCache;
+use super::linear_attn::LinearAttnState;
+use super::mixer::SeqMixer;
+use super::ovq::{OvqConfig, OvqState};
+use super::vq::VqState;
+use crate::util::rng::Rng;
 
 /// Memory state of one sequence-mixing layer, bytes, as a function of the
 /// context length t.
@@ -64,6 +76,38 @@ impl MixerKind {
             }
         }
     }
+
+    /// Instantiate the single-head live state machine this kind accounts
+    /// for, through the unified [`SeqMixer`] interface. `chunk` is the OVQ
+    /// chunk length; `seed` seeds the VQ baseline's pretrained dictionary.
+    pub fn build(&self, d_head: usize, chunk: usize, seed: u64) -> Box<dyn SeqMixer> {
+        match *self {
+            MixerKind::FullAttention => Box::new(KvCache::new(d_head)),
+            MixerKind::SlidingWindow { window } => {
+                Box::new(KvCache::with_window(d_head, window))
+            }
+            MixerKind::Ovq { n_max } => {
+                Box::new(OvqState::new(OvqConfig::new(d_head, n_max, chunk)))
+            }
+            MixerKind::Vq { n } => {
+                // unit-norm pretrained key dictionary (the Lingle setup)
+                let mut rng = Rng::new(seed);
+                let mut dk = vec![0.0f32; n * d_head];
+                for row in dk.chunks_mut(d_head) {
+                    let mut norm = 0.0f32;
+                    for x in row.iter_mut() {
+                        *x = rng.normal() as f32;
+                        norm += *x * *x;
+                    }
+                    let norm = norm.sqrt().max(1e-12);
+                    row.iter_mut().for_each(|x| *x /= norm);
+                }
+                Box::new(VqState::new(d_head, dk))
+            }
+            MixerKind::LinearAttention => Box::new(LinearAttnState::new(d_head, d_head)),
+            MixerKind::Gdn => Box::new(GdnState::new(d_head)),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +161,40 @@ mod tests {
     fn sliding_window_saturates() {
         let k = MixerKind::SlidingWindow { window: 128 };
         assert_eq!(k.state_bytes(G, 128), k.state_bytes(G, 10_000));
+    }
+
+    #[test]
+    fn accounting_matches_live_mixers() {
+        // the analytical per-head byte counts must equal the live state
+        // machines' state_bytes() after absorbing t tokens — the invariant
+        // that ties this accounting module to the serving path.
+        use crate::util::rng::Rng;
+        let (d, chunk, t) = (16usize, 32usize, 256usize);
+        let g1 = MixerGeom { heads: 1, d_head: d };
+        let kinds = [
+            MixerKind::FullAttention,
+            MixerKind::SlidingWindow { window: 64 },
+            MixerKind::Ovq { n_max: 64 },
+            MixerKind::Vq { n: 32 },
+            MixerKind::LinearAttention,
+            MixerKind::Gdn,
+        ];
+        let mut rng = Rng::new(11);
+        for kind in kinds {
+            let mut m = kind.build(d, chunk, 7);
+            for _ in 0..t {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                m.write(&k, &v);
+            }
+            m.flush(); // merge any buffered OVQ chunk tail
+            assert_eq!(
+                m.state_bytes(),
+                kind.state_bytes(g1, t),
+                "accounting drift for {:?} ({})",
+                kind,
+                m.kind_name()
+            );
+        }
     }
 }

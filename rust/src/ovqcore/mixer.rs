@@ -1,0 +1,283 @@
+//! The unified sequence-mixer abstraction. Every state machine in this
+//! module — OVQ, VQ, linear attention, gated delta net, the exact KV
+//! cache — implements [`SeqMixer`], so the serving engine
+//! ([`super::bank::MixerBank`]), the memory-accounting experiments
+//! ([`super::memstate`]) and the benches all drive one interface instead
+//! of five ad-hoc ones.
+//!
+//! Semantics: a mixer absorbs a causal stream of (k, v) rows and answers
+//! queries against everything absorbed so far. The canonical per-token
+//! order is write-then-read — the output for token t attends positions
+//! <= t, matching softmax attention and the paper's eq. 15 (where the
+//! in-chunk prefix is visible up to and including the current item).
+//! [`SeqMixer::process_chunk`] must be equivalent to that token loop:
+//! rust/tests/golden.rs holds the chunked-vs-streaming property test.
+
+use super::kernels;
+
+/// Reusable scratch for [`SeqMixer::read`]/[`SeqMixer::process_chunk`].
+/// Callers allocate one and pass it to every call, eliminating the
+/// per-query logits `Vec` the seed implementations allocated.
+#[derive(Debug, Default, Clone)]
+pub struct Scratch {
+    /// logit buffer (dictionary slots + chunk prefix)
+    pub logits: Vec<f32>,
+    /// softmax weight buffer, same length as `logits`
+    pub weights: Vec<f32>,
+    /// general f32 temporary (nearest-neighbour sims, head staging, ...)
+    pub buf: Vec<f32>,
+    /// index temporary (chunk assignments)
+    pub idx: Vec<usize>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Grow (never shrink) `logits` and `weights` to hold `n` entries and
+    /// return them zero-initialized-free — callers overwrite every slot
+    /// they read.
+    pub fn logit_buffers(&mut self, n: usize) -> (&mut [f32], &mut [f32]) {
+        if self.logits.len() < n {
+            self.logits.resize(n, 0.0);
+        }
+        if self.weights.len() < n {
+            self.weights.resize(n, 0.0);
+        }
+        (&mut self.logits[..n], &mut self.weights[..n])
+    }
+
+    pub fn f32_buf(&mut self, n: usize) -> &mut [f32] {
+        if self.buf.len() < n {
+            self.buf.resize(n, 0.0);
+        }
+        &mut self.buf[..n]
+    }
+
+    pub fn idx_buf(&mut self, n: usize) -> &mut [usize] {
+        if self.idx.len() < n {
+            self.idx.resize(n, 0);
+        }
+        &mut self.idx[..n]
+    }
+}
+
+/// A causal sequence mixer: constant-or-growing state, token writes,
+/// query reads, chunked processing. `Send` is required so banks of mixers
+/// can move across serving threads.
+pub trait SeqMixer: Send {
+    /// Short stable identifier ("ovq", "kv_cache", ...) for reports.
+    fn kind_name(&self) -> &'static str;
+
+    /// Query/key dimensionality.
+    fn d_in(&self) -> usize;
+
+    /// Value/output dimensionality (== `d_in` for all paper mixers except
+    /// linear attention, which is configured with separate dk/dv).
+    fn d_out(&self) -> usize;
+
+    /// Tokens absorbed so far (including any buffered, not-yet-merged
+    /// chunk tail).
+    fn tokens(&self) -> usize;
+
+    /// Exact bytes of live mixer state (dictionaries, fast weights,
+    /// caches, pending buffers).
+    fn state_bytes(&self) -> usize;
+
+    /// Bytes of the per-chunk state-update tensor ΔS materialized by the
+    /// standard chunk-parallel implementation for a chunk of length `l` —
+    /// the paper's §3.4 comparison axis.
+    fn update_bytes_per_chunk(&self, l: usize) -> usize;
+
+    /// Absorb one (k, v) row.
+    fn write(&mut self, k: &[f32], v: &[f32]);
+
+    /// Answer one query against everything written so far.
+    fn read(&self, q: &[f32], out: &mut [f32], scratch: &mut Scratch);
+
+    /// Process `len` tokens: for each i, write (k_i, v_i) then read q_i
+    /// into `out[i]`. `queries`/`keys` are `[len, d_in]`, `values`/`out`
+    /// are `[len, d_out]`, all row-major. Implementations may override
+    /// with an internally-batched path (e.g. a shared [len, N] logits
+    /// matmul — none do yet) but must stay equivalent to the token loop.
+    fn process_chunk(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let di = self.d_in();
+        let dv = self.d_out();
+        let len = keys.len() / di;
+        debug_assert_eq!(queries.len(), len * di);
+        debug_assert_eq!(values.len(), len * dv);
+        debug_assert_eq!(out.len(), len * dv);
+        for i in 0..len {
+            self.write(&keys[i * di..(i + 1) * di], &values[i * dv..(i + 1) * dv]);
+            let (head, tail) = out.split_at_mut(i * dv);
+            let _ = head;
+            self.read(&queries[i * di..(i + 1) * di], &mut tail[..dv], scratch);
+        }
+    }
+
+    /// Flush any buffered chunk tail into the long-term state (no-op for
+    /// mixers without chunk buffering). Reads already see buffered tokens;
+    /// this only forces the merge, e.g. at end-of-sequence.
+    fn flush(&mut self) {}
+}
+
+/// Masked-softmax read over a dictionary with count biasing — the shared
+/// eq. 6 / eq. 15 read used by both `OvqState` and `VqState`:
+/// `out = softmax(beta * q . Dk^T + ln(counts)) . Dv` over slots with
+/// counts > 0, optionally extended by `extra` visible (k, v) rows (the
+/// in-chunk prefix, bias-free). Returns nothing; `out` is normalized in
+/// place. All heavy loops go through the blocked kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn dict_softmax_read(
+    q: &[f32],
+    dk: &[f32],
+    dv: &[f32],
+    counts: &[f32],
+    n: usize,
+    d: usize,
+    beta: f32,
+    extra_k: &[f32],
+    extra_v: &[f32],
+    extra_len: usize,
+    out: &mut [f32],
+    scratch: &mut Scratch,
+) {
+    let total = n + extra_len;
+    out.iter_mut().for_each(|o| *o = 0.0);
+    if total == 0 {
+        return;
+    }
+    let (logits, weights) = scratch.logit_buffers(total);
+
+    // slot logits: beta * Dk q + ln(c), masked where c == 0
+    kernels::matvec(dk, n, d, q, logits);
+    let mut m = f32::NEG_INFINITY;
+    for s in 0..n {
+        if counts[s] > 0.0 {
+            logits[s] = beta * logits[s] + counts[s].ln();
+            m = m.max(logits[s]);
+        } else {
+            logits[s] = f32::NEG_INFINITY;
+        }
+    }
+    // chunk-prefix logits: bias-free
+    kernels::matvec(extra_k, extra_len, d, q, &mut logits[n..]);
+    for l in logits[n..].iter_mut() {
+        *l *= beta;
+        m = m.max(*l);
+    }
+    if m == f32::NEG_INFINITY {
+        return;
+    }
+
+    let mut z = kernels::softmax_accumulate(&logits[..n], dv, n, d, m, &mut weights[..n], out);
+    z += kernels::softmax_accumulate(
+        &logits[n..],
+        extra_v,
+        extra_len,
+        d,
+        m,
+        &mut weights[n..],
+        out,
+    );
+    if z > 0.0 {
+        out.iter_mut().for_each(|o| *o /= z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_buffers_grow_and_reuse() {
+        let mut s = Scratch::new();
+        {
+            let (l, w) = s.logit_buffers(10);
+            assert_eq!(l.len(), 10);
+            assert_eq!(w.len(), 10);
+        }
+        {
+            let (l, _) = s.logit_buffers(4);
+            assert_eq!(l.len(), 4); // view shrinks, allocation does not
+        }
+        assert!(s.logits.capacity() >= 10);
+        assert_eq!(s.f32_buf(7).len(), 7);
+        assert_eq!(s.idx_buf(3).len(), 3);
+    }
+
+    #[test]
+    fn dict_read_is_convex_and_count_biased() {
+        // two active slots with equal similarity: counts decide the mix
+        let d = 4;
+        let dk = vec![0.0f32; 2 * d]; // zero keys -> equal sims
+        let mut dv = vec![0.0f32; 2 * d];
+        dv[..d].iter_mut().for_each(|x| *x = 1.0);
+        dv[d..].iter_mut().for_each(|x| *x = 3.0);
+        let counts = [3.0f32, 1.0];
+        let q = vec![1.0f32; d];
+        let mut out = vec![0.0f32; d];
+        let mut scratch = Scratch::new();
+        dict_softmax_read(&q, &dk, &dv, &counts, 2, d, 8.0, &[], &[], 0, &mut out, &mut scratch);
+        // weights are 3/4 and 1/4 -> 0.75*1 + 0.25*3 = 1.5
+        for &o in &out {
+            assert!((o - 1.5).abs() < 1e-5, "{o}");
+        }
+    }
+
+    #[test]
+    fn dict_read_empty_state_is_zero() {
+        let mut out = vec![7.0f32; 4];
+        let mut scratch = Scratch::new();
+        dict_softmax_read(
+            &[1.0; 4],
+            &[],
+            &[],
+            &[],
+            0,
+            4,
+            8.0,
+            &[],
+            &[],
+            0,
+            &mut out,
+            &mut scratch,
+        );
+        assert!(out.iter().all(|&o| o == 0.0));
+    }
+
+    #[test]
+    fn dict_read_sees_extra_rows() {
+        // empty dictionary, one visible chunk row: output == that value
+        let d = 4;
+        let k = vec![0.5f32; d];
+        let v = vec![2.0f32; d];
+        let mut out = vec![0.0f32; d];
+        let mut scratch = Scratch::new();
+        dict_softmax_read(
+            &[1.0; d],
+            &[],
+            &[],
+            &[],
+            0,
+            d,
+            8.0,
+            &k,
+            &v,
+            1,
+            &mut out,
+            &mut scratch,
+        );
+        for &o in &out {
+            assert!((o - 2.0).abs() < 1e-5);
+        }
+    }
+}

@@ -9,11 +9,21 @@
 //!  3. criterion-style throughput benches of the state update — the
 //!     paper's core systems claim that the OVQ update cost is independent
 //!     of the dictionary size N while linear attention's is not.
+//!
+//! Layering (DESIGN.md): every state machine implements the
+//! [`mixer::SeqMixer`] trait and runs its hot loops through the blocked
+//! [`kernels`]; [`bank::MixerBank`] scales the trait to H heads x S
+//! concurrent decode streams with round-robin scheduling. Consumers
+//! (memstate accounting, the coordinator's serving/eval paths, the
+//! examples and benches) go through the trait or the bank only.
 
+pub mod bank;
 pub mod gdn;
+pub mod kernels;
 pub mod kvcache;
 pub mod linear_attn;
 pub mod memstate;
+pub mod mixer;
 pub mod ovq;
 pub mod vq;
 

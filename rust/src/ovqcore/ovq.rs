@@ -2,10 +2,22 @@
 //! §3.2 algorithm: chunk prediction (eq. 15), spread-maximizing growth
 //! (eqs. 17-18), adaptive-lr online k-means merge (eq. 19).
 //!
-//! Semantics match python/compile/layers/ovq.py; the integration test
-//! rust/tests/golden.rs cross-checks outputs against the HLO path.
+//! Semantics match python/compile/layers/ovq.py. The streaming property
+//! test rust/tests/golden.rs cross-checks that token-by-token decode
+//! (arrival chunk 1) and chunked decode (arrival chunk 16) through the
+//! [`SeqMixer`] interface produce identical outputs.
+//!
+//! Chunk buffering: tokens are staged in a pending buffer and merged into
+//! the dictionary lazily, `cfg.chunk` at a time, the moment the chunk
+//! *after* them begins — so the read for token i of a chunk always sees
+//! the dictionary as of the previous chunk boundary plus the bias-free
+//! in-chunk prefix 0..=i, exactly eq. 15, regardless of how tokens
+//! arrive. Call [`SeqMixer::flush`] at end-of-sequence to force the final
+//! partial merge.
 
-use super::{growth_n_new};
+use super::growth_n_new;
+use super::kernels;
+use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
 
 #[derive(Debug, Clone)]
 pub struct OvqConfig {
@@ -36,47 +48,72 @@ impl OvqConfig {
     }
 }
 
-/// The constant-size OVQ memory state.
+/// Reusable per-chunk update workspace (no allocation on the steady-state
+/// update path).
+#[derive(Debug, Clone, Default)]
+struct UpdateScratch {
+    best_idx: Vec<usize>,
+    best_sim: Vec<f32>,
+    order: Vec<usize>,
+    is_new: Vec<bool>,
+    assign: Vec<usize>,
+    slot_sums: Vec<f32>,
+    touched: Vec<usize>,
+}
+
+/// The OVQ memory state. Dictionary storage is allocated lazily, growing
+/// with the active slot count N_t up to the n_max cap — so
+/// `state_bytes()` reports actual resident bytes and the paper's
+/// grow-then-plateau state curve (Fig. 4-right) holds for real memory,
+/// not just the accounting model.
 #[derive(Debug, Clone)]
 pub struct OvqState {
     pub cfg: OvqConfig,
-    /// [n_max, d] row-major key centroids
+    /// [n_active, d] row-major key centroids (grows to [n_max, d])
     pub dk: Vec<f32>,
-    /// [n_max, d] value centroids
+    /// [n_active, d] value centroids
     pub dv: Vec<f32>,
-    /// per-slot assignment counts (0 = inactive)
+    /// per-slot assignment counts, one per allocated slot
     pub counts: Vec<f32>,
     pub n_active: usize,
-    /// tokens absorbed so far
+    /// tokens merged into the dictionary so far (excludes the pending tail)
     pub t: usize,
     chunk_idx: usize,
+    /// staged (k, v) rows awaiting the next chunk merge, [pending_len, d]
+    pending_k: Vec<f32>,
+    pending_v: Vec<f32>,
+    pending_len: usize,
+    upd: UpdateScratch,
 }
 
 impl OvqState {
     pub fn new(cfg: OvqConfig) -> OvqState {
-        let n = cfg.n_max;
         let d = cfg.d;
+        let chunk = cfg.chunk;
         OvqState {
             cfg,
-            dk: vec![0.0; n * d],
-            dv: vec![0.0; n * d],
-            counts: vec![0.0; n],
+            dk: Vec::new(),
+            dv: Vec::new(),
+            counts: Vec::new(),
             n_active: 0,
             t: 0,
             chunk_idx: 0,
+            pending_k: Vec::with_capacity(chunk * d),
+            pending_v: Vec::with_capacity(chunk * d),
+            pending_len: 0,
+            upd: UpdateScratch::default(),
         }
     }
 
-    pub fn state_bytes(&self) -> usize {
-        (self.dk.len() + self.dv.len() + self.counts.len()) * 4
-    }
-
-    fn dot(a: &[f32], b: &[f32]) -> f32 {
-        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    /// Tokens staged but not yet merged.
+    pub fn pending_len(&self) -> usize {
+        self.pending_len
     }
 
     /// Attention of one query over the current dictionary + an in-chunk
     /// prefix (keys[..upto], values[..upto]) — eq. 15 for a single row.
+    /// All heavy loops run through the blocked kernels with reusable
+    /// scratch; nothing is allocated per query.
     pub fn attend(
         &self,
         q: &[f32],
@@ -84,103 +121,55 @@ impl OvqState {
         chunk_v: &[f32],
         upto: usize,
         out: &mut [f32],
+        scratch: &mut Scratch,
     ) {
         let d = self.cfg.d;
-        let beta = self.cfg.beta;
         debug_assert_eq!(q.len(), d);
         let n = self.n_active;
-
-        // logits over active slots + visible chunk items, streaming softmax
-        let mut m = f32::NEG_INFINITY;
-        let mut logits: Vec<f32> = Vec::with_capacity(n + upto);
-        for s in 0..n {
-            if self.counts[s] > 0.0 {
-                let l = beta * Self::dot(q, &self.dk[s * d..(s + 1) * d])
-                    + self.counts[s].ln();
-                logits.push(l);
-                m = m.max(l);
-            } else {
-                logits.push(f32::NEG_INFINITY);
-            }
-        }
-        for j in 0..upto {
-            let l = beta * Self::dot(q, &chunk_k[j * d..(j + 1) * d]);
-            logits.push(l);
-            m = m.max(l);
-        }
-
-        out.iter_mut().for_each(|o| *o = 0.0);
-        let mut z = 0.0f32;
-        for (s, &l) in logits.iter().enumerate().take(n) {
-            if l > f32::NEG_INFINITY {
-                let w = (l - m).exp();
-                z += w;
-                let row = &self.dv[s * d..(s + 1) * d];
-                for (o, &v) in out.iter_mut().zip(row) {
-                    *o += w * v;
-                }
-            }
-        }
-        for j in 0..upto {
-            let w = (logits[n + j] - m).exp();
-            z += w;
-            let row = &chunk_v[j * d..(j + 1) * d];
-            for (o, &v) in out.iter_mut().zip(row) {
-                *o += w * v;
-            }
-        }
-        if z > 0.0 {
-            out.iter_mut().for_each(|o| *o /= z);
-        }
-    }
-
-    /// Process one chunk: returns outputs [len, d] and performs the state
-    /// update (grow + merge). keys/values are [len, d] row-major, len <=
-    /// cfg.chunk (the last chunk may be short).
-    pub fn process_chunk(&mut self, queries: &[f32], keys: &[f32], values: &[f32]) -> Vec<f32> {
-        let d = self.cfg.d;
-        let len = keys.len() / d;
-        debug_assert!(len <= self.cfg.chunk);
-
-        // 1. predict
-        let mut out = vec![0.0f32; len * d];
-        for i in 0..len {
-            let (head, tail) = out.split_at_mut(i * d);
-            let _ = head;
-            self.attend(
-                &queries[i * d..(i + 1) * d],
-                keys,
-                values,
-                i + 1,
-                &mut tail[..d],
-            );
-        }
-
-        // 2. grow + 3. merge
-        self.update_chunk(keys, values);
-        out
+        dict_softmax_read(
+            q,
+            &self.dk[..n * d],
+            &self.dv[..n * d],
+            &self.counts[..n],
+            n,
+            d,
+            self.cfg.beta,
+            &chunk_k[..upto * d],
+            &chunk_v[..upto * d],
+            upto,
+            out,
+            scratch,
+        );
     }
 
     /// The state update only (used by the benches to isolate update cost).
+    /// keys/values are [len, d] row-major, len <= cfg.chunk.
     pub fn update_chunk(&mut self, keys: &[f32], values: &[f32]) {
         let d = self.cfg.d;
         let len = keys.len() / d;
-
-        // nearest active centroid per item
-        let mut best_idx = vec![0usize; len];
-        let mut best_sim = vec![f32::NEG_INFINITY; len];
-        for i in 0..len {
-            let k = &keys[i * d..(i + 1) * d];
-            for s in 0..self.n_active {
-                if self.counts[s] > 0.0 {
-                    let sim = Self::dot(k, &self.dk[s * d..(s + 1) * d]);
-                    if sim > best_sim[i] {
-                        best_sim[i] = sim;
-                        best_idx[i] = s;
-                    }
-                }
-            }
+        debug_assert!(len <= self.cfg.chunk);
+        if len == 0 {
+            return;
         }
+
+        // nearest active centroid per item — blocked O(len * N * d)
+        // similarity matmul (kernels::nearest_rows) instead of the seed's
+        // scalar one-slot-at-a-time loop. Every active slot has counts > 0
+        // (slots are only claimed by merging at least one item).
+        let upd = &mut self.upd;
+        upd.best_idx.clear();
+        upd.best_idx.resize(len, 0);
+        upd.best_sim.clear();
+        upd.best_sim.resize(len, f32::NEG_INFINITY);
+        kernels::nearest_rows(
+            &self.dk[..self.n_active * d],
+            self.n_active,
+            d,
+            keys,
+            len,
+            &mut upd.best_idx,
+            &mut upd.best_sim,
+        );
 
         // growth count for this chunk
         let n_new = if self.cfg.linear_growth {
@@ -193,73 +182,92 @@ impl OvqState {
         };
 
         // choose new centroids: lowest best-similarity (or pseudo-random)
-        let mut order: Vec<usize> = (0..len).collect();
+        upd.order.clear();
+        upd.order.extend(0..len);
         if self.cfg.rand_assign {
             // deterministic pseudo-random priority from position + time
-            order.sort_by_key(|&i| {
+            let t = self.t;
+            upd.order.sort_by_key(|&i| {
                 (i as u64)
                     .wrapping_mul(0x9E3779B97F4A7C15)
-                    .wrapping_add(self.t as u64)
+                    .wrapping_add(t as u64)
                     .rotate_left(17)
             });
         } else {
-            order.sort_by(|&a, &b| best_sim[a].partial_cmp(&best_sim[b]).unwrap());
+            let sims = &upd.best_sim;
+            upd.order
+                .sort_by(|&a, &b| sims[a].partial_cmp(&sims[b]).unwrap());
         }
-        let mut is_new = vec![false; len];
-        for &i in order.iter().take(n_new) {
-            is_new[i] = true;
+        upd.is_new.clear();
+        upd.is_new.resize(len, false);
+        for &i in upd.order.iter().take(n_new) {
+            upd.is_new[i] = true;
         }
+
+        // allocate storage for the newly claimed slots (lazy growth: the
+        // dictionary holds exactly the active rows, capped at n_max)
+        let new_total = self.n_active + n_new;
+        self.dk.resize(new_total * d, 0.0);
+        self.dv.resize(new_total * d, 0.0);
+        self.counts.resize(new_total, 0.0);
 
         // assignments: new items claim fresh slots in position order
         let mut next_slot = self.n_active;
-        let mut assign = vec![0usize; len];
+        upd.assign.clear();
+        upd.assign.resize(len, 0);
         for i in 0..len {
-            if is_new[i] {
-                assign[i] = next_slot;
+            if upd.is_new[i] {
+                upd.assign[i] = next_slot;
                 next_slot += 1;
             } else if self.n_active > 0 {
-                assign[i] = best_idx[i];
+                upd.assign[i] = upd.best_idx[i];
             } else {
-                assign[i] = 0; // degenerate cold start: merge into slot 0
+                upd.assign[i] = 0; // degenerate cold start: merge into slot 0
             }
         }
         self.n_active = next_slot;
 
-        // merge: exact count-weighted mean (eq. 19 batch form) or const-lr
-        // accumulate per-slot chunk sums first
-        let mut touched: Vec<usize> = assign.clone();
-        touched.sort_unstable();
-        touched.dedup();
-        for &s in &touched {
-            let mut cc = 0.0f32;
-            let mut sum_k = vec![0.0f32; d];
-            let mut sum_v = vec![0.0f32; d];
-            for i in 0..len {
-                if assign[i] == s {
-                    cc += 1.0;
-                    for j in 0..d {
-                        sum_k[j] += keys[i * d + j];
-                        sum_v[j] += values[i * d + j];
-                    }
-                }
+        // merge: exact count-weighted mean (eq. 19 batch form) or const-lr.
+        // One pass accumulates per-touched-slot (count, sum_k, sum_v) into
+        // a dense workspace — O(len * d) instead of the seed's
+        // O(touched * len * d) rescan.
+        upd.touched.clear();
+        upd.touched.extend_from_slice(&upd.assign);
+        upd.touched.sort_unstable();
+        upd.touched.dedup();
+        let nt = upd.touched.len();
+        // layout: [nt] counts, then [nt, d] key sums, then [nt, d] value sums
+        upd.slot_sums.clear();
+        upd.slot_sums.resize(nt * (2 * d + 1), 0.0);
+        let (cc, sums) = upd.slot_sums.split_at_mut(nt);
+        let (sum_k, sum_v) = sums.split_at_mut(nt * d);
+        for i in 0..len {
+            let ti = upd.touched.binary_search(&upd.assign[i]).unwrap();
+            cc[ti] += 1.0;
+            let sk = &mut sum_k[ti * d..(ti + 1) * d];
+            let sv = &mut sum_v[ti * d..(ti + 1) * d];
+            for j in 0..d {
+                sk[j] += keys[i * d + j];
+                sv[j] += values[i * d + j];
             }
+        }
+        for (ti, &s) in upd.touched.iter().enumerate() {
             let c_old = self.counts[s];
+            let cc = cc[ti];
+            let sk = &sum_k[ti * d..(ti + 1) * d];
+            let sv = &sum_v[ti * d..(ti + 1) * d];
             match self.cfg.const_lr {
                 Some(lr) if c_old > 0.0 => {
                     for j in 0..d {
-                        self.dk[s * d + j] +=
-                            lr * (sum_k[j] - cc * self.dk[s * d + j]);
-                        self.dv[s * d + j] +=
-                            lr * (sum_v[j] - cc * self.dv[s * d + j]);
+                        self.dk[s * d + j] += lr * (sk[j] - cc * self.dk[s * d + j]);
+                        self.dv[s * d + j] += lr * (sv[j] - cc * self.dv[s * d + j]);
                     }
                 }
                 _ => {
                     let denom = c_old + cc;
                     for j in 0..d {
-                        self.dk[s * d + j] =
-                            (c_old * self.dk[s * d + j] + sum_k[j]) / denom;
-                        self.dv[s * d + j] =
-                            (c_old * self.dv[s * d + j] + sum_v[j]) / denom;
+                        self.dk[s * d + j] = (c_old * self.dk[s * d + j] + sk[j]) / denom;
+                        self.dv[s * d + j] = (c_old * self.dv[s * d + j] + sv[j]) / denom;
                     }
                 }
             }
@@ -268,6 +276,70 @@ impl OvqState {
 
         self.t += len;
         self.chunk_idx += 1;
+    }
+}
+
+impl SeqMixer for OvqState {
+    fn kind_name(&self) -> &'static str {
+        "ovq"
+    }
+
+    fn d_in(&self) -> usize {
+        self.cfg.d
+    }
+
+    fn d_out(&self) -> usize {
+        self.cfg.d
+    }
+
+    fn tokens(&self) -> usize {
+        self.t + self.pending_len
+    }
+
+    /// Live state: active dictionary rows + counts + the staged chunk tail.
+    fn state_bytes(&self) -> usize {
+        (2 * self.n_active * self.cfg.d + self.n_active) * 4
+            + 2 * self.pending_len * self.cfg.d * 4
+    }
+
+    /// ΔS is [L, 2, d] — one key row + one value row per token, independent
+    /// of the dictionary size N (the paper's core systems claim).
+    fn update_bytes_per_chunk(&self, l: usize) -> usize {
+        2 * l * self.cfg.d * 4
+    }
+
+    fn write(&mut self, k: &[f32], v: &[f32]) {
+        let d = self.cfg.d;
+        debug_assert_eq!(k.len(), d);
+        debug_assert_eq!(v.len(), d);
+        // lazy merge: the *arrival* of chunk c+1 merges chunk c, so reads
+        // inside a chunk always see the eq. 15 prefix, never a mid-chunk
+        // dictionary.
+        if self.pending_len == self.cfg.chunk {
+            self.flush();
+        }
+        self.pending_k.extend_from_slice(k);
+        self.pending_v.extend_from_slice(v);
+        self.pending_len += 1;
+    }
+
+    fn read(&self, q: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        // dictionary + the buffered in-chunk prefix (eq. 15)
+        self.attend(q, &self.pending_k, &self.pending_v, self.pending_len, out, scratch);
+    }
+
+    fn flush(&mut self) {
+        if self.pending_len == 0 {
+            return;
+        }
+        let k = std::mem::take(&mut self.pending_k);
+        let v = std::mem::take(&mut self.pending_v);
+        self.update_chunk(&k, &v);
+        self.pending_k = k;
+        self.pending_v = v;
+        self.pending_k.clear();
+        self.pending_v.clear();
+        self.pending_len = 0;
     }
 }
 
@@ -281,6 +353,13 @@ mod tests {
         (0..n).map(|_| rng.normal() as f32).collect()
     }
 
+    fn process_chunk_vec(st: &mut OvqState, q: &[f32], k: &[f32], v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; q.len()];
+        let mut scratch = Scratch::new();
+        st.process_chunk(q, k, v, &mut out, &mut scratch);
+        out
+    }
+
     #[test]
     fn counts_equal_tokens_processed() {
         let mut st = OvqState::new(OvqConfig::new(8, 64, 16));
@@ -289,8 +368,10 @@ mod tests {
             let k = rand_vec(&mut rng, 16 * 8);
             let v = rand_vec(&mut rng, 16 * 8);
             let q = rand_vec(&mut rng, 16 * 8);
-            st.process_chunk(&q, &k, &v);
+            process_chunk_vec(&mut st, &q, &k, &v);
         }
+        assert_eq!(st.tokens(), 160);
+        st.flush();
         assert_eq!(st.t, 160);
         let total: f32 = st.counts.iter().sum();
         assert_eq!(total as usize, 160);
@@ -323,7 +404,7 @@ mod tests {
             let k = rand_vec(&mut rng, 8 * 4);
             let v = vec![2.5f32; 8 * 4];
             let q = rand_vec(&mut rng, 8 * 4);
-            let out = st.process_chunk(&q, &k, &v);
+            let out = process_chunk_vec(&mut st, &q, &k, &v);
             for &o in &out {
                 assert!((o - 2.5).abs() < 1e-4, "o={o}");
             }
@@ -340,7 +421,7 @@ mod tests {
         let v = rand_vec(&mut rng, 8 * 2);
         st.update_chunk(&k, &v);
         let mut weighted = vec![0.0f32; 2];
-        for s in 0..st.cfg.n_max {
+        for s in 0..st.n_active {
             for j in 0..2 {
                 weighted[j] += st.counts[s] * st.dk[s * 2 + j];
             }
@@ -378,7 +459,7 @@ mod tests {
                 }
                 st.update_chunk(&k, &v);
                 let mut w = vec![0.0f64; d];
-                for s in 0..n {
+                for s in 0..st.n_active {
                     for j in 0..d {
                         w[j] += (st.counts[s] * st.dk[s * d + j]) as f64;
                     }
@@ -418,5 +499,29 @@ mod tests {
             .map(|(x, y)| (x - y).abs())
             .sum();
         assert!(diff > 1e-3, "ablation should change the state");
+    }
+
+    #[test]
+    fn state_bytes_plateau_with_pending_tail() {
+        let mut st = OvqState::new(OvqConfig::new(8, 32, 16));
+        let mut rng = Rng::new(7);
+        assert_eq!(st.state_bytes(), 0);
+        let mut last = 0;
+        for _ in 0..40 {
+            let k = rand_vec(&mut rng, 16 * 8);
+            let v = rand_vec(&mut rng, 16 * 8);
+            st.update_chunk(&k, &v);
+            last = st.state_bytes();
+        }
+        // saturated: n_active pinned at the N-1 asymptote, state flat
+        let k = rand_vec(&mut rng, 16 * 8);
+        let v = rand_vec(&mut rng, 16 * 8);
+        st.update_chunk(&k, &v);
+        assert_eq!(st.state_bytes(), last);
+        // a buffered token adds exactly one (k, v) row
+        st.write(&[0.0; 8], &[0.0; 8]);
+        assert_eq!(st.state_bytes(), last + 2 * 8 * 4);
+        st.flush();
+        assert_eq!(st.state_bytes(), last);
     }
 }

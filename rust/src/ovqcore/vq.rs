@@ -1,5 +1,9 @@
 //! Original VQ-attention state machine (Lingle 2023) — static pretrained
 //! key dictionary, online value dictionary + counts. The Fig. 1 baseline.
+//! Served through the unified [`SeqMixer`] interface.
+
+use super::kernels;
+use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
 
 #[derive(Debug, Clone)]
 pub struct VqState {
@@ -11,38 +15,61 @@ pub struct VqState {
     pub dv: Vec<f32>,
     pub counts: Vec<f32>,
     pub beta: f32,
+    /// tokens absorbed
+    pub t: usize,
 }
 
 impl VqState {
     pub fn new(d: usize, dk: Vec<f32>) -> VqState {
         let n = dk.len() / d;
-        VqState { d, n, dk, dv: vec![0.0; n * d], counts: vec![0.0; n], beta: 8.0 }
+        VqState {
+            d,
+            n,
+            dk,
+            dv: vec![0.0; n * d],
+            counts: vec![0.0; n],
+            beta: 8.0,
+            t: 0,
+        }
     }
 
-    pub fn state_bytes(&self) -> usize {
+    /// Index of the key centroid with maximum inner product (blocked scan).
+    pub fn nearest(&self, k: &[f32]) -> usize {
+        let mut idx = [0usize];
+        let mut sim = [f32::NEG_INFINITY];
+        kernels::nearest_rows(&self.dk, self.n, self.d, k, 1, &mut idx, &mut sim);
+        idx[0]
+    }
+}
+
+impl SeqMixer for VqState {
+    fn kind_name(&self) -> &'static str {
+        "vq"
+    }
+
+    fn d_in(&self) -> usize {
+        self.d
+    }
+
+    fn d_out(&self) -> usize {
+        self.d
+    }
+
+    fn tokens(&self) -> usize {
+        self.t
+    }
+
+    fn state_bytes(&self) -> usize {
         (self.dk.len() + self.dv.len() + self.counts.len()) * 4
     }
 
-    pub fn nearest(&self, k: &[f32]) -> usize {
-        let d = self.d;
-        let mut best = 0;
-        let mut best_sim = f32::NEG_INFINITY;
-        for s in 0..self.n {
-            let sim: f32 = k
-                .iter()
-                .zip(&self.dk[s * d..(s + 1) * d])
-                .map(|(a, b)| a * b)
-                .sum();
-            if sim > best_sim {
-                best_sim = sim;
-                best = s;
-            }
-        }
-        best
+    /// Sparse like OVQ: each token touches one value row + one count.
+    fn update_bytes_per_chunk(&self, l: usize) -> usize {
+        2 * l * self.d * 4
     }
 
     /// Absorb one (k, v): count-weighted mean into the assigned slot.
-    pub fn write(&mut self, k: &[f32], v: &[f32]) {
+    fn write(&mut self, k: &[f32], v: &[f32]) {
         let s = self.nearest(k);
         let d = self.d;
         let c = self.counts[s];
@@ -50,38 +77,25 @@ impl VqState {
             self.dv[s * d + j] = (c * self.dv[s * d + j] + v[j]) / (c + 1.0);
         }
         self.counts[s] = c + 1.0;
+        self.t += 1;
     }
 
     /// Linear-form read (paper eq. 6): softmax(beta q Dk^T + log c) Dv.
-    pub fn read(&self, q: &[f32], out: &mut [f32]) {
-        let d = self.d;
-        let mut m = f32::NEG_INFINITY;
-        let mut logits = vec![f32::NEG_INFINITY; self.n];
-        for s in 0..self.n {
-            if self.counts[s] > 0.0 {
-                let sim: f32 = q
-                    .iter()
-                    .zip(&self.dk[s * d..(s + 1) * d])
-                    .map(|(a, b)| a * b)
-                    .sum();
-                logits[s] = self.beta * sim + self.counts[s].ln();
-                m = m.max(logits[s]);
-            }
-        }
-        out.iter_mut().for_each(|o| *o = 0.0);
-        let mut z = 0.0;
-        for s in 0..self.n {
-            if logits[s] > f32::NEG_INFINITY {
-                let w = (logits[s] - m).exp();
-                z += w;
-                for (o, &v) in out.iter_mut().zip(&self.dv[s * d..(s + 1) * d]) {
-                    *o += w * v;
-                }
-            }
-        }
-        if z > 0.0 {
-            out.iter_mut().for_each(|o| *o /= z);
-        }
+    fn read(&self, q: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        dict_softmax_read(
+            q,
+            &self.dk,
+            &self.dv,
+            &self.counts,
+            self.n,
+            self.d,
+            self.beta,
+            &[],
+            &[],
+            0,
+            out,
+            scratch,
+        );
     }
 }
 
@@ -117,8 +131,9 @@ mod tests {
         st.write(k, &[1.0; 4]);
         st.write(k, &[3.0; 4]); // same slot: value becomes the mean
         let mut out = [0.0; 4];
+        let mut scratch = Scratch::new();
         st.beta = 100.0;
-        st.read(k, &mut out);
+        st.read(k, &mut out, &mut scratch);
         for &o in &out {
             assert!((o - 2.0).abs() < 1e-3, "expected mean 2.0, got {o}");
         }
@@ -138,7 +153,8 @@ mod tests {
         let q: Vec<f32> = (0..4).map(|j| dk[j] + dk[4 + j]).collect();
         st.beta = 0.0; // ignore similarity; counts only
         let mut out = [0.0; 4];
-        st.read(&q, &mut out);
+        let mut scratch = Scratch::new();
+        st.read(&q, &mut out, &mut scratch);
         assert!(out[0] > 0.5, "count prior should dominate: {}", out[0]);
     }
 
@@ -153,5 +169,6 @@ mod tests {
             st.write(&k, &[0.5; 4]);
         }
         assert_eq!(st.state_bytes(), b0);
+        assert_eq!(st.tokens(), 500);
     }
 }

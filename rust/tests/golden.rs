@@ -1,0 +1,164 @@
+//! Streaming-equivalence golden tests for the SeqMixer state machines —
+//! the test rust/src/ovqcore/ovq.rs promises: the same token stream fed
+//! token-by-token (arrival chunk 1) and in chunks (arrival chunk 16)
+//! through the trait interface must produce identical outputs and
+//! identical final state, for OVQ and for every other mixer. Runs
+//! entirely on the pure-Rust path — no artifacts or PJRT backend needed.
+
+use ovq::ovqcore::memstate::MixerKind;
+use ovq::ovqcore::mixer::{Scratch, SeqMixer};
+use ovq::ovqcore::ovq::{OvqConfig, OvqState};
+use ovq::util::prop::Prop;
+use ovq::util::rng::Rng;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Feed `total` tokens in arrival chunks of `arrival`, collecting every
+/// output row. `arrival` is the *delivery* granularity; the mixer's own
+/// chunk length is part of its config and unchanged.
+fn stream_through(
+    m: &mut dyn SeqMixer,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    total: usize,
+    arrival: usize,
+) -> Vec<f32> {
+    let d = m.d_in();
+    let dv = m.d_out();
+    let mut out = vec![0.0f32; total * dv];
+    let mut scratch = Scratch::new();
+    let mut i = 0;
+    while i < total {
+        let len = arrival.min(total - i);
+        m.process_chunk(
+            &q[i * d..(i + len) * d],
+            &k[i * d..(i + len) * d],
+            &v[i * dv..(i + len) * dv],
+            &mut out[i * dv..(i + len) * dv],
+            &mut scratch,
+        );
+        i += len;
+    }
+    out
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn ovq_chunked_matches_token_by_token() {
+    // the doc-comment contract: chunk=1 vs chunk=16 arrival, same inputs,
+    // matching outputs (within fp tolerance) and identical growth
+    let (d, n_max, chunk, total) = (16usize, 64usize, 16usize, 96usize);
+    let mut rng = Rng::new(42);
+    let q = randv(&mut rng, total * d);
+    let k = randv(&mut rng, total * d);
+    let v = randv(&mut rng, total * d);
+
+    let mut one = OvqState::new(OvqConfig::new(d, n_max, chunk));
+    let mut sixteen = OvqState::new(OvqConfig::new(d, n_max, chunk));
+    let out_one = stream_through(&mut one, &q, &k, &v, total, 1);
+    let out_sixteen = stream_through(&mut sixteen, &q, &k, &v, total, 16);
+
+    let diff = max_abs_diff(&out_one, &out_sixteen);
+    assert!(diff < 1e-5, "outputs diverged: max |Δ| = {diff}");
+
+    one.flush();
+    sixteen.flush();
+    assert_eq!(one.n_active, sixteen.n_active, "growth must not depend on arrival");
+    assert_eq!(one.t, sixteen.t);
+    let sdiff = max_abs_diff(&one.dk, &sixteen.dk).max(max_abs_diff(&one.dv, &sixteen.dv));
+    assert!(sdiff < 1e-5, "states diverged: max |Δ| = {sdiff}");
+}
+
+#[test]
+fn prop_arrival_chunking_is_invisible_for_all_mixers() {
+    // every mixer kind, random shapes, random arrival granularities —
+    // outputs must be independent of delivery chunking
+    Prop::new(7).cases(24).check(|c| {
+        let d = 4 + 2 * c.rng.usize_below(7); // even dims, 4..16
+        let chunk = 4 + c.rng.usize_below(13);
+        let total = chunk * (2 + c.rng.usize_below(3)) + c.rng.usize_below(chunk);
+        let arrival = 1 + c.rng.usize_below(2 * chunk);
+        let kinds = [
+            MixerKind::Ovq { n_max: 8 + c.rng.usize_below(64) },
+            MixerKind::Vq { n: 4 + c.rng.usize_below(16) },
+            MixerKind::LinearAttention,
+            MixerKind::Gdn,
+            MixerKind::FullAttention,
+            MixerKind::SlidingWindow { window: 1 + c.rng.usize_below(total) },
+        ];
+        let q: Vec<f32> = (0..total * d).map(|_| c.rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..total * d).map(|_| c.rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..total * d).map(|_| c.rng.normal() as f32).collect();
+        for kind in kinds {
+            let mut a = kind.build(d, chunk, 3);
+            let mut b = kind.build(d, chunk, 3);
+            let out_a = stream_through(a.as_mut(), &q, &k, &v, total, 1);
+            let out_b = stream_through(b.as_mut(), &q, &k, &v, total, arrival);
+            let diff = max_abs_diff(&out_a, &out_b);
+            if diff > 1e-4 {
+                return Err(format!(
+                    "{:?} d={d} chunk={chunk} total={total} arrival={arrival}: |Δ|={diff}",
+                    kind
+                ));
+            }
+            if a.tokens() != b.tokens() {
+                return Err(format!("{:?}: token counts diverged", kind));
+            }
+            a.flush();
+            b.flush();
+            if a.state_bytes() != b.state_bytes() {
+                return Err(format!("{:?}: state sizes diverged", kind));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ovq_growth_matches_analytical_schedule_through_trait() {
+    // streaming through the trait must hit the same N_t = t*N/(t+N)
+    // growth the direct update_chunk path satisfies
+    let (d, n_max, chunk) = (8usize, 128usize, 32usize);
+    let mut rng = Rng::new(9);
+    let mut st = OvqState::new(OvqConfig::new(d, n_max, chunk));
+    let mut scratch = Scratch::new();
+    let mut out = vec![0.0f32; d];
+    for t in 1..=(chunk * 12) {
+        let k = randv(&mut rng, d);
+        let v = randv(&mut rng, d);
+        let q = randv(&mut rng, d);
+        st.write(&k, &v);
+        st.read(&q, &mut out, &mut scratch);
+        assert_eq!(st.tokens(), t);
+    }
+    st.flush();
+    assert_eq!(st.n_active, ovq::ovqcore::growth_n_t(chunk * 12, n_max));
+}
+
+#[test]
+fn flush_is_idempotent_and_preserves_reads() {
+    let (d, total) = (8usize, 40usize);
+    let mut rng = Rng::new(5);
+    let mut st = OvqState::new(OvqConfig::new(d, 32, 16));
+    let mut scratch = Scratch::new();
+    for _ in 0..total {
+        let k = randv(&mut rng, d);
+        let v = randv(&mut rng, d);
+        st.write(&k, &v);
+    }
+    let q = randv(&mut rng, d);
+    st.flush();
+    let mut a = vec![0.0f32; d];
+    st.read(&q, &mut a, &mut scratch);
+    st.flush(); // second flush must be a no-op
+    let mut b = vec![0.0f32; d];
+    st.read(&q, &mut b, &mut scratch);
+    assert_eq!(st.t, total);
+    assert_eq!(a, b);
+}

@@ -10,14 +10,37 @@ use ovq::util::rng::Rng;
 
 // PjRtClient holds raw pointers (not Sync), so each test owns a Runtime;
 // run with --test-threads=1 implied by the heavyweight client anyway.
-fn mk_rt() -> Runtime {
+//
+// When the PJRT backend is the offline stub (see rust/vendor/xla) or the
+// artifacts have not been built (`make artifacts`), these tests skip with
+// a notice instead of failing — the pure-Rust ovqcore/golden tests carry
+// the offline coverage. Set OVQ_REQUIRE_RUNTIME=1 to turn the skips into
+// hard failures (for environments that are supposed to have the real
+// backend, so a broken setup can't masquerade as a green suite).
+fn mk_rt() -> Option<Runtime> {
+    let strict = std::env::var("OVQ_REQUIRE_RUNTIME").is_ok();
     let dir = std::env::var("OVQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    Runtime::new(dir).expect("PJRT CPU client")
+    if !std::path::Path::new(&dir).join("index.json").exists() {
+        assert!(
+            !strict,
+            "OVQ_REQUIRE_RUNTIME set but no artifacts at {dir}/ (run `make artifacts`)"
+        );
+        eprintln!("skipping runtime test: no artifacts at {dir}/ (run `make artifacts`)");
+        return None;
+    }
+    match Runtime::new(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            assert!(!strict, "OVQ_REQUIRE_RUNTIME set but runtime unavailable: {e}");
+            eprintln!("skipping runtime test: {e}");
+            None
+        }
+    }
 }
 
 #[test]
 fn init_is_deterministic_in_seed() {
-    let rt = mk_rt();
+    let Some(rt) = mk_rt() else { return };
     let model = rt.load_model("quickstart").unwrap();
     let a = model.init(7).unwrap();
     let b = model.init(7).unwrap();
@@ -39,7 +62,7 @@ fn init_is_deterministic_in_seed() {
 
 #[test]
 fn train_step_reduces_loss_on_fixed_batch() {
-    let rt = mk_rt();
+    let Some(rt) = mk_rt() else { return };
     let model = rt.load_model("quickstart").unwrap();
     let mut state = model.init(1).unwrap();
     let (b, t) = model.train_shape().unwrap();
@@ -66,7 +89,7 @@ fn train_step_reduces_loss_on_fixed_batch() {
 
 #[test]
 fn eval_consistent_across_calls() {
-    let rt = mk_rt();
+    let Some(rt) = mk_rt() else { return };
     let model = rt.load_model("quickstart").unwrap();
     let state = model.init(2).unwrap();
     let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256));
@@ -88,7 +111,7 @@ fn eval_consistent_across_calls() {
 
 #[test]
 fn checkpoint_roundtrip_preserves_training() {
-    let rt = mk_rt();
+    let Some(rt) = mk_rt() else { return };
     let model = rt.load_model("quickstart").unwrap();
     let mut state = model.init(5).unwrap();
     let (b, t) = model.train_shape().unwrap();
@@ -116,7 +139,7 @@ fn checkpoint_roundtrip_preserves_training() {
 
 #[test]
 fn manifest_matches_artifacts_on_disk() {
-    let rt = mk_rt();
+    let Some(rt) = mk_rt() else { return };
     let models = rt.list_models().unwrap();
     assert!(models.contains(&"quickstart".to_string()));
     for name in models.iter().take(5) {
@@ -131,7 +154,7 @@ fn manifest_matches_artifacts_on_disk() {
 #[test]
 fn eval_at_longer_context_than_train_works() {
     // length extrapolation plumbing: eval_256 on a model trained at 128
-    let rt = mk_rt();
+    let Some(rt) = mk_rt() else { return };
     let model = rt.load_model("quickstart").unwrap();
     let state = model.init(9).unwrap();
     let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256));

@@ -1,0 +1,163 @@
+//! Offline, API-compatible subset of the `anyhow` crate — just the surface
+//! this workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` macros. The registry crate is not
+//! fetchable in the offline build environment (DESIGN.md, dependency
+//! substitutions); swapping this for the real `anyhow` is a one-line
+//! change in rust/Cargo.toml and requires no source edits.
+
+use std::fmt;
+
+/// A context-carrying error. Frames are stored outermost-first, the root
+/// cause last — `Display` joins them with ": " like anyhow's `{:#}`.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.frames.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message (anyhow's `Display`).
+    pub fn to_message(&self) -> &str {
+        self.frames.first().map(|s| s.as_str()).unwrap_or("unknown error")
+    }
+
+    /// Context frames, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.to_message())?;
+        if self.frames.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, frame) in self.frames[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: Error deliberately does NOT implement std::error::Error, exactly
+// like the real anyhow — that is what keeps this blanket From coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // include source chain frames when present
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on Result and Option.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(c)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/definitely/missing")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_message(), "reading config");
+        assert!(e.chain().count() >= 2);
+        let disp = format!("{e}");
+        assert!(disp.starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing field").unwrap_err();
+        assert_eq!(e.to_message(), "missing field");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(n: usize) -> Result<()> {
+            if n > 3 {
+                bail!("too big: {n}");
+            }
+            Ok(())
+        }
+        assert!(f(2).is_ok());
+        assert_eq!(f(9).unwrap_err().to_message(), "too big: 9");
+    }
+}

@@ -1,0 +1,247 @@
+//! Offline stub of the `xla` PJRT bindings — the exact API surface
+//! `rust/src/runtime/` consumes, with a fully functional host-side
+//! [`Literal`] (so literal construction, checkpointing and their tests
+//! work without the native library) and device entry points
+//! ([`PjRtClient::cpu`]) that return a descriptive error. Pointing
+//! rust/Cargo.toml at the real crates.io `xla` bindings restores the
+//! hardware path with no source changes (DESIGN.md, dependency
+//! substitutions).
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the native PJRT runtime, which is not linked in \
+         this offline build (stub `xla` crate; see DESIGN.md)"
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    U64,
+    F32,
+    F64,
+    Bf16,
+    F16,
+}
+
+impl ElementType {
+    pub fn byte_width(&self) -> usize {
+        match self {
+            ElementType::Pred => 1,
+            ElementType::Bf16 | ElementType::F16 => 2,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+            _ => 4,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy + Default {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+
+/// Host-side literal: shape + raw little-endian bytes, or a tuple of
+/// literals (the artifact convention returns one tuple per program).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect = dims.iter().product::<usize>() * ty.byte_width();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "literal data is {} bytes, shape {dims:?} x {ty:?} needs {expect}",
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec(), tuple: None })
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), data: Vec::new(), tuple: Some(elems) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".into()));
+        }
+        if T::TY != self.ty {
+            return Err(Error(format!("to_vec type mismatch: literal is {:?}", self.ty)));
+        }
+        let w = std::mem::size_of::<T>();
+        let mut out = vec![T::default(); self.data.len() / w];
+        // copy via raw bytes; T is a plain scalar
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match self.tuple.take() {
+            Some(elems) => Ok(elems),
+            None => Err(Error("decompose_tuple on a non-tuple literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module handle. The stub validates that the artifact file
+/// exists and is readable but cannot compile it.
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto { path: path.to_string() }),
+            Err(e) => Err(Error(format!("reading HLO text {path}: {e}"))),
+        }
+    }
+}
+
+pub struct XlaComputation {
+    pub path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("fetching device buffers"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a compiled program"))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The stub cannot create a device client; callers are expected to
+    /// degrade gracefully (see rust/tests/integration_runtime.rs).
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating the PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling HLO"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+            .unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.size_bytes(), 16);
+        assert_eq!(l.to_vec::<f32>().unwrap(), data.to_vec());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_decompose() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[1, 0, 0, 0])
+            .unwrap();
+        let mut t = Literal::tuple(vec![a.clone(), a]);
+        assert_eq!(t.decompose_tuple().unwrap().len(), 2);
+        assert!(t.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_with_clear_error() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("offline"));
+    }
+}
