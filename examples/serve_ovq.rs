@@ -6,14 +6,15 @@
 //!     path; skipped with a notice when no PJRT backend/artifacts are
 //!     available);
 //!  2. multi-head, multi-stream streaming decode against constant-memory
-//!     [`SeqMixer`] state, round-robin scheduled by a [`MixerBank`]
-//!     (latency path) — per-stream state stays flat as context grows,
-//!     which is the paper's deployment argument.
+//!     [`SeqMixer`] state through the sharded [`DecodeEngine`] (latency
+//!     path) — per-stream state stays flat as context grows, which is
+//!     the paper's deployment argument. See `examples/storm_ovq.rs` for
+//!     the full traffic-replay + session-lifecycle storm.
 //!
 //!     cargo run --release --example serve_ovq
 //!
 //! [`SeqMixer`]: ovq::ovqcore::mixer::SeqMixer
-//! [`MixerBank`]: ovq::ovqcore::bank::MixerBank
+//! [`DecodeEngine`]: ovq::coordinator::engine::DecodeEngine
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -31,14 +32,15 @@ fn main() -> Result<()> {
         Err(e) => println!("== batched scoring (HLO path) skipped: {e} =="),
     }
 
-    // ---- path 2: streaming decode through the mixer bank ---------------
-    println!("\n== streaming decode (SeqMixer/MixerBank path) ==");
+    // ---- path 2: streaming decode through the sharded engine -----------
+    println!("\n== streaming decode (SeqMixer/DecodeEngine path) ==");
     let mut cfg = DecodeConfig::new(256);
     cfg.streams = 4;
     cfg.heads = 4;
     cfg.d_head = 32;
     cfg.chunk = 32;
     cfg.tokens = 2048;
+    cfg.threads = 2;
     let report = run_decode_engine(&cfg);
     report.print();
     println!(

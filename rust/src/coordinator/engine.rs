@@ -1,0 +1,506 @@
+//! The sharded, multi-threaded decode engine — the serving layer the
+//! paper's "large fixed state, many concurrent streams" regime needs.
+//!
+//! Architecture:
+//!
+//! ```text
+//!   submit(session, chunk)
+//!        │  session id ──hash──▶ shard
+//!        ▼
+//!   bounded sync_channel (depth = queue_depth, backpressure by blocking)
+//!        ▼
+//!   worker thread s ∈ 0..threads, each owning one ShardBank:
+//!     admission (factory) · LRU eviction → snapshot blobs · restore
+//!        ▼
+//!   unbounded output channel (optional) + per-shard telemetry
+//! ```
+//!
+//! Determinism contract: a session's outputs are **bit-identical across
+//! thread counts**. Sessions are pinned to shards by id hash, each
+//! shard's channel preserves per-session chunk order, the mixer factory
+//! seeds on (session, head) only, and eviction/restore round-trips are
+//! bit-exact ([`crate::ovqcore::snapshot`]) — so rescheduling across 1,
+//! 2 or 4 workers cannot change any stream's tokens. The engine golden
+//! test (rust/tests/engine.rs) cross-checks this.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::ovqcore::bank::{ring_push, DecodeChunk, ShardBank, StreamStats};
+use crate::ovqcore::memstate::MixerKind;
+use crate::ovqcore::mixer::SeqMixer;
+use crate::util::stats;
+
+/// Engine shape and policy. `threads` is the shard count (one worker
+/// thread per shard); `max_resident` and `queue_depth` are per shard.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub kind: MixerKind,
+    pub heads: usize,
+    pub d_head: usize,
+    /// mixer chunk length (OVQ merge granularity), not the arrival size
+    pub chunk: usize,
+    pub threads: usize,
+    /// admission cap: resident sessions per shard before LRU eviction
+    pub max_resident: usize,
+    /// bounded per-shard queue: `submit` blocks when full (backpressure)
+    pub queue_depth: usize,
+    pub seed: u64,
+    /// keep per-chunk outputs for the caller (golden cross-checks); off
+    /// for load runs so output buffers don't grow unboundedly
+    pub collect_outputs: bool,
+}
+
+impl EngineConfig {
+    pub fn new(kind: MixerKind, heads: usize, d_head: usize, chunk: usize) -> EngineConfig {
+        EngineConfig {
+            kind,
+            heads,
+            d_head,
+            chunk,
+            threads: 1,
+            max_resident: usize::MAX / 2,
+            queue_depth: 64,
+            seed: 0xE6617E,
+            collect_outputs: false,
+        }
+    }
+}
+
+/// Deterministic per-(session, head) mixer seed — must not depend on the
+/// shard or thread count (see the determinism contract above).
+pub fn session_seed(seed: u64, session: u64, head: usize) -> u64 {
+    let mut z = seed
+        ^ session.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (head as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Which shard serves a session — a splitmix-style hash of the id, so
+/// consecutive ids spread instead of striping.
+pub fn shard_of(session: u64, threads: usize) -> usize {
+    let mut z = session.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    ((z ^ (z >> 31)) % threads as u64) as usize
+}
+
+enum EngineMsg {
+    Chunk { session: u64, chunk: DecodeChunk, submitted: Instant },
+    Evict { session: u64 },
+    FlushAll,
+}
+
+/// One completed chunk, tagged with the session's chunk sequence number
+/// (1-based, eviction-transparent) so outputs can be ordered per session
+/// regardless of cross-shard completion order.
+pub struct EngineOut {
+    pub session: u64,
+    pub seq: usize,
+    pub out: Vec<f32>,
+}
+
+/// Telemetry of one shard over the engine's lifetime.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// distinct sessions this shard ever served
+    pub sessions: usize,
+    /// sessions still resident (live mixers) at shutdown
+    pub resident_sessions: usize,
+    /// sessions frozen to snapshot blobs at shutdown
+    pub evicted_sessions: usize,
+    pub chunks: usize,
+    pub tokens: usize,
+    /// time spent inside chunk processing (utilization = busy / wall)
+    pub busy: Duration,
+    pub evictions: usize,
+    pub restores: usize,
+    /// high-water mark of queued + in-service (+ one blocked submitter)
+    pub max_queue: usize,
+    /// chunks dropped because the session failed to admit/restore (e.g. a
+    /// corrupt snapshot blob) — the session is discarded, the shard lives
+    pub failed_chunks: usize,
+    /// live mixer bytes of resident sessions at shutdown
+    pub resident_bytes: usize,
+    /// snapshot blob bytes of evicted sessions at shutdown
+    pub snapshot_bytes: usize,
+    /// submit→completion wall latency of the most recent
+    /// [`crate::ovqcore::bank::LATENCY_WINDOW`] chunks, nanoseconds (ring)
+    pub latency_ns: Vec<f64>,
+}
+
+/// Aggregate result of an engine run.
+pub struct EngineReport {
+    pub threads: usize,
+    pub wall: Duration,
+    pub tokens: usize,
+    pub chunks: usize,
+    pub shards: Vec<ShardReport>,
+    /// per-session telemetry, sorted by session id
+    pub sessions: Vec<(u64, StreamStats)>,
+    /// per-chunk outputs (only when `collect_outputs` was set)
+    pub outputs: Vec<EngineOut>,
+}
+
+impl EngineReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn evictions(&self) -> usize {
+        self.shards.iter().map(|s| s.evictions).sum()
+    }
+
+    pub fn restores(&self) -> usize {
+        self.shards.iter().map(|s| s.restores).sum()
+    }
+
+    /// Chunks dropped on failed session admit/restore across all shards.
+    pub fn failed_chunks(&self) -> usize {
+        self.shards.iter().map(|s| s.failed_chunks).sum()
+    }
+
+    /// Total state at shutdown: live mixers + evicted snapshot blobs.
+    pub fn state_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.resident_bytes + s.snapshot_bytes).sum()
+    }
+
+    /// Cross-shard submit→completion latency percentile, microseconds.
+    pub fn latency_us(&self, p: f64) -> f64 {
+        let all: Vec<f64> =
+            self.shards.iter().flat_map(|s| s.latency_ns.iter().copied()).collect();
+        stats::percentile(&all, p) / 1e3
+    }
+
+    /// Per-shard busy fraction of the run's wall clock.
+    pub fn utilization(&self) -> Vec<f64> {
+        let w = self.wall.as_secs_f64().max(1e-12);
+        self.shards.iter().map(|s| s.busy.as_secs_f64() / w).collect()
+    }
+
+    pub fn print(&self) {
+        println!(
+            "engine: {} threads, {} sessions, {} chunks -> {:.0} tok/s aggregate \
+             ({} tokens in {:.2}s)",
+            self.threads,
+            self.sessions.len(),
+            self.chunks,
+            self.tokens_per_sec(),
+            self.tokens,
+            self.wall.as_secs_f64(),
+        );
+        println!(
+            "  latency p50 {:.1} us  p99 {:.1} us  |  {} evictions, {} restores, \
+             state {:.1} KiB",
+            self.latency_us(50.0),
+            self.latency_us(99.0),
+            self.evictions(),
+            self.restores(),
+            self.state_bytes() as f64 / 1024.0,
+        );
+        if self.failed_chunks() > 0 {
+            println!("  WARNING: {} chunks dropped on failed restores", self.failed_chunks());
+        }
+        for (s, u) in self.shards.iter().zip(self.utilization()) {
+            println!(
+                "  shard {:>2}: {:>4} sessions {:>7} tokens  util {:>5.1}%  \
+                 max queue {:>3}  evict/restore {}/{}  resident {:.1} KiB + \
+                 snapshots {:.1} KiB",
+                s.shard,
+                s.sessions,
+                s.tokens,
+                100.0 * u,
+                s.max_queue,
+                s.evictions,
+                s.restores,
+                s.resident_bytes as f64 / 1024.0,
+                s.snapshot_bytes as f64 / 1024.0,
+            );
+        }
+    }
+}
+
+/// The running engine. Dropping it without [`DecodeEngine::finish`]
+/// detaches the workers (they exit once their queues drain).
+pub struct DecodeEngine {
+    cfg: EngineConfig,
+    txs: Vec<SyncSender<EngineMsg>>,
+    handles: Vec<thread::JoinHandle<(ShardReport, Vec<(u64, StreamStats)>)>>,
+    out_rx: Receiver<EngineOut>,
+    /// per-shard (gauge, high-water) of queued + in-service chunks
+    queue_gauge: Vec<Arc<AtomicUsize>>,
+    queue_high: Vec<Arc<AtomicUsize>>,
+    t0: Instant,
+}
+
+impl DecodeEngine {
+    /// Start with the standard [`MixerKind`] factory.
+    pub fn start(cfg: EngineConfig) -> DecodeEngine {
+        let (kind, d_head, chunk, seed) = (cfg.kind, cfg.d_head, cfg.chunk, cfg.seed);
+        Self::start_with(cfg, move |session, head| {
+            kind.build(d_head, chunk, session_seed(seed, session, head))
+        })
+    }
+
+    /// Start with a custom per-(session, head) mixer factory. The factory
+    /// must be deterministic in its arguments (see module docs); one clone
+    /// runs on every worker thread.
+    pub fn start_with(
+        cfg: EngineConfig,
+        factory: impl Fn(u64, usize) -> Box<dyn SeqMixer> + Send + Clone + 'static,
+    ) -> DecodeEngine {
+        assert!(cfg.threads > 0 && cfg.heads > 0 && cfg.queue_depth > 0);
+        let (out_tx, out_rx) = mpsc::channel::<EngineOut>();
+        let mut txs = Vec::with_capacity(cfg.threads);
+        let mut handles = Vec::with_capacity(cfg.threads);
+        let mut queue_gauge = Vec::with_capacity(cfg.threads);
+        let mut queue_high = Vec::with_capacity(cfg.threads);
+        for shard in 0..cfg.threads {
+            let (tx, rx) = mpsc::sync_channel::<EngineMsg>(cfg.queue_depth);
+            let gauge = Arc::new(AtomicUsize::new(0));
+            let high = Arc::new(AtomicUsize::new(0));
+            let worker_out = cfg.collect_outputs.then(|| out_tx.clone());
+            let worker_gauge = Arc::clone(&gauge);
+            let worker_high = Arc::clone(&high);
+            let factory = factory.clone();
+            let (heads, max_resident, hd) =
+                (cfg.heads, cfg.max_resident, cfg.heads * cfg.d_head);
+            handles.push(thread::spawn(move || {
+                shard_worker(shard, heads, max_resident, hd, factory, rx, worker_out, worker_gauge, worker_high)
+            }));
+            txs.push(tx);
+            queue_gauge.push(gauge);
+            queue_high.push(high);
+        }
+        drop(out_tx); // workers hold the only senders
+        DecodeEngine { cfg, txs, handles, out_rx, queue_gauge, queue_high, t0: Instant::now() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.cfg.threads
+    }
+
+    pub fn heads(&self) -> usize {
+        self.cfg.heads
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.cfg.d_head
+    }
+
+    /// Enqueue one packed `[len, heads, d]` chunk for a session. Blocks
+    /// while the session's shard queue is full — open-loop producers feel
+    /// backpressure here instead of growing an unbounded buffer.
+    pub fn submit(&self, session: u64, chunk: DecodeChunk) {
+        let s = shard_of(session, self.cfg.threads);
+        let submitted = Instant::now();
+        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
+        self.queue_high[s].fetch_max(v, Ordering::SeqCst);
+        self.txs[s]
+            .send(EngineMsg::Chunk { session, chunk, submitted })
+            .expect("shard worker died");
+    }
+
+    /// Ask a session's shard to evict it to a snapshot blob (client
+    /// abandon). Queued chunks for the session are processed first (the
+    /// message travels the same ordered queue).
+    pub fn evict(&self, session: u64) {
+        let s = shard_of(session, self.cfg.threads);
+        self.txs[s].send(EngineMsg::Evict { session }).expect("shard worker died");
+    }
+
+    /// Merge every resident session's buffered chunk tail (end-of-run).
+    pub fn flush_all(&self) {
+        for tx in &self.txs {
+            tx.send(EngineMsg::FlushAll).expect("shard worker died");
+        }
+    }
+
+    /// Non-blocking drain of completed outputs (empty unless
+    /// `collect_outputs` is set). Call periodically during long
+    /// collect-mode runs to keep memory bounded.
+    pub fn try_outputs(&self) -> Vec<EngineOut> {
+        self.out_rx.try_iter().collect()
+    }
+
+    /// Shut down: close the queues, join the workers, gather telemetry
+    /// and any remaining outputs.
+    pub fn finish(self) -> EngineReport {
+        let DecodeEngine { cfg, txs, handles, out_rx, t0, .. } = self;
+        drop(txs); // workers exit when their queues drain
+        let mut shards = Vec::with_capacity(handles.len());
+        let mut sessions: Vec<(u64, StreamStats)> = Vec::new();
+        for h in handles {
+            let (report, mut stats) = h.join().expect("shard worker panicked");
+            shards.push(report);
+            sessions.append(&mut stats);
+        }
+        let wall = t0.elapsed();
+        // session ids are disjoint across shards (hash-pinned), so a plain
+        // sort yields one global, deterministic ordering
+        sessions.sort_by_key(|&(id, _)| id);
+        let outputs: Vec<EngineOut> = out_rx.try_iter().collect();
+        let tokens = shards.iter().map(|s| s.tokens).sum();
+        let chunks = shards.iter().map(|s| s.chunks).sum();
+        EngineReport { threads: cfg.threads, wall, tokens, chunks, shards, sessions, outputs }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_worker(
+    shard: usize,
+    heads: usize,
+    max_resident: usize,
+    hd: usize,
+    factory: impl Fn(u64, usize) -> Box<dyn SeqMixer> + Send + 'static,
+    rx: Receiver<EngineMsg>,
+    out_tx: Option<Sender<EngineOut>>,
+    gauge: Arc<AtomicUsize>,
+    high: Arc<AtomicUsize>,
+) -> (ShardReport, Vec<(u64, StreamStats)>) {
+    let mut bank = ShardBank::new(heads, max_resident, factory);
+    let mut busy = Duration::ZERO;
+    let mut latency_ns: Vec<f64> = Vec::new();
+    let mut latency_i = 0usize;
+    let (mut chunks, mut tokens) = (0usize, 0usize);
+    let mut failed_chunks = 0usize;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            EngineMsg::Chunk { session, chunk, submitted } => {
+                let t0 = Instant::now();
+                let processed = bank.process(session, &chunk);
+                busy += t0.elapsed();
+                gauge.fetch_sub(1, Ordering::SeqCst);
+                let (out, seq) = match processed {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // a bad blob must cost one session, not the shard:
+                        // drop the chunk (the broken blob was consumed by
+                        // the restore attempt, so a re-arrival starts the
+                        // session fresh) and keep serving everyone else
+                        failed_chunks += 1;
+                        eprintln!(
+                            "shard {shard}: dropping chunk for session {session}: {e}"
+                        );
+                        continue;
+                    }
+                };
+                ring_push(&mut latency_ns, latency_i, submitted.elapsed().as_nanos() as f64);
+                latency_i += 1;
+                chunks += 1;
+                tokens += chunk.keys.len() / hd;
+                if let Some(tx) = &out_tx {
+                    let _ = tx.send(EngineOut { session, seq, out });
+                }
+            }
+            EngineMsg::Evict { session } => bank.evict(session),
+            EngineMsg::FlushAll => bank.flush_all(),
+        }
+    }
+    let report = ShardReport {
+        shard,
+        sessions: bank.sessions(),
+        resident_sessions: bank.resident_sessions(),
+        evicted_sessions: bank.evicted_sessions(),
+        chunks,
+        tokens,
+        busy,
+        evictions: bank.evictions,
+        restores: bank.restores,
+        max_queue: high.load(Ordering::SeqCst),
+        failed_chunks,
+        resident_bytes: bank.resident_bytes(),
+        snapshot_bytes: bank.snapshot_bytes(),
+        latency_ns,
+    };
+    (report, bank.take_stats())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn chunk_of(rng: &mut Rng, len: usize, hd: usize) -> DecodeChunk {
+        DecodeChunk {
+            queries: (0..len * hd).map(|_| rng.normal() as f32).collect(),
+            keys: (0..len * hd).map(|_| rng.normal() as f32).collect(),
+            values: (0..len * hd).map(|_| rng.normal() as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn shard_hash_covers_and_is_stable() {
+        let mut seen = vec![false; 4];
+        for id in 0..256u64 {
+            let s = shard_of(id, 4);
+            assert!(s < 4);
+            assert_eq!(s, shard_of(id, 4), "stable");
+            seen[s] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all shards reachable");
+        assert_eq!(shard_of(1234, 1), 0);
+    }
+
+    #[test]
+    fn session_seed_depends_on_session_and_head_only() {
+        assert_eq!(session_seed(1, 2, 3), session_seed(1, 2, 3));
+        assert_ne!(session_seed(1, 2, 3), session_seed(1, 2, 4));
+        assert_ne!(session_seed(1, 2, 3), session_seed(1, 3, 3));
+        assert_ne!(session_seed(0, 2, 3), session_seed(1, 2, 3));
+    }
+
+    #[test]
+    fn engine_counts_tokens_and_joins_cleanly() {
+        let mut cfg = EngineConfig::new(MixerKind::Ovq { n_max: 32 }, 2, 8, 16);
+        cfg.threads = 2;
+        let engine = DecodeEngine::start(cfg);
+        let hd = engine.heads() * engine.d_head();
+        let mut rng = Rng::new(11);
+        for session in 0..6u64 {
+            for _ in 0..3 {
+                engine.submit(session, chunk_of(&mut rng, 16, hd));
+            }
+        }
+        engine.flush_all();
+        let r = engine.finish();
+        assert_eq!(r.tokens, 6 * 3 * 16);
+        assert_eq!(r.chunks, 18);
+        assert_eq!(r.sessions.len(), 6);
+        for (_, st) in &r.sessions {
+            assert_eq!(st.tokens, 48);
+            assert_eq!(st.chunks, 3);
+        }
+        assert_eq!(r.shards.len(), 2);
+        assert!(r.state_bytes() > 0);
+        assert!(r.latency_us(99.0) >= r.latency_us(50.0) * 0.5);
+    }
+
+    #[test]
+    fn outputs_are_collected_and_sequenced_when_asked() {
+        let mut cfg = EngineConfig::new(MixerKind::Gdn, 1, 4, 8);
+        cfg.threads = 2;
+        cfg.collect_outputs = true;
+        let engine = DecodeEngine::start(cfg);
+        let mut rng = Rng::new(12);
+        for session in [3u64, 5] {
+            for _ in 0..4 {
+                engine.submit(session, chunk_of(&mut rng, 8, 4));
+            }
+        }
+        let r = engine.finish();
+        assert_eq!(r.outputs.len(), 8);
+        for session in [3u64, 5] {
+            let mut seqs: Vec<usize> =
+                r.outputs.iter().filter(|o| o.session == session).map(|o| o.seq).collect();
+            seqs.sort_unstable();
+            assert_eq!(seqs, vec![1, 2, 3, 4]);
+        }
+    }
+}

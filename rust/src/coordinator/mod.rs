@@ -1,11 +1,16 @@
 //! L3 coordinator: the training loop, length-sweep evaluator, experiment
-//! drivers (one per paper figure/table) and the batched scoring server.
+//! drivers (one per paper figure/table), the batched scoring server, and
+//! the serving stack's decode side — the sharded multi-threaded decode
+//! [`engine`] with session lifecycle and the [`traffic`] load generator
+//! that drives it.
 
+pub mod engine;
 pub mod evaluator;
 pub mod experiments;
 pub mod metrics;
 pub mod server;
 pub mod trainer;
+pub mod traffic;
 
 use anyhow::Result;
 

@@ -5,11 +5,14 @@
 //!     to the eval program's batch size or a timeout, executes one HLO
 //!     call per group, and returns per-request results. Reports latency
 //!     percentiles, throughput and batch-slot utilization.
-//!  2. **Streaming decode**: a [`MixerBank`] decode-session engine — H
-//!     heads x S concurrent streams of constant-memory mixer state,
-//!     round-robin scheduled, reporting per-stream chunk-latency
-//!     percentiles. This is the path where the paper's flat-in-N update
-//!     cost pays off; it needs no compiled artifacts and runs everywhere.
+//!  2. **Streaming decode**: the sharded multi-threaded
+//!     [`DecodeEngine`](super::engine::DecodeEngine) — H heads x S
+//!     concurrent sessions of constant-memory mixer state spread over
+//!     worker-thread shards with bounded queues, LRU eviction to snapshot
+//!     blobs, and transparent restore. This is the path where the paper's
+//!     flat-in-N update cost pays off; it needs no compiled artifacts and
+//!     runs everywhere. [`run_decode_engine`] keeps the old single-call
+//!     API on top of it.
 //!
 //! Architecture (path 1): N client threads -> mpsc request queue ->
 //! batcher loop (single device owner) -> per-request oneshot-style
@@ -20,7 +23,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::ovqcore::bank::{DecodeChunk, MixerBank};
+use super::engine::{DecodeEngine, EngineConfig, ShardReport};
+use crate::ovqcore::bank::DecodeChunk;
 use crate::ovqcore::memstate::MixerKind;
 use crate::runtime::Model;
 use crate::util::cli::Args;
@@ -166,6 +170,13 @@ pub struct DecodeConfig {
     /// tokens decoded per stream
     pub tokens: usize,
     pub seed: u64,
+    /// shard worker threads (1 = the old single-threaded behavior, same
+    /// outputs — per-stream decode is bit-identical across thread counts)
+    pub threads: usize,
+    /// resident-session cap per shard before LRU eviction to snapshots
+    pub max_resident: usize,
+    /// bounded per-shard queue depth (submit blocks when full)
+    pub queue_depth: usize,
 }
 
 impl DecodeConfig {
@@ -178,7 +189,19 @@ impl DecodeConfig {
             chunk: 32,
             tokens: 512,
             seed: 0xDEC0DE,
+            threads: 1,
+            max_resident: usize::MAX / 2,
+            queue_depth: 64,
         }
+    }
+
+    fn engine_config(&self) -> EngineConfig {
+        let mut e = EngineConfig::new(self.kind, self.heads, self.d_head, self.chunk);
+        e.threads = self.threads;
+        e.max_resident = self.max_resident;
+        e.queue_depth = self.queue_depth;
+        e.seed = self.seed;
+        e
     }
 }
 
@@ -199,6 +222,13 @@ pub struct DecodeReport {
     pub tokens_total: usize,
     pub state_bytes: usize,
     pub per_stream: Vec<StreamLatency>,
+    /// per-shard utilization, queue high-water, eviction/restore counts
+    pub shards: Vec<ShardReport>,
+    /// cross-shard submit→completion latency percentiles, microseconds
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub evictions: usize,
+    pub restores: usize,
 }
 
 impl DecodeReport {
@@ -208,8 +238,13 @@ impl DecodeReport {
 
     pub fn print(&self) {
         println!(
-            "decode engine: {:?}  {} streams x {} heads, d={}  chunk={}",
-            self.cfg.kind, self.cfg.streams, self.cfg.heads, self.cfg.d_head, self.cfg.chunk
+            "decode engine: {:?}  {} streams x {} heads, d={}  chunk={}  {} threads",
+            self.cfg.kind,
+            self.cfg.streams,
+            self.cfg.heads,
+            self.cfg.d_head,
+            self.cfg.chunk,
+            self.cfg.threads,
         );
         println!(
             "  {} tokens in {:.2}s -> {:.0} tok/s aggregate  ({:.1} KiB total mixer state)",
@@ -218,6 +253,23 @@ impl DecodeReport {
             self.tokens_per_sec(),
             self.state_bytes as f64 / 1024.0,
         );
+        println!(
+            "  cross-shard latency p50 {:.1} us  p99 {:.1} us  |  {} evictions, {} restores",
+            self.p50_us, self.p99_us, self.evictions, self.restores,
+        );
+        let wall = self.wall.as_secs_f64().max(1e-12);
+        for s in &self.shards {
+            println!(
+                "  shard {:>2}: {:>4} sessions  util {:>5.1}%  max queue {:>3}  \
+                 evict/restore {}/{}",
+                s.shard,
+                s.sessions,
+                100.0 * s.busy.as_secs_f64() / wall,
+                s.max_queue,
+                s.evictions,
+                s.restores,
+            );
+        }
         for s in &self.per_stream {
             println!(
                 "  stream {:>3}: {:>6} tokens  chunk latency p50 {:>8.1} us  p99 {:>8.1} us",
@@ -228,14 +280,13 @@ impl DecodeReport {
 }
 
 /// Run the multi-stream decode engine: every stream decodes `cfg.tokens`
-/// synthetic tokens in `cfg.chunk`-sized chunks through a [`MixerBank`],
-/// interleaved by the bank's round-robin scheduler, one chunk per stream
-/// per round (the steady-state arrival pattern of concurrent sessions).
+/// synthetic tokens in `cfg.chunk`-sized chunks through the sharded
+/// [`DecodeEngine`], one chunk per stream per round (the steady-state
+/// arrival pattern of concurrent sessions). The old single-call API,
+/// now backed by `cfg.threads` shard workers — per-stream outputs are
+/// bit-identical for any thread count.
 pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
-    let mut bank = MixerBank::new(cfg.streams, cfg.heads, |s, h| {
-        cfg.kind
-            .build(cfg.d_head, cfg.chunk, cfg.seed ^ ((s * 31 + h) as u64))
-    });
+    let engine = DecodeEngine::start(cfg.engine_config());
     let hd = cfg.heads * cfg.d_head;
     let rounds = cfg.tokens.div_ceil(cfg.chunk);
     // pre-generate one full chunk of synthetic activations so the timed
@@ -246,8 +297,8 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
     let t0 = Instant::now();
     for round in 0..rounds {
         let len = cfg.chunk.min(cfg.tokens - round * cfg.chunk);
-        for s in 0..cfg.streams {
-            bank.submit(
+        for s in 0..cfg.streams as u64 {
+            engine.submit(
                 s,
                 DecodeChunk {
                     queries: q[..len * hd].to_vec(),
@@ -256,17 +307,16 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
                 },
             );
         }
-        bank.drain();
     }
-    bank.flush_all();
+    engine.flush_all();
+    let report = engine.finish();
     let wall = t0.elapsed();
 
-    let per_stream = bank
-        .stats
+    let per_stream = report
+        .sessions
         .iter()
-        .enumerate()
-        .map(|(i, st)| StreamLatency {
-            stream: i,
+        .map(|(id, st)| StreamLatency {
+            stream: *id as usize,
             tokens: st.tokens,
             p50_us: stats::percentile(&st.chunk_ns, 50.0) / 1e3,
             p99_us: stats::percentile(&st.chunk_ns, 99.0) / 1e3,
@@ -275,9 +325,14 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
     DecodeReport {
         cfg: cfg.clone(),
         wall,
-        tokens_total: cfg.streams * cfg.tokens,
-        state_bytes: bank.state_bytes(),
+        tokens_total: report.tokens,
+        state_bytes: report.state_bytes(),
         per_stream,
+        p50_us: report.latency_us(50.0),
+        p99_us: report.latency_us(99.0),
+        evictions: report.evictions(),
+        restores: report.restores(),
+        shards: report.shards,
     }
 }
 
@@ -285,10 +340,11 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 
 /// `ovq serve --model M [--requests N] [--clients C] [--task T]
 ///            [--streams S] [--heads H] [--dhead D] [--nmax N]
-///            [--decode-tokens T]`
+///            [--decode-tokens T] [--threads W] [--max-resident R]
+///            [--queue-depth Q]`
 /// Demo driver: phase 1 runs the batched scorer against the compiled HLO
 /// program (skipped with a notice when no backend/artifacts are
-/// available); phase 2 runs the streaming-decode engine.
+/// available); phase 2 runs the sharded streaming-decode engine.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     match super::runtime_from(args) {
         Ok(rt) => serve_batched(&rt, args)?,
@@ -303,12 +359,16 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     dcfg.heads = args.opt_usize("heads", dcfg.heads);
     dcfg.d_head = args.opt_usize("dhead", dcfg.d_head);
     dcfg.tokens = args.opt_usize("decode-tokens", dcfg.tokens);
+    dcfg.threads = args.opt_usize("threads", dcfg.threads);
+    dcfg.max_resident = args.opt_usize("max-resident", dcfg.max_resident);
+    dcfg.queue_depth = args.opt_usize("queue-depth", dcfg.queue_depth);
     crate::info!(
-        "streaming decode: {} streams x {} heads, d={} N={}",
+        "streaming decode: {} streams x {} heads, d={} N={} over {} shard threads",
         dcfg.streams,
         dcfg.heads,
         dcfg.d_head,
-        n_max
+        n_max,
+        dcfg.threads
     );
     run_decode_engine(&dcfg).print();
     Ok(())
@@ -405,6 +465,28 @@ mod tests {
             assert!(s.p99_us >= s.p50_us * 0.5);
         }
         assert!(r.state_bytes > 0);
+    }
+
+    #[test]
+    fn decode_engine_multithreaded_accounts_all_streams() {
+        let mut cfg = DecodeConfig::new(64);
+        cfg.streams = 6;
+        cfg.heads = 2;
+        cfg.d_head = 8;
+        cfg.chunk = 16;
+        cfg.tokens = 64;
+        cfg.threads = 4;
+        let r = run_decode_engine(&cfg);
+        assert_eq!(r.tokens_total, 6 * 64);
+        assert_eq!(r.per_stream.len(), 6);
+        for s in &r.per_stream {
+            assert_eq!(s.tokens, 64, "stream {} short-served", s.stream);
+        }
+        assert_eq!(r.shards.len(), 4);
+        assert_eq!(r.evictions, 0, "uncapped run must not evict");
+        // every stream landed on exactly one shard and none were lost
+        assert_eq!(r.shards.iter().map(|s| s.sessions).sum::<usize>(), 6);
+        assert!(r.p99_us >= r.p50_us * 0.5);
     }
 
     #[test]

@@ -78,7 +78,9 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainSummary> {
         cfg.model, cfg.task, b, t, total_steps
     );
     while (state.step as usize) < total_steps {
-        let batch = prefetch.next();
+        let batch = prefetch
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("batch prefetcher exited at step {}", state.step))?;
         let m = model
             .train_step(&mut state, &batch.tokens, &batch.targets, &batch.mask)
             .with_context(|| format!("train step {}", state.step))?;

@@ -3,11 +3,14 @@
 //!
 //! Layer map (DESIGN.md):
 //!  - [`runtime`]     — PJRT client + manifest-driven HLO execution
-//!  - [`coordinator`] — training/eval/serving orchestration
+//!  - [`coordinator`] — training/eval/serving orchestration, incl. the
+//!    sharded multi-threaded [`coordinator::engine::DecodeEngine`] with
+//!    session lifecycle and the [`coordinator::traffic`] load generator
 //!  - [`data`]        — task generators (ICR, positional ICR, ICL, LM, ...)
 //!  - [`ovqcore`]     — pure-Rust OVQ + baseline state machines behind the
-//!    [`ovqcore::mixer::SeqMixer`] trait, blocked microkernels, and the
-//!    [`ovqcore::bank::MixerBank`] multi-stream decode engine
+//!    [`ovqcore::mixer::SeqMixer`] trait, blocked microkernels, the
+//!    bit-exact [`ovqcore::snapshot`] format, and the decode banks
+//!    ([`ovqcore::bank`])
 //!  - [`analysis`]    — analytical FLOPs / memory models (App. D)
 //!  - [`util`]        — zero-dependency JSON/RNG/CLI/bench/prop utilities
 

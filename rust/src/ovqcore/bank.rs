@@ -1,20 +1,34 @@
-//! Multi-stream, multi-head decode engine over [`SeqMixer`] — the serving
-//! counterpart of a batched attention layer. A [`MixerBank`] owns
-//! `streams x heads` mixer states in one flat slab (index
-//! `stream * heads + head`), a shared kernel [`Scratch`], and per-stream
-//! chunk queues drained by a round-robin scheduler. Inputs and outputs
-//! use the packed head-interleaved layout `[len, heads, d]` (one row per
-//! token holding every head's slice, the layout a fused QKV projection
-//! emits); the bank de-interleaves into contiguous per-head panels so
-//! each mixer's blocked kernels see unit-stride rows.
+//! Multi-stream, multi-head decode banks over [`SeqMixer`] — the serving
+//! counterpart of a batched attention layer. Two tiers:
+//!
+//! - [`MixerBank`]: a fixed set of `streams x heads` mixer states in one
+//!   flat slab with per-stream chunk queues drained by a round-robin
+//!   scheduler. The single-threaded engine the benches and the simple
+//!   decode demo drive directly.
+//! - [`ShardBank`]: the per-shard session store of the multi-threaded
+//!   decode engine (`coordinator::engine`). Sessions are keyed by id,
+//!   admitted on first arrival, LRU-evicted to [`snapshot`] blobs when the
+//!   shard exceeds its residency cap, and transparently restored
+//!   (bit-identically) when an evicted session re-arrives.
+//!
+//! Both tiers share one chunk-processing core ([`process_packed`]): inputs
+//! and outputs use the packed head-interleaved layout `[len, heads, d]`
+//! (one row per token holding every head's slice, the layout a fused QKV
+//! projection emits); the core de-interleaves into contiguous per-head
+//! panels so each mixer's blocked kernels see unit-stride rows.
 //!
 //! This is the layer the paper's systems claim cashes out at: per-token
 //! decode cost through an OVQ bank is flat in the dictionary size N while
-//! state stays constant, so one engine sustains many concurrent streams.
+//! state stays constant, so one engine sustains many concurrent streams —
+//! and constant state is what makes eviction/restore cheap enough to give
+//! every user a resident session.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{Context, Result};
 
 use super::mixer::{Scratch, SeqMixer};
+use super::snapshot;
 
 /// One queued decode chunk for a stream, packed `[len, heads, d]`.
 pub struct DecodeChunk {
@@ -46,6 +60,78 @@ pub struct StreamStats {
     /// window)
     pub chunk_ns: Vec<f64>,
 }
+
+impl StreamStats {
+    /// Account one processed chunk of `tokens` tokens that took
+    /// `elapsed_ns`. Returns the stream's chunk sequence number (1-based).
+    pub fn record(&mut self, tokens: usize, elapsed_ns: f64) -> usize {
+        self.tokens += tokens;
+        self.chunks += 1;
+        ring_push(&mut self.chunk_ns, self.chunks - 1, elapsed_ns);
+        self.chunks
+    }
+}
+
+/// Push a sample into a [`LATENCY_WINDOW`]-bounded ring. `count` is how
+/// many samples were pushed before this one — the single copy of the
+/// wrap arithmetic shared by stream telemetry and the engine's per-shard
+/// latency rings.
+pub fn ring_push(ring: &mut Vec<f64>, count: usize, x: f64) {
+    if ring.len() < LATENCY_WINDOW {
+        ring.push(x);
+    } else {
+        ring[count % LATENCY_WINDOW] = x;
+    }
+}
+
+/// The shared per-chunk attend/update core: batched across one stream's
+/// heads, packed `[len, heads, d]` in, packed out. Heads are processed
+/// back-to-back against contiguous per-head panels so the whole chunk for
+/// one head (and its dictionary tile) stays cache-resident. `panel` is a
+/// caller-owned staging buffer, grown as needed and reused across calls.
+pub fn process_packed(
+    mixers: &mut [Box<dyn SeqMixer>],
+    chunk: &DecodeChunk,
+    scratch: &mut Scratch,
+    panel: &mut Vec<f32>,
+) -> Vec<f32> {
+    let h = mixers.len();
+    let (di, dv) = (mixers[0].d_in(), mixers[0].d_out());
+    let len = chunk.keys.len() / (h * di);
+    debug_assert_eq!(chunk.queries.len(), len * h * di);
+    debug_assert_eq!(chunk.values.len(), len * h * dv);
+    let mut out = vec![0.0f32; len * h * dv];
+
+    // panel layout: q [len*di] | k [len*di] | v [len*dv] | o [len*dv]
+    let need = len * (2 * di + 2 * dv);
+    if panel.len() < need {
+        panel.resize(need, 0.0);
+    }
+    for (head, mixer) in mixers.iter_mut().enumerate() {
+        let panel = &mut panel[..need];
+        let (pq, rest) = panel.split_at_mut(len * di);
+        let (pk, rest) = rest.split_at_mut(len * di);
+        let (pv, po) = rest.split_at_mut(len * dv);
+        let po = &mut po[..len * dv];
+        // gather this head's strided rows into contiguous panels
+        for i in 0..len {
+            let qrow = (i * h + head) * di;
+            pq[i * di..(i + 1) * di].copy_from_slice(&chunk.queries[qrow..qrow + di]);
+            pk[i * di..(i + 1) * di].copy_from_slice(&chunk.keys[qrow..qrow + di]);
+            let vrow = (i * h + head) * dv;
+            pv[i * dv..(i + 1) * dv].copy_from_slice(&chunk.values[vrow..vrow + dv]);
+        }
+        mixer.process_chunk(pq, pk, pv, po, scratch);
+        // scatter back
+        for i in 0..len {
+            let orow = (i * h + head) * dv;
+            out[orow..orow + dv].copy_from_slice(&po[i * dv..(i + 1) * dv]);
+        }
+    }
+    out
+}
+
+// =============================================================== MixerBank
 
 pub struct MixerBank {
     heads: usize,
@@ -81,7 +167,7 @@ impl MixerBank {
         }
         let d_in = mixers[0].d_in();
         let d_out = mixers[0].d_out();
-        // hard assert: process() strides every head's panel with these
+        // hard assert: process_packed strides every head's panel with these
         // dims, so a mismatched factory would silently corrupt outputs
         assert!(
             mixers.iter().all(|m| m.d_in() == d_in && m.d_out() == d_out),
@@ -148,17 +234,16 @@ impl MixerBank {
             if let Some(chunk) = self.queues[s].pop_front() {
                 self.rr = (s + 1) % n;
                 let t0 = std::time::Instant::now();
-                let out = self.process(s, &chunk);
+                let h = self.heads;
+                let out = process_packed(
+                    &mut self.mixers[s * h..(s + 1) * h],
+                    &chunk,
+                    &mut self.scratch,
+                    &mut self.panel,
+                );
                 let elapsed_ns = t0.elapsed().as_nanos() as f64;
-                let len = chunk.keys.len() / (self.heads * self.d_in);
-                let st = &mut self.stats[s];
-                st.tokens += len;
-                st.chunks += 1;
-                if st.chunk_ns.len() < LATENCY_WINDOW {
-                    st.chunk_ns.push(elapsed_ns);
-                } else {
-                    st.chunk_ns[(st.chunks - 1) % LATENCY_WINDOW] = elapsed_ns;
-                }
+                let len = chunk.keys.len() / (h * self.d_in);
+                self.stats[s].record(len, elapsed_ns);
                 return Some(DecodeOut { stream: s, out, elapsed_ns });
             }
         }
@@ -181,45 +266,251 @@ impl MixerBank {
             m.flush();
         }
     }
+}
 
-    /// Batched per-chunk attend/update across this stream's heads: packed
-    /// `[len, heads, d]` in, packed out. Heads are processed back-to-back
-    /// against contiguous per-head panels so the whole chunk for one head
-    /// (and its dictionary tile) stays cache-resident.
-    fn process(&mut self, stream: usize, chunk: &DecodeChunk) -> Vec<f32> {
-        let (h, di, dv) = (self.heads, self.d_in, self.d_out);
-        let len = chunk.keys.len() / (h * di);
-        let mut out = vec![0.0f32; len * h * dv];
+// =============================================================== ShardBank
 
-        // panel layout: q [len*di] | k [len*di] | v [len*dv] | o [len*dv]
-        let need = len * (2 * di + 2 * dv);
-        if self.panel.len() < need {
-            self.panel.resize(need, 0.0);
+/// A resident decode session: one mixer per head plus LRU metadata.
+struct Resident {
+    id: u64,
+    mixers: Vec<Box<dyn SeqMixer>>,
+    last_used: u64,
+}
+
+/// Per-shard session store with admission, LRU eviction to snapshot
+/// blobs, and transparent restore. Owned by exactly one engine worker
+/// thread; completely single-threaded itself, so it is also directly
+/// unit-testable without spawning anything.
+pub struct ShardBank {
+    heads: usize,
+    /// uniform per-head dims, learned from the first admitted session and
+    /// enforced on every later admit/restore (0 = none admitted yet) —
+    /// process_packed strides every panel with one session's head-0 dims,
+    /// so a mismatch would silently corrupt outputs
+    d_in: usize,
+    d_out: usize,
+    max_resident: usize,
+    factory: Box<dyn Fn(u64, usize) -> Box<dyn SeqMixer> + Send>,
+    resident: Vec<Resident>,
+    /// evicted sessions, session id -> packed per-head snapshot blob
+    evicted: HashMap<u64, Vec<u8>>,
+    /// telemetry for every session ever seen — survives eviction (stats
+    /// are engine state, not mixer state, so they are not in the blob)
+    stats: HashMap<u64, StreamStats>,
+    /// logical LRU clock, bumped once per processed chunk
+    clock: u64,
+    pub evictions: usize,
+    pub restores: usize,
+    scratch: Scratch,
+    panel: Vec<f32>,
+}
+
+impl ShardBank {
+    /// `factory(session, head)` builds one head's mixer for a newly
+    /// admitted session. It must be deterministic in (session, head) —
+    /// the multi-thread vs single-thread bit-identity of the engine
+    /// depends on it (shard assignment changes with thread count; the
+    /// session's mixers must not).
+    pub fn new(
+        heads: usize,
+        max_resident: usize,
+        factory: impl Fn(u64, usize) -> Box<dyn SeqMixer> + Send + 'static,
+    ) -> ShardBank {
+        assert!(heads > 0 && max_resident > 0);
+        ShardBank {
+            heads,
+            d_in: 0,
+            d_out: 0,
+            max_resident,
+            factory: Box::new(factory),
+            resident: Vec::new(),
+            evicted: HashMap::new(),
+            stats: HashMap::new(),
+            clock: 0,
+            evictions: 0,
+            restores: 0,
+            scratch: Scratch::new(),
+            panel: Vec::new(),
         }
-        for head in 0..h {
-            let panel = &mut self.panel[..need];
-            let (pq, rest) = panel.split_at_mut(len * di);
-            let (pk, rest) = rest.split_at_mut(len * di);
-            let (pv, po) = rest.split_at_mut(len * dv);
-            let po = &mut po[..len * dv];
-            // gather this head's strided rows into contiguous panels
-            for i in 0..len {
-                let qrow = (i * h + head) * di;
-                pq[i * di..(i + 1) * di].copy_from_slice(&chunk.queries[qrow..qrow + di]);
-                pk[i * di..(i + 1) * di].copy_from_slice(&chunk.keys[qrow..qrow + di]);
-                let vrow = (i * h + head) * dv;
-                pv[i * dv..(i + 1) * dv].copy_from_slice(&chunk.values[vrow..vrow + dv]);
-            }
-            let mixer = &mut self.mixers[stream * h + head];
-            mixer.process_chunk(pq, pk, pv, po, &mut self.scratch);
-            // scatter back
-            for i in 0..len {
-                let orow = (i * h + head) * dv;
-                out[orow..orow + dv].copy_from_slice(&po[i * dv..(i + 1) * dv]);
-            }
-        }
-        out
     }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn resident_sessions(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn evicted_sessions(&self) -> usize {
+        self.evicted.len()
+    }
+
+    /// Every session this shard has ever served.
+    pub fn sessions(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// Live mixer bytes across resident sessions.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident
+            .iter()
+            .map(|r| r.mixers.iter().map(|m| m.state_bytes()).sum::<usize>())
+            .sum()
+    }
+
+    /// Bytes held in snapshot blobs for evicted sessions.
+    pub fn snapshot_bytes(&self) -> usize {
+        self.evicted.values().map(|b| b.len()).sum()
+    }
+
+    /// What one session costs right now: live mixer bytes while resident,
+    /// the snapshot blob size after eviction, None if never seen.
+    pub fn session_state_bytes(&self, id: u64) -> Option<usize> {
+        if let Some(r) = self.resident.iter().find(|r| r.id == id) {
+            return Some(r.mixers.iter().map(|m| m.state_bytes()).sum());
+        }
+        self.evicted.get(&id).map(|b| b.len())
+    }
+
+    pub fn session_stats(&self, id: u64) -> Option<&StreamStats> {
+        self.stats.get(&id)
+    }
+
+    /// Drain all per-session telemetry, sorted by session id.
+    pub fn take_stats(&mut self) -> Vec<(u64, StreamStats)> {
+        let mut v: Vec<(u64, StreamStats)> = std::mem::take(&mut self.stats).into_iter().collect();
+        v.sort_by_key(|&(id, _)| id);
+        v
+    }
+
+    /// Process one packed chunk for `id`, admitting or restoring the
+    /// session first if needed. Returns the packed outputs and the
+    /// session's chunk sequence number (1-based, restore-transparent).
+    pub fn process(&mut self, id: u64, chunk: &DecodeChunk) -> Result<(Vec<f32>, usize)> {
+        let t0 = std::time::Instant::now();
+        let slot = self.ensure_resident(id)?;
+        self.clock += 1;
+        self.resident[slot].last_used = self.clock;
+        let len = chunk.keys.len() / (self.heads * self.resident[slot].mixers[0].d_in());
+        let out = process_packed(
+            &mut self.resident[slot].mixers,
+            chunk,
+            &mut self.scratch,
+            &mut self.panel,
+        );
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        let seq = self.stats.entry(id).or_default().record(len, elapsed_ns);
+        Ok((out, seq))
+    }
+
+    /// Make `id` resident (create / restore), evicting LRU sessions if the
+    /// cap would be exceeded. Returns the resident slot index.
+    fn ensure_resident(&mut self, id: u64) -> Result<usize> {
+        if let Some(i) = self.resident.iter().position(|r| r.id == id) {
+            return Ok(i);
+        }
+        while self.resident.len() >= self.max_resident {
+            self.evict_lru();
+        }
+        let mixers = match self.evicted.remove(&id) {
+            Some(blob) => {
+                // the blob is consumed either way: on a decode failure the
+                // session is discarded and a re-arrival starts it fresh
+                let m = unpack_session(&blob, self.heads)
+                    .with_context(|| format!("restoring session {id}"))?;
+                self.restores += 1;
+                m
+            }
+            None => (0..self.heads).map(|h| (self.factory)(id, h)).collect(),
+        };
+        // the dim invariant MixerBank hard-asserts, as a recoverable error
+        // here: a mismatched factory or cross-shape blob must cost this
+        // session (failed chunk), never corrupt panels or kill the shard
+        let (di, dv) = (mixers[0].d_in(), mixers[0].d_out());
+        anyhow::ensure!(
+            mixers.iter().all(|m| m.d_in() == di && m.d_out() == dv),
+            "session {id}: heads disagree on d_in/d_out"
+        );
+        if self.d_in == 0 {
+            self.d_in = di;
+            self.d_out = dv;
+        } else {
+            anyhow::ensure!(
+                self.d_in == di && self.d_out == dv,
+                "session {id}: dims {di}x{dv} mismatch the shard's {}x{}",
+                self.d_in,
+                self.d_out
+            );
+        }
+        self.resident.push(Resident { id, mixers, last_used: self.clock });
+        Ok(self.resident.len() - 1)
+    }
+
+    /// Evict the least-recently-used resident session to a snapshot blob.
+    fn evict_lru(&mut self) {
+        let Some(i) = self
+            .resident
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| r.last_used)
+            .map(|(i, _)| i)
+        else {
+            return;
+        };
+        let r = self.resident.swap_remove(i);
+        self.evicted.insert(r.id, pack_session(&r.mixers));
+        self.evictions += 1;
+    }
+
+    /// Explicitly evict one session (e.g. on client abandon). No-op if the
+    /// session is not resident.
+    pub fn evict(&mut self, id: u64) {
+        if let Some(i) = self.resident.iter().position(|r| r.id == id) {
+            let r = self.resident.swap_remove(i);
+            self.evicted.insert(r.id, pack_session(&r.mixers));
+            self.evictions += 1;
+        }
+    }
+
+    /// Force every resident session's buffered chunk tail into long-term
+    /// state (evicted sessions carry their tails inside the blob and merge
+    /// on their next chunk after restore).
+    pub fn flush_all(&mut self) {
+        for r in &mut self.resident {
+            for m in &mut r.mixers {
+                m.flush();
+            }
+        }
+    }
+}
+
+/// Pack a session's per-head mixers into one blob: head count, then one
+/// length-prefixed [`snapshot::save`] blob per head.
+pub fn pack_session(mixers: &[Box<dyn SeqMixer>]) -> Vec<u8> {
+    let mut w = snapshot::Writer::new();
+    w.u32(mixers.len() as u32);
+    for m in mixers {
+        w.bytes(&snapshot::save(m.as_ref()));
+    }
+    w.into_bytes()
+}
+
+/// Inverse of [`pack_session`]; `heads` cross-checks the blob.
+pub fn unpack_session(blob: &[u8], heads: usize) -> Result<Vec<Box<dyn SeqMixer>>> {
+    let mut r = snapshot::Reader::new(blob);
+    let n = r.u32()? as usize;
+    anyhow::ensure!(n == heads, "session blob has {n} heads, shard expects {heads}");
+    let mut mixers = Vec::with_capacity(n);
+    for h in 0..n {
+        mixers.push(snapshot::restore(r.bytes()?).with_context(|| format!("head {h}"))?);
+    }
+    anyhow::ensure!(
+        r.remaining() == 0,
+        "session blob has {} trailing bytes after {n} heads",
+        r.remaining()
+    );
+    Ok(mixers)
 }
 
 #[cfg(test)]
@@ -236,6 +527,14 @@ mod tests {
         MixerBank::new(streams, heads, |_, _| {
             Box::new(OvqState::new(OvqConfig::new(d, n, chunk)))
         })
+    }
+
+    fn chunk_of(rng: &mut Rng, len: usize, hd: usize) -> DecodeChunk {
+        DecodeChunk {
+            queries: randv(rng, len * hd),
+            keys: randv(rng, len * hd),
+            values: randv(rng, len * hd),
+        }
     }
 
     #[test]
@@ -294,14 +593,7 @@ mod tests {
         // two chunks per stream
         for s in 0..3 {
             for _ in 0..2 {
-                bank.submit(
-                    s,
-                    DecodeChunk {
-                        queries: randv(&mut rng, len * d),
-                        keys: randv(&mut rng, len * d),
-                        values: randv(&mut rng, len * d),
-                    },
-                );
+                bank.submit(s, chunk_of(&mut rng, len, d));
             }
         }
         assert_eq!(bank.pending_chunks(), 6);
@@ -321,14 +613,7 @@ mod tests {
         let mut cap = 0usize;
         for round in 0..20 {
             for s in 0..2 {
-                bank.submit(
-                    s,
-                    DecodeChunk {
-                        queries: randv(&mut rng, 16 * 2 * 8),
-                        keys: randv(&mut rng, 16 * 2 * 8),
-                        values: randv(&mut rng, 16 * 2 * 8),
-                    },
-                );
+                bank.submit(s, chunk_of(&mut rng, 16, 2 * 8));
             }
             bank.drain();
             if round == 10 {
@@ -346,25 +631,123 @@ mod tests {
         let mut rng = Rng::new(4);
         let mut bank = ovq_bank(2, 1, d, 16, 4);
         for _ in 0..3 {
-            bank.submit(
-                0,
-                DecodeChunk {
-                    queries: randv(&mut rng, len * d),
-                    keys: randv(&mut rng, len * d),
-                    values: randv(&mut rng, len * d),
-                },
-            );
+            bank.submit(0, chunk_of(&mut rng, len, d));
         }
-        bank.submit(
-            1,
-            DecodeChunk {
-                queries: randv(&mut rng, len * d),
-                keys: randv(&mut rng, len * d),
-                values: randv(&mut rng, len * d),
-            },
-        );
+        bank.submit(1, chunk_of(&mut rng, len, d));
         let order: Vec<usize> = bank.drain().iter().map(|o| o.stream).collect();
         // stream 1's single chunk is served second, not last
         assert_eq!(order, vec![0, 1, 0, 0]);
+    }
+
+    // ----------------------------------------------------------- ShardBank
+
+    fn ovq_shard(heads: usize, d: usize, n: usize, chunk: usize, cap: usize) -> ShardBank {
+        ShardBank::new(heads, cap, move |_, _| {
+            Box::new(OvqState::new(OvqConfig::new(d, n, chunk)))
+        })
+    }
+
+    #[test]
+    fn shard_admits_processes_and_tracks_stats() {
+        let (heads, d, len) = (2usize, 8usize, 16usize);
+        let mut rng = Rng::new(5);
+        let mut shard = ovq_shard(heads, d, 32, 16, 8);
+        for (id, rounds) in [(7u64, 3usize), (9, 1)] {
+            for r in 0..rounds {
+                let (out, seq) = shard.process(id, &chunk_of(&mut rng, len, heads * d)).unwrap();
+                assert_eq!(out.len(), len * heads * d);
+                assert_eq!(seq, r + 1);
+            }
+        }
+        assert_eq!(shard.resident_sessions(), 2);
+        assert_eq!(shard.sessions(), 2);
+        assert_eq!(shard.session_stats(7).unwrap().tokens, 3 * len);
+        assert_eq!(shard.session_stats(9).unwrap().chunks, 1);
+        assert_eq!(shard.evictions, 0);
+        assert!(shard.resident_bytes() > 0);
+        assert_eq!(shard.snapshot_bytes(), 0);
+    }
+
+    #[test]
+    fn shard_evicts_lru_and_restores_bit_identically() {
+        // cap 2, three sessions: admitting the third must evict the LRU
+        // (session 1, idle since its chunk); a re-arrival of session 1 must
+        // restore it and continue exactly where it left off
+        let (heads, d, len) = (2usize, 8usize, 16usize);
+        let mut rng = Rng::new(6);
+        let mut shard = ovq_shard(heads, d, 32, 16, 2);
+        // a mirror session in an uncapped shard gives the golden outputs
+        let mut mirror = ovq_shard(heads, d, 32, 16, 8);
+
+        let c1a = chunk_of(&mut rng, len, heads * d);
+        let c1b = chunk_of(&mut rng, len, heads * d);
+        let c2 = chunk_of(&mut rng, len, heads * d);
+        let c3 = chunk_of(&mut rng, len, heads * d);
+
+        shard.process(1, &c1a).unwrap();
+        shard.process(2, &c2).unwrap();
+        shard.process(3, &c3).unwrap(); // evicts session 1
+        assert_eq!(shard.evictions, 1);
+        assert_eq!(shard.resident_sessions(), 2);
+        assert_eq!(shard.evicted_sessions(), 1);
+
+        // accounting: the evicted session now costs exactly its blob
+        let blob_bytes = shard.session_state_bytes(1).unwrap();
+        assert_eq!(blob_bytes, shard.snapshot_bytes());
+        assert!(blob_bytes > 0);
+
+        // re-arrival: restore + continue must equal the uninterrupted run
+        let (got, seq) = shard.process(1, &c1b).unwrap();
+        assert_eq!(seq, 2, "chunk sequence survives eviction");
+        assert_eq!(shard.restores, 1);
+        mirror.process(1, &c1a).unwrap();
+        let (want, _) = mirror.process(1, &c1b).unwrap();
+        assert_eq!(got, want, "restore must be bit-identical");
+        // stats survived the round trip
+        assert_eq!(shard.session_stats(1).unwrap().tokens, 2 * len);
+    }
+
+    #[test]
+    fn shard_explicit_evict_then_flush_accounting() {
+        let (heads, d, len) = (1usize, 8usize, 10usize);
+        let mut rng = Rng::new(7);
+        let mut shard = ovq_shard(heads, d, 32, 16, 4);
+        shard.process(42, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        let live = shard.session_state_bytes(42).unwrap();
+        shard.evict(42);
+        assert_eq!(shard.resident_sessions(), 0);
+        let frozen = shard.session_state_bytes(42).unwrap();
+        assert_eq!(frozen, shard.snapshot_bytes());
+        // the blob carries the pending tail (10 tokens, not yet merged) +
+        // framing, so it is within the same order as the live state
+        assert!(frozen > 0 && live > 0);
+        assert!(shard.session_state_bytes(99).is_none());
+        shard.flush_all(); // no resident sessions: must be a no-op
+        assert_eq!(shard.evictions, 1);
+    }
+
+    #[test]
+    fn pack_unpack_session_round_trip() {
+        let mut rng = Rng::new(8);
+        let mixers: Vec<Box<dyn SeqMixer>> = (0..3)
+            .map(|_| {
+                let mut m: Box<dyn SeqMixer> =
+                    Box::new(OvqState::new(OvqConfig::new(4, 16, 8)));
+                for _ in 0..5 {
+                    let k = randv(&mut rng, 4);
+                    let v = randv(&mut rng, 4);
+                    m.write(&k, &v);
+                }
+                m
+            })
+            .collect();
+        let blob = pack_session(&mixers);
+        let back = unpack_session(&blob, 3).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in mixers.iter().zip(&back) {
+            assert_eq!(a.tokens(), b.tokens());
+            assert_eq!(a.state_bytes(), b.state_bytes());
+        }
+        assert!(unpack_session(&blob, 2).is_err(), "head-count mismatch must fail");
     }
 }

@@ -5,7 +5,10 @@
 //! default gates (`alpha`, `beta`); [`GdnState::write_gated`] exposes the
 //! full per-token recurrence.
 
+use anyhow::Result;
+
 use super::mixer::{Scratch, SeqMixer};
+use super::snapshot;
 
 #[derive(Debug, Clone)]
 pub struct GdnState {
@@ -22,6 +25,17 @@ pub struct GdnState {
 impl GdnState {
     pub fn new(d: usize) -> GdnState {
         GdnState { d, s: vec![0.0; d * d], t: 0, alpha: 1.0, beta: 1.0 }
+    }
+
+    /// Rebuild from a [`snapshot::save`] payload.
+    pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<GdnState> {
+        let mut st = GdnState::new(r.usize()?);
+        st.t = r.usize()?;
+        st.alpha = r.f32()?;
+        st.beta = r.f32()?;
+        st.s = r.f32s()?;
+        anyhow::ensure!(st.s.len() == st.d * st.d, "gdn snapshot has inconsistent shapes");
+        Ok(st)
     }
 
     pub fn write_gated(&mut self, k: &[f32], v: &[f32], alpha: f32, beta: f32) {
@@ -90,6 +104,14 @@ impl SeqMixer for GdnState {
                 }
             }
         }
+    }
+
+    fn snapshot(&self, w: &mut snapshot::Writer) {
+        w.usize(self.d);
+        w.usize(self.t);
+        w.f32(self.alpha);
+        w.f32(self.beta);
+        w.f32s(&self.s);
     }
 }
 

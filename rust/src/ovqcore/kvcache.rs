@@ -6,7 +6,10 @@
 //! [`super::memstate::MixerKind::SlidingWindow`]. Served through
 //! [`SeqMixer`].
 
+use anyhow::Result;
+
 use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
+use super::snapshot;
 
 #[derive(Debug, Clone)]
 pub struct KvCache {
@@ -28,6 +31,24 @@ impl KvCache {
     pub fn with_window(d: usize, window: usize) -> KvCache {
         assert!(window > 0, "sliding window must be > 0");
         KvCache { window: Some(window), ..KvCache::new(d) }
+    }
+
+    /// Rebuild from a [`snapshot::save`] payload (full or windowed — the
+    /// window is part of the blob).
+    pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<KvCache> {
+        let mut c = KvCache::new(r.usize()?);
+        c.beta = r.f32()?;
+        c.window = r.opt_usize()?;
+        c.t = r.usize()?;
+        c.keys = r.f32s()?;
+        c.values = r.f32s()?;
+        anyhow::ensure!(
+            c.keys.len() % c.d == 0
+                && c.values.len() == c.keys.len()
+                && c.window.map_or(true, |w| w > 0 && c.len() <= w),
+            "kv_cache snapshot has inconsistent shapes"
+        );
+        Ok(c)
     }
 
     /// Cached positions (<= window when windowed).
@@ -106,6 +127,15 @@ impl SeqMixer for KvCache {
             out,
             scratch,
         );
+    }
+
+    fn snapshot(&self, w: &mut snapshot::Writer) {
+        w.usize(self.d);
+        w.f32(self.beta);
+        w.opt_usize(self.window);
+        w.usize(self.t);
+        w.f32s(&self.keys);
+        w.f32s(&self.values);
     }
 }
 

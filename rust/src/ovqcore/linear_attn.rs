@@ -3,7 +3,10 @@
 //! the WHOLE state, so the chunk update tensor is [L, d_k, d_v], growing
 //! with state size, unlike OVQ's [L, 2, d]. Served through [`SeqMixer`].
 
+use anyhow::Result;
+
 use super::mixer::{Scratch, SeqMixer};
+use super::snapshot;
 
 #[derive(Debug, Clone)]
 pub struct LinearAttnState {
@@ -28,6 +31,19 @@ fn phi(x: f32) -> f32 {
 impl LinearAttnState {
     pub fn new(dk: usize, dv: usize) -> LinearAttnState {
         LinearAttnState { dk, dv, s: vec![0.0; dk * dv], z: vec![0.0; dk], t: 0 }
+    }
+
+    /// Rebuild from a [`snapshot::save`] payload.
+    pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<LinearAttnState> {
+        let mut st = LinearAttnState::new(r.usize()?, r.usize()?);
+        st.t = r.usize()?;
+        st.s = r.f32s()?;
+        st.z = r.f32s()?;
+        anyhow::ensure!(
+            st.s.len() == st.dk * st.dv && st.z.len() == st.dk,
+            "linear_attn snapshot has inconsistent shapes"
+        );
+        Ok(st)
     }
 }
 
@@ -84,6 +100,14 @@ impl SeqMixer for LinearAttnState {
             }
         }
         out.iter_mut().for_each(|o| *o /= den);
+    }
+
+    fn snapshot(&self, w: &mut snapshot::Writer) {
+        w.usize(self.dk);
+        w.usize(self.dv);
+        w.usize(self.t);
+        w.f32s(&self.s);
+        w.f32s(&self.z);
     }
 }
 

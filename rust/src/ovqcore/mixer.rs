@@ -127,6 +127,13 @@ pub trait SeqMixer: Send {
     /// mixers without chunk buffering). Reads already see buffered tokens;
     /// this only forces the merge, e.g. at end-of-sequence.
     fn flush(&mut self) {}
+
+    /// Serialize the complete mixer state (config, tensors, buffered chunk
+    /// tails — everything needed to continue bit-identically) into `w`.
+    /// Callers use [`super::snapshot::save`], which adds the framing that
+    /// lets [`super::snapshot::restore`] revive the machine from bytes;
+    /// implementations only write their payload here.
+    fn snapshot(&self, w: &mut super::snapshot::Writer);
 }
 
 /// Masked-softmax read over a dictionary with count biasing — the shared

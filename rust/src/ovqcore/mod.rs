@@ -12,10 +12,14 @@
 //!
 //! Layering (DESIGN.md): every state machine implements the
 //! [`mixer::SeqMixer`] trait and runs its hot loops through the blocked
-//! [`kernels`]; [`bank::MixerBank`] scales the trait to H heads x S
-//! concurrent decode streams with round-robin scheduling. Consumers
+//! [`kernels`]; [`snapshot`] freezes/thaws any mixer to a bit-exact
+//! binary blob (the session-lifecycle persistence layer);
+//! [`bank::MixerBank`] scales the trait to H heads x S concurrent decode
+//! streams with round-robin scheduling, and [`bank::ShardBank`] adds the
+//! session-keyed store (admission, LRU eviction to snapshots, restore)
+//! that `coordinator::engine` runs one-per-worker-thread. Consumers
 //! (memstate accounting, the coordinator's serving/eval paths, the
-//! examples and benches) go through the trait or the bank only.
+//! examples and benches) go through the trait or the banks only.
 
 pub mod bank;
 pub mod gdn;
@@ -25,6 +29,7 @@ pub mod linear_attn;
 pub mod memstate;
 pub mod mixer;
 pub mod ovq;
+pub mod snapshot;
 pub mod vq;
 
 /// Growth schedule (paper eqs. 17-18): N_t = floor(t*N / (t+N)).

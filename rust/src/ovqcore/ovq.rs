@@ -15,9 +15,12 @@
 //! arrive. Call [`SeqMixer::flush`] at end-of-sequence to force the final
 //! partial merge.
 
+use anyhow::Result;
+
 use super::growth_n_new;
 use super::kernels;
 use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
+use super::snapshot;
 
 #[derive(Debug, Clone)]
 pub struct OvqConfig {
@@ -108,6 +111,37 @@ impl OvqState {
     /// Tokens staged but not yet merged.
     pub fn pending_len(&self) -> usize {
         self.pending_len
+    }
+
+    /// Rebuild from a [`snapshot::save`] payload — the inverse of
+    /// [`SeqMixer::snapshot`]. The update scratch is transient (cleared at
+    /// the top of every `update_chunk`) and is not part of the format.
+    pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<OvqState> {
+        let mut cfg = OvqConfig::new(r.usize()?, r.usize()?, r.usize()?);
+        cfg.beta = r.f32()?;
+        cfg.const_lr = r.opt_f32()?;
+        cfg.linear_growth = r.bool()?;
+        cfg.rand_assign = r.bool()?;
+        cfg.linear_growth_chunks = r.usize()?;
+        let mut st = OvqState::new(cfg);
+        st.n_active = r.usize()?;
+        st.t = r.usize()?;
+        st.chunk_idx = r.usize()?;
+        st.dk = r.f32s()?;
+        st.dv = r.f32s()?;
+        st.counts = r.f32s()?;
+        st.pending_len = r.usize()?;
+        st.pending_k = r.f32s()?;
+        st.pending_v = r.f32s()?;
+        anyhow::ensure!(
+            st.dk.len() == st.n_active * st.cfg.d
+                && st.dv.len() == st.n_active * st.cfg.d
+                && st.counts.len() == st.n_active
+                && st.pending_k.len() == st.pending_len * st.cfg.d
+                && st.pending_v.len() == st.pending_len * st.cfg.d,
+            "ovq snapshot has inconsistent shapes"
+        );
+        Ok(st)
     }
 
     /// Attention of one query over the current dictionary + an in-chunk
@@ -340,6 +374,26 @@ impl SeqMixer for OvqState {
         self.pending_k.clear();
         self.pending_v.clear();
         self.pending_len = 0;
+    }
+
+    fn snapshot(&self, w: &mut snapshot::Writer) {
+        w.usize(self.cfg.d);
+        w.usize(self.cfg.n_max);
+        w.usize(self.cfg.chunk);
+        w.f32(self.cfg.beta);
+        w.opt_f32(self.cfg.const_lr);
+        w.bool(self.cfg.linear_growth);
+        w.bool(self.cfg.rand_assign);
+        w.usize(self.cfg.linear_growth_chunks);
+        w.usize(self.n_active);
+        w.usize(self.t);
+        w.usize(self.chunk_idx);
+        w.f32s(&self.dk);
+        w.f32s(&self.dv);
+        w.f32s(&self.counts);
+        w.usize(self.pending_len);
+        w.f32s(&self.pending_k);
+        w.f32s(&self.pending_v);
     }
 }
 

@@ -1,0 +1,363 @@
+//! Compact binary snapshot format for [`SeqMixer`] state — the session
+//! lifecycle's persistence layer. A decode session evicted from a shard
+//! is serialized to a byte blob via [`save`] and revived later with
+//! [`restore`]; the round trip is **bit-exact** (f32 payloads are stored
+//! as raw little-endian bit patterns, never reformatted), so a restored
+//! session continues token-identically to one that was never evicted.
+//! rust/tests/golden.rs property-tests that contract for every mixer at
+//! random interruption points.
+//!
+//! Framing: `MAGIC (u32) | VERSION (u16) | kind_name (str) | payload`.
+//! The payload is written by each mixer's [`SeqMixer::snapshot`] and read
+//! back by its `from_snapshot` constructor; [`restore`] dispatches on the
+//! kind name, so a blob is self-describing — the reviver does not need to
+//! know what kind of session it is thawing.
+
+use anyhow::{bail, Context, Result};
+
+use super::gdn::GdnState;
+use super::kvcache::KvCache;
+use super::linear_attn::LinearAttnState;
+use super::mixer::SeqMixer;
+use super::ovq::OvqState;
+use super::vq::VqState;
+
+/// `b"OVQS"` little-endian.
+pub const MAGIC: u32 = 0x5351_564F;
+pub const VERSION: u16 = 1;
+
+// ------------------------------------------------------------------ writer
+
+/// Append-only little-endian byte sink.
+#[derive(Debug, Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    pub fn bool(&mut self, x: bool) {
+        self.u8(x as u8);
+    }
+
+    /// f32 stored as its raw bit pattern — exact, never a decimal round trip.
+    pub fn f32(&mut self, x: f32) {
+        self.u32(x.to_bits());
+    }
+
+    pub fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice, raw LE bits.
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn opt_f32(&mut self, x: Option<f32>) {
+        match x {
+            Some(v) => {
+                self.bool(true);
+                self.f32(v);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn opt_usize(&mut self, x: Option<usize>) {
+        match x {
+            Some(v) => {
+                self.bool(true);
+                self.usize(v);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    /// Length-prefixed nested byte blob (used to pack per-head snapshots
+    /// into one session blob).
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+}
+
+// ------------------------------------------------------------------ reader
+
+/// Cursor over a snapshot blob; every accessor checks bounds.
+pub struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("snapshot truncated: need {n} bytes at offset {}, have {}", self.i, self.remaining());
+        }
+        let whole: &'a [u8] = self.b; // copy the 'a reference out of self
+        let s = &whole[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)
+            .context("snapshot kind name is not utf8")?
+            .to_string())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        // checked: a corrupt length field must Err, not wrap the multiply
+        // (release) or panic (debug) — the bounds contract of this reader
+        let nbytes = n
+            .checked_mul(4)
+            .filter(|&b| b <= self.remaining())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "snapshot f32 array length {n} exceeds remaining {} bytes",
+                    self.remaining()
+                )
+            })?;
+        let raw = self.take(nbytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    pub fn opt_f32(&mut self) -> Result<Option<f32>> {
+        Ok(if self.bool()? { Some(self.f32()?) } else { None })
+    }
+
+    pub fn opt_usize(&mut self) -> Result<Option<usize>> {
+        Ok(if self.bool()? { Some(self.usize()?) } else { None })
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u64()? as usize;
+        self.take(n)
+    }
+}
+
+// ----------------------------------------------------------- save / restore
+
+/// Serialize a mixer (any kind) into a self-describing blob.
+pub fn save(m: &dyn SeqMixer) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MAGIC);
+    w.u16(VERSION);
+    w.str(m.kind_name());
+    m.snapshot(&mut w);
+    w.into_bytes()
+}
+
+/// Revive a mixer from a [`save`] blob. The restored machine continues
+/// bit-identically to the one that was snapshotted.
+pub fn restore(bytes: &[u8]) -> Result<Box<dyn SeqMixer>> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        bail!("not a mixer snapshot (magic {magic:#x})");
+    }
+    let version = r.u16()?;
+    if version != VERSION {
+        bail!("unsupported snapshot version {version}");
+    }
+    let kind = r.str()?;
+    let m: Box<dyn SeqMixer> = match kind.as_str() {
+        "ovq" => Box::new(OvqState::from_snapshot(&mut r)?),
+        "vq" => Box::new(VqState::from_snapshot(&mut r)?),
+        "linear_attn" => Box::new(LinearAttnState::from_snapshot(&mut r)?),
+        "gdn" => Box::new(GdnState::from_snapshot(&mut r)?),
+        "kv_cache" | "sliding_window" => Box::new(KvCache::from_snapshot(&mut r)?),
+        other => bail!("unknown mixer kind in snapshot: {other:?}"),
+    };
+    if r.remaining() != 0 {
+        bail!("snapshot has {} trailing bytes after {kind} payload", r.remaining());
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ovqcore::memstate::MixerKind;
+    use crate::ovqcore::mixer::Scratch;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn writer_reader_round_trip_primitives() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEADBEEF);
+        w.u64(u64::MAX - 3);
+        w.f32(-0.0); // sign bit must survive
+        w.f32(f32::NAN);
+        w.bool(true);
+        w.str("sliding_window");
+        w.f32s(&[1.5, -2.25, 3e-9]);
+        w.opt_f32(None);
+        w.opt_usize(Some(42));
+        let buf = w.into_bytes();
+
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.f32().unwrap().is_nan());
+        assert!(r.bool().unwrap());
+        assert_eq!(r.str().unwrap(), "sliding_window");
+        assert_eq!(r.f32s().unwrap(), vec![1.5, -2.25, 3e-9]);
+        assert_eq!(r.opt_f32().unwrap(), None);
+        assert_eq!(r.opt_usize().unwrap(), Some(42));
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn reader_rejects_truncation() {
+        let mut w = Writer::new();
+        w.f32s(&[1.0, 2.0, 3.0]);
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf[..buf.len() - 2]);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn restore_rejects_garbage() {
+        assert!(restore(b"not a snapshot").is_err());
+        let mut w = Writer::new();
+        w.u32(MAGIC);
+        w.u16(99); // bad version
+        w.str("ovq");
+        assert!(restore(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn huge_length_field_errs_instead_of_wrapping() {
+        // a corrupt f32s length near u64::MAX must not wrap `n * 4` into a
+        // small take() — it must surface as a clean error
+        let mut w = Writer::new();
+        w.u64(u64::MAX / 2); // claims ~2^63 floats
+        w.u32(0); // a few real bytes
+        let buf = w.into_bytes();
+        let mut r = Reader::new(&buf);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn save_restore_save_is_identical_for_every_kind() {
+        // determinism of the format itself: thaw + refreeze must produce
+        // the same bytes, for every mixer kind, mid-chunk state included
+        let (d, chunk) = (8usize, 16usize);
+        let kinds = [
+            MixerKind::Ovq { n_max: 32 },
+            MixerKind::Vq { n: 16 },
+            MixerKind::LinearAttention,
+            MixerKind::Gdn,
+            MixerKind::FullAttention,
+            MixerKind::SlidingWindow { window: 24 },
+        ];
+        let mut rng = Rng::new(0x5AFE);
+        for kind in kinds {
+            let mut m = kind.build(d, chunk, 3);
+            // leave a partial OVQ chunk buffered on purpose
+            for _ in 0..(3 * chunk + 5) {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                m.write(&k, &v);
+            }
+            let blob = save(m.as_ref());
+            let thawed = restore(&blob).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            assert_eq!(thawed.kind_name(), m.kind_name());
+            assert_eq!(thawed.tokens(), m.tokens(), "{kind:?}");
+            assert_eq!(thawed.state_bytes(), m.state_bytes(), "{kind:?}");
+            assert_eq!(save(thawed.as_ref()), blob, "{kind:?}: refreeze differs");
+            // and it still answers queries identically
+            let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut scratch = Scratch::new();
+            let (mut a, mut b) = (vec![0.0f32; d], vec![0.0f32; d]);
+            m.read(&q, &mut a, &mut scratch);
+            thawed.read(&q, &mut b, &mut scratch);
+            assert_eq!(a, b, "{kind:?}: reads diverge after restore");
+        }
+    }
+}

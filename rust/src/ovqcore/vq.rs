@@ -2,8 +2,11 @@
 //! key dictionary, online value dictionary + counts. The Fig. 1 baseline.
 //! Served through the unified [`SeqMixer`] interface.
 
+use anyhow::Result;
+
 use super::kernels;
 use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
+use super::snapshot;
 
 #[derive(Debug, Clone)]
 pub struct VqState {
@@ -31,6 +34,28 @@ impl VqState {
             beta: 8.0,
             t: 0,
         }
+    }
+
+    /// Rebuild from a [`snapshot::save`] payload. The pretrained key
+    /// dictionary travels with the blob — a restored session does not
+    /// depend on the factory seed that originally built it.
+    pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<VqState> {
+        let d = r.usize()?;
+        let beta = r.f32()?;
+        let t = r.usize()?;
+        let dk = r.f32s()?;
+        let dv = r.f32s()?;
+        let counts = r.f32s()?;
+        anyhow::ensure!(
+            d > 0 && dk.len() % d == 0 && dv.len() == dk.len() && counts.len() == dk.len() / d,
+            "vq snapshot has inconsistent shapes"
+        );
+        let mut st = VqState::new(d, dk);
+        st.beta = beta;
+        st.t = t;
+        st.dv = dv;
+        st.counts = counts;
+        Ok(st)
     }
 
     /// Index of the key centroid with maximum inner product (blocked scan).
@@ -96,6 +121,15 @@ impl SeqMixer for VqState {
             out,
             scratch,
         );
+    }
+
+    fn snapshot(&self, w: &mut snapshot::Writer) {
+        w.usize(self.d);
+        w.f32(self.beta);
+        w.usize(self.t);
+        w.f32s(&self.dk);
+        w.f32s(&self.dv);
+        w.f32s(&self.counts);
     }
 }
 
