@@ -1,0 +1,42 @@
+#!/bin/sh
+# Informational current-vs-baseline bench comparison. Run from rust/
+# (where the fresh BENCH_*.json land); never fails the build — the perf
+# trajectory is judged by humans reading the numbers, the gate is only
+# that the benches ran and emitted well-formed JSON.
+#
+# The JSON is the repo's own single-line util::json output, so plain
+# sed/grep is enough: extract (name, tok_per_s) pairs per file and join
+# on name.
+set -u
+
+extract() {
+    # one "name tok_per_s" pair per line
+    tr '{' '\n' <"$1" | sed -n \
+        's/.*"name": *"\([^"]*\)".*"tok_per_s": *\([0-9.eE+-]*\).*/\1 \2/p'
+}
+
+for bench in ovqcore server; do
+    cur="BENCH_${bench}.json"
+    base="benches/baseline/BENCH_${bench}.baseline.json"
+    echo "== $bench: current vs committed baseline =="
+    if [ ! -f "$cur" ]; then
+        echo "  (no current $cur — bench did not run?)"
+        continue
+    fi
+    if grep -q '"seeded": false' "$base" 2>/dev/null; then
+        echo "  baseline unseeded — copy a CI bench-json artifact over $base to start the trajectory"
+        extract "$cur" | while read -r name tps; do
+            printf '  %-32s %14.0f tok/s (no baseline)\n' "$name" "$tps"
+        done
+        continue
+    fi
+    extract "$cur" | while read -r name tps; do
+        btps=$(extract "$base" | awk -v n="$name" '$1 == n { print $2; exit }')
+        if [ -n "${btps:-}" ]; then
+            printf '  %-32s %14.0f tok/s   baseline %14.0f\n' "$name" "$tps" "$btps"
+        else
+            printf '  %-32s %14.0f tok/s   (new row)\n' "$name" "$tps"
+        fi
+    done
+done
+exit 0

@@ -80,7 +80,14 @@ mod scalar_baseline {
             }
         }
 
-        pub fn attend(&self, q: &[f32], chunk_k: &[f32], chunk_v: &[f32], upto: usize, out: &mut [f32]) {
+        pub fn attend(
+            &self,
+            q: &[f32],
+            chunk_k: &[f32],
+            chunk_v: &[f32],
+            upto: usize,
+            out: &mut [f32],
+        ) {
             let d = self.d;
             let beta = self.beta;
             let n = self.n_active;
@@ -215,7 +222,14 @@ struct Row {
     tok_per_s: f64,
 }
 
-fn push_row(rows: &mut Vec<Row>, name: &str, mixer: &'static str, n: usize, mean_ns: f64, toks: f64) {
+fn push_row(
+    rows: &mut Vec<Row>,
+    name: &str,
+    mixer: &'static str,
+    n: usize,
+    mean_ns: f64,
+    toks: f64,
+) {
     rows.push(Row {
         name: name.to_string(),
         mixer,
@@ -263,20 +277,22 @@ fn main() {
         // is the *write* footprint; see the memstate figures and the ΔS
         // column below. Both paths do identical work: attend every token
         // against dict+prefix, then merge the chunk.
-        let r_new = b.run_throughput(&format!("ovq_chunk_blocked_N{n}"), chunk as f64, "tok/s", || {
+        let name_new = format!("ovq_chunk_blocked_N{n}");
+        let r_new = b.run_throughput(&name_new, chunk as f64, "tok/s", || {
             let mut s2 = st.clone();
             s2.process_chunk(&q, &k, &v, &mut out, &mut scratch);
             s2.flush();
             out[0]
         });
-        push_row(&mut rows, &format!("ovq_chunk_blocked_N{n}"), "ovq", n, r_new.mean_ns, chunk as f64);
+        push_row(&mut rows, &name_new, "ovq", n, r_new.mean_ns, chunk as f64);
 
-        let r_old = b.run_throughput(&format!("ovq_chunk_scalar_N{n}"), chunk as f64, "tok/s", || {
+        let name_old = format!("ovq_chunk_scalar_N{n}");
+        let r_old = b.run_throughput(&name_old, chunk as f64, "tok/s", || {
             let mut s2 = scalar.clone();
             let o = s2.process_chunk(&q, &k, &v);
             o[0]
         });
-        push_row(&mut rows, &format!("ovq_chunk_scalar_N{n}"), "ovq_scalar", n, r_old.mean_ns, chunk as f64);
+        push_row(&mut rows, &name_old, "ovq_scalar", n, r_old.mean_ns, chunk as f64);
         let speedup = r_old.mean_ns / r_new.mean_ns;
         if n == 4096 {
             speedup_at_4096 = speedup;

@@ -102,8 +102,13 @@ pub fn cmd_flops(args: &Args) -> anyhow::Result<()> {
 
     for (label, train) in [("inference", false), ("training", true)] {
         let rows = sweep(g, n_max, &lengths, train);
-        println!("\n== Fig 15 ({label}) — FLOPs vs context length (H=8 d=128 L=128 N={n_max}) ==");
-        println!("{:>8} {:>14} {:>14} {:>14} | {:>10} {:>10}", "T", "attn", "ovq", "gdn", "ovq/attn", "gdn/attn");
+        println!(
+            "\n== Fig 15 ({label}) — FLOPs vs context length (H=8 d=128 L=128 N={n_max}) =="
+        );
+        println!(
+            "{:>8} {:>14} {:>14} {:>14} | {:>10} {:>10}",
+            "T", "attn", "ovq", "gdn", "ovq/attn", "gdn/attn"
+        );
         let mut csv = CsvWriter::create(
             format!("{out_dir}/flops_{label}.csv"),
             &["T", "attn", "ovq", "gdn", "ovq_ratio", "gdn_ratio"],

@@ -23,8 +23,9 @@
 //! 2 or 4 workers cannot change any stream's tokens. The engine golden
 //! test (rust/tests/engine.rs) cross-checks this.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -48,6 +49,13 @@ pub struct EngineConfig {
     pub max_resident: usize,
     /// bounded per-shard queue: `submit` blocks when full (backpressure)
     pub queue_depth: usize,
+    /// continuous batching: a prompt submitted via
+    /// [`DecodeEngine::submit_prefill`] is ingested `prefill_quantum`
+    /// tokens at a time, with queued decode chunks (for other sessions)
+    /// interleaved between quanta — so a 64k arrival delays a live decode
+    /// by at most one quantum plus its own queue wait, never by the whole
+    /// prompt
+    pub prefill_quantum: usize,
     pub seed: u64,
     /// keep per-chunk outputs for the caller (golden cross-checks); off
     /// for load runs so output buffers don't grow unboundedly
@@ -64,6 +72,7 @@ impl EngineConfig {
             threads: 1,
             max_resident: usize::MAX / 2,
             queue_depth: 64,
+            prefill_quantum: 512,
             seed: 0xE6617E,
             collect_outputs: false,
         }
@@ -92,6 +101,7 @@ pub fn shard_of(session: u64, threads: usize) -> usize {
 
 enum EngineMsg {
     Chunk { session: u64, chunk: DecodeChunk, submitted: Instant },
+    Prefill { session: u64, chunk: DecodeChunk, submitted: Instant },
     Evict { session: u64 },
     FlushAll,
 }
@@ -115,13 +125,29 @@ pub struct ShardReport {
     pub resident_sessions: usize,
     /// sessions frozen to snapshot blobs at shutdown
     pub evicted_sessions: usize,
+    /// completed decode chunks (prompts are counted in `prefill_chunks`)
     pub chunks: usize,
+    /// all tokens ingested: decode chunks + prefilled prompts
     pub tokens: usize,
-    /// time spent inside chunk processing (utilization = busy / wall)
+    /// time spent inside chunk/quantum processing (utilization = busy /
+    /// wall); `prefill_busy` is the prefill share of it
     pub busy: Duration,
+    /// busy time spent ingesting prefill quanta — `busy - prefill_busy`
+    /// is the decode share, so the report splits shard occupancy
+    pub prefill_busy: Duration,
+    /// completed prefill prompts
+    pub prefill_chunks: usize,
+    /// prompt tokens ingested through the prefill path
+    pub prefill_tokens: usize,
+    /// submit→prefill-complete wall latency (prompt time-to-first-token)
+    /// of the most recent prompts, nanoseconds (ring)
+    pub ttft_ns: Vec<f64>,
     pub evictions: usize,
     pub restores: usize,
-    /// high-water mark of queued + in-service (+ one blocked submitter)
+    /// high-water mark of in-flight work the gauge saw: channel-queued +
+    /// in-service (+ one blocked submitter), plus — when prompts are in
+    /// play — admitted-but-unfinished prefill jobs and order-deferred
+    /// messages (both bounded by queue_depth; see the worker drain gate)
     pub max_queue: usize,
     /// chunks dropped because the session failed to admit/restore (e.g. a
     /// corrupt snapshot blob) — the session is discarded, the shard lives
@@ -178,10 +204,41 @@ impl EngineReport {
         stats::percentile(&all, p) / 1e3
     }
 
+    /// Prompt time-to-first-token percentile across shards, microseconds
+    /// (submit → last prefill quantum complete). NaN when no prompts ran.
+    pub fn ttft_us(&self, p: f64) -> f64 {
+        let all: Vec<f64> =
+            self.shards.iter().flat_map(|s| s.ttft_ns.iter().copied()).collect();
+        stats::percentile(&all, p) / 1e3
+    }
+
+    /// Prompt tokens ingested through the prefill path, all shards.
+    pub fn prefill_tokens(&self) -> usize {
+        self.shards.iter().map(|s| s.prefill_tokens).sum()
+    }
+
+    /// Completed prefill prompts, all shards.
+    pub fn prefill_chunks(&self) -> usize {
+        self.shards.iter().map(|s| s.prefill_chunks).sum()
+    }
+
     /// Per-shard busy fraction of the run's wall clock.
     pub fn utilization(&self) -> Vec<f64> {
         let w = self.wall.as_secs_f64().max(1e-12);
         self.shards.iter().map(|s| s.busy.as_secs_f64() / w).collect()
+    }
+
+    /// Per-shard (decode, prefill) occupancy — each shard's busy time
+    /// split by path, as fractions of the run's wall clock.
+    pub fn occupancy(&self) -> Vec<(f64, f64)> {
+        let w = self.wall.as_secs_f64().max(1e-12);
+        self.shards
+            .iter()
+            .map(|s| {
+                let p = s.prefill_busy.as_secs_f64() / w;
+                (s.busy.as_secs_f64() / w - p, p)
+            })
+            .collect()
     }
 
     pub fn print(&self) {
@@ -204,18 +261,28 @@ impl EngineReport {
             self.restores(),
             self.state_bytes() as f64 / 1024.0,
         );
+        if self.prefill_chunks() > 0 {
+            println!(
+                "  prefill: {} prompts / {} tokens  ttft p50 {:.1} us  p99 {:.1} us",
+                self.prefill_chunks(),
+                self.prefill_tokens(),
+                self.ttft_us(50.0),
+                self.ttft_us(99.0),
+            );
+        }
         if self.failed_chunks() > 0 {
             println!("  WARNING: {} chunks dropped on failed restores", self.failed_chunks());
         }
-        for (s, u) in self.shards.iter().zip(self.utilization()) {
+        for (s, (du, pu)) in self.shards.iter().zip(self.occupancy()) {
             println!(
-                "  shard {:>2}: {:>4} sessions {:>7} tokens  util {:>5.1}%  \
-                 max queue {:>3}  evict/restore {}/{}  resident {:.1} KiB + \
-                 snapshots {:.1} KiB",
+                "  shard {:>2}: {:>4} sessions {:>7} tokens  occupancy {:>5.1}% decode \
+                 + {:>5.1}% prefill  max queue {:>3}  evict/restore {}/{}  \
+                 resident {:.1} KiB + snapshots {:.1} KiB",
                 s.shard,
                 s.sessions,
                 s.tokens,
-                100.0 * u,
+                100.0 * du,
+                100.0 * pu,
                 s.max_queue,
                 s.evictions,
                 s.restores,
@@ -269,10 +336,16 @@ impl DecodeEngine {
             let worker_gauge = Arc::clone(&gauge);
             let worker_high = Arc::clone(&high);
             let factory = factory.clone();
-            let (heads, max_resident, hd) =
-                (cfg.heads, cfg.max_resident, cfg.heads * cfg.d_head);
+            let wcfg = WorkerCfg {
+                shard,
+                heads: cfg.heads,
+                max_resident: cfg.max_resident,
+                hd: cfg.heads * cfg.d_head,
+                queue_depth: cfg.queue_depth,
+                prefill_quantum: cfg.prefill_quantum.max(1),
+            };
             handles.push(thread::spawn(move || {
-                shard_worker(shard, heads, max_resident, hd, factory, rx, worker_out, worker_gauge, worker_high)
+                shard_worker(wcfg, factory, rx, worker_out, worker_gauge, worker_high)
             }));
             txs.push(tx);
             queue_gauge.push(gauge);
@@ -304,6 +377,26 @@ impl DecodeEngine {
         self.queue_high[s].fetch_max(v, Ordering::SeqCst);
         self.txs[s]
             .send(EngineMsg::Chunk { session, chunk, submitted })
+            .expect("shard worker died");
+    }
+
+    /// Enqueue a whole prompt for a session — the long-prompt admission
+    /// path. The shard worker slices it into
+    /// [`EngineConfig::prefill_quantum`]-token quanta ingested through the
+    /// blocked [`crate::ovqcore::mixer::SeqMixer::process_prefill`] path,
+    /// interleaving queued decode chunks of *other* sessions between
+    /// quanta (continuous batching); messages for the *same* session
+    /// submitted after the prompt are deferred behind it, so per-session
+    /// order — and therefore bit-identity with a serial run — holds.
+    /// When outputs are collected, the whole prompt completes as ONE
+    /// [`EngineOut`] sequenced like a single chunk.
+    pub fn submit_prefill(&self, session: u64, chunk: DecodeChunk) {
+        let s = shard_of(session, self.cfg.threads);
+        let submitted = Instant::now();
+        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
+        self.queue_high[s].fetch_max(v, Ordering::SeqCst);
+        self.txs[s]
+            .send(EngineMsg::Prefill { session, chunk, submitted })
             .expect("shard worker died");
     }
 
@@ -352,74 +445,301 @@ impl DecodeEngine {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn shard_worker(
+/// Static per-worker shape (one struct so the spawn site stays readable).
+#[derive(Debug, Clone, Copy)]
+struct WorkerCfg {
     shard: usize,
     heads: usize,
     max_resident: usize,
+    /// packed row width, heads * d_head
     hd: usize,
+    queue_depth: usize,
+    prefill_quantum: usize,
+}
+
+/// An in-flight long-prompt admission, ingested one quantum at a time.
+struct PrefillJob {
+    session: u64,
+    chunk: DecodeChunk,
+    /// tokens ingested so far / total prompt tokens
+    done: usize,
+    total: usize,
+    submitted: Instant,
+    /// processing time across this job's quanta, nanoseconds
+    busy_ns: f64,
+    /// accumulated packed outputs (only in collect mode)
+    out: Option<Vec<f32>>,
+}
+
+/// Everything one shard worker mutates while scheduling. The worker
+/// interleaves two sources of work: messages from the bounded queue
+/// (processed immediately unless ordering forces a deferral) and the
+/// front [`PrefillJob`], advanced one quantum per scheduling round —
+/// continuous batching, so neither path can starve the other.
+struct WorkerState {
+    cfg: WorkerCfg,
+    bank: ShardBank,
+    /// FIFO of admitted prompts; only the front job makes progress, so
+    /// prompt ingestion order is deterministic and average TTFT is
+    /// minimized
+    jobs: VecDeque<PrefillJob>,
+    /// messages that must wait to preserve ordering: anything for a
+    /// session with a queued/in-flight prompt, anything behind a deferred
+    /// message for its session, and global flushes behind everything.
+    /// Re-dispatched in order whenever a job completes. Growth is bounded:
+    /// the main loop stops draining the channel while `jobs` + `deferred`
+    /// already hold queue_depth entries, so overflow stays in the bounded
+    /// sync_channel and blocks the submitter (the backpressure contract).
+    deferred: VecDeque<EngineMsg>,
+    out_tx: Option<Sender<EngineOut>>,
+    gauge: Arc<AtomicUsize>,
+    busy: Duration,
+    prefill_busy: Duration,
+    latency_ns: Vec<f64>,
+    latency_i: usize,
+    ttft_ns: Vec<f64>,
+    ttft_i: usize,
+    chunks: usize,
+    tokens: usize,
+    failed_chunks: usize,
+    prefill_chunks: usize,
+    prefill_tokens: usize,
+}
+
+impl WorkerState {
+    /// Would processing a message for `session` now break per-session
+    /// (or flush) ordering?
+    fn session_blocked(&self, session: u64) -> bool {
+        self.jobs.iter().any(|j| j.session == session)
+            || self.deferred.iter().any(|m| match m {
+                EngineMsg::Chunk { session: s, .. }
+                | EngineMsg::Prefill { session: s, .. }
+                | EngineMsg::Evict { session: s } => *s == session,
+                EngineMsg::FlushAll => true,
+            })
+    }
+
+    /// Process a message now if ordering allows, defer it otherwise.
+    fn dispatch(&mut self, msg: EngineMsg) {
+        let blocked = match &msg {
+            EngineMsg::Chunk { session, .. }
+            | EngineMsg::Prefill { session, .. }
+            | EngineMsg::Evict { session } => self.session_blocked(*session),
+            EngineMsg::FlushAll => !self.jobs.is_empty() || !self.deferred.is_empty(),
+        };
+        if blocked {
+            self.deferred.push_back(msg);
+            return;
+        }
+        match msg {
+            EngineMsg::Chunk { session, chunk, submitted } => {
+                self.process_decode(session, chunk, submitted)
+            }
+            EngineMsg::Prefill { session, chunk, submitted } => {
+                let total = chunk.keys.len() / self.cfg.hd;
+                let out = self.out_tx.is_some().then(|| Vec::with_capacity(chunk.values.len()));
+                self.jobs.push_back(PrefillJob {
+                    session,
+                    chunk,
+                    done: 0,
+                    total,
+                    submitted,
+                    busy_ns: 0.0,
+                    out,
+                });
+            }
+            EngineMsg::Evict { session } => self.bank.evict(session),
+            EngineMsg::FlushAll => self.bank.flush_all(),
+        }
+    }
+
+    fn process_decode(&mut self, session: u64, chunk: DecodeChunk, submitted: Instant) {
+        let t0 = Instant::now();
+        let processed = self.bank.process(session, &chunk);
+        self.busy += t0.elapsed();
+        self.gauge.fetch_sub(1, Ordering::SeqCst);
+        let (out, seq) = match processed {
+            Ok(r) => r,
+            Err(e) => {
+                // a bad blob must cost one session, not the shard: drop
+                // the chunk (the broken blob was consumed by the restore
+                // attempt, so a re-arrival starts the session fresh) and
+                // keep serving everyone else
+                self.failed_chunks += 1;
+                eprintln!("shard {}: dropping chunk for session {session}: {e}", self.cfg.shard);
+                return;
+            }
+        };
+        ring_push(&mut self.latency_ns, self.latency_i, submitted.elapsed().as_nanos() as f64);
+        self.latency_i += 1;
+        self.chunks += 1;
+        self.tokens += chunk.keys.len() / self.cfg.hd;
+        if let Some(tx) = &self.out_tx {
+            let _ = tx.send(EngineOut { session, seq, out });
+        }
+    }
+
+    /// Advance the front prefill job by one quantum; on completion,
+    /// account the prompt, emit its output, and re-dispatch deferred
+    /// messages that were waiting on it.
+    fn run_quantum(&mut self) {
+        let hd = self.cfg.hd;
+        let Some(job) = self.jobs.front_mut() else {
+            // unreachable by the deferral invariant (deferred non-empty
+            // implies a queued job), but never risk a spin
+            if !self.deferred.is_empty() {
+                self.redispatch();
+            }
+            return;
+        };
+        let take = self.cfg.prefill_quantum.min(job.total - job.done);
+        let (a, b) = (job.done * hd, (job.done + take) * hd);
+        let t0 = Instant::now();
+        let res = self.bank.process_prefill(
+            job.session,
+            &job.chunk.queries[a..b],
+            &job.chunk.keys[a..b],
+            &job.chunk.values[a..b],
+        );
+        let el = t0.elapsed();
+        self.busy += el;
+        self.prefill_busy += el;
+        job.busy_ns += el.as_nanos() as f64;
+        let failed = match res {
+            Ok(out) => {
+                if let Some(acc) = &mut job.out {
+                    acc.extend_from_slice(&out);
+                }
+                job.done += take;
+                false
+            }
+            Err(e) => {
+                eprintln!(
+                    "shard {}: dropping prompt for session {}: {e}",
+                    self.cfg.shard, job.session
+                );
+                true
+            }
+        };
+        if failed || job.done >= job.total {
+            let job = self.jobs.pop_front().expect("front job exists");
+            self.gauge.fetch_sub(1, Ordering::SeqCst);
+            if failed {
+                self.failed_chunks += 1;
+            } else {
+                let ttft = job.submitted.elapsed().as_nanos() as f64;
+                ring_push(&mut self.ttft_ns, self.ttft_i, ttft);
+                self.ttft_i += 1;
+                self.prefill_chunks += 1;
+                self.prefill_tokens += job.total;
+                self.tokens += job.total;
+                let seq = self.bank.record_prefill(job.session, job.total, job.busy_ns);
+                if let (Some(tx), Some(out)) = (&self.out_tx, job.out) {
+                    let _ = tx.send(EngineOut { session: job.session, seq, out });
+                }
+            }
+            self.redispatch();
+        }
+    }
+
+    /// Re-dispatch every deferred message in order; messages still blocked
+    /// (e.g. behind the next queued prompt) re-defer, preserving order.
+    fn redispatch(&mut self) {
+        let pending: Vec<EngineMsg> = self.deferred.drain(..).collect();
+        for msg in pending {
+            self.dispatch(msg);
+        }
+    }
+}
+
+fn shard_worker(
+    cfg: WorkerCfg,
     factory: impl Fn(u64, usize) -> Box<dyn SeqMixer> + Send + 'static,
     rx: Receiver<EngineMsg>,
     out_tx: Option<Sender<EngineOut>>,
     gauge: Arc<AtomicUsize>,
     high: Arc<AtomicUsize>,
 ) -> (ShardReport, Vec<(u64, StreamStats)>) {
-    let mut bank = ShardBank::new(heads, max_resident, factory);
-    let mut busy = Duration::ZERO;
-    let mut latency_ns: Vec<f64> = Vec::new();
-    let mut latency_i = 0usize;
-    let (mut chunks, mut tokens) = (0usize, 0usize);
-    let mut failed_chunks = 0usize;
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            EngineMsg::Chunk { session, chunk, submitted } => {
-                let t0 = Instant::now();
-                let processed = bank.process(session, &chunk);
-                busy += t0.elapsed();
-                gauge.fetch_sub(1, Ordering::SeqCst);
-                let (out, seq) = match processed {
-                    Ok(r) => r,
-                    Err(e) => {
-                        // a bad blob must cost one session, not the shard:
-                        // drop the chunk (the broken blob was consumed by
-                        // the restore attempt, so a re-arrival starts the
-                        // session fresh) and keep serving everyone else
-                        failed_chunks += 1;
-                        eprintln!(
-                            "shard {shard}: dropping chunk for session {session}: {e}"
-                        );
-                        continue;
+    let mut st = WorkerState {
+        cfg,
+        bank: ShardBank::new(cfg.heads, cfg.max_resident, factory),
+        jobs: VecDeque::new(),
+        deferred: VecDeque::new(),
+        out_tx,
+        gauge,
+        busy: Duration::ZERO,
+        prefill_busy: Duration::ZERO,
+        latency_ns: Vec::new(),
+        latency_i: 0,
+        ttft_ns: Vec::new(),
+        ttft_i: 0,
+        chunks: 0,
+        tokens: 0,
+        failed_chunks: 0,
+        prefill_chunks: 0,
+        prefill_tokens: 0,
+    };
+    let mut open = true;
+    loop {
+        if st.jobs.is_empty() && st.deferred.is_empty() {
+            if !open {
+                break;
+            }
+            // fully idle: block for the next message
+            match rx.recv() {
+                Ok(msg) => st.dispatch(msg),
+                Err(_) => break,
+            }
+        }
+        if open {
+            // opportunistic bounded drain between quanta: decode chunks
+            // interleave with the in-flight prompt, but at most
+            // queue_depth of them per quantum so a decode flood cannot
+            // starve prefill progress either. The drain also stops while
+            // the worker already holds queue_depth queued prompts +
+            // deferred messages — beyond that, messages stay in the
+            // bounded sync_channel where the submitter blocks, so the
+            // backpressure contract survives deferral (the in-worker
+            // buffers cannot grow past ~2x queue_depth, which also keeps
+            // the O(jobs + deferred) ordering scans effectively O(1))
+            let mut budget = st.cfg.queue_depth.max(1);
+            while budget > 0 && st.jobs.len() + st.deferred.len() < st.cfg.queue_depth.max(1) {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        st.dispatch(msg);
+                        budget -= 1;
                     }
-                };
-                ring_push(&mut latency_ns, latency_i, submitted.elapsed().as_nanos() as f64);
-                latency_i += 1;
-                chunks += 1;
-                tokens += chunk.keys.len() / hd;
-                if let Some(tx) = &out_tx {
-                    let _ = tx.send(EngineOut { session, seq, out });
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
                 }
             }
-            EngineMsg::Evict { session } => bank.evict(session),
-            EngineMsg::FlushAll => bank.flush_all(),
         }
+        st.run_quantum();
     }
     let report = ShardReport {
-        shard,
-        sessions: bank.sessions(),
-        resident_sessions: bank.resident_sessions(),
-        evicted_sessions: bank.evicted_sessions(),
-        chunks,
-        tokens,
-        busy,
-        evictions: bank.evictions,
-        restores: bank.restores,
+        shard: st.cfg.shard,
+        sessions: st.bank.sessions(),
+        resident_sessions: st.bank.resident_sessions(),
+        evicted_sessions: st.bank.evicted_sessions(),
+        chunks: st.chunks,
+        tokens: st.tokens,
+        busy: st.busy,
+        prefill_busy: st.prefill_busy,
+        prefill_chunks: st.prefill_chunks,
+        prefill_tokens: st.prefill_tokens,
+        ttft_ns: st.ttft_ns,
+        evictions: st.bank.evictions,
+        restores: st.bank.restores,
         max_queue: high.load(Ordering::SeqCst),
-        failed_chunks,
-        resident_bytes: bank.resident_bytes(),
-        snapshot_bytes: bank.snapshot_bytes(),
-        latency_ns,
+        failed_chunks: st.failed_chunks,
+        resident_bytes: st.bank.resident_bytes(),
+        snapshot_bytes: st.bank.snapshot_bytes(),
+        latency_ns: st.latency_ns,
     };
-    (report, bank.take_stats())
+    (report, st.bank.take_stats())
 }
 
 #[cfg(test)]

@@ -92,7 +92,7 @@ pub fn serve_loop(
         for _ in n..bmax {
             tokens.extend_from_slice(&group[n - 1].tokens);
             targets.extend_from_slice(&group[n - 1].targets);
-            mask.extend(std::iter::repeat(0.0).take(t));
+            mask.extend(std::iter::repeat_n(0.0, t));
         }
 
         let out = model.eval(prog, &params, &tokens, &targets, &mask)?;
@@ -177,6 +177,12 @@ pub struct DecodeConfig {
     pub max_resident: usize,
     /// bounded per-shard queue depth (submit blocks when full)
     pub queue_depth: usize,
+    /// long-prompt tokens ingested per stream before decoding starts
+    /// (0 = decode-only, the legacy behavior)
+    pub prompt_tokens: usize,
+    /// prefill quantum: prompt tokens ingested per scheduling round, with
+    /// decode chunks interleaved between quanta
+    pub prefill_quantum: usize,
 }
 
 impl DecodeConfig {
@@ -192,6 +198,8 @@ impl DecodeConfig {
             threads: 1,
             max_resident: usize::MAX / 2,
             queue_depth: 64,
+            prompt_tokens: 0,
+            prefill_quantum: 512,
         }
     }
 
@@ -200,6 +208,7 @@ impl DecodeConfig {
         e.threads = self.threads;
         e.max_resident = self.max_resident;
         e.queue_depth = self.queue_depth;
+        e.prefill_quantum = self.prefill_quantum;
         e.seed = self.seed;
         e
     }
@@ -227,6 +236,12 @@ pub struct DecodeReport {
     /// cross-shard submit→completion latency percentiles, microseconds
     pub p50_us: f64,
     pub p99_us: f64,
+    /// prompt tokens ingested through the prefill path
+    pub prefill_tokens: usize,
+    /// prompt time-to-first-token percentiles, microseconds (NaN when the
+    /// run had no prompts)
+    pub ttft_p50_us: f64,
+    pub ttft_p99_us: f64,
     pub evictions: usize,
     pub restores: usize,
 }
@@ -257,6 +272,16 @@ impl DecodeReport {
             "  cross-shard latency p50 {:.1} us  p99 {:.1} us  |  {} evictions, {} restores",
             self.p50_us, self.p99_us, self.evictions, self.restores,
         );
+        if self.prefill_tokens > 0 {
+            println!(
+                "  prefill: {} prompt tokens/stream (quantum {})  ttft p50 {:.1} us  \
+                 p99 {:.1} us",
+                self.cfg.prompt_tokens,
+                self.cfg.prefill_quantum,
+                self.ttft_p50_us,
+                self.ttft_p99_us,
+            );
+        }
         let wall = self.wall.as_secs_f64().max(1e-12);
         for s in &self.shards {
             println!(
@@ -295,6 +320,20 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
     let mut mk = || -> Vec<f32> { (0..cfg.chunk * hd).map(|_| rng.normal() as f32).collect() };
     let (q, k, v) = (mk(), mk(), mk());
     let t0 = Instant::now();
+    if cfg.prompt_tokens > 0 {
+        // long-prompt admission: every stream opens with a prompt that the
+        // engine ingests in prefill quanta, interleaved with the decode
+        // chunks submitted below
+        let mut mkp =
+            || -> Vec<f32> { (0..cfg.prompt_tokens * hd).map(|_| rng.normal() as f32).collect() };
+        let (pq, pk, pv) = (mkp(), mkp(), mkp());
+        for s in 0..cfg.streams as u64 {
+            engine.submit_prefill(
+                s,
+                DecodeChunk { queries: pq.clone(), keys: pk.clone(), values: pv.clone() },
+            );
+        }
+    }
     for round in 0..rounds {
         let len = cfg.chunk.min(cfg.tokens - round * cfg.chunk);
         for s in 0..cfg.streams as u64 {
@@ -330,6 +369,9 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
         per_stream,
         p50_us: report.latency_us(50.0),
         p99_us: report.latency_us(99.0),
+        prefill_tokens: report.prefill_tokens(),
+        ttft_p50_us: report.ttft_us(50.0),
+        ttft_p99_us: report.ttft_us(99.0),
         evictions: report.evictions(),
         restores: report.restores(),
         shards: report.shards,
@@ -341,7 +383,7 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 /// `ovq serve --model M [--requests N] [--clients C] [--task T]
 ///            [--streams S] [--heads H] [--dhead D] [--nmax N]
 ///            [--decode-tokens T] [--threads W] [--max-resident R]
-///            [--queue-depth Q]`
+///            [--queue-depth Q] [--prompt-tokens P] [--prefill-quantum Q]`
 /// Demo driver: phase 1 runs the batched scorer against the compiled HLO
 /// program (skipped with a notice when no backend/artifacts are
 /// available); phase 2 runs the sharded streaming-decode engine.
@@ -362,13 +404,18 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     dcfg.threads = args.opt_usize("threads", dcfg.threads);
     dcfg.max_resident = args.opt_usize("max-resident", dcfg.max_resident);
     dcfg.queue_depth = args.opt_usize("queue-depth", dcfg.queue_depth);
+    dcfg.prompt_tokens = args.opt_usize("prompt-tokens", dcfg.prompt_tokens);
+    dcfg.prefill_quantum = args.opt_usize("prefill-quantum", dcfg.prefill_quantum);
     crate::info!(
-        "streaming decode: {} streams x {} heads, d={} N={} over {} shard threads",
+        "streaming decode: {} streams x {} heads, d={} N={} over {} shard threads \
+         ({} prompt tokens, prefill quantum {})",
         dcfg.streams,
         dcfg.heads,
         dcfg.d_head,
         n_max,
-        dcfg.threads
+        dcfg.threads,
+        dcfg.prompt_tokens,
+        dcfg.prefill_quantum
     );
     run_decode_engine(&dcfg).print();
     Ok(())
@@ -487,6 +534,28 @@ mod tests {
         // every stream landed on exactly one shard and none were lost
         assert_eq!(r.shards.iter().map(|s| s.sessions).sum::<usize>(), 6);
         assert!(r.p99_us >= r.p50_us * 0.5);
+    }
+
+    #[test]
+    fn decode_engine_with_prompts_reports_ttft() {
+        // every stream opens with a 256-token prompt ingested in 64-token
+        // quanta; accounting must cover prompt + decode and surface ttft
+        let mut cfg = DecodeConfig::new(64);
+        cfg.streams = 2;
+        cfg.heads = 1;
+        cfg.d_head = 8;
+        cfg.chunk = 16;
+        cfg.tokens = 32;
+        cfg.prompt_tokens = 256;
+        cfg.prefill_quantum = 64;
+        let r = run_decode_engine(&cfg);
+        assert_eq!(r.prefill_tokens, 2 * 256);
+        assert_eq!(r.tokens_total, 2 * (256 + 32));
+        assert!(r.ttft_p50_us > 0.0);
+        assert!(r.ttft_p99_us >= r.ttft_p50_us * 0.5);
+        for s in &r.per_stream {
+            assert_eq!(s.tokens, 256 + 32, "stream {} accounting", s.stream);
+        }
     }
 
     #[test]

@@ -51,6 +51,15 @@ pub struct TrafficConfig {
     pub return_p: f64,
     /// chunk lengths to mix (uniform draw)
     pub chunk_sizes: Vec<usize>,
+    /// long-prompt admission: when non-empty, a session's FIRST arrival
+    /// is, with probability `prompt_p`, a prefill event whose length is
+    /// drawn uniformly from here (e.g. the 4k/16k/64k mix) — the
+    /// long-context workload the paper's §4 claims target. Empty by
+    /// default, which leaves legacy traces untouched.
+    pub prompt_sizes: Vec<usize>,
+    /// probability a fresh session opens with a long prompt (only
+    /// consulted when `prompt_sizes` is non-empty)
+    pub prompt_p: f64,
     pub seed: u64,
 }
 
@@ -65,8 +74,19 @@ impl TrafficConfig {
             abandon_p: 0.05,
             return_p: 0.3,
             chunk_sizes: vec![1, 8, 32],
+            prompt_sizes: Vec::new(),
+            prompt_p: 0.0,
             seed: 0x7AFF1C,
         }
+    }
+
+    /// Enable long-prompt admissions: every fresh session opens, with
+    /// probability `p`, with a prompt drawn from `sizes` (the paper's
+    /// long-context regime; 4k/16k/64k is the canonical mix).
+    pub fn with_prompts(mut self, sizes: Vec<usize>, p: f64) -> TrafficConfig {
+        self.prompt_sizes = sizes;
+        self.prompt_p = p;
+        self
     }
 }
 
@@ -80,6 +100,9 @@ pub struct TrafficEvent {
     pub session: u64,
     pub len: usize,
     pub abandon: bool,
+    /// long-prompt admission: the replayer submits this event through the
+    /// engine's quantized prefill path instead of the decode path
+    pub prefill: bool,
 }
 
 /// Generate a deterministic arrival trace.
@@ -87,6 +110,7 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<TrafficEvent> {
     assert!(cfg.sessions > 0 && !cfg.chunk_sizes.is_empty());
     let mut rng = Rng::new(cfg.seed);
     let mut dormant = vec![false; cfg.sessions];
+    let mut seen = vec![false; cfg.sessions];
     let mut events = Vec::with_capacity(cfg.events);
     let mut t_us = 0u64;
     let mut burst: Option<u64> = None;
@@ -110,9 +134,19 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<TrafficEvent> {
                 s
             }
         };
-        let len = cfg.chunk_sizes[rng.usize_below(cfg.chunk_sizes.len())];
+        // a session's first-ever arrival may be a long prompt (guard the
+        // rng draws so prompt-free configs keep their legacy streams)
+        let prefill = !seen[session as usize]
+            && !cfg.prompt_sizes.is_empty()
+            && rng.bool(cfg.prompt_p);
+        seen[session as usize] = true;
+        let len = if prefill {
+            cfg.prompt_sizes[rng.usize_below(cfg.prompt_sizes.len())]
+        } else {
+            cfg.chunk_sizes[rng.usize_below(cfg.chunk_sizes.len())]
+        };
         let abandon = rng.bool(cfg.abandon_p);
-        events.push(TrafficEvent { at_us: t_us, session, len, abandon });
+        events.push(TrafficEvent { at_us: t_us, session, len, abandon, prefill });
         if abandon {
             dormant[session as usize] = true;
             burst = None;
@@ -129,6 +163,10 @@ pub struct TraceSummary {
     pub events: usize,
     pub distinct_sessions: usize,
     pub tokens: usize,
+    /// long-prompt admissions in the trace
+    pub prompts: usize,
+    /// tokens arriving as prompts (subset of `tokens`)
+    pub prompt_tokens: usize,
     /// share of all events going to the single hottest session
     pub hottest_share: f64,
     /// longest same-session back-to-back run
@@ -139,11 +177,16 @@ pub struct TraceSummary {
 pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
     let mut per_session: HashMap<u64, usize> = HashMap::new();
     let mut tokens = 0usize;
+    let (mut prompts, mut prompt_tokens) = (0usize, 0usize);
     let (mut max_burst, mut cur_burst) = (0usize, 0usize);
     let mut last: Option<u64> = None;
     for e in events {
         *per_session.entry(e.session).or_default() += 1;
         tokens += e.len;
+        if e.prefill {
+            prompts += 1;
+            prompt_tokens += e.len;
+        }
         cur_burst = if last == Some(e.session) { cur_burst + 1 } else { 1 };
         max_burst = max_burst.max(cur_burst);
         last = Some(e.session);
@@ -153,6 +196,8 @@ pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
         events: events.len(),
         distinct_sessions: per_session.len(),
         tokens,
+        prompts,
+        prompt_tokens,
         hottest_share: hottest as f64 / events.len().max(1) as f64,
         max_burst,
         span_us: events.last().map_or(0, |e| e.at_us),
@@ -178,6 +223,10 @@ pub fn synth_chunk(data_seed: u64, session: u64, seq: usize, len: usize, hd: usi
 /// decode-bound even at 4 worker threads.
 const REPLAY_POOL_VARIANTS: u64 = 8;
 
+/// Variants kept per PROMPT length — prompts run to 64k tokens, so the
+/// pool would otherwise hold hundreds of MB of synthetic activations.
+const REPLAY_PROMPT_VARIANTS: u64 = 2;
+
 /// Replay a trace into the engine as fast as the bounded queues accept it
 /// (closed only by backpressure — the measured regime for aggregate
 /// tok/s). Returns total submitted tokens. Outputs are drained
@@ -201,22 +250,25 @@ pub fn replay(
     let mut tokens = 0usize;
     for e in events {
         let s = seq.entry(e.session).or_insert(0);
+        let variants = if e.prefill { REPLAY_PROMPT_VARIANTS } else { REPLAY_POOL_VARIANTS };
         let variant = e
             .session
             .wrapping_mul(0x9E37_79B9)
             .wrapping_add(*s as u64)
-            % REPLAY_POOL_VARIANTS;
+            % variants;
         let proto = pool
             .entry((e.len, variant))
             .or_insert_with(|| synth_chunk(data_seed, variant, e.len, e.len, hd));
-        engine.submit(
-            e.session,
-            DecodeChunk {
-                queries: proto.queries.clone(),
-                keys: proto.keys.clone(),
-                values: proto.values.clone(),
-            },
-        );
+        let payload = DecodeChunk {
+            queries: proto.queries.clone(),
+            keys: proto.keys.clone(),
+            values: proto.values.clone(),
+        };
+        if e.prefill {
+            engine.submit_prefill(e.session, payload);
+        } else {
+            engine.submit(e.session, payload);
+        }
         *s += 1;
         tokens += e.len;
         if e.abandon {
@@ -272,6 +324,30 @@ mod tests {
         for w in events.windows(2) {
             assert!(w[1].at_us >= w[0].at_us, "open-loop times must be monotone");
         }
+    }
+
+    #[test]
+    fn prompt_arrivals_open_sessions_and_stay_first() {
+        let cfg = TrafficConfig::new(64, 2000).with_prompts(vec![4096, 16384, 65536], 0.8);
+        let events = generate(&cfg);
+        let t = summarize(&events);
+        assert!(t.prompts > 10, "expected prompt admissions, got {}", t.prompts);
+        assert!(t.prompt_tokens >= t.prompts * 4096);
+        // a prompt is only ever a session's first arrival, and its length
+        // comes from the prompt mix
+        let mut seen = std::collections::HashSet::new();
+        for e in &events {
+            if e.prefill {
+                assert!(seen.insert(e.session), "session {} prefilled twice", e.session);
+                assert!(cfg.prompt_sizes.contains(&e.len), "bad prompt len {}", e.len);
+            } else {
+                assert!(cfg.chunk_sizes.contains(&e.len));
+                seen.insert(e.session);
+            }
+        }
+        // prompt-free configs are byte-for-byte what they were before
+        let plain = TrafficConfig::new(64, 2000);
+        assert!(generate(&plain).iter().all(|e| !e.prefill));
     }
 
     #[test]

@@ -63,7 +63,7 @@ impl TaskGen for PositionalIcr {
         // c-th copy of a key is always bound to its c-th value (order of
         // appearance defines the binding, as in the paper).
         let mut slots: Vec<usize> = (0..n_groups)
-            .flat_map(|g| std::iter::repeat(g).take(self.n_copies))
+            .flat_map(|g| std::iter::repeat_n(g, self.n_copies))
             .collect();
         rng.shuffle(&mut slots);
         let mut copy_counter = vec![0usize; n_groups];

@@ -16,7 +16,9 @@ fn usage() -> ! {
            eval    --model M --task T --ckpt F   length-sweep evaluation\n\
            exp <id>                     reproduce a paper figure/table (f1 f4 f4r f5 f6\n\
                                         t1 f7 f8 f9 f10 f12 f13 f14 f15 f16 s34) [--quick]\n\
-           serve   --model M --ckpt F   batched scoring server demo\n\
+           serve   --model M --ckpt F   batched scoring + streaming decode demo\n\
+                                        [--streams S --threads W --prompt-tokens P\n\
+                                         --prefill-quantum Q --max-resident R]\n\
            flops                        print the App. D FLOPs tables\n\
          \n\
          options: --artifacts DIR (or $OVQ_ARTIFACTS), --out DIR (results)\n"

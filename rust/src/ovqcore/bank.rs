@@ -31,6 +31,7 @@ use super::mixer::{Scratch, SeqMixer};
 use super::snapshot;
 
 /// One queued decode chunk for a stream, packed `[len, heads, d]`.
+#[derive(Debug, Clone)]
 pub struct DecodeChunk {
     pub queries: Vec<f32>,
     pub keys: Vec<f32>,
@@ -53,12 +54,23 @@ pub const LATENCY_WINDOW: usize = 4096;
 /// Per-stream serving telemetry.
 #[derive(Debug, Clone, Default)]
 pub struct StreamStats {
+    /// all tokens ingested (decode chunks + prefilled prompts)
     pub tokens: usize,
+    /// completed units — decode chunks and whole prompts both count one,
+    /// so this doubles as the stream's sequence counter
     pub chunks: usize,
     /// engine latency of the most recent [`LATENCY_WINDOW`] processed
-    /// chunks, nanoseconds (ring-buffered; percentiles are over this
-    /// window)
+    /// decode chunks, nanoseconds (ring-buffered; percentiles are over
+    /// this window)
     pub chunk_ns: Vec<f64>,
+    /// prompt tokens ingested through the prefill path (subset of `tokens`)
+    pub prefill_tokens: usize,
+    /// completed prefill prompts (subset of `chunks`)
+    pub prefill_chunks: usize,
+    /// per-prompt prefill processing latency ring, nanoseconds — kept
+    /// apart from `chunk_ns` so a 64k prompt doesn't drown the decode
+    /// percentiles
+    pub prefill_ns: Vec<f64>,
 }
 
 impl StreamStats {
@@ -68,6 +80,19 @@ impl StreamStats {
         self.tokens += tokens;
         self.chunks += 1;
         ring_push(&mut self.chunk_ns, self.chunks - 1, elapsed_ns);
+        self.chunks
+    }
+
+    /// Account one completed prefill prompt of `tokens` tokens whose
+    /// quanta took `elapsed_ns` of processing in total. Returns the
+    /// stream's sequence number (shared with decode chunks, so a
+    /// prompt-then-decode stream orders globally).
+    pub fn record_prefill(&mut self, tokens: usize, elapsed_ns: f64) -> usize {
+        self.tokens += tokens;
+        self.chunks += 1;
+        self.prefill_tokens += tokens;
+        self.prefill_chunks += 1;
+        ring_push(&mut self.prefill_ns, self.prefill_chunks - 1, elapsed_ns);
         self.chunks
     }
 }
@@ -95,11 +120,39 @@ pub fn process_packed(
     scratch: &mut Scratch,
     panel: &mut Vec<f32>,
 ) -> Vec<f32> {
+    process_packed_inner(mixers, &chunk.queries, &chunk.keys, &chunk.values, scratch, panel, false)
+}
+
+/// [`process_packed`] through each mixer's blocked
+/// [`SeqMixer::process_prefill`] path — same layout, same de-interleave,
+/// bit-identical outputs, amortized kernels. Takes raw slices so the
+/// engine can feed quantum-sized sub-views of a long prompt without
+/// copying it apart.
+pub fn process_packed_prefill(
+    mixers: &mut [Box<dyn SeqMixer>],
+    queries: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    scratch: &mut Scratch,
+    panel: &mut Vec<f32>,
+) -> Vec<f32> {
+    process_packed_inner(mixers, queries, keys, values, scratch, panel, true)
+}
+
+fn process_packed_inner(
+    mixers: &mut [Box<dyn SeqMixer>],
+    queries: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    scratch: &mut Scratch,
+    panel: &mut Vec<f32>,
+    prefill: bool,
+) -> Vec<f32> {
     let h = mixers.len();
     let (di, dv) = (mixers[0].d_in(), mixers[0].d_out());
-    let len = chunk.keys.len() / (h * di);
-    debug_assert_eq!(chunk.queries.len(), len * h * di);
-    debug_assert_eq!(chunk.values.len(), len * h * dv);
+    let len = keys.len() / (h * di);
+    debug_assert_eq!(queries.len(), len * h * di);
+    debug_assert_eq!(values.len(), len * h * dv);
     let mut out = vec![0.0f32; len * h * dv];
 
     // panel layout: q [len*di] | k [len*di] | v [len*dv] | o [len*dv]
@@ -116,12 +169,16 @@ pub fn process_packed(
         // gather this head's strided rows into contiguous panels
         for i in 0..len {
             let qrow = (i * h + head) * di;
-            pq[i * di..(i + 1) * di].copy_from_slice(&chunk.queries[qrow..qrow + di]);
-            pk[i * di..(i + 1) * di].copy_from_slice(&chunk.keys[qrow..qrow + di]);
+            pq[i * di..(i + 1) * di].copy_from_slice(&queries[qrow..qrow + di]);
+            pk[i * di..(i + 1) * di].copy_from_slice(&keys[qrow..qrow + di]);
             let vrow = (i * h + head) * dv;
-            pv[i * dv..(i + 1) * dv].copy_from_slice(&chunk.values[vrow..vrow + dv]);
+            pv[i * dv..(i + 1) * dv].copy_from_slice(&values[vrow..vrow + dv]);
         }
-        mixer.process_chunk(pq, pk, pv, po, scratch);
+        if prefill {
+            mixer.process_prefill(pq, pk, pv, po, scratch);
+        } else {
+            mixer.process_chunk(pq, pk, pv, po, scratch);
+        }
         // scatter back
         for i in 0..len {
             let orow = (i * h + head) * dv;
@@ -250,6 +307,28 @@ impl MixerBank {
         None
     }
 
+    /// Ingest a long prompt for one stream through the blocked prefill
+    /// path, immediately (the single-threaded bank has no scheduler to
+    /// interleave with — quantum slicing and decode interleaving live in
+    /// `coordinator::engine`). Outputs are bit-identical to submitting
+    /// the same tokens as decode chunks.
+    pub fn prefill(&mut self, stream: usize, chunk: &DecodeChunk) -> DecodeOut {
+        let h = self.heads;
+        let t0 = std::time::Instant::now();
+        let out = process_packed_prefill(
+            &mut self.mixers[stream * h..(stream + 1) * h],
+            &chunk.queries,
+            &chunk.keys,
+            &chunk.values,
+            &mut self.scratch,
+            &mut self.panel,
+        );
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        let len = chunk.keys.len() / (h * self.d_in);
+        self.stats[stream].record_prefill(len, elapsed_ns);
+        DecodeOut { stream, out, elapsed_ns }
+    }
+
     /// Drain every queue to completion, returning outputs in completion
     /// (scheduling) order.
     pub fn drain(&mut self) -> Vec<DecodeOut> {
@@ -277,6 +356,9 @@ struct Resident {
     last_used: u64,
 }
 
+/// Per-(session, head) mixer factory used by session admission.
+pub type MixerFactory = Box<dyn Fn(u64, usize) -> Box<dyn SeqMixer> + Send>;
+
 /// Per-shard session store with admission, LRU eviction to snapshot
 /// blobs, and transparent restore. Owned by exactly one engine worker
 /// thread; completely single-threaded itself, so it is also directly
@@ -290,7 +372,7 @@ pub struct ShardBank {
     d_in: usize,
     d_out: usize,
     max_resident: usize,
-    factory: Box<dyn Fn(u64, usize) -> Box<dyn SeqMixer> + Send>,
+    factory: MixerFactory,
     resident: Vec<Resident>,
     /// evicted sessions, session id -> packed per-head snapshot blob
     evicted: HashMap<u64, Vec<u8>>,
@@ -402,6 +484,40 @@ impl ShardBank {
         let elapsed_ns = t0.elapsed().as_nanos() as f64;
         let seq = self.stats.entry(id).or_default().record(len, elapsed_ns);
         Ok((out, seq))
+    }
+
+    /// Process one prefill quantum (a packed `[len, heads, d]` slice of a
+    /// longer prompt) for `id` through the blocked prefill path. Same
+    /// admission/restore/LRU machinery as [`ShardBank::process`] — a
+    /// session evicted between quanta by interleaved decode pressure is
+    /// restored transparently, pending chunk tail and all, so the prompt
+    /// continues bit-identically. Stats are NOT recorded here; the caller
+    /// accounts the whole prompt once via [`ShardBank::record_prefill`].
+    pub fn process_prefill(
+        &mut self,
+        id: u64,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+    ) -> Result<Vec<f32>> {
+        let slot = self.ensure_resident(id)?;
+        self.clock += 1;
+        self.resident[slot].last_used = self.clock;
+        Ok(process_packed_prefill(
+            &mut self.resident[slot].mixers,
+            queries,
+            keys,
+            values,
+            &mut self.scratch,
+            &mut self.panel,
+        ))
+    }
+
+    /// Account one completed prefill prompt (all quanta processed) of
+    /// `tokens` tokens that took `elapsed_ns` of processing; returns the
+    /// session's sequence number, shared with decode chunks.
+    pub fn record_prefill(&mut self, id: u64, tokens: usize, elapsed_ns: f64) -> usize {
+        self.stats.entry(id).or_default().record_prefill(tokens, elapsed_ns)
     }
 
     /// Make `id` resident (create / restore), evicting LRU sessions if the
@@ -583,6 +699,68 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn bank_prefill_matches_queued_decode_bit_exactly() {
+        // the same packed tokens through prefill() and through
+        // submit()+step() must agree to the bit, and the stats must
+        // attribute them to the prefill path
+        let (d, len) = (8usize, 40usize);
+        let mut rng = Rng::new(9);
+        let mut a = ovq_bank(1, 2, d, 32, 16);
+        let mut b = ovq_bank(1, 2, d, 32, 16);
+        let chunk = chunk_of(&mut rng, len, 2 * d);
+        let got = a.prefill(0, &chunk);
+        b.submit(
+            0,
+            DecodeChunk {
+                queries: chunk.queries.clone(),
+                keys: chunk.keys.clone(),
+                values: chunk.values.clone(),
+            },
+        );
+        let want = b.step().unwrap();
+        assert_eq!(got.out.len(), want.out.len());
+        assert!(
+            got.out.iter().zip(&want.out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "prefill path diverged from the decode path"
+        );
+        assert_eq!(a.stats[0].prefill_tokens, len);
+        assert_eq!(a.stats[0].prefill_chunks, 1);
+        assert_eq!(a.stats[0].tokens, len);
+        assert_eq!(b.stats[0].prefill_tokens, 0);
+    }
+
+    #[test]
+    fn shard_prefill_survives_eviction_between_quanta() {
+        // a prompt ingested in two quanta with a freeze/thaw in between
+        // must equal one uninterrupted prefill — the property that lets
+        // the engine LRU-evict a half-prefilled session under pressure
+        let (heads, d, total, cut) = (2usize, 8usize, 50usize, 23usize);
+        let mut rng = Rng::new(10);
+        let mut shard = ovq_shard(heads, d, 32, 16, 4);
+        let mut mirror = ovq_shard(heads, d, 32, 16, 4);
+        let c = chunk_of(&mut rng, total, heads * d);
+        let hd = heads * d;
+
+        let mut got = shard
+            .process_prefill(8, &c.queries[..cut * hd], &c.keys[..cut * hd], &c.values[..cut * hd])
+            .unwrap();
+        shard.evict(8); // freeze mid-prompt, pending tail and all
+        assert_eq!(shard.evictions, 1);
+        let (q2, k2, v2) = (&c.queries[cut * hd..], &c.keys[cut * hd..], &c.values[cut * hd..]);
+        got.extend_from_slice(&shard.process_prefill(8, q2, k2, v2).unwrap());
+        assert_eq!(shard.restores, 1);
+        let seq = shard.record_prefill(8, total, 1.0);
+        assert_eq!(seq, 1);
+        assert_eq!(shard.session_stats(8).unwrap().prefill_tokens, total);
+
+        let want = mirror.process_prefill(8, &c.queries, &c.keys, &c.values).unwrap();
+        assert!(
+            got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "mid-prompt eviction changed the prefill outputs"
+        );
     }
 
     #[test]

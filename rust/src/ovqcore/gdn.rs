@@ -39,9 +39,25 @@ impl GdnState {
     }
 
     pub fn write_gated(&mut self, k: &[f32], v: &[f32], alpha: f32, beta: f32) {
+        let mut pred = vec![0.0f32; self.d];
+        self.write_gated_into(k, v, alpha, beta, &mut pred);
+    }
+
+    /// [`GdnState::write_gated`] with a caller-owned `pred` buffer (length
+    /// `d`, any contents — it is overwritten), so the prefill path absorbs
+    /// a whole prompt without one heap allocation per token.
+    pub fn write_gated_into(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        alpha: f32,
+        beta: f32,
+        pred: &mut [f32],
+    ) {
         let d = self.d;
         // pred = k S  (length d)
-        let mut pred = vec![0.0f32; d];
+        let pred = &mut pred[..d];
+        pred.iter_mut().for_each(|p| *p = 0.0);
         for i in 0..d {
             let ki = k[i];
             if ki != 0.0 {
@@ -103,6 +119,40 @@ impl SeqMixer for GdnState {
                     *o += qi * sj;
                 }
             }
+        }
+    }
+
+    /// Prompt ingestion. The delta-rule recurrence is dense and strictly
+    /// sequential (S_t depends on S_{t-1} through the prediction term), so
+    /// a chunk-parallel form would materialize the [L, d, d] ΔS tensor —
+    /// the §3.4 cost this repo exists to avoid — AND reassociate the FP
+    /// accumulation, breaking bit-identity with serial decode. What CAN
+    /// batch safely: the per-token `pred` scratch comes from the shared
+    /// [`Scratch`] instead of a fresh heap allocation per token.
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let d = self.d;
+        let len = keys.len() / d;
+        debug_assert_eq!(queries.len(), len * d);
+        debug_assert_eq!(values.len(), len * d);
+        debug_assert_eq!(out.len(), len * d);
+        if scratch.buf.len() < d {
+            scratch.buf.resize(d, 0.0);
+        }
+        let (a, b) = (self.alpha, self.beta);
+        for i in 0..len {
+            {
+                let pred = &mut scratch.buf[..d];
+                let (k, v) = (&keys[i * d..(i + 1) * d], &values[i * d..(i + 1) * d]);
+                self.write_gated_into(k, v, a, b, pred);
+            }
+            self.read(&queries[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d], scratch);
         }
     }
 

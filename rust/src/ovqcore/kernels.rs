@@ -100,6 +100,58 @@ pub fn axpy_rows(m: &[f32], rows: usize, d: usize, w: &[f32], acc: &mut [f32]) {
     }
 }
 
+/// Batched (prefill) form of [`matvec`]: `out[i * rows + r] = dot(m[r],
+/// xs[i])` for every query `i in 0..len`. The matrix is swept in
+/// [`SLOT_BLOCK`]-row tiles reused across every query, so a whole prompt
+/// chunk streams the dictionary once per tile instead of once per token.
+///
+/// Bit-identity contract: for every (query, row) pair the accumulation
+/// order is exactly [`matvec`]'s — tiles are [`SLOT_BLOCK`]-aligned
+/// (a multiple of 4), so the 4-row groups and the `dot`-based tail fall
+/// on the same row boundaries as a per-query `matvec` call over the full
+/// matrix. The prefill golden tests (rust/tests/golden.rs) rely on this
+/// to keep blocked prefill bit-identical to serial decode.
+pub fn matmul_rows(m: &[f32], rows: usize, d: usize, xs: &[f32], len: usize, out: &mut [f32]) {
+    debug_assert!(m.len() >= rows * d);
+    debug_assert!(xs.len() >= len * d);
+    debug_assert!(out.len() >= len * rows);
+    let mut s0 = 0;
+    while s0 < rows {
+        let sn = (s0 + SLOT_BLOCK).min(rows);
+        let block = &m[s0 * d..sn * d];
+        let brows = sn - s0;
+        for i in 0..len {
+            let x = &xs[i * d..(i + 1) * d];
+            let orow = &mut out[i * rows + s0..i * rows + sn];
+            let mut r = 0;
+            while r + 4 <= brows {
+                let m0 = &block[r * d..r * d + d];
+                let m1 = &block[(r + 1) * d..(r + 1) * d + d];
+                let m2 = &block[(r + 2) * d..(r + 2) * d + d];
+                let m3 = &block[(r + 3) * d..(r + 3) * d + d];
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for j in 0..d {
+                    let xj = x[j];
+                    a0 += m0[j] * xj;
+                    a1 += m1[j] * xj;
+                    a2 += m2[j] * xj;
+                    a3 += m3[j] * xj;
+                }
+                orow[r] = a0;
+                orow[r + 1] = a1;
+                orow[r + 2] = a2;
+                orow[r + 3] = a3;
+                r += 4;
+            }
+            while r < brows {
+                orow[r] = dot(&block[r * d..r * d + d], x);
+                r += 1;
+            }
+        }
+        s0 = sn;
+    }
+}
+
 /// Tiled nearest-row search: for each of `len` keys, the index and value
 /// of the maximum inner product over `n` dictionary rows. The dictionary
 /// is swept in [`SLOT_BLOCK`]-row tiles and each tile is reused by every
@@ -248,6 +300,31 @@ mod tests {
             }
             for j in 0..d {
                 assert!((acc[j] - want[j]).abs() < 1e-3 * (1.0 + want[j].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_rows_is_bit_identical_to_per_query_matvec() {
+        // the prefill contract: the batched form must not just be close,
+        // it must reproduce matvec's bits for every (query, row) pair —
+        // exercised across tile boundaries and 4-row tail remainders
+        let mut rng = Rng::new(7);
+        for (rows, d, len) in [(1usize, 4usize, 1usize), (7, 8, 3), (64, 16, 5), (131, 32, 9)] {
+            let m = randv(&mut rng, rows * d);
+            let xs = randv(&mut rng, len * d);
+            let mut got = vec![0.0f32; len * rows];
+            matmul_rows(&m, rows, d, &xs, len, &mut got);
+            let mut want = vec![0.0f32; rows];
+            for i in 0..len {
+                matvec(&m, rows, d, &xs[i * d..(i + 1) * d], &mut want);
+                for r in 0..rows {
+                    assert_eq!(
+                        got[i * rows + r].to_bits(),
+                        want[r].to_bits(),
+                        "rows={rows} d={d} query {i} row {r}"
+                    );
+                }
             }
         }
     }

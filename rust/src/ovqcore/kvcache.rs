@@ -45,7 +45,7 @@ impl KvCache {
         anyhow::ensure!(
             c.keys.len() % c.d == 0
                 && c.values.len() == c.keys.len()
-                && c.window.map_or(true, |w| w > 0 && c.len() <= w),
+                && c.window.is_none_or(|w| w > 0 && c.len() <= w),
             "kv_cache snapshot has inconsistent shapes"
         );
         Ok(c)
@@ -127,6 +127,58 @@ impl SeqMixer for KvCache {
             out,
             scratch,
         );
+    }
+
+    /// Blocked prompt ingestion: the whole block is appended in one bulk
+    /// extend, each read runs over the exact sliding slice serial decode
+    /// would have seen (`[max(0, i+1-w), i+1)` of the concatenated
+    /// history), and the window invariant is restored with ONE front
+    /// drain at the end — instead of one O(w*d) memmove per token.
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let d = self.d;
+        let len = keys.len() / d;
+        debug_assert_eq!(queries.len(), len * d);
+        debug_assert_eq!(values.len(), len * d);
+        debug_assert_eq!(out.len(), len * d);
+        let base = self.len();
+        self.keys.extend_from_slice(keys);
+        self.values.extend_from_slice(values);
+        self.t += len;
+        for i in 0..len {
+            let end = base + i + 1;
+            let start = match self.window {
+                Some(w) => end.saturating_sub(w),
+                None => 0,
+            };
+            dict_softmax_read(
+                &queries[i * d..(i + 1) * d],
+                &[],
+                &[],
+                &[],
+                0,
+                d,
+                self.beta,
+                &self.keys[start * d..end * d],
+                &self.values[start * d..end * d],
+                end - start,
+                &mut out[i * d..(i + 1) * d],
+                scratch,
+            );
+        }
+        if let Some(w) = self.window {
+            let drop = self.len().saturating_sub(w);
+            if drop > 0 {
+                self.keys.drain(..drop * d);
+                self.values.drain(..drop * d);
+            }
+        }
     }
 
     fn snapshot(&self, w: &mut snapshot::Writer) {

@@ -102,6 +102,37 @@ impl SeqMixer for LinearAttnState {
         out.iter_mut().for_each(|o| *o /= den);
     }
 
+    /// Prompt ingestion. Like GDN, the state recurrence is dense: the
+    /// standard chunk-parallel prefill materializes ΔS ∈ [L, d_k, d_v]
+    /// (the paper's §3.4 contrast case) and reassociates the FP sums, so
+    /// it cannot be bit-identical to serial decode. The override is the
+    /// fused write-then-read loop — allocation-free already, since both
+    /// `write` and `read` stream straight over S — kept explicit so the
+    /// prefill path is first-class on every machine and the golden tests
+    /// pin its equivalence.
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let (dk, dv) = (self.dk, self.dv);
+        let len = keys.len() / dk;
+        debug_assert_eq!(queries.len(), len * dk);
+        debug_assert_eq!(values.len(), len * dv);
+        debug_assert_eq!(out.len(), len * dv);
+        for i in 0..len {
+            self.write(&keys[i * dk..(i + 1) * dk], &values[i * dv..(i + 1) * dv]);
+            self.read(
+                &queries[i * dk..(i + 1) * dk],
+                &mut out[i * dv..(i + 1) * dv],
+                scratch,
+            );
+        }
+    }
+
     fn snapshot(&self, w: &mut snapshot::Writer) {
         w.usize(self.dk);
         w.usize(self.dv);

@@ -123,6 +123,26 @@ pub trait SeqMixer: Send {
         }
     }
 
+    /// Ingest `len` prompt tokens in one call — the prefill path. The
+    /// semantics are IDENTICAL to [`SeqMixer::process_chunk`] (write
+    /// (k_i, v_i), then read q_i into `out[i]`, for each i in order), and
+    /// implementations MUST stay bit-identical to that serial token loop:
+    /// rust/tests/golden.rs compares the two paths with `to_bits`
+    /// equality for every mixer. What overrides buy is batching — staging
+    /// whole segments at once and amortizing the dictionary sweeps
+    /// (tiled [`kernels::matmul_rows`] / [`kernels::nearest_rows`])
+    /// across the block instead of dispatching per token.
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        self.process_chunk(queries, keys, values, out, scratch);
+    }
+
     /// Flush any buffered chunk tail into the long-term state (no-op for
     /// mixers without chunk buffering). Reads already see buffered tokens;
     /// this only forces the merge, e.g. at end-of-sequence.
@@ -157,15 +177,49 @@ pub fn dict_softmax_read(
     out: &mut [f32],
     scratch: &mut Scratch,
 ) {
+    {
+        let (logits, _) = scratch.logit_buffers(n + extra_len);
+        // slot similarities: q . Dk^T (bias applied in the finish)
+        kernels::matvec(dk, n, d, q, logits);
+    }
+    let (logits, weights) = scratch.logit_buffers(n + extra_len);
+    dict_softmax_finish(
+        q, dv, counts, n, d, beta, extra_k, extra_v, extra_len, logits, weights, out,
+    );
+}
+
+/// The tail of [`dict_softmax_read`] for callers that already hold the
+/// raw slot similarities `q . Dk^T` in `logits[..n]` — e.g. a prefill
+/// path that computed them for a whole block with one tiled
+/// [`kernels::matmul_rows`] sweep. Applies the count bias + masking,
+/// computes the bias-free in-chunk prefix logits, and runs the streaming
+/// softmax accumulation. Bit-identical to [`dict_softmax_read`] given
+/// bit-identical similarities.
+#[allow(clippy::too_many_arguments)]
+pub fn dict_softmax_finish(
+    q: &[f32],
+    dv: &[f32],
+    counts: &[f32],
+    n: usize,
+    d: usize,
+    beta: f32,
+    extra_k: &[f32],
+    extra_v: &[f32],
+    extra_len: usize,
+    logits: &mut [f32],
+    weights: &mut [f32],
+    out: &mut [f32],
+) {
     let total = n + extra_len;
     out.iter_mut().for_each(|o| *o = 0.0);
     if total == 0 {
         return;
     }
-    let (logits, weights) = scratch.logit_buffers(total);
+    debug_assert!(logits.len() >= total && weights.len() >= total);
+    let logits = &mut logits[..total];
+    let weights = &mut weights[..total];
 
     // slot logits: beta * Dk q + ln(c), masked where c == 0
-    kernels::matvec(dk, n, d, q, logits);
     let mut m = f32::NEG_INFINITY;
     for s in 0..n {
         if counts[s] > 0.0 {

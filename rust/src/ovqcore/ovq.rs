@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use super::growth_n_new;
 use super::kernels;
-use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
+use super::mixer::{dict_softmax_finish, dict_softmax_read, Scratch, SeqMixer};
 use super::snapshot;
 
 #[derive(Debug, Clone)]
@@ -360,6 +360,83 @@ impl SeqMixer for OvqState {
     fn read(&self, q: &[f32], out: &mut [f32], scratch: &mut Scratch) {
         // dictionary + the buffered in-chunk prefix (eq. 15)
         self.attend(q, &self.pending_k, &self.pending_v, self.pending_len, out, scratch);
+    }
+
+    /// Blocked prompt ingestion, bit-identical to the serial token loop.
+    /// The block is cut into segments at the same lazy-merge boundaries
+    /// `write` produces (a full pending buffer merges when the next token
+    /// arrives), each segment is staged into the pending buffer in one
+    /// bulk append, and the whole segment's dictionary similarities come
+    /// from one tiled [`kernels::matmul_rows`] sweep instead of one
+    /// matvec per token. Per-token work left is exactly the eq. 15
+    /// bias/mask/softmax over a prefix no batch shape can share.
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let d = self.cfg.d;
+        let dlen = keys.len() / d;
+        debug_assert_eq!(queries.len(), dlen * d);
+        debug_assert_eq!(values.len(), dlen * d);
+        debug_assert_eq!(out.len(), dlen * d);
+        let mut i = 0;
+        while i < dlen {
+            // same trigger as write(): a full pending buffer merges the
+            // moment the chunk after it begins
+            if self.pending_len == self.cfg.chunk {
+                self.flush();
+            }
+            let take = (self.cfg.chunk - self.pending_len).min(dlen - i);
+            let base = self.pending_len;
+            self.pending_k.extend_from_slice(&keys[i * d..(i + take) * d]);
+            self.pending_v.extend_from_slice(&values[i * d..(i + take) * d]);
+            self.pending_len += take;
+
+            // one tiled dictionary sweep for every query in the segment
+            let n = self.n_active;
+            let Scratch { logits, weights, buf, .. } = scratch;
+            if buf.len() < take * n {
+                buf.resize(take * n, 0.0);
+            }
+            kernels::matmul_rows(
+                &self.dk[..n * d],
+                n,
+                d,
+                &queries[i * d..(i + take) * d],
+                take,
+                buf,
+            );
+            for t in 0..take {
+                let upto = base + t + 1;
+                let total = n + upto;
+                if logits.len() < total {
+                    logits.resize(total, 0.0);
+                }
+                if weights.len() < total {
+                    weights.resize(total, 0.0);
+                }
+                logits[..n].copy_from_slice(&buf[t * n..(t + 1) * n]);
+                dict_softmax_finish(
+                    &queries[(i + t) * d..(i + t + 1) * d],
+                    &self.dv[..n * d],
+                    &self.counts[..n],
+                    n,
+                    d,
+                    self.cfg.beta,
+                    &self.pending_k[..upto * d],
+                    &self.pending_v[..upto * d],
+                    upto,
+                    logits,
+                    weights,
+                    &mut out[(i + t) * d..(i + t + 1) * d],
+                );
+            }
+            i += take;
+        }
     }
 
     fn flush(&mut self) {

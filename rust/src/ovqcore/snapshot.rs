@@ -136,7 +136,11 @@ impl<'a> Reader<'a> {
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.remaining() < n {
-            bail!("snapshot truncated: need {n} bytes at offset {}, have {}", self.i, self.remaining());
+            bail!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.remaining()
+            );
         }
         let whole: &'a [u8] = self.b; // copy the 'a reference out of self
         let s = &whole[self.i..self.i + n];

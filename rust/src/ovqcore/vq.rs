@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use super::kernels;
-use super::mixer::{dict_softmax_read, Scratch, SeqMixer};
+use super::mixer::{dict_softmax_finish, dict_softmax_read, Scratch, SeqMixer};
 use super::snapshot;
 
 #[derive(Debug, Clone)]
@@ -121,6 +121,74 @@ impl SeqMixer for VqState {
             out,
             scratch,
         );
+    }
+
+    /// Blocked prompt ingestion. The key dictionary is static, so the
+    /// whole block's nearest-centroid assignments AND read logits
+    /// (`q . Dk^T`) are computed up front with one tiled sweep each
+    /// ([`kernels::nearest_rows`] / [`kernels::matmul_rows`]); the serial
+    /// remainder is only the per-token O(d) value merge and the count-
+    /// biased softmax, interleaved write-then-read so each read sees
+    /// counts/values through token i exactly as serial decode does.
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let d = self.d;
+        let n = self.n;
+        let len = keys.len() / d;
+        debug_assert_eq!(queries.len(), len * d);
+        debug_assert_eq!(values.len(), len * d);
+        debug_assert_eq!(out.len(), len * d);
+        let Scratch { logits, weights, buf, idx } = scratch;
+        if idx.len() < len {
+            idx.resize(len, 0);
+        }
+        if buf.len() < len * n + len {
+            buf.resize(len * n + len, 0.0);
+        }
+        let (sims, best) = buf.split_at_mut(len * n);
+        let best = &mut best[..len];
+        best.iter_mut().for_each(|b| *b = f32::NEG_INFINITY);
+        kernels::nearest_rows(&self.dk, n, d, keys, len, idx, best);
+        kernels::matmul_rows(&self.dk, n, d, queries, len, sims);
+        if logits.len() < n {
+            logits.resize(n, 0.0);
+        }
+        if weights.len() < n {
+            weights.resize(n, 0.0);
+        }
+        for i in 0..len {
+            // write: count-weighted mean into the preassigned slot (the
+            // same arithmetic as `write`, minus the per-token search)
+            let s = idx[i];
+            let c = self.counts[s];
+            for j in 0..d {
+                self.dv[s * d + j] = (c * self.dv[s * d + j] + values[i * d + j]) / (c + 1.0);
+            }
+            self.counts[s] = c + 1.0;
+            self.t += 1;
+            // read: precomputed similarities, current counts/values
+            logits[..n].copy_from_slice(&sims[i * n..(i + 1) * n]);
+            dict_softmax_finish(
+                &queries[i * d..(i + 1) * d],
+                &self.dv,
+                &self.counts,
+                n,
+                d,
+                self.beta,
+                &[],
+                &[],
+                0,
+                logits,
+                weights,
+                &mut out[i * d..(i + 1) * d],
+            );
+        }
     }
 
     fn snapshot(&self, w: &mut snapshot::Writer) {

@@ -58,7 +58,11 @@ impl Ema {
 
 /// Bin a (position, value) stream into fixed-width position bins and
 /// report per-bin means — used for loss-vs-token-position curves (Fig. 6).
-pub fn binned_means(pairs: &[(usize, f64)], bin: usize, max_pos: usize) -> Vec<(usize, f64, usize)> {
+pub fn binned_means(
+    pairs: &[(usize, f64)],
+    bin: usize,
+    max_pos: usize,
+) -> Vec<(usize, f64, usize)> {
     let nbins = max_pos.div_ceil(bin);
     let mut sum = vec![0.0; nbins];
     let mut cnt = vec![0usize; nbins];

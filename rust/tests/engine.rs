@@ -210,6 +210,197 @@ fn engine_equal_load_completes_equally() {
     }
 }
 
+// ---------------------------------------------------------------- prefill
+
+/// Decode-path ingestion of the same tokens a prefill would absorb:
+/// submit the prompt as `piece`-token decode chunks. Outputs concatenate
+/// to what one submit_prefill call produces (bit-identically) — the
+/// engine-level prefill golden reference.
+fn submit_as_decode_chunks(
+    engine: &DecodeEngine,
+    session: u64,
+    prompt: &DecodeChunk,
+    piece: usize,
+    hd: usize,
+) {
+    let total = prompt.keys.len() / hd;
+    let mut i = 0;
+    while i < total {
+        let len = piece.min(total - i);
+        let (a, b) = (i * hd, (i + len) * hd);
+        engine.submit(
+            session,
+            DecodeChunk {
+                queries: prompt.queries[a..b].to_vec(),
+                keys: prompt.keys[a..b].to_vec(),
+                values: prompt.values[a..b].to_vec(),
+            },
+        );
+        i += len;
+    }
+}
+
+#[test]
+fn long_prefill_interleaves_with_decode_and_stays_bit_identical() {
+    // the tentpole scheduling claim, on one shard: a 64k prompt for
+    // session A churns through quantized prefill while session B keeps
+    // decoding — B's chunks must complete BEFORE the prompt does
+    // (bounded lag, not head-of-line blocking), B's outputs must be
+    // bit-identical to a prompt-free run, and A's prompt output must be
+    // bit-identical to ingesting the same tokens as decode chunks.
+    let (heads, d_head) = (1usize, 4usize);
+    let hd = heads * d_head;
+    let prompt_len = 65_536usize;
+    let (sess_a, sess_b) = (11u64, 7u64);
+    let prompt = traffic::synth_chunk(0xBEEF, sess_a, 0, prompt_len, hd);
+    let mk_cfg = || {
+        let mut cfg = EngineConfig::new(MixerKind::Ovq { n_max: 16 }, heads, d_head, 8);
+        cfg.threads = 1; // both sessions land on the one shard
+        cfg.queue_depth = 64;
+        cfg.prefill_quantum = 256;
+        cfg.collect_outputs = true;
+        cfg
+    };
+    let decode_chunks = 24usize;
+
+    // run 1: prompt + concurrent decode traffic
+    let engine = DecodeEngine::start(mk_cfg());
+    for seq in 0..8usize {
+        engine.submit(sess_b, traffic::synth_chunk(0xD0, sess_b, seq, 8, hd));
+    }
+    engine.submit_prefill(sess_a, prompt.clone());
+    for seq in 8..decode_chunks {
+        engine.submit(sess_b, traffic::synth_chunk(0xD0, sess_b, seq, 8, hd));
+    }
+    let mixed = engine.finish();
+
+    // B completed in full and the prompt was ingested whole
+    let shard = &mixed.shards[0];
+    assert_eq!(shard.prefill_chunks, 1);
+    assert_eq!(shard.prefill_tokens, prompt_len);
+    assert_eq!(shard.chunks, decode_chunks);
+    assert!(shard.prefill_busy > std::time::Duration::ZERO);
+    assert!(shard.busy > shard.prefill_busy, "decode occupancy must be visible");
+    assert_eq!(shard.ttft_ns.len(), 1);
+
+    // continuous batching: with 256-token quanta the prompt takes 256
+    // scheduling rounds, so every decode chunk (24 of them) completes
+    // before the prompt — single worker + single out channel preserve
+    // completion order
+    let a_pos = mixed
+        .outputs
+        .iter()
+        .position(|o| o.session == sess_a)
+        .expect("prompt output collected");
+    let decode_before: usize =
+        mixed.outputs[..a_pos].iter().filter(|o| o.session == sess_b).count();
+    assert!(
+        decode_before >= decode_chunks / 2,
+        "only {decode_before}/{decode_chunks} decode chunks overtook the 64k prefill"
+    );
+    // bounded lag: any decode chunk submitted after the prompt still
+    // finished before it, so no decode wait can reach the prompt's ttft
+    let ttft = shard.ttft_ns[0];
+    let worst_decode = shard.latency_ns.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        worst_decode < ttft,
+        "decode p100 {worst_decode}ns not bounded by prompt ttft {ttft}ns"
+    );
+
+    // run 2: same decode traffic, no prompt — B must not feel A at all
+    let engine = DecodeEngine::start(mk_cfg());
+    for seq in 0..decode_chunks {
+        engine.submit(sess_b, traffic::synth_chunk(0xD0, sess_b, seq, 8, hd));
+    }
+    let plain = engine.finish();
+    let b_mixed: Vec<&EngineOut> =
+        mixed.outputs.iter().filter(|o| o.session == sess_b).collect();
+    let b_plain: Vec<&EngineOut> =
+        plain.outputs.iter().filter(|o| o.session == sess_b).collect();
+    assert_eq!(b_mixed.len(), b_plain.len());
+    for (x, y) in b_mixed.iter().zip(&b_plain) {
+        assert_eq!(x.seq, y.seq);
+        assert!(
+            x.out.iter().zip(&y.out).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "a concurrent prefill changed decode chunk {} of session B",
+            x.seq
+        );
+    }
+
+    // run 3: the prompt ingested through the DECODE path in 512-token
+    // pieces — the engine-level golden: outputs concatenate bit-exactly
+    // to the prefill path's single output
+    let engine = DecodeEngine::start(mk_cfg());
+    submit_as_decode_chunks(&engine, sess_a, &prompt, 512, hd);
+    let golden = engine.finish();
+    let mut golden_cat: Vec<f32> = Vec::with_capacity(prompt_len * hd);
+    let mut a_outs: Vec<&EngineOut> =
+        golden.outputs.iter().filter(|o| o.session == sess_a).collect();
+    a_outs.sort_by_key(|o| o.seq);
+    for o in a_outs {
+        golden_cat.extend_from_slice(&o.out);
+    }
+    let a_prefill = &mixed.outputs[a_pos];
+    assert_eq!(a_prefill.out.len(), golden_cat.len());
+    assert!(
+        a_prefill.out.iter().zip(&golden_cat).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "prefill path diverged from decode-path ingestion of the same prompt"
+    );
+}
+
+#[test]
+fn same_session_traffic_after_prefill_is_deferred_in_order() {
+    // per-session ordering across the prefill boundary: decode chunks
+    // submitted for a session AFTER its prompt must wait for the prompt
+    // and produce exactly what a fully serial (decode-path) run produces
+    let (heads, d_head) = (2usize, 8usize);
+    let hd = heads * d_head;
+    let sess = 5u64;
+    let prompt = traffic::synth_chunk(0xAB, sess, 1_000_000, 1024, hd);
+    let mk_cfg = || {
+        let mut cfg = EngineConfig::new(MixerKind::Ovq { n_max: 32 }, heads, d_head, 16);
+        cfg.threads = 1;
+        cfg.prefill_quantum = 64;
+        cfg.collect_outputs = true;
+        cfg
+    };
+
+    let engine = DecodeEngine::start(mk_cfg());
+    engine.submit(sess, traffic::synth_chunk(0xAB, sess, 0, 16, hd));
+    engine.submit_prefill(sess, prompt.clone());
+    engine.submit(sess, traffic::synth_chunk(0xAB, sess, 1, 16, hd));
+    engine.flush_all();
+    let with_prefill = engine.finish();
+
+    let engine = DecodeEngine::start(mk_cfg());
+    engine.submit(sess, traffic::synth_chunk(0xAB, sess, 0, 16, hd));
+    submit_as_decode_chunks(&engine, sess, &prompt, 256, hd);
+    engine.submit(sess, traffic::synth_chunk(0xAB, sess, 1, 16, hd));
+    engine.flush_all();
+    let serial = engine.finish();
+
+    // stitch both runs into flat per-session streams and compare bits
+    let flat = |outs: &[EngineOut]| -> Vec<f32> {
+        let mut v: Vec<&EngineOut> = outs.iter().collect();
+        v.sort_by_key(|o| o.seq);
+        v.iter().flat_map(|o| o.out.iter().copied()).collect()
+    };
+    let a = flat(&with_prefill.outputs);
+    let b = flat(&serial.outputs);
+    assert_eq!(a.len(), b.len(), "streams must cover the same tokens");
+    assert!(
+        a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "prefill deferral reordered or altered the session's stream"
+    );
+    // and the trailing decode chunk really was sequenced after the prompt
+    let seqs: Vec<usize> = {
+        let mut s: Vec<usize> = with_prefill.outputs.iter().map(|o| o.seq).collect();
+        s.sort_unstable();
+        s
+    };
+    assert_eq!(seqs, vec![1, 2, 3]);
+}
+
 // ------------------------------------------------------------ backpressure
 
 /// A deliberately slow mixer: delegates to GDN but sleeps per chunk, so a

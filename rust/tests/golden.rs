@@ -215,6 +215,129 @@ fn prop_snapshot_restore_continue_is_token_identical_for_all_mixers() {
     });
 }
 
+/// Feed `total` tokens through [`SeqMixer::process_prefill`] in arrival
+/// slices of `arrival` tokens.
+fn prefill_through(
+    m: &mut dyn SeqMixer,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    total: usize,
+    arrival: usize,
+) -> Vec<f32> {
+    let d = m.d_in();
+    let dv = m.d_out();
+    let mut out = vec![0.0f32; total * dv];
+    let mut scratch = Scratch::new();
+    let mut i = 0;
+    while i < total {
+        let len = arrival.min(total - i);
+        m.process_prefill(
+            &q[i * d..(i + len) * d],
+            &k[i * d..(i + len) * d],
+            &v[i * dv..(i + len) * dv],
+            &mut out[i * dv..(i + len) * dv],
+            &mut scratch,
+        );
+        i += len;
+    }
+    out
+}
+
+#[test]
+fn prop_prefill_is_bit_identical_to_serial_decode_for_all_mixers() {
+    // the tentpole contract: the blocked process_prefill path must
+    // reproduce token-at-a-time decode EXACTLY — same output bits, same
+    // post-state snapshot — for every mixer, any block size, including
+    // blocks cut mid-way through an OVQ pending tail
+    Prop::new(91).cases(24).check(|c| {
+        let d = 4 + 2 * c.rng.usize_below(7);
+        let chunk = 4 + c.rng.usize_below(13);
+        let total = chunk * (2 + c.rng.usize_below(3)) + c.rng.usize_below(chunk);
+        // arrival slices deliberately misaligned with the mixer chunk so
+        // prefill calls start and end inside pending tails
+        let arrival = 1 + c.rng.usize_below(2 * chunk + 1);
+        let kinds = [
+            MixerKind::Ovq { n_max: 8 + c.rng.usize_below(64) },
+            MixerKind::Vq { n: 4 + c.rng.usize_below(16) },
+            MixerKind::LinearAttention,
+            MixerKind::Gdn,
+            MixerKind::FullAttention,
+            MixerKind::SlidingWindow { window: 1 + c.rng.usize_below(total) },
+        ];
+        let q: Vec<f32> = (0..total * d).map(|_| c.rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..total * d).map(|_| c.rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..total * d).map(|_| c.rng.normal() as f32).collect();
+        for kind in kinds {
+            let mut serial = kind.build(d, chunk, 3);
+            let mut blocked = kind.build(d, chunk, 3);
+            let out_serial = stream_through(serial.as_mut(), &q, &k, &v, total, 1);
+            let out_blocked = prefill_through(blocked.as_mut(), &q, &k, &v, total, arrival);
+            if let Some(i) = out_serial
+                .iter()
+                .zip(&out_blocked)
+                .position(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(format!(
+                    "{kind:?} d={d} chunk={chunk} total={total} arrival={arrival}: \
+                     prefill diverges at flat index {i} (token {}): {} vs {}",
+                    i / d,
+                    out_blocked[i],
+                    out_serial[i]
+                ));
+            }
+            // post-state must be bit-identical too — including any OVQ
+            // pending tail, which the snapshot serializes raw
+            if snapshot::save(serial.as_ref()) != snapshot::save(blocked.as_ref()) {
+                return Err(format!("{kind:?}: post-prefill snapshots diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ovq_prefill_cut_mid_pending_tail_is_exact() {
+    // the sharpest prefill corner, pinned deterministically: a prefill
+    // block that ends mid-chunk leaves a pending tail; the next block
+    // must pick it up, merge at the same boundary serial decode would,
+    // and keep every output bit
+    let (d, n_max, chunk) = (8usize, 32usize, 16usize);
+    let total = 3 * chunk + chunk / 2; // 56: ends mid-tail
+    let cut = chunk + chunk / 2 - 1; // 23: cuts mid-tail too
+    let mut rng = Rng::new(1234);
+    let q = randv(&mut rng, total * d);
+    let k = randv(&mut rng, total * d);
+    let v = randv(&mut rng, total * d);
+
+    let mut serial = OvqState::new(OvqConfig::new(d, n_max, chunk));
+    let out_serial = stream_through(&mut serial, &q, &k, &v, total, 1);
+
+    let mut blocked = OvqState::new(OvqConfig::new(d, n_max, chunk));
+    let mut scratch = Scratch::new();
+    let mut out_blocked = vec![0.0f32; total * d];
+    blocked.process_prefill(
+        &q[..cut * d],
+        &k[..cut * d],
+        &v[..cut * d],
+        &mut out_blocked[..cut * d],
+        &mut scratch,
+    );
+    assert!(blocked.pending_len() > 0, "first block must leave a pending tail");
+    blocked.process_prefill(
+        &q[cut * d..],
+        &k[cut * d..],
+        &v[cut * d..],
+        &mut out_blocked[cut * d..],
+        &mut scratch,
+    );
+    assert!(blocked.pending_len() > 0, "stream ends mid-tail");
+    for (i, (a, b)) in out_serial.iter().zip(&out_blocked).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "flat index {i} (token {})", i / d);
+    }
+    assert_eq!(snapshot::save(&serial), snapshot::save(&blocked));
+}
+
 #[test]
 fn snapshot_preserves_ovq_pending_tail_exactly() {
     // the sharpest corner: freeze with a partial chunk buffered (pending
