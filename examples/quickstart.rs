@@ -31,7 +31,7 @@ fn main() -> Result<()> {
 
     // 4. a task generator (pure Rust, deterministic)
     let vocab = model.manifest.cfg_usize("vocab", 256);
-    let gen = by_name("icr", vocab);
+    let gen = by_name("icr", vocab)?;
     let (b, t) = model.train_shape()?;
     let mut rng = Rng::new(7);
 

@@ -58,7 +58,7 @@ fn batched_scoring(rt: &Runtime) -> Result<()> {
 
     let (tx, rx) = mpsc::channel::<ScoreRequest>();
     let producer = std::thread::spawn(move || {
-        let gen = ovq::data::by_name("icr", vocab);
+        let gen = ovq::data::by_name("icr", vocab).expect("icr is a known task");
         let mut rng = Rng::new(1);
         let mut replies = Vec::new();
         for _ in 0..24 {

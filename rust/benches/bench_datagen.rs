@@ -14,7 +14,7 @@ fn main() {
     };
     let t = 256usize;
     for task in ["icr", "picr", "icl", "lm", "shortctx"] {
-        let gen = by_name(task, 512);
+        let gen = by_name(task, 512).expect("bench tasks are known");
         let mut rng = Rng::new(1);
         b.run_throughput(&format!("gen_{task}_T{t}"), t as f64, "tok/s", || {
             gen.generate(&mut rng, t)
@@ -22,7 +22,7 @@ fn main() {
     }
     // long-context generation (the eval sweep path)
     for t in [1024usize, 4096] {
-        let gen = by_name("lm", 512);
+        let gen = by_name("lm", 512).expect("lm is a known task");
         let mut rng = Rng::new(2);
         b.run_throughput(&format!("gen_lm_T{t}"), t as f64, "tok/s", || {
             gen.generate(&mut rng, t)

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let model = rt.load_model("quickstart")?;
     let (bs, t) = model.train_shape()?;
     let vocab = model.manifest.cfg_usize("vocab", 256);
-    let gen = by_name("icr", vocab);
+    let gen = by_name("icr", vocab)?;
     let mut rng = Rng::new(1);
     let batch = Batch::generate_train(gen.as_ref(), &mut rng, bs, t);
 

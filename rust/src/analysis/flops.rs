@@ -6,6 +6,7 @@ use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
 
 use crate::ovqcore::growth_n_t;
+use crate::ovqcore::memstate::MixerKind;
 
 /// Shared workload geometry (paper Table 6 notation).
 #[derive(Debug, Clone, Copy)]
@@ -70,6 +71,46 @@ pub fn gdn_flops(g: Geom, t: f64, train: bool) -> f64 {
     }
 }
 
+/// Inference FLOPs of one sequence-mixer *layer* of the given kind over
+/// a T-token pass — the per-kind term the whole-stack model sums. Dense
+/// recurrences (linear attention / GDN) share the GDN accounting;
+/// sliding-window attention is full attention truncated to the window.
+pub fn mixer_flops(kind: MixerKind, g: Geom, t: f64) -> f64 {
+    match kind {
+        MixerKind::FullAttention => attn_flops(g, t, false),
+        MixerKind::SlidingWindow { window } => {
+            let w = (window as f64).min(t);
+            // per token: QK^T over <= w cached rows + AV gather
+            3.0 * g.b * g.h * t * w * g.d
+        }
+        MixerKind::Ovq { n_max } => ovq_flops(g, t, n_max, false),
+        // constant-N dictionary: the OVQ per-chunk cost with N_c pinned
+        MixerKind::Vq { n } => g.b * g.h * t * g.d * (6.0 * n as f64 + 2.0 * g.l),
+        MixerKind::LinearAttention | MixerKind::Gdn => gdn_flops(g, t, false),
+    }
+}
+
+/// Dense per-token FLOPs of one stack layer outside the mixer: q/k/v and
+/// output projections plus the gated MLP (2mn per matmul) and the norm /
+/// gate elementwise work.
+pub fn stack_dense_flops_per_token(d_model: f64, d_ff: f64, g: Geom) -> f64 {
+    let hd = g.h * g.d;
+    let proj = 2.0 * (3.0 * hd * d_model) + 2.0 * (d_model * hd);
+    let mlp = 2.0 * (2.0 * d_ff * d_model) + 2.0 * (d_model * d_ff);
+    let pointwise = 6.0 * d_model + 3.0 * d_ff; // norms, residuals, silu-gate
+    g.b * (proj + mlp + pointwise)
+}
+
+/// Whole-stack inference FLOPs for a T-token pass over a per-layer mixer
+/// schedule: each layer pays the dense cost (linear in T) plus its own
+/// mixer term — the model the ROADMAP's serving trade-offs live in,
+/// where projection/MLP FLOPs and per-layer mixer state compete.
+pub fn stack_flops(kinds: &[MixerKind], g: Geom, d_model: f64, d_ff: f64, t: f64) -> f64 {
+    let dense = kinds.len() as f64 * t * stack_dense_flops_per_token(d_model, d_ff, g);
+    let mixers: f64 = kinds.iter().map(|&k| mixer_flops(k, g, t)).sum();
+    dense + mixers
+}
+
 /// One row of the Fig. 15/16 sweep.
 #[derive(Debug, Clone)]
 pub struct FlopsRow {
@@ -95,7 +136,7 @@ pub fn sweep(g: Geom, n_max: usize, lengths: &[usize], train: bool) -> Vec<Flops
 /// and writes CSVs under --out (default results/).
 pub fn cmd_flops(args: &Args) -> anyhow::Result<()> {
     let out_dir = args.opt_or("out", "results");
-    let n_max = args.opt_usize("n-dict", 8192);
+    let n_max = args.opt_usize("n-dict", 8192)?;
     let g = Geom::default();
     let lengths: Vec<usize> =
         (10..=17).map(|p| 1usize << p).collect(); // 1k .. 128k
@@ -124,6 +165,38 @@ pub fn cmd_flops(args: &Args) -> anyhow::Result<()> {
         }
         csv.flush()?;
     }
+    // whole-stack accounting: uniform full-attention stack vs a hybrid
+    // ovq/sliding-window schedule at the same dense geometry — the
+    // model-level trade-off the serving stack (ovqcore::stack) realizes
+    let layers = 8usize;
+    let d_model = g.h * g.d;
+    let d_ff = 4.0 * d_model;
+    let uniform: Vec<MixerKind> = vec![MixerKind::FullAttention; layers];
+    let hybrid: Vec<MixerKind> = (0..layers)
+        .map(|l| {
+            if l % 2 == 0 {
+                MixerKind::Ovq { n_max }
+            } else {
+                MixerKind::SlidingWindow { window: 1024 }
+            }
+        })
+        .collect();
+    println!(
+        "\n== whole-stack inference FLOPs ({layers} layers, d_model={d_model} \
+         d_ff={d_ff}, hybrid = ovq:{n_max}/kv:win1024) =="
+    );
+    println!("{:>8} {:>14} {:>14} {:>14}", "T", "attn_stack", "hybrid_stack", "ratio");
+    let mut csv = CsvWriter::create(
+        format!("{out_dir}/flops_stack.csv"),
+        &["T", "attn_stack", "hybrid_stack", "ratio"],
+    )?;
+    for &t in &lengths {
+        let a = stack_flops(&uniform, g, d_model, d_ff, t as f64);
+        let h = stack_flops(&hybrid, g, d_model, d_ff, t as f64);
+        println!("{:>8} {:>14.3e} {:>14.3e} {:>14.4}", t, a, h, h / a);
+        csv.rowf(&[t as f64, a, h, h / a])?;
+    }
+    csv.flush()?;
     println!("\n(Fig 16 = the ratio columns; csv written to {out_dir}/)");
     Ok(())
 }
@@ -181,6 +254,65 @@ mod tests {
     fn gdn_is_linear() {
         let a = gdn_flops(G, 1024.0, false);
         let b = gdn_flops(G, 2048.0, false);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stack_dense_cost_is_linear_in_depth_and_length() {
+        let kinds4 = vec![MixerKind::Gdn; 4];
+        let kinds8 = vec![MixerKind::Gdn; 8];
+        let (dm, dff) = (1024.0, 4096.0);
+        let a4 = stack_flops(&kinds4, G, dm, dff, 4096.0);
+        let a8 = stack_flops(&kinds8, G, dm, dff, 4096.0);
+        assert!((a8 / a4 - 2.0).abs() < 1e-9, "depth doubling must double cost");
+        let long = stack_flops(&kinds4, G, dm, dff, 8192.0);
+        assert!((long / a4 - 2.0).abs() < 1e-9, "gdn stacks are linear in T");
+    }
+
+    #[test]
+    fn sliding_window_layer_is_cheaper_than_full_attention() {
+        let t = 1 << 16;
+        let full = mixer_flops(MixerKind::FullAttention, G, t as f64);
+        let sw = mixer_flops(MixerKind::SlidingWindow { window: 1024 }, G, t as f64);
+        assert!(sw < full / 10.0, "sw {sw} vs full {full}");
+        // below the window they coincide in order of magnitude
+        let short = mixer_flops(MixerKind::SlidingWindow { window: 1 << 20 }, G, 512.0);
+        let full_short = mixer_flops(MixerKind::FullAttention, G, 512.0);
+        assert!(short < full_short * 2.0 && short > full_short / 2.0);
+    }
+
+    #[test]
+    fn hybrid_stack_beats_attention_stack_at_long_context() {
+        // the whole-model version of the paper's crossover: at 128k a
+        // hybrid ovq/sw schedule costs a fraction of uniform attention,
+        // while at short context the dense projections/MLP dominate and
+        // the two stacks are comparable
+        let layers = 8usize;
+        let (dm, dff) = (G.h * G.d, 4.0 * G.h * G.d);
+        let uniform = vec![MixerKind::FullAttention; layers];
+        let hybrid: Vec<MixerKind> = (0..layers)
+            .map(|l| {
+                if l % 2 == 0 {
+                    MixerKind::Ovq { n_max: 8192 }
+                } else {
+                    MixerKind::SlidingWindow { window: 1024 }
+                }
+            })
+            .collect();
+        let t_long = (1u32 << 17) as f64;
+        let a = stack_flops(&uniform, G, dm, dff, t_long);
+        let h = stack_flops(&hybrid, G, dm, dff, t_long);
+        assert!(h < a / 2.0, "hybrid {h} vs attn {a} at 128k");
+        let t_short = 512.0;
+        let a = stack_flops(&uniform, G, dm, dff, t_short);
+        let h = stack_flops(&hybrid, G, dm, dff, t_short);
+        assert!(h / a > 0.3 && h / a < 3.0, "short-context ratio {}", h / a);
+    }
+
+    #[test]
+    fn vq_layer_is_linear_in_t_at_constant_n() {
+        let a = mixer_flops(MixerKind::Vq { n: 512 }, G, 4096.0);
+        let b = mixer_flops(MixerKind::Vq { n: 512 }, G, 8192.0);
         assert!((b / a - 2.0).abs() < 1e-9);
     }
 }

@@ -71,6 +71,31 @@ pub fn fig4_right(out_dir: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Whole-stack mixer-state bytes at context length `t`: the sum of each
+/// layer's kind accounting (every layer of a [`crate::ovqcore::stack::
+/// LayerStack`] sees every token). Cross-checked against the live
+/// stack's `state_bytes()` below — the serving path and this analytic
+/// model cannot drift apart.
+pub fn stack_state_bytes(kinds: &[MixerKind], g: MixerGeom, t: usize) -> usize {
+    kinds.iter().map(|k| k.state_bytes(g, t)).sum()
+}
+
+/// Dense-weight bytes of a full stack (per layer: q/k/v projections
+/// `[H*d, d_model]`, output projection `[d_model, H*d]`, two RMSNorm
+/// gains, gated MLP `2 x [d_ff, d_model]` + `[d_model, d_ff]`; f32).
+/// This is shared model cost — deterministic in the init seed, rebuilt
+/// on snapshot restore — kept separate from the per-session
+/// [`stack_state_bytes`] the eviction contract bills for.
+pub fn stack_param_bytes(layers: usize, d_model: usize, d_ff: usize, g: MixerGeom) -> usize {
+    let hd = g.heads * g.d_head;
+    let per_layer = 3 * hd * d_model // q/k/v projections
+        + d_model * hd // output projection
+        + 2 * d_model // norm gains
+        + 2 * d_ff * d_model // MLP gate + up
+        + d_model * d_ff; // MLP down
+    layers * per_layer * 4
+}
+
 pub fn human(b: usize) -> String {
     if b < 1 << 10 {
         format!("{b} B")
@@ -100,5 +125,44 @@ mod tests {
     fn human_formatting() {
         assert_eq!(human(512), "512 B");
         assert_eq!(human(2048), "2.0 KiB");
+    }
+
+    #[test]
+    fn stack_accounting_matches_live_layer_stack_exactly() {
+        // the whole-model analogue of memstate's accounting_matches_live:
+        // a hybrid 4-layer stack's live state_bytes() and param_bytes()
+        // must equal the analytic counts bit-for-bit after t tokens
+        use crate::ovqcore::mixer::{Scratch, SeqMixer};
+        use crate::ovqcore::stack::{LayerStack, StackConfig};
+        use crate::util::rng::Rng;
+        let g = MixerGeom { heads: 2, d_head: 4 };
+        let (d_model, d_ff, chunk, t) = (8usize, 16usize, 8usize, 64usize);
+        let kinds = vec![
+            MixerKind::Ovq { n_max: 16 },
+            MixerKind::SlidingWindow { window: 24 },
+            MixerKind::Ovq { n_max: 16 },
+            MixerKind::FullAttention,
+        ];
+        let cfg = StackConfig::hybrid(d_model, d_ff, g.heads, g.d_head, chunk, kinds.clone());
+        let mut st = LayerStack::new(cfg, 99);
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..t * d_model).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; t * d_model];
+        let mut scratch = Scratch::new();
+        st.process_chunk(&x, &x, &x, &mut out, &mut scratch);
+        st.flush(); // merge OVQ pending tails so growth is at N_t(t)
+        assert_eq!(
+            st.state_bytes(),
+            stack_state_bytes(&kinds, g, t),
+            "live stack state diverged from the analytic accounting"
+        );
+        assert_eq!(
+            st.param_bytes(),
+            stack_param_bytes(4, d_model, d_ff, g),
+            "live stack weights diverged from the analytic parameter count"
+        );
+        // and the analytic split is per-layer additive
+        let per_layer: usize = kinds.iter().map(|k| k.state_bytes(g, t)).sum();
+        assert_eq!(per_layer, stack_state_bytes(&kinds, g, t));
     }
 }

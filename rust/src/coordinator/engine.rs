@@ -32,7 +32,8 @@ use std::time::{Duration, Instant};
 
 use crate::ovqcore::bank::{ring_push, DecodeChunk, ShardBank, StreamStats};
 use crate::ovqcore::memstate::MixerKind;
-use crate::ovqcore::mixer::SeqMixer;
+use crate::ovqcore::mixer::{merge_layer_stats, print_layer_split, LayerStat, SeqMixer};
+use crate::ovqcore::stack::{LayerStack, StackConfig};
 use crate::util::stats;
 
 /// Engine shape and policy. `threads` is the shard count (one worker
@@ -60,6 +61,13 @@ pub struct EngineConfig {
     /// keep per-chunk outputs for the caller (golden cross-checks); off
     /// for load runs so output buffers don't grow unboundedly
     pub collect_outputs: bool,
+    /// serve full multi-layer model stacks instead of bare per-head
+    /// mixers: each session admits one [`LayerStack`] (norms, q/k/v and
+    /// output projections, mixer heads, gated MLP) seeded per session.
+    /// When set, `heads` is 1 and `d_head` is the stack's d_model — the
+    /// packed row IS the embedding stream ([`EngineConfig::for_stack`]
+    /// keeps the invariant).
+    pub stack: Option<StackConfig>,
 }
 
 impl EngineConfig {
@@ -75,7 +83,18 @@ impl EngineConfig {
             prefill_quantum: 512,
             seed: 0xE6617E,
             collect_outputs: false,
+            stack: None,
         }
+    }
+
+    /// An engine serving whole model stacks: one [`LayerStack`] session
+    /// state machine per session, one packed `[len, d_model]` embedding
+    /// row per token.
+    pub fn for_stack(stack: StackConfig) -> EngineConfig {
+        let kind = stack.kinds.first().copied().unwrap_or(MixerKind::Gdn);
+        let mut cfg = EngineConfig::new(kind, 1, stack.d_model, stack.chunk);
+        cfg.stack = Some(stack);
+        cfg
     }
 }
 
@@ -159,6 +178,10 @@ pub struct ShardReport {
     /// submit→completion wall latency of the most recent
     /// [`crate::ovqcore::bank::LATENCY_WINDOW`] chunks, nanoseconds (ring)
     pub latency_ns: Vec<f64>,
+    /// per-layer telemetry split over the shard's resident sessions at
+    /// shutdown — one row per model layer when serving stacks, one row
+    /// total for bare mixers ([`ShardBank::layer_stats`])
+    pub layers: Vec<LayerStat>,
 }
 
 /// Aggregate result of an engine run.
@@ -228,6 +251,17 @@ impl EngineReport {
         self.shards.iter().map(|s| s.busy.as_secs_f64() / w).collect()
     }
 
+    /// Cross-shard per-layer telemetry: one merged row per model layer
+    /// (state bytes, busy time, tokens). Single-row for bare mixers;
+    /// one row per transformer layer when the engine serves stacks.
+    pub fn layer_split(&self) -> Vec<LayerStat> {
+        let mut acc = Vec::new();
+        for s in &self.shards {
+            merge_layer_stats(&mut acc, &s.layers);
+        }
+        acc
+    }
+
     /// Per-shard (decode, prefill) occupancy — each shard's busy time
     /// split by path, as fractions of the run's wall clock.
     pub fn occupancy(&self) -> Vec<(f64, f64)> {
@@ -273,6 +307,7 @@ impl EngineReport {
         if self.failed_chunks() > 0 {
             println!("  WARNING: {} chunks dropped on failed restores", self.failed_chunks());
         }
+        print_layer_split(&self.layer_split(), self.wall * self.threads as u32);
         for (s, (du, pu)) in self.shards.iter().zip(self.occupancy()) {
             println!(
                 "  shard {:>2}: {:>4} sessions {:>7} tokens  occupancy {:>5.1}% decode \
@@ -307,9 +342,23 @@ pub struct DecodeEngine {
 }
 
 impl DecodeEngine {
-    /// Start with the standard [`MixerKind`] factory.
+    /// Start with the standard factory: bare [`MixerKind`] per-head
+    /// machines, or — when [`EngineConfig::stack`] is set — one seeded
+    /// [`LayerStack`] per session, served unchanged through the trait.
     pub fn start(cfg: EngineConfig) -> DecodeEngine {
-        let (kind, d_head, chunk, seed) = (cfg.kind, cfg.d_head, cfg.chunk, cfg.seed);
+        let seed = cfg.seed;
+        if let Some(stack) = cfg.stack.clone() {
+            assert!(
+                cfg.heads == 1 && cfg.d_head == stack.d_model,
+                "stack engines pack one [len, d_model] row per token \
+                 (build the config with EngineConfig::for_stack)"
+            );
+            return Self::start_with(cfg, move |session, _head| {
+                Box::new(LayerStack::new(stack.clone(), session_seed(seed, session, 0)))
+                    as Box<dyn SeqMixer>
+            });
+        }
+        let (kind, d_head, chunk) = (cfg.kind, cfg.d_head, cfg.chunk);
         Self::start_with(cfg, move |session, head| {
             kind.build(d_head, chunk, session_seed(seed, session, head))
         })
@@ -738,6 +787,7 @@ fn shard_worker(
         resident_bytes: st.bank.resident_bytes(),
         snapshot_bytes: st.bank.snapshot_bytes(),
         latency_ns: st.latency_ns,
+        layers: st.bank.layer_stats(),
     };
     (report, st.bank.take_stats())
 }
@@ -800,6 +850,38 @@ mod tests {
         assert_eq!(r.shards.len(), 2);
         assert!(r.state_bytes() > 0);
         assert!(r.latency_us(99.0) >= r.latency_us(50.0) * 0.5);
+    }
+
+    #[test]
+    fn engine_serves_model_stacks_with_per_layer_split() {
+        // full 3-layer stacks as ordinary sessions: correct accounting,
+        // one telemetry row per layer, state split covering the total
+        let stack = StackConfig::uniform(3, 8, 16, 2, 4, 8, MixerKind::Ovq { n_max: 16 });
+        let mut cfg = EngineConfig::for_stack(stack);
+        cfg.threads = 2;
+        let engine = DecodeEngine::start(cfg);
+        let hd = engine.heads() * engine.d_head();
+        assert_eq!(hd, 8, "stack engines pack one d_model row per token");
+        let mut rng = Rng::new(13);
+        for session in 0..4u64 {
+            for _ in 0..3 {
+                engine.submit(session, chunk_of(&mut rng, 8, hd));
+            }
+        }
+        engine.flush_all();
+        let r = engine.finish();
+        assert_eq!(r.tokens, 4 * 3 * 8);
+        assert_eq!(r.sessions.len(), 4);
+        let layers = r.layer_split();
+        assert_eq!(layers.len(), 3, "one merged telemetry row per layer");
+        assert!(layers.iter().all(|l| l.kind == "ovq"));
+        assert!(layers.iter().all(|l| l.tokens == 4 * 24), "every layer sees every token");
+        assert_eq!(
+            layers.iter().map(|l| l.state_bytes).sum::<usize>(),
+            r.state_bytes(),
+            "per-layer split must cover the engine's total state"
+        );
+        assert!(layers.iter().all(|l| l.busy_ns > 0.0));
     }
 
     #[test]

@@ -53,7 +53,7 @@ pub fn length_sweep(
     filter: ProgFilter<'_>,
 ) -> Result<Vec<EvalPoint>> {
     let vocab = model.manifest.cfg_usize("vocab", 512);
-    let gen = by_name(task, vocab);
+    let gen = by_name(task, vocab)?;
     let mut points = Vec::new();
     let evals: Vec<(String, crate::runtime::ProgramSpec)> = model
         .manifest
@@ -126,7 +126,7 @@ pub fn nll_by_position(
     bin: usize,
 ) -> Result<Vec<(usize, f64, usize)>> {
     let vocab = model.manifest.cfg_usize("vocab", 512);
-    let gen = by_name(task, vocab);
+    let gen = by_name(task, vocab)?;
     let spec = model.manifest.programs.get(prog).unwrap().clone();
     let (b, t) = (spec.batch.unwrap_or(2), spec.seq.unwrap_or(256));
     let mut rng = Rng::new(seed);

@@ -30,8 +30,8 @@ impl ExpCtx {
             rt: super::runtime_from(args)?,
             out_dir: args.opt_or("out", "results"),
             quick,
-            steps: args.opt_usize("steps", if quick { 120 } else { 0 }),
-            eval_batches: args.opt_usize("batches", if quick { 2 } else { 4 }),
+            steps: args.opt_usize("steps", if quick { 120 } else { 0 })?,
+            eval_batches: args.opt_usize("batches", if quick { 2 } else { 4 })?,
         })
     }
 }

@@ -12,7 +12,7 @@ pub mod server;
 pub mod trainer;
 pub mod traffic;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::runtime::Runtime;
 use crate::util::cli::Args;
@@ -27,14 +27,14 @@ pub fn runtime_from(args: &Args) -> Result<Runtime> {
 /// `ovq train --model M --task T [--steps N] [--seed S] [--out DIR]`
 pub fn cmd_train(args: &Args) -> Result<()> {
     let rt = runtime_from(args)?;
-    let model = args.opt("model").expect("--model required");
-    let task = args.opt("task").expect("--task required");
+    let model = args.opt("model").context("--model required (usage: ovq train --model M)")?;
+    let task = args.opt("task").context("--task required (usage: ovq train --task T)")?;
     let cfg = trainer::TrainConfig {
         model: model.to_string(),
         task: task.to_string(),
-        steps: args.opt_usize("steps", 0), // 0 = manifest total_steps
-        seed: args.opt_u64("seed", 42),
-        log_every: args.opt_usize("log-every", 25),
+        steps: args.opt_usize("steps", 0)?, // 0 = manifest total_steps
+        seed: args.opt_u64("seed", 42)?,
+        log_every: args.opt_usize("log-every", 25)?,
         out_dir: args.opt_or("out", "results"),
         resume: args.opt("ckpt").map(String::from),
     };
@@ -49,17 +49,17 @@ pub fn cmd_train(args: &Args) -> Result<()> {
 /// `ovq eval --model M --task T --ckpt F [--batches N]`
 pub fn cmd_eval(args: &Args) -> Result<()> {
     let rt = runtime_from(args)?;
-    let model_name = args.opt("model").expect("--model required");
-    let task = args.opt("task").expect("--task required");
-    let ckpt = args.opt("ckpt").expect("--ckpt required");
+    let model_name = args.opt("model").context("--model required (usage: ovq eval --model M)")?;
+    let task = args.opt("task").context("--task required (usage: ovq eval --task T)")?;
+    let ckpt = args.opt("ckpt").context("--ckpt required (usage: ovq eval --ckpt F)")?;
     let model = rt.load_model(model_name)?;
     let state = model.load_checkpoint(ckpt)?;
     let points = evaluator::length_sweep(
         &model,
         &state.params,
         task,
-        args.opt_usize("batches", 4),
-        args.opt_u64("seed", 7),
+        args.opt_usize("batches", 4)?,
+        args.opt_u64("seed", 7)?,
         None,
     )?;
     evaluator::print_sweep(model_name, &points);

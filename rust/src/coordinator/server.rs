@@ -25,7 +25,9 @@ use anyhow::Result;
 
 use super::engine::{DecodeEngine, EngineConfig, ShardReport};
 use crate::ovqcore::bank::DecodeChunk;
-use crate::ovqcore::memstate::MixerKind;
+use crate::ovqcore::memstate::{parse_schedule, MixerKind};
+use crate::ovqcore::mixer::{print_layer_split, LayerStat};
+use crate::ovqcore::stack::StackConfig;
 use crate::runtime::Model;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
@@ -183,6 +185,11 @@ pub struct DecodeConfig {
     /// prefill quantum: prompt tokens ingested per scheduling round, with
     /// decode chunks interleaved between quanta
     pub prefill_quantum: usize,
+    /// serve full multi-layer model stacks instead of bare per-head
+    /// mixers (`--layers`/`--d-model`/`--d-ff`/`--schedule`); the packed
+    /// row width becomes d_model and `kind`/`heads`/`d_head` describe the
+    /// per-layer attention inside the stack
+    pub stack: Option<StackConfig>,
 }
 
 impl DecodeConfig {
@@ -200,11 +207,24 @@ impl DecodeConfig {
             queue_depth: 64,
             prompt_tokens: 0,
             prefill_quantum: 512,
+            stack: None,
+        }
+    }
+
+    /// Packed row width per token: the embedding width for stacks, the
+    /// fused-head width for bare mixers.
+    pub fn row_width(&self) -> usize {
+        match &self.stack {
+            Some(s) => s.d_model,
+            None => self.heads * self.d_head,
         }
     }
 
     fn engine_config(&self) -> EngineConfig {
-        let mut e = EngineConfig::new(self.kind, self.heads, self.d_head, self.chunk);
+        let mut e = match &self.stack {
+            Some(s) => EngineConfig::for_stack(s.clone()),
+            None => EngineConfig::new(self.kind, self.heads, self.d_head, self.chunk),
+        };
         e.threads = self.threads;
         e.max_resident = self.max_resident;
         e.queue_depth = self.queue_depth;
@@ -244,6 +264,9 @@ pub struct DecodeReport {
     pub ttft_p99_us: f64,
     pub evictions: usize,
     pub restores: usize,
+    /// cross-shard per-layer telemetry (one row per model layer when
+    /// serving stacks; a single row for bare mixers)
+    pub layers: Vec<LayerStat>,
 }
 
 impl DecodeReport {
@@ -252,15 +275,29 @@ impl DecodeReport {
     }
 
     pub fn print(&self) {
-        println!(
-            "decode engine: {:?}  {} streams x {} heads, d={}  chunk={}  {} threads",
-            self.cfg.kind,
-            self.cfg.streams,
-            self.cfg.heads,
-            self.cfg.d_head,
-            self.cfg.chunk,
-            self.cfg.threads,
-        );
+        match &self.cfg.stack {
+            Some(s) => println!(
+                "decode engine: {}-layer stack (d_model={} d_ff={} {} heads x d{})  \
+                 {} streams  chunk={}  {} threads",
+                s.layers,
+                s.d_model,
+                s.d_ff,
+                s.heads,
+                s.d_head,
+                self.cfg.streams,
+                self.cfg.chunk,
+                self.cfg.threads,
+            ),
+            None => println!(
+                "decode engine: {:?}  {} streams x {} heads, d={}  chunk={}  {} threads",
+                self.cfg.kind,
+                self.cfg.streams,
+                self.cfg.heads,
+                self.cfg.d_head,
+                self.cfg.chunk,
+                self.cfg.threads,
+            ),
+        }
         println!(
             "  {} tokens in {:.2}s -> {:.0} tok/s aggregate  ({:.1} KiB total mixer state)",
             self.tokens_total,
@@ -282,6 +319,7 @@ impl DecodeReport {
                 self.ttft_p99_us,
             );
         }
+        print_layer_split(&self.layers, self.wall * self.cfg.threads as u32);
         let wall = self.wall.as_secs_f64().max(1e-12);
         for s in &self.shards {
             println!(
@@ -312,7 +350,7 @@ impl DecodeReport {
 /// bit-identical for any thread count.
 pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
     let engine = DecodeEngine::start(cfg.engine_config());
-    let hd = cfg.heads * cfg.d_head;
+    let hd = cfg.row_width();
     let rounds = cfg.tokens.div_ceil(cfg.chunk);
     // pre-generate one full chunk of synthetic activations so the timed
     // region below is pure decode work (same methodology as the benches)
@@ -374,6 +412,7 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
         ttft_p99_us: report.ttft_us(99.0),
         evictions: report.evictions(),
         restores: report.restores(),
+        layers: report.layer_split(),
         shards: report.shards,
     }
 }
@@ -383,10 +422,15 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 /// `ovq serve --model M [--requests N] [--clients C] [--task T]
 ///            [--streams S] [--heads H] [--dhead D] [--nmax N]
 ///            [--decode-tokens T] [--threads W] [--max-resident R]
-///            [--queue-depth Q] [--prompt-tokens P] [--prefill-quantum Q]`
+///            [--queue-depth Q] [--prompt-tokens P] [--prefill-quantum Q]
+///            [--layers L --d-model D --d-ff F --schedule S]`
 /// Demo driver: phase 1 runs the batched scorer against the compiled HLO
 /// program (skipped with a notice when no backend/artifacts are
-/// available); phase 2 runs the sharded streaming-decode engine.
+/// available); phase 2 runs the sharded streaming-decode engine — over
+/// bare mixers by default, or over full multi-layer model stacks when
+/// `--layers` is set. `--schedule` is a comma-separated per-layer mixer
+/// list cycled over the depth (e.g. `ovq:1024` uniform, or
+/// `ovq:1024,kv:win256` for a hybrid stack).
 pub fn cmd_serve(args: &Args) -> Result<()> {
     match super::runtime_from(args) {
         Ok(rt) => serve_batched(&rt, args)?,
@@ -395,28 +439,49 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
-    let n_max = args.opt_usize("nmax", 1024);
+    let n_max = args.opt_usize("nmax", 1024)?;
     let mut dcfg = DecodeConfig::new(n_max);
-    dcfg.streams = args.opt_usize("streams", dcfg.streams);
-    dcfg.heads = args.opt_usize("heads", dcfg.heads);
-    dcfg.d_head = args.opt_usize("dhead", dcfg.d_head);
-    dcfg.tokens = args.opt_usize("decode-tokens", dcfg.tokens);
-    dcfg.threads = args.opt_usize("threads", dcfg.threads);
-    dcfg.max_resident = args.opt_usize("max-resident", dcfg.max_resident);
-    dcfg.queue_depth = args.opt_usize("queue-depth", dcfg.queue_depth);
-    dcfg.prompt_tokens = args.opt_usize("prompt-tokens", dcfg.prompt_tokens);
-    dcfg.prefill_quantum = args.opt_usize("prefill-quantum", dcfg.prefill_quantum);
-    crate::info!(
-        "streaming decode: {} streams x {} heads, d={} N={} over {} shard threads \
-         ({} prompt tokens, prefill quantum {})",
-        dcfg.streams,
-        dcfg.heads,
-        dcfg.d_head,
-        n_max,
-        dcfg.threads,
-        dcfg.prompt_tokens,
-        dcfg.prefill_quantum
-    );
+    dcfg.streams = args.opt_usize("streams", dcfg.streams)?;
+    dcfg.heads = args.opt_usize("heads", dcfg.heads)?;
+    dcfg.d_head = args.opt_usize("dhead", dcfg.d_head)?;
+    dcfg.chunk = args.opt_usize("chunk", dcfg.chunk)?;
+    dcfg.tokens = args.opt_usize("decode-tokens", dcfg.tokens)?;
+    dcfg.threads = args.opt_usize("threads", dcfg.threads)?;
+    dcfg.max_resident = args.opt_usize("max-resident", dcfg.max_resident)?;
+    dcfg.queue_depth = args.opt_usize("queue-depth", dcfg.queue_depth)?;
+    dcfg.prompt_tokens = args.opt_usize("prompt-tokens", dcfg.prompt_tokens)?;
+    dcfg.prefill_quantum = args.opt_usize("prefill-quantum", dcfg.prefill_quantum)?;
+    let layers = args.opt_usize("layers", 0)?;
+    if layers > 0 {
+        let d_model = args.opt_usize("d-model", dcfg.heads * dcfg.d_head)?;
+        let d_ff = args.opt_usize("d-ff", 4 * d_model)?;
+        let schedule = args.opt_or("schedule", &format!("ovq:{n_max}"));
+        let kinds = parse_schedule(&schedule, layers)?;
+        let stack =
+            StackConfig::hybrid(d_model, d_ff, dcfg.heads, dcfg.d_head, dcfg.chunk, kinds);
+        stack.validate()?;
+        crate::info!(
+            "streaming decode: {layers}-layer stack [{schedule}] d_model={d_model} \
+             d_ff={d_ff} ({} heads x d{}), {} streams over {} shard threads",
+            dcfg.heads,
+            dcfg.d_head,
+            dcfg.streams,
+            dcfg.threads
+        );
+        dcfg.stack = Some(stack);
+    } else {
+        crate::info!(
+            "streaming decode: {} streams x {} heads, d={} N={} over {} shard threads \
+             ({} prompt tokens, prefill quantum {})",
+            dcfg.streams,
+            dcfg.heads,
+            dcfg.d_head,
+            n_max,
+            dcfg.threads,
+            dcfg.prompt_tokens,
+            dcfg.prefill_quantum
+        );
+    }
     run_decode_engine(&dcfg).print();
     Ok(())
 }
@@ -426,8 +491,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 fn serve_batched(rt: &crate::runtime::Runtime, args: &Args) -> Result<()> {
     let model_name = args.opt_or("model", "quickstart");
     let task = args.opt_or("task", "icr");
-    let n_requests = args.opt_usize("requests", 32);
-    let n_clients = args.opt_usize("clients", 4);
+    let n_requests = args.opt_usize("requests", 32)?;
+    let n_clients = args.opt_usize("clients", 4)?;
     let model = rt.load_model(&model_name)?;
     let prog = model
         .manifest
@@ -437,6 +502,9 @@ fn serve_batched(rt: &crate::runtime::Runtime, args: &Args) -> Result<()> {
         .expect("model has no eval programs");
     let t = model.manifest.programs[&prog].seq.unwrap_or(256);
     let vocab = model.manifest.cfg_usize("vocab", 512);
+    // validate the task name once, before any client thread spawns — a
+    // typo'd --task is a clean CLI error, not a thread panic
+    crate::data::by_name(&task, vocab)?;
 
     crate::info!(
         "serving {model_name}/{prog} (T={t}) with {n_clients} clients x {} requests",
@@ -450,7 +518,7 @@ fn serve_batched(rt: &crate::runtime::Runtime, args: &Args) -> Result<()> {
         let task = task.clone();
         let per = n_requests / n_clients;
         client_handles.push(std::thread::spawn(move || {
-            let gen = crate::data::by_name(&task, vocab);
+            let gen = crate::data::by_name(&task, vocab).expect("task validated before spawn");
             let mut rng = Rng::new(0xC11E07 + c as u64);
             let mut responses = Vec::new();
             for _ in 0..per {
@@ -556,6 +624,38 @@ mod tests {
         for s in &r.per_stream {
             assert_eq!(s.tokens, 256 + 32, "stream {} accounting", s.stream);
         }
+    }
+
+    #[test]
+    fn decode_engine_serves_hybrid_stacks_end_to_end() {
+        // the serve path over a 2-layer hybrid model stack: full token
+        // accounting and a per-layer telemetry split in the report
+        let mut cfg = DecodeConfig::new(64);
+        cfg.streams = 2;
+        cfg.heads = 2;
+        cfg.d_head = 4;
+        cfg.chunk = 8;
+        cfg.tokens = 32;
+        cfg.stack = Some(StackConfig::hybrid(
+            8,
+            16,
+            2,
+            4,
+            8,
+            vec![MixerKind::Ovq { n_max: 16 }, MixerKind::SlidingWindow { window: 12 }],
+        ));
+        assert_eq!(cfg.row_width(), 8);
+        let r = run_decode_engine(&cfg);
+        assert_eq!(r.tokens_total, 2 * 32);
+        assert_eq!(r.per_stream.len(), 2);
+        assert_eq!(r.layers.len(), 2, "per-layer split in the decode report");
+        assert_eq!(r.layers[0].kind, "ovq");
+        assert_eq!(r.layers[1].kind, "sliding_window");
+        assert!(r.state_bytes > 0);
+        assert_eq!(
+            r.layers.iter().map(|l| l.state_bytes).sum::<usize>(),
+            r.state_bytes
+        );
     }
 
     #[test]

@@ -60,7 +60,7 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig) -> Result<TrainSummary> {
         None => model.init(cfg.seed)?,
     };
 
-    let gen = crate::data::by_name(&cfg.task, vocab);
+    let gen = crate::data::by_name(&cfg.task, vocab)?;
     let prefetch = Prefetcher::spawn(gen, cfg.seed ^ 0xDA7A, b, t, 4);
 
     std::fs::create_dir_all(format!("{}/ckpt", cfg.out_dir))?;

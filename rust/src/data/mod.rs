@@ -15,6 +15,8 @@ pub mod picr;
 pub mod shortctx;
 pub mod vocab;
 
+use anyhow::{bail, Result};
+
 use crate::util::rng::Rng;
 
 /// A generated example: tokens has length seq_len + 1 (so every position
@@ -42,9 +44,11 @@ pub trait TaskGen: Send + Sync {
     fn generate(&self, rng: &mut Rng, seq_len: usize) -> Example;
 }
 
-/// Construct a generator by task name (the CLI contract).
-pub fn by_name(task: &str, vocab: usize) -> Box<dyn TaskGen> {
-    match task {
+/// Construct a generator by task name (the CLI contract). An unknown
+/// name is a user error, not a bug: it returns a descriptive `Err` with
+/// the accepted names instead of panicking.
+pub fn by_name(task: &str, vocab: usize) -> Result<Box<dyn TaskGen>> {
+    Ok(match task {
         "icr" => Box::new(icr::BasicIcr::new(vocab)),
         "picr" => Box::new(picr::PositionalIcr::new(vocab)),
         "icl" => Box::new(icl::IclTask::new(vocab, 4)),
@@ -53,6 +57,21 @@ pub fn by_name(task: &str, vocab: usize) -> Box<dyn TaskGen> {
         "icl16" => Box::new(icl::IclTask::new(vocab, 16)),
         "lm" => Box::new(lm_corpus::BookCorpus::new(vocab)),
         "shortctx" => Box::new(shortctx::ShortCtx::new(vocab)),
-        other => panic!("unknown task '{other}' (icr|picr|icl[1|8|16]|lm|shortctx)"),
+        other => bail!(
+            "unknown task '{other}' (usage: --task one of \
+             icr|picr|icl|icl1|icl8|icl16|lm|shortctx)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn by_name_errors_on_unknown_task_with_hint() {
+        assert!(super::by_name("icr", 64).is_ok());
+        let e = super::by_name("nope", 64).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("unknown task 'nope'"), "{msg}");
+        assert!(msg.contains("usage"), "{msg}");
     }
 }

@@ -19,6 +19,9 @@ fn usage() -> ! {
            serve   --model M --ckpt F   batched scoring + streaming decode demo\n\
                                         [--streams S --threads W --prompt-tokens P\n\
                                          --prefill-quantum Q --max-resident R]\n\
+                                        [--layers L --d-model D --d-ff F --schedule S]\n\
+                                        (--schedule: per-layer mixers, e.g.\n\
+                                         'ovq:1024,kv:win256' cycled over L)\n\
            flops                        print the App. D FLOPs tables\n\
          \n\
          options: --artifacts DIR (or $OVQ_ARTIFACTS), --out DIR (results)\n"

@@ -27,7 +27,7 @@ use std::collections::{HashMap, VecDeque};
 
 use anyhow::{Context, Result};
 
-use super::mixer::{Scratch, SeqMixer};
+use super::mixer::{merge_layer_stats, LayerStat, Scratch, SeqMixer};
 use super::snapshot;
 
 /// One queued decode chunk for a stream, packed `[len, heads, d]`.
@@ -444,6 +444,36 @@ impl ShardBank {
     /// Bytes held in snapshot blobs for evicted sessions.
     pub fn snapshot_bytes(&self) -> usize {
         self.evicted.values().map(|b| b.len()).sum()
+    }
+
+    /// Per-layer telemetry aggregated over every *resident* session
+    /// (evicted sessions are frozen byte blobs — their per-layer split is
+    /// already in `snapshot_bytes`). A bare multi-head session folds to
+    /// one layer-0 row (state/busy summed across its heads, tokens
+    /// counted once per session — every head sees the same tokens);
+    /// [`crate::ovqcore::stack::LayerStack`] sessions contribute one row
+    /// per transformer layer. Either way, a row's `tokens` is the total
+    /// tokens that passed through that layer across sessions.
+    pub fn layer_stats(&self) -> Vec<LayerStat> {
+        let mut acc: Vec<LayerStat> = Vec::new();
+        for r in &self.resident {
+            let mut session: Vec<LayerStat> = Vec::new();
+            for m in &r.mixers {
+                let rows = m.layer_stats();
+                if session.is_empty() {
+                    session = rows;
+                } else {
+                    // further per-head mixers of the same session: same
+                    // layers, same tokens — sum only state and busy time
+                    for (a, b) in session.iter_mut().zip(&rows) {
+                        a.state_bytes += b.state_bytes;
+                        a.busy_ns += b.busy_ns;
+                    }
+                }
+            }
+            merge_layer_stats(&mut acc, &session);
+        }
+        acc
     }
 
     /// What one session costs right now: live mixer bytes while resident,
@@ -902,6 +932,47 @@ mod tests {
         assert!(shard.session_state_bytes(99).is_none());
         shard.flush_all(); // no resident sessions: must be a no-op
         assert_eq!(shard.evictions, 1);
+    }
+
+    #[test]
+    fn shard_serves_layer_stacks_and_splits_telemetry_per_layer() {
+        // a full 2-layer hybrid model stack admitted as an ordinary
+        // session (bank heads = 1, row width = d_model): processing works
+        // through the trait and the per-layer telemetry split surfaces
+        use crate::ovqcore::memstate::MixerKind;
+        use crate::ovqcore::stack::{LayerStack, StackConfig};
+        let cfg = StackConfig::hybrid(
+            8,
+            16,
+            2,
+            4,
+            8,
+            vec![MixerKind::Ovq { n_max: 16 }, MixerKind::Gdn],
+        );
+        let mut shard = ShardBank::new(1, 4, move |id, _| {
+            Box::new(LayerStack::new(cfg.clone(), id)) as Box<dyn SeqMixer>
+        });
+        let mut rng = Rng::new(12);
+        let (out, seq) = shard.process(3, &chunk_of(&mut rng, 10, 8)).unwrap();
+        assert_eq!(out.len(), 10 * 8);
+        assert_eq!(seq, 1);
+        let stats = shard.layer_stats();
+        assert_eq!(stats.len(), 2, "one telemetry row per stack layer");
+        assert_eq!(stats[0].kind, "ovq");
+        assert_eq!(stats[1].kind, "gdn");
+        assert!(stats.iter().all(|s| s.tokens == 10));
+        assert_eq!(
+            stats.iter().map(|s| s.state_bytes).sum::<usize>(),
+            shard.resident_bytes(),
+            "layer split must cover the resident bytes"
+        );
+        // freeze/thaw through the container frame keeps serving
+        shard.evict(3);
+        assert!(shard.layer_stats().is_empty(), "no resident sessions, no split");
+        let (out2, seq2) = shard.process(3, &chunk_of(&mut rng, 4, 8)).unwrap();
+        assert_eq!(out2.len(), 4 * 8);
+        assert_eq!(seq2, 2);
+        assert_eq!(shard.restores, 1);
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! `state_bytes()` — the accounting and the serving path can no longer
 //! drift apart.
 
+use anyhow::{bail, Result};
+
 use super::gdn::GdnState;
 use super::kvcache::KvCache;
 use super::linear_attn::LinearAttnState;
@@ -42,6 +44,58 @@ pub struct MixerGeom {
 }
 
 impl MixerKind {
+    /// Stable label matching the live machine's `kind_name()`.
+    pub fn name(&self) -> &'static str {
+        match *self {
+            MixerKind::FullAttention => "kv_cache",
+            MixerKind::SlidingWindow { .. } => "sliding_window",
+            MixerKind::Ovq { .. } => "ovq",
+            MixerKind::Vq { .. } => "vq",
+            MixerKind::LinearAttention => "linear_attn",
+            MixerKind::Gdn => "gdn",
+        }
+    }
+
+    /// Parse one mixer-schedule entry — the CLI grammar for hybrid
+    /// stacks: `ovq[:N]` (dictionary cap N, default 1024), `vq[:N]`
+    /// (static dictionary, default 256), `kv` (full attention),
+    /// `kv:winW` (sliding window of W), `lin`, `gdn`.
+    pub fn parse(entry: &str) -> Result<MixerKind> {
+        let entry = entry.trim();
+        let (head, arg) = match entry.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (entry, None),
+        };
+        let num = |a: Option<&str>, default: usize, what: &str| -> Result<usize> {
+            match a {
+                None => Ok(default),
+                Some(s) => match s.parse::<usize>() {
+                    Ok(n) if n > 0 => Ok(n),
+                    _ => bail!("mixer entry '{entry}': expected a positive {what}, got '{s}'"),
+                },
+            }
+        };
+        match head {
+            "ovq" => Ok(MixerKind::Ovq { n_max: num(arg, 1024, "dictionary cap")? }),
+            "vq" => Ok(MixerKind::Vq { n: num(arg, 256, "dictionary size")? }),
+            "kv" => match arg {
+                None => Ok(MixerKind::FullAttention),
+                Some(a) => match a.strip_prefix("win") {
+                    Some(w) => Ok(MixerKind::SlidingWindow {
+                        window: num(Some(w), 0, "window length")?,
+                    }),
+                    None => bail!("mixer entry '{entry}': kv takes ':win<W>', got ':{a}'"),
+                },
+            },
+            "lin" => Ok(MixerKind::LinearAttention),
+            "gdn" => Ok(MixerKind::Gdn),
+            other => bail!(
+                "unknown mixer '{other}' in schedule entry '{entry}' \
+                 (expected ovq[:N] | vq[:N] | kv | kv:winW | lin | gdn)"
+            ),
+        }
+    }
+
     /// State bytes per layer at context length t.
     pub fn state_bytes(&self, g: MixerGeom, t: usize) -> usize {
         let hd4 = g.heads * g.d_head * 4;
@@ -110,6 +164,23 @@ impl MixerKind {
     }
 }
 
+/// Parse a per-layer mixer schedule: comma-separated [`MixerKind::parse`]
+/// entries, cycled to fill `layers` (so `ovq:8,kv:win256` on a 4-layer
+/// stack alternates ovq / windowed-kv / ovq / windowed-kv).
+pub fn parse_schedule(schedule: &str, layers: usize) -> Result<Vec<MixerKind>> {
+    anyhow::ensure!(layers > 0, "a stack needs at least one layer (--layers)");
+    let entries: Vec<MixerKind> = schedule
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(MixerKind::parse)
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        !entries.is_empty(),
+        "empty mixer schedule '{schedule}' (expected e.g. 'ovq:1024' or 'ovq:8,kv:win256')"
+    );
+    Ok((0..layers).map(|l| entries[l % entries.len()]).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +232,52 @@ mod tests {
     fn sliding_window_saturates() {
         let k = MixerKind::SlidingWindow { window: 128 };
         assert_eq!(k.state_bytes(G, 128), k.state_bytes(G, 10_000));
+    }
+
+    #[test]
+    fn schedule_parsing_round_trips_and_cycles() {
+        assert_eq!(MixerKind::parse("ovq:8").unwrap(), MixerKind::Ovq { n_max: 8 });
+        assert_eq!(MixerKind::parse("ovq").unwrap(), MixerKind::Ovq { n_max: 1024 });
+        assert_eq!(MixerKind::parse("vq:64").unwrap(), MixerKind::Vq { n: 64 });
+        assert_eq!(MixerKind::parse("kv").unwrap(), MixerKind::FullAttention);
+        assert_eq!(
+            MixerKind::parse("kv:win256").unwrap(),
+            MixerKind::SlidingWindow { window: 256 }
+        );
+        assert_eq!(MixerKind::parse("lin").unwrap(), MixerKind::LinearAttention);
+        assert_eq!(MixerKind::parse("gdn").unwrap(), MixerKind::Gdn);
+        for bad in ["", "ovq:0", "ovq:x", "kv:256", "kv:win0", "mamba"] {
+            assert!(MixerKind::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+
+        let sched = parse_schedule("ovq:8,kv:win256", 4).unwrap();
+        assert_eq!(
+            sched,
+            vec![
+                MixerKind::Ovq { n_max: 8 },
+                MixerKind::SlidingWindow { window: 256 },
+                MixerKind::Ovq { n_max: 8 },
+                MixerKind::SlidingWindow { window: 256 },
+            ]
+        );
+        assert_eq!(parse_schedule("gdn", 3).unwrap(), vec![MixerKind::Gdn; 3]);
+        assert!(parse_schedule("", 2).is_err());
+        assert!(parse_schedule("ovq", 0).is_err());
+    }
+
+    #[test]
+    fn kind_names_match_live_machines() {
+        let kinds = [
+            MixerKind::FullAttention,
+            MixerKind::SlidingWindow { window: 8 },
+            MixerKind::Ovq { n_max: 16 },
+            MixerKind::Vq { n: 8 },
+            MixerKind::LinearAttention,
+            MixerKind::Gdn,
+        ];
+        for kind in kinds {
+            assert_eq!(kind.name(), kind.build(4, 8, 1).kind_name(), "{kind:?}");
+        }
     }
 
     #[test]

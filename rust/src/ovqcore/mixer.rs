@@ -63,6 +63,69 @@ impl Scratch {
     }
 }
 
+/// One row of a mixer's per-layer telemetry split. Plain mixers are their
+/// own single layer; [`super::stack::LayerStack`] reports one row per
+/// transformer layer so the serving engine can show where state bytes and
+/// busy time actually live inside a deep model.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStat {
+    /// mixer kind serving this layer ("ovq", "sliding_window", ...)
+    pub kind: String,
+    /// live mixer state bytes of this layer (all heads)
+    pub state_bytes: usize,
+    /// processing time spent inside this layer, nanoseconds
+    pub busy_ns: f64,
+    /// tokens this layer has absorbed
+    pub tokens: usize,
+}
+
+impl LayerStat {
+    /// Fold another stat into this one (telemetry aggregation across
+    /// sessions and shards; the kind label of the first contributor wins).
+    pub fn merge(&mut self, other: &LayerStat) {
+        if self.kind.is_empty() {
+            self.kind = other.kind.clone();
+        }
+        self.state_bytes += other.state_bytes;
+        self.busy_ns += other.busy_ns;
+        self.tokens += other.tokens;
+    }
+}
+
+/// Element-wise merge of per-layer stat vectors (pads to the longer one).
+pub fn merge_layer_stats(acc: &mut Vec<LayerStat>, add: &[LayerStat]) {
+    if acc.len() < add.len() {
+        acc.resize(add.len(), LayerStat::default());
+    }
+    for (a, b) in acc.iter_mut().zip(add) {
+        a.merge(b);
+    }
+}
+
+/// Print the standard per-layer telemetry rows shared by the engine and
+/// serve reports. `available` is the worker time the busy shares are
+/// measured against (wall clock x shard count, so a saturated layer
+/// reads 100% regardless of thread count). No-op for single-row
+/// (bare-mixer) splits — there is no split to show.
+pub fn print_layer_split(layers: &[LayerStat], available: std::time::Duration) {
+    if layers.len() <= 1 {
+        return;
+    }
+    let avail_ns = (available.as_nanos() as f64).max(1.0);
+    for (l, st) in layers.iter().enumerate() {
+        let tps = if st.busy_ns > 0.0 { st.tokens as f64 / (st.busy_ns / 1e9) } else { 0.0 };
+        println!(
+            "  layer {:>2} [{:>14}]: state {:>9.1} KiB  occupancy {:>5.1}%  \
+             {:>9.0} tok/s-in-layer",
+            l,
+            st.kind,
+            st.state_bytes as f64 / 1024.0,
+            100.0 * st.busy_ns / avail_ns,
+            tps,
+        );
+    }
+}
+
 /// A causal sequence mixer: constant-or-growing state, token writes,
 /// query reads, chunked processing. `Send` is required so banks of mixers
 /// can move across serving threads.
@@ -154,6 +217,19 @@ pub trait SeqMixer: Send {
     /// lets [`super::snapshot::restore`] revive the machine from bytes;
     /// implementations only write their payload here.
     fn snapshot(&self, w: &mut super::snapshot::Writer);
+
+    /// Per-layer telemetry split. A plain mixer is its own single layer;
+    /// multi-layer composites ([`super::stack::LayerStack`]) override with
+    /// one row per layer so serving reports can show where state and busy
+    /// time live inside the model.
+    fn layer_stats(&self) -> Vec<LayerStat> {
+        vec![LayerStat {
+            kind: self.kind_name().to_string(),
+            state_bytes: self.state_bytes(),
+            busy_ns: 0.0,
+            tokens: self.tokens(),
+        }]
+    }
 }
 
 /// Masked-softmax read over a dictionary with count biasing — the shared

@@ -12,8 +12,11 @@
 //!
 //! Layering (DESIGN.md): every state machine implements the
 //! [`mixer::SeqMixer`] trait and runs its hot loops through the blocked
-//! [`kernels`]; [`snapshot`] freezes/thaws any mixer to a bit-exact
-//! binary blob (the session-lifecycle persistence layer);
+//! [`kernels`]; [`stack::LayerStack`] composes the machines into full
+//! multi-layer model stacks (norms, q/k/v/output projections, gated MLP,
+//! residuals) that are themselves `SeqMixer`s; [`snapshot`] freezes/thaws
+//! any mixer — stacks included, via nested container frames — to a
+//! bit-exact binary blob (the session-lifecycle persistence layer);
 //! [`bank::MixerBank`] scales the trait to H heads x S concurrent decode
 //! streams with round-robin scheduling, and [`bank::ShardBank`] adds the
 //! session-keyed store (admission, LRU eviction to snapshots, restore)
@@ -30,6 +33,7 @@ pub mod memstate;
 pub mod mixer;
 pub mod ovq;
 pub mod snapshot;
+pub mod stack;
 pub mod vq;
 
 /// Growth schedule (paper eqs. 17-18): N_t = floor(t*N / (t+N)).

@@ -11,20 +11,84 @@
 //! The payload is written by each mixer's [`SeqMixer::snapshot`] and read
 //! back by its `from_snapshot` constructor; [`restore`] dispatches on the
 //! kind name, so a blob is self-describing — the reviver does not need to
-//! know what kind of session it is thawing.
+//! know what kind of session it is thawing. Container kinds nest: a
+//! `"stack"` blob holds one full child frame per (layer, head) mixer, so
+//! a whole multi-layer model session freezes into one self-describing
+//! byte string.
+//!
+//! Failure model: nothing in this module panics on untrusted bytes. Every
+//! structural defect — truncation, bad magic, an unsupported version, an
+//! unknown kind, trailing garbage, a corrupt length field — surfaces as a
+//! typed [`SnapshotError`], which converts into `anyhow::Error` at the
+//! `?` boundary so callers keep their ergonomic `Result`s.
 
-use anyhow::{bail, Context, Result};
+use std::fmt;
+
+use anyhow::{Context, Result};
 
 use super::gdn::GdnState;
 use super::kvcache::KvCache;
 use super::linear_attn::LinearAttnState;
 use super::mixer::SeqMixer;
 use super::ovq::OvqState;
+use super::stack::LayerStack;
 use super::vq::VqState;
 
 /// `b"OVQS"` little-endian.
 pub const MAGIC: u32 = 0x5351_564F;
-pub const VERSION: u16 = 1;
+/// Format version in the header. v2 added the `"stack"` container frame
+/// (nested per-(layer, head) child blobs); v1 blobs are not accepted —
+/// snapshots are transient session state, never a durable archive.
+pub const VERSION: u16 = 2;
+
+/// Typed snapshot failure — the reasons a blob cannot be thawed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// fewer bytes remain than a field needs
+    Truncated { offset: usize, need: usize, have: usize },
+    /// the blob does not start with [`MAGIC`]
+    BadMagic(u32),
+    /// header version is not [`VERSION`]
+    BadVersion { got: u16 },
+    /// the kind name is none of the registered machines
+    UnknownKind(String),
+    /// bytes left over after the payload was fully consumed
+    TrailingBytes { kind: String, extra: usize },
+    /// a length field claims more elements than the blob could hold
+    BadLength { claimed: usize, remaining: usize },
+    /// a string field is not UTF-8
+    NotUtf8,
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Truncated { offset, need, have } => write!(
+                f,
+                "snapshot truncated: need {need} bytes at offset {offset}, have {have}"
+            ),
+            SnapshotError::BadMagic(m) => {
+                write!(f, "not a mixer snapshot (magic {m:#x})")
+            }
+            SnapshotError::BadVersion { got } => {
+                write!(f, "unsupported snapshot version {got} (this build reads {VERSION})")
+            }
+            SnapshotError::UnknownKind(k) => {
+                write!(f, "unknown mixer kind in snapshot: {k:?}")
+            }
+            SnapshotError::TrailingBytes { kind, extra } => {
+                write!(f, "snapshot has {extra} trailing bytes after {kind} payload")
+            }
+            SnapshotError::BadLength { claimed, remaining } => write!(
+                f,
+                "snapshot array length {claimed} exceeds remaining {remaining} bytes"
+            ),
+            SnapshotError::NotUtf8 => write!(f, "snapshot kind name is not utf8"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
 
 // ------------------------------------------------------------------ writer
 
@@ -119,7 +183,9 @@ impl Writer {
 
 // ------------------------------------------------------------------ reader
 
-/// Cursor over a snapshot blob; every accessor checks bounds.
+/// Cursor over a snapshot blob; every accessor checks bounds and returns
+/// a typed [`SnapshotError`] (which `?`-converts into `anyhow::Error` in
+/// the mixers' `from_snapshot` constructors) instead of panicking.
 pub struct Reader<'a> {
     b: &'a [u8],
     i: usize,
@@ -134,13 +200,13 @@ impl<'a> Reader<'a> {
         self.b.len() - self.i
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
         if self.remaining() < n {
-            bail!(
-                "snapshot truncated: need {n} bytes at offset {}, have {}",
-                self.i,
-                self.remaining()
-            );
+            return Err(SnapshotError::Truncated {
+                offset: self.i,
+                need: n,
+                have: self.remaining(),
+            });
         }
         let whole: &'a [u8] = self.b; // copy the 'a reference out of self
         let s = &whole[self.i..self.i + n];
@@ -148,58 +214,53 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    pub fn u8(&mut self) -> Result<u8> {
+    pub fn u8(&mut self) -> Result<u8, SnapshotError> {
         Ok(self.take(1)?[0])
     }
 
-    pub fn u16(&mut self) -> Result<u16> {
+    pub fn u16(&mut self) -> Result<u16, SnapshotError> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
-    pub fn u32(&mut self) -> Result<u32> {
+    pub fn u32(&mut self) -> Result<u32, SnapshotError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    pub fn u64(&mut self) -> Result<u64> {
+    pub fn u64(&mut self) -> Result<u64, SnapshotError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    pub fn usize(&mut self) -> Result<usize> {
+    pub fn usize(&mut self) -> Result<usize, SnapshotError> {
         Ok(self.u64()? as usize)
     }
 
-    pub fn bool(&mut self) -> Result<bool> {
+    pub fn bool(&mut self) -> Result<bool, SnapshotError> {
         Ok(self.u8()? != 0)
     }
 
-    pub fn f32(&mut self) -> Result<f32> {
+    pub fn f32(&mut self) -> Result<f32, SnapshotError> {
         Ok(f32::from_bits(self.u32()?))
     }
 
-    pub fn f64(&mut self) -> Result<f64> {
+    pub fn f64(&mut self) -> Result<f64, SnapshotError> {
         Ok(f64::from_bits(self.u64()?))
     }
 
-    pub fn str(&mut self) -> Result<String> {
+    pub fn str(&mut self) -> Result<String, SnapshotError> {
         let n = self.u32()? as usize;
         Ok(std::str::from_utf8(self.take(n)?)
-            .context("snapshot kind name is not utf8")?
+            .map_err(|_| SnapshotError::NotUtf8)?
             .to_string())
     }
 
-    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+    pub fn f32s(&mut self) -> Result<Vec<f32>, SnapshotError> {
         let n = self.u64()? as usize;
         // checked: a corrupt length field must Err, not wrap the multiply
         // (release) or panic (debug) — the bounds contract of this reader
         let nbytes = n
             .checked_mul(4)
             .filter(|&b| b <= self.remaining())
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "snapshot f32 array length {n} exceeds remaining {} bytes",
-                    self.remaining()
-                )
-            })?;
+            .ok_or(SnapshotError::BadLength { claimed: n, remaining: self.remaining() })?;
         let raw = self.take(nbytes)?;
         Ok(raw
             .chunks_exact(4)
@@ -207,21 +268,40 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
-    pub fn opt_f32(&mut self) -> Result<Option<f32>> {
+    pub fn opt_f32(&mut self) -> Result<Option<f32>, SnapshotError> {
         Ok(if self.bool()? { Some(self.f32()?) } else { None })
     }
 
-    pub fn opt_usize(&mut self) -> Result<Option<usize>> {
+    pub fn opt_usize(&mut self) -> Result<Option<usize>, SnapshotError> {
         Ok(if self.bool()? { Some(self.usize()?) } else { None })
     }
 
-    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+    pub fn bytes(&mut self) -> Result<&'a [u8], SnapshotError> {
         let n = self.u64()? as usize;
+        if n > self.remaining() {
+            return Err(SnapshotError::BadLength { claimed: n, remaining: self.remaining() });
+        }
         self.take(n)
     }
 }
 
 // ----------------------------------------------------------- save / restore
+
+/// Read just the header of a blob and return its kind name — validation
+/// without payload work. Container restores use this to reject malformed
+/// nesting (e.g. a stack inside a stack) *before* recursing.
+pub fn peek_kind(bytes: &[u8]) -> Result<String, SnapshotError> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        return Err(SnapshotError::BadMagic(magic));
+    }
+    let version = r.u16()?;
+    if version != VERSION {
+        return Err(SnapshotError::BadVersion { got: version });
+    }
+    r.str()
+}
 
 /// Serialize a mixer (any kind) into a self-describing blob.
 pub fn save(m: &dyn SeqMixer) -> Vec<u8> {
@@ -234,16 +314,18 @@ pub fn save(m: &dyn SeqMixer) -> Vec<u8> {
 }
 
 /// Revive a mixer from a [`save`] blob. The restored machine continues
-/// bit-identically to the one that was snapshotted.
+/// bit-identically to the one that was snapshotted. Dispatches on the
+/// self-describing kind name — including the `"stack"` container frame,
+/// whose payload nests one full child blob per (layer, head) mixer.
 pub fn restore(bytes: &[u8]) -> Result<Box<dyn SeqMixer>> {
     let mut r = Reader::new(bytes);
     let magic = r.u32()?;
     if magic != MAGIC {
-        bail!("not a mixer snapshot (magic {magic:#x})");
+        return Err(SnapshotError::BadMagic(magic).into());
     }
     let version = r.u16()?;
     if version != VERSION {
-        bail!("unsupported snapshot version {version}");
+        return Err(SnapshotError::BadVersion { got: version }.into());
     }
     let kind = r.str()?;
     let m: Box<dyn SeqMixer> = match kind.as_str() {
@@ -252,10 +334,11 @@ pub fn restore(bytes: &[u8]) -> Result<Box<dyn SeqMixer>> {
         "linear_attn" => Box::new(LinearAttnState::from_snapshot(&mut r)?),
         "gdn" => Box::new(GdnState::from_snapshot(&mut r)?),
         "kv_cache" | "sliding_window" => Box::new(KvCache::from_snapshot(&mut r)?),
-        other => bail!("unknown mixer kind in snapshot: {other:?}"),
+        "stack" => Box::new(LayerStack::from_snapshot(&mut r).context("stack container")?),
+        other => return Err(SnapshotError::UnknownKind(other.to_string()).into()),
     };
     if r.remaining() != 0 {
-        bail!("snapshot has {} trailing bytes after {kind} payload", r.remaining());
+        return Err(SnapshotError::TrailingBytes { kind, extra: r.remaining() }.into());
     }
     Ok(m)
 }
@@ -306,13 +389,104 @@ mod tests {
     }
 
     #[test]
-    fn restore_rejects_garbage() {
-        assert!(restore(b"not a snapshot").is_err());
+    fn restore_rejects_garbage_with_typed_errors() {
+        // truncated header
+        let e = restore(b"ovq").unwrap_err();
+        assert!(format!("{e}").contains("truncated"), "{e}");
+        // wrong magic
+        let e = restore(b"not a snapshot").unwrap_err();
+        assert!(format!("{e}").contains("magic"), "{e}");
+        // version mismatch (e.g. a pre-stack v1 blob)
+        for version in [1u16, 99] {
+            let mut w = Writer::new();
+            w.u32(MAGIC);
+            w.u16(version);
+            w.str("ovq");
+            let e = restore(&w.into_bytes()).unwrap_err();
+            assert!(format!("{e}").contains("version"), "v{version}: {e}");
+        }
+        // unknown kind
         let mut w = Writer::new();
         w.u32(MAGIC);
-        w.u16(99); // bad version
-        w.str("ovq");
-        assert!(restore(&w.into_bytes()).is_err());
+        w.u16(VERSION);
+        w.str("mamba");
+        let e = restore(&w.into_bytes()).unwrap_err();
+        assert!(format!("{e}").contains("unknown mixer kind"), "{e}");
+        // trailing bytes after a valid payload
+        let probe = MixerKind::Ovq { n_max: 8 }.build(4, 8, 1);
+        let mut blob = save(probe.as_ref());
+        blob.push(0xFF);
+        let e = restore(&blob).unwrap_err();
+        assert!(format!("{e}").contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn peek_kind_reads_headers_only() {
+        let probe = MixerKind::Gdn.build(4, 8, 1);
+        let blob = save(probe.as_ref());
+        assert_eq!(peek_kind(&blob).unwrap(), "gdn");
+        assert!(peek_kind(b"junk").is_err());
+        let mut w = Writer::new();
+        w.u32(MAGIC);
+        w.u16(1); // stale version
+        w.str("gdn");
+        assert_eq!(peek_kind(&w.into_bytes()), Err(SnapshotError::BadVersion { got: 1 }));
+    }
+
+    #[test]
+    fn snapshot_error_variants_format_distinctly() {
+        let variants: Vec<SnapshotError> = vec![
+            SnapshotError::Truncated { offset: 3, need: 8, have: 1 },
+            SnapshotError::BadMagic(7),
+            SnapshotError::BadVersion { got: 1 },
+            SnapshotError::UnknownKind("x".into()),
+            SnapshotError::TrailingBytes { kind: "ovq".into(), extra: 2 },
+            SnapshotError::BadLength { claimed: 1 << 60, remaining: 4 },
+            SnapshotError::NotUtf8,
+        ];
+        let msgs: Vec<String> = variants.iter().map(|v| v.to_string()).collect();
+        for (i, a) in msgs.iter().enumerate() {
+            for b in &msgs[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        // and they convert into anyhow at the ? boundary
+        let e: anyhow::Error = SnapshotError::BadMagic(7).into();
+        assert!(format!("{e}").contains("magic"));
+    }
+
+    #[test]
+    fn stack_container_round_trips_bit_exactly() {
+        use crate::ovqcore::stack::{LayerStack, StackConfig};
+        let kinds = vec![
+            MixerKind::Ovq { n_max: 16 },
+            MixerKind::SlidingWindow { window: 12 },
+            MixerKind::Gdn,
+        ];
+        let cfg = StackConfig::hybrid(8, 16, 2, 4, 8, kinds);
+        let mut st = LayerStack::new(cfg, 0xFEED);
+        let mut rng = Rng::new(0xBEE);
+        let mut scratch = Scratch::new();
+        // 21 tokens: the OVQ layers keep a pending tail mid-chunk
+        let x: Vec<f32> = (0..21 * 8).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; 21 * 8];
+        st.process_chunk(&x, &x, &x, &mut out, &mut scratch);
+
+        let blob = save(&st);
+        let thawed = restore(&blob).expect("stack blob must thaw");
+        assert_eq!(thawed.kind_name(), "stack");
+        assert_eq!(thawed.tokens(), st.tokens());
+        assert_eq!(thawed.state_bytes(), st.state_bytes());
+        assert_eq!(save(thawed.as_ref()), blob, "stack refreeze differs");
+        let stats = thawed.layer_stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats[2].kind, "gdn");
+
+        // a corrupt nested frame fails cleanly, never panics
+        let mut bad = blob.clone();
+        let n = bad.len();
+        bad.truncate(n - 3);
+        assert!(restore(&bad).is_err());
     }
 
     #[test]

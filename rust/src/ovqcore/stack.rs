@@ -1,0 +1,990 @@
+//! Multi-layer model stacks served through the [`SeqMixer`] trait — the
+//! whole-model counterpart of the single-layer state machines. A
+//! [`LayerStack`] is N transformer layers, each:
+//!
+//! ```text
+//!   x ─ RMSNorm ─ Wq/Wk/Wv ─ H SeqMixer heads ─ Wo ─(+x)─
+//!     ─ RMSNorm ─ gated MLP (silu(Wg h) ⊙ Wu h → Wd) ─(+)─▶ next layer
+//! ```
+//!
+//! and the stack itself implements [`SeqMixer`], so everything built on
+//! the trait — [`super::bank::ShardBank`] admission and LRU eviction,
+//! the sharded decode engine, continuous batching, traffic replay —
+//! serves full model stacks unchanged. A session can be frozen to a
+//! snapshot blob mid-prompt at any layer depth and resume
+//! bit-identically.
+//!
+//! Conventions:
+//! - **The `keys` stream carries the token embeddings.** A model stack
+//!   consumes one `[len, d_model]` activation stream and derives q/k/v
+//!   internally via its projections, so `process_chunk`/`process_prefill`
+//!   read embeddings from `keys` and ignore `queries`/`values` (they must
+//!   only match in shape). The single-token `write(k, _)` stages the
+//!   embedding `k` through the stack and buffers the output for the
+//!   following `read`.
+//! - **Weights are deterministic in the init seed.** Snapshots store the
+//!   config + seed and rebuild the weights on restore, so an evicted
+//!   session's blob holds only the dynamic per-layer mixer state — the
+//!   byte-accounting contract that makes eviction cheap stays intact.
+//! - **Prefill ≡ decode, bitwise.** The blocked block path runs every
+//!   dense op through [`kernels::matmul_rows`] (bit-identical to the
+//!   per-token `matvec` by construction) and hands each head's panel to
+//!   the mixer's own `process_prefill`; rust/tests/golden.rs compares the
+//!   two paths with `to_bits` equality.
+//! - **Identity (bare-mixer bridge) mode.** `StackConfig::bare` builds a
+//!   1-layer stack with no norms, projections, MLP or residual: the raw
+//!   (q, k, v) streams go straight to the heads. This is the golden-test
+//!   bridge proving the stack is a strict generalization of the bare
+//!   mixers PRs 1–3 served.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::kernels;
+use super::memstate::MixerKind;
+use super::mixer::{LayerStat, Scratch, SeqMixer};
+use super::snapshot;
+
+/// RMSNorm epsilon (kept out of the config: one value, everywhere).
+const NORM_EPS: f32 = 1e-6;
+
+/// Shape and policy of a [`LayerStack`].
+#[derive(Debug, Clone)]
+pub struct StackConfig {
+    pub layers: usize,
+    /// residual-stream width (the stack's d_in == d_out)
+    pub d_model: usize,
+    /// gated-MLP hidden width
+    pub d_ff: usize,
+    /// mixer heads per layer
+    pub heads: usize,
+    /// per-head q/k/v width
+    pub d_head: usize,
+    /// mixer chunk length (OVQ merge granularity), forwarded to
+    /// [`MixerKind::build`]
+    pub chunk: usize,
+    /// one mixer kind per layer — hybrid schedules mix kinds freely
+    pub kinds: Vec<MixerKind>,
+    /// bare-mixer bridge mode: no norms/projections/MLP/residual, the raw
+    /// (q, k, v) streams feed the heads directly. Requires `layers == 1`
+    /// and `heads * d_head == d_model`.
+    pub identity: bool,
+}
+
+impl StackConfig {
+    /// A uniform full stack: every layer serves `kind`.
+    pub fn uniform(
+        layers: usize,
+        d_model: usize,
+        d_ff: usize,
+        heads: usize,
+        d_head: usize,
+        chunk: usize,
+        kind: MixerKind,
+    ) -> StackConfig {
+        StackConfig {
+            layers,
+            d_model,
+            d_ff,
+            heads,
+            d_head,
+            chunk,
+            kinds: vec![kind; layers],
+            identity: false,
+        }
+    }
+
+    /// A hybrid full stack with an explicit per-layer schedule — the
+    /// depth IS the schedule length.
+    pub fn hybrid(
+        d_model: usize,
+        d_ff: usize,
+        heads: usize,
+        d_head: usize,
+        chunk: usize,
+        kinds: Vec<MixerKind>,
+    ) -> StackConfig {
+        StackConfig {
+            layers: kinds.len(),
+            d_model,
+            d_ff,
+            heads,
+            d_head,
+            chunk,
+            kinds,
+            identity: false,
+        }
+    }
+
+    /// The bare-mixer bridge: one identity layer over `heads` mixers of
+    /// `kind` — bit-for-bit the bank-of-mixers workload PRs 1–3 served.
+    pub fn bare(kind: MixerKind, heads: usize, d_head: usize, chunk: usize) -> StackConfig {
+        StackConfig {
+            layers: 1,
+            d_model: heads * d_head,
+            d_ff: 0,
+            heads,
+            d_head,
+            chunk,
+            kinds: vec![kind],
+            identity: true,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.layers == 0 || self.heads == 0 || self.d_head == 0 || self.chunk == 0 {
+            bail!(
+                "stack config needs layers/heads/d_head/chunk > 0 \
+                 (got {}/{}/{}/{})",
+                self.layers,
+                self.heads,
+                self.d_head,
+                self.chunk
+            );
+        }
+        if self.kinds.len() != self.layers {
+            bail!(
+                "stack schedule has {} kinds for {} layers",
+                self.kinds.len(),
+                self.layers
+            );
+        }
+        if self.identity {
+            if self.layers != 1 {
+                bail!("identity (bare-mixer) stacks are single-layer, got {}", self.layers);
+            }
+            if self.heads * self.d_head != self.d_model {
+                bail!(
+                    "identity stack needs heads * d_head == d_model \
+                     ({} * {} != {})",
+                    self.heads,
+                    self.d_head,
+                    self.d_model
+                );
+            }
+        } else if self.d_model == 0 || self.d_ff == 0 {
+            bail!("full stack needs d_model/d_ff > 0 (got {}/{})", self.d_model, self.d_ff);
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic per-(layer, head) mixer seed derived from the stack's
+/// init seed — public so golden tests can build the matching bare mixer.
+pub fn mixer_seed(init_seed: u64, layer: usize, head: usize) -> u64 {
+    mix(init_seed
+        ^ (layer as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (head as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+}
+
+/// Deterministic per-(layer, matrix) weight seed.
+fn weight_seed(init_seed: u64, layer: usize, tag: u64) -> u64 {
+    mix(init_seed ^ (layer as u64 + 1).wrapping_mul(0x94D0_49BB_1331_11EB) ^ (tag << 17))
+}
+
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// `[rows, cols]` row-major init, normal(0, 1/cols) — the standard
+/// fan-in scaling, deterministic in the seed.
+fn init_matrix(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let scale = 1.0 / (cols as f64).sqrt();
+    (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// `out[i] = x[i] * w[i] / sqrt(mean(x^2) + eps)` — one row, serial and
+/// order-stable, so the blocked and per-token paths share every bit.
+fn rmsnorm_row(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let scale = 1.0 / (ss / d as f32 + NORM_EPS).sqrt();
+    for j in 0..d {
+        out[j] = x[j] * scale * w[j];
+    }
+}
+
+/// One transformer layer: dense weights + its mixer heads. Weights are
+/// empty in identity mode.
+struct StackLayer {
+    /// q/k/v projections, `[heads * d_head, d_model]` row-major
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    /// output projection, `[d_model, heads * d_head]`
+    wo: Vec<f32>,
+    /// pre-attention / pre-MLP RMSNorm gains, `[d_model]`
+    norm1: Vec<f32>,
+    norm2: Vec<f32>,
+    /// gated MLP: gate/up `[d_ff, d_model]`, down `[d_model, d_ff]`
+    w_gate: Vec<f32>,
+    w_up: Vec<f32>,
+    w_down: Vec<f32>,
+    heads: Vec<Box<dyn SeqMixer>>,
+    /// processing time spent inside this layer, nanoseconds (telemetry,
+    /// not state — never serialized)
+    busy_ns: f64,
+}
+
+impl StackLayer {
+    fn new(cfg: &StackConfig, init_seed: u64, layer: usize, build_heads: bool) -> StackLayer {
+        let heads = if build_heads {
+            (0..cfg.heads)
+                .map(|h| {
+                    cfg.kinds[layer].build(cfg.d_head, cfg.chunk, mixer_seed(init_seed, layer, h))
+                })
+                .collect()
+        } else {
+            Vec::with_capacity(cfg.heads)
+        };
+        if cfg.identity {
+            return StackLayer {
+                wq: Vec::new(),
+                wk: Vec::new(),
+                wv: Vec::new(),
+                wo: Vec::new(),
+                norm1: Vec::new(),
+                norm2: Vec::new(),
+                w_gate: Vec::new(),
+                w_up: Vec::new(),
+                w_down: Vec::new(),
+                heads,
+                busy_ns: 0.0,
+            };
+        }
+        let (d, hd, dff) = (cfg.d_model, cfg.heads * cfg.d_head, cfg.d_ff);
+        StackLayer {
+            wq: init_matrix(weight_seed(init_seed, layer, 1), hd, d),
+            wk: init_matrix(weight_seed(init_seed, layer, 2), hd, d),
+            wv: init_matrix(weight_seed(init_seed, layer, 3), hd, d),
+            wo: init_matrix(weight_seed(init_seed, layer, 4), d, hd),
+            norm1: vec![1.0; d],
+            norm2: vec![1.0; d],
+            w_gate: init_matrix(weight_seed(init_seed, layer, 5), dff, d),
+            w_up: init_matrix(weight_seed(init_seed, layer, 6), dff, d),
+            w_down: init_matrix(weight_seed(init_seed, layer, 7), d, dff),
+            busy_ns: 0.0,
+            heads,
+        }
+    }
+
+    fn param_bytes(&self) -> usize {
+        (self.wq.len()
+            + self.wk.len()
+            + self.wv.len()
+            + self.wo.len()
+            + self.norm1.len()
+            + self.norm2.len()
+            + self.w_gate.len()
+            + self.w_up.len()
+            + self.w_down.len())
+            * 4
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.heads.iter().map(|m| m.state_bytes()).sum()
+    }
+}
+
+/// Reusable block-sized activation workspace — grown on first use, then
+/// zero allocation on the steady-state decode path.
+#[derive(Default)]
+struct Workspace {
+    /// `[len, d_model]` residual stream (the running layer input)
+    x: Vec<f32>,
+    /// `[len, d_model]` normed activations
+    h: Vec<f32>,
+    /// `[len, heads * d_head]` projected q/k/v and attention output
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    /// `[len, d_head]` contiguous per-head panels
+    pq: Vec<f32>,
+    pk: Vec<f32>,
+    pv: Vec<f32>,
+    po: Vec<f32>,
+    /// `[len, d_ff]` MLP gate/up activations
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    /// `[len, d_model]` projection/MLP output staging
+    tmp: Vec<f32>,
+    /// single-token output buffered between `write` and `read`
+    last_out: Vec<f32>,
+    /// owned mixer scratch for the write/read path (the trait hands
+    /// `read` a scratch, but `write` runs the whole forward)
+    own_scratch: Scratch,
+}
+
+fn grow(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
+
+/// A full multi-layer model stack behind the [`SeqMixer`] interface.
+pub struct LayerStack {
+    cfg: StackConfig,
+    init_seed: u64,
+    layers: Vec<StackLayer>,
+    /// tokens absorbed by the stack (every layer sees every token)
+    t: usize,
+    ws: Workspace,
+}
+
+impl LayerStack {
+    /// Build a stack with deterministic seeded weights. Panics on an
+    /// invalid config — validate with [`StackConfig::validate`] first
+    /// when the shape comes from user input.
+    pub fn new(cfg: StackConfig, init_seed: u64) -> LayerStack {
+        Self::with_heads(cfg, init_seed, true)
+    }
+
+    /// Shared constructor core: weights always, head mixers optionally —
+    /// `from_snapshot` restores the heads from blobs instead, so it must
+    /// not pay for (and then discard) freshly built ones.
+    fn with_heads(cfg: StackConfig, init_seed: u64, build_heads: bool) -> LayerStack {
+        cfg.validate().expect("invalid stack config");
+        let layers = (0..cfg.layers)
+            .map(|l| StackLayer::new(&cfg, init_seed, l, build_heads))
+            .collect();
+        LayerStack { cfg, init_seed, layers, t: 0, ws: Workspace::default() }
+    }
+
+    pub fn cfg(&self) -> &StackConfig {
+        &self.cfg
+    }
+
+    pub fn init_seed(&self) -> u64 {
+        self.init_seed
+    }
+
+    /// Weight bytes (shared-model cost, deterministic in the seed — NOT
+    /// part of `state_bytes`, which accounts the per-session dynamic
+    /// state the eviction contract bills for).
+    pub fn param_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.param_bytes()).sum()
+    }
+
+    /// Live mixer state bytes per layer.
+    pub fn layer_state_bytes(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.state_bytes()).collect()
+    }
+
+    /// Rebuild from a [`snapshot::save`] payload: config + init seed are
+    /// read back, weights are regenerated deterministically from the
+    /// seed, and every (layer, head) mixer is restored from its nested
+    /// self-describing blob.
+    pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<LayerStack> {
+        let layers = r.usize()?;
+        let d_model = r.usize()?;
+        let d_ff = r.usize()?;
+        let heads = r.usize()?;
+        let d_head = r.usize()?;
+        let chunk = r.usize()?;
+        let identity = r.bool()?;
+        let init_seed = r.u64()?;
+        let t = r.usize()?;
+        // bound the shape BEFORE any allocation or weight init — a
+        // corrupt blob claiming a 2^40-wide model must surface as a clean
+        // error, never an arithmetic overflow or a wild allocation (the
+        // snapshot module's no-panics-on-untrusted-bytes contract). The
+        // cap is deliberately far above any servable stack (2^33 weight
+        // elements) so everything `save` can produce restores; it exists
+        // to keep the index arithmetic overflow-free. Saturating math:
+        // the bound check itself must not overflow either.
+        let row = heads
+            .saturating_mul(d_head)
+            .saturating_mul(4)
+            .saturating_add(d_ff.saturating_mul(3))
+            .saturating_add(2);
+        let weight_elems = d_model.saturating_mul(row).saturating_mul(layers);
+        anyhow::ensure!(
+            layers <= 4096
+                && heads <= 4096
+                && chunk <= (1 << 20)
+                && (weight_elems as u64) <= (1u64 << 33),
+            "stack snapshot claims an implausible shape ({layers} layers x {heads} heads, \
+             d_model={d_model} d_ff={d_ff} d_head={d_head} chunk={chunk})"
+        );
+        let mut kinds = Vec::with_capacity(layers);
+        for _ in 0..layers {
+            kinds.push(read_kind(r)?);
+        }
+        let cfg = StackConfig { layers, d_model, d_ff, heads, d_head, chunk, kinds, identity };
+        cfg.validate()?;
+        // weights are regenerated from the seed (O(params), the price of
+        // keeping eviction blobs proportional to dynamic state); the head
+        // mixers are NOT built — they are restored from the child blobs
+        let mut st = LayerStack::with_heads(cfg, init_seed, false);
+        st.t = t;
+        for l in 0..layers {
+            for h in 0..heads {
+                let child = r.bytes()?;
+                // check the child's kind against the schedule BEFORE the
+                // recursive restore — a corrupt blob nesting containers
+                // must fail here, not recurse
+                let child_kind = snapshot::peek_kind(child)
+                    .with_context(|| format!("stack layer {l} head {h}"))?;
+                anyhow::ensure!(
+                    child_kind == st.cfg.kinds[l].name(),
+                    "stack snapshot layer {l} head {h}: kind {child_kind:?} does not \
+                     match schedule {}",
+                    st.cfg.kinds[l].name()
+                );
+                let m = snapshot::restore(child)
+                    .with_context(|| format!("stack layer {l} head {h}"))?;
+                anyhow::ensure!(
+                    m.d_in() == d_head && m.d_out() == d_head,
+                    "stack snapshot layer {l} head {h}: dims {}x{} != d_head {d_head}",
+                    m.d_in(),
+                    m.d_out()
+                );
+                st.layers[l].heads.push(m);
+            }
+        }
+        Ok(st)
+    }
+
+    /// The shared block path: `len` embedding rows through every layer,
+    /// layer-blocked (all dense ops via the tiled [`kernels::matmul_rows`],
+    /// each head's whole panel through one mixer call). Bit-identical to
+    /// the serial per-token loop in both modes.
+    fn process_block(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+        prefill: bool,
+    ) {
+        let LayerStack { cfg, layers, ws, t, .. } = self;
+        let dh = cfg.d_head;
+        let hd = cfg.heads * dh;
+        if cfg.identity {
+            // bare-mixer bridge: raw (q, k, v) streams, per-head panels
+            let len = keys.len() / hd;
+            debug_assert_eq!(queries.len(), len * hd);
+            debug_assert_eq!(values.len(), len * hd);
+            debug_assert_eq!(out.len(), len * hd);
+            let t0 = Instant::now();
+            let layer = &mut layers[0];
+            for (head, mixer) in layer.heads.iter_mut().enumerate() {
+                let pq = grow(&mut ws.pq, len * dh);
+                gather_head(queries, pq, len, hd, head * dh, dh);
+                let pk = grow(&mut ws.pk, len * dh);
+                gather_head(keys, pk, len, hd, head * dh, dh);
+                let pv = grow(&mut ws.pv, len * dh);
+                gather_head(values, pv, len, hd, head * dh, dh);
+                let po = grow(&mut ws.po, len * dh);
+                let (pq, pk, pv) = (&ws.pq[..len * dh], &ws.pk[..len * dh], &ws.pv[..len * dh]);
+                if prefill {
+                    mixer.process_prefill(pq, pk, pv, po, scratch);
+                } else {
+                    mixer.process_chunk(pq, pk, pv, po, scratch);
+                }
+                scatter_head(&ws.po[..len * dh], out, len, hd, head * dh, dh);
+            }
+            layer.busy_ns += t0.elapsed().as_nanos() as f64;
+            *t += len;
+            return;
+        }
+
+        let d = cfg.d_model;
+        let dff = cfg.d_ff;
+        let len = keys.len() / d;
+        debug_assert_eq!(queries.len(), len * d);
+        debug_assert_eq!(values.len(), len * d);
+        debug_assert_eq!(out.len(), len * d);
+
+        // the keys stream carries the embeddings (module docs)
+        grow(&mut ws.x, len * d).copy_from_slice(&keys[..len * d]);
+        for layer in layers.iter_mut() {
+            let t0 = Instant::now();
+            // pre-attention norm
+            let h = grow(&mut ws.h, len * d);
+            for i in 0..len {
+                rmsnorm_row(&ws.x[i * d..(i + 1) * d], &layer.norm1, &mut h[i * d..(i + 1) * d]);
+            }
+            // q/k/v projections, one tiled sweep each
+            let hn = &ws.h[..len * d];
+            kernels::matmul_rows(&layer.wq, hd, d, hn, len, grow(&mut ws.q, len * hd));
+            kernels::matmul_rows(&layer.wk, hd, d, hn, len, grow(&mut ws.k, len * hd));
+            kernels::matmul_rows(&layer.wv, hd, d, hn, len, grow(&mut ws.v, len * hd));
+            // heads: contiguous panels through each mixer
+            grow(&mut ws.attn, len * hd);
+            for (head, mixer) in layer.heads.iter_mut().enumerate() {
+                gather_head(&ws.q[..len * hd], grow(&mut ws.pq, len * dh), len, hd, head * dh, dh);
+                gather_head(&ws.k[..len * hd], grow(&mut ws.pk, len * dh), len, hd, head * dh, dh);
+                gather_head(&ws.v[..len * hd], grow(&mut ws.pv, len * dh), len, hd, head * dh, dh);
+                let po = grow(&mut ws.po, len * dh);
+                let (pq, pk, pv) = (&ws.pq[..len * dh], &ws.pk[..len * dh], &ws.pv[..len * dh]);
+                if prefill {
+                    mixer.process_prefill(pq, pk, pv, po, scratch);
+                } else {
+                    mixer.process_chunk(pq, pk, pv, po, scratch);
+                }
+                let attn = &mut ws.attn[..len * hd];
+                scatter_head(&ws.po[..len * dh], attn, len, hd, head * dh, dh);
+            }
+            // output projection + residual
+            kernels::matmul_rows(
+                &layer.wo,
+                d,
+                hd,
+                &ws.attn[..len * hd],
+                len,
+                grow(&mut ws.tmp, len * d),
+            );
+            for (xj, pj) in ws.x[..len * d].iter_mut().zip(&ws.tmp[..len * d]) {
+                *xj += pj;
+            }
+            // pre-MLP norm + gated MLP + residual
+            let h = grow(&mut ws.h, len * d);
+            for i in 0..len {
+                rmsnorm_row(&ws.x[i * d..(i + 1) * d], &layer.norm2, &mut h[i * d..(i + 1) * d]);
+            }
+            kernels::matmul_rows(
+                &layer.w_gate,
+                dff,
+                d,
+                &ws.h[..len * d],
+                len,
+                grow(&mut ws.gate, len * dff),
+            );
+            kernels::matmul_rows(
+                &layer.w_up,
+                dff,
+                d,
+                &ws.h[..len * d],
+                len,
+                grow(&mut ws.up, len * dff),
+            );
+            for (gj, uj) in ws.gate[..len * dff].iter_mut().zip(&ws.up[..len * dff]) {
+                *gj = silu(*gj) * uj;
+            }
+            kernels::matmul_rows(
+                &layer.w_down,
+                d,
+                dff,
+                &ws.gate[..len * dff],
+                len,
+                grow(&mut ws.tmp, len * d),
+            );
+            for (xj, mj) in ws.x[..len * d].iter_mut().zip(&ws.tmp[..len * d]) {
+                *xj += mj;
+            }
+            layer.busy_ns += t0.elapsed().as_nanos() as f64;
+        }
+        out[..len * d].copy_from_slice(&ws.x[..len * d]);
+        *t += len;
+    }
+}
+
+/// Copy `[len, width]`-strided head columns into a contiguous
+/// `[len, dh]` panel.
+fn gather_head(src: &[f32], dst: &mut [f32], len: usize, width: usize, off: usize, dh: usize) {
+    for i in 0..len {
+        dst[i * dh..(i + 1) * dh].copy_from_slice(&src[i * width + off..i * width + off + dh]);
+    }
+}
+
+/// Inverse of [`gather_head`].
+fn scatter_head(src: &[f32], dst: &mut [f32], len: usize, width: usize, off: usize, dh: usize) {
+    for i in 0..len {
+        dst[i * width + off..i * width + off + dh].copy_from_slice(&src[i * dh..(i + 1) * dh]);
+    }
+}
+
+impl SeqMixer for LayerStack {
+    fn kind_name(&self) -> &'static str {
+        "stack"
+    }
+
+    fn d_in(&self) -> usize {
+        self.cfg.d_model
+    }
+
+    fn d_out(&self) -> usize {
+        self.cfg.d_model
+    }
+
+    fn tokens(&self) -> usize {
+        self.t
+    }
+
+    /// Dynamic per-session state only: the per-layer per-head mixer
+    /// states. Weights are deterministic in the init seed (rebuilt on
+    /// restore), so they are model cost, not session state — see
+    /// [`LayerStack::param_bytes`].
+    fn state_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.state_bytes()).sum()
+    }
+
+    fn update_bytes_per_chunk(&self, l: usize) -> usize {
+        self.layers
+            .iter()
+            .map(|layer| {
+                layer.heads.iter().map(|m| m.update_bytes_per_chunk(l)).sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Stage one token embedding (`k`; `v` is ignored outside identity
+    /// mode) through the whole stack and buffer the output for the
+    /// following `read` — the write-then-read decode contract.
+    fn write(&mut self, k: &[f32], v: &[f32]) {
+        if self.cfg.identity {
+            let dh = self.cfg.d_head;
+            for (head, mixer) in self.layers[0].heads.iter_mut().enumerate() {
+                mixer.write(&k[head * dh..(head + 1) * dh], &v[head * dh..(head + 1) * dh]);
+            }
+            self.t += 1;
+            return;
+        }
+        let d = self.cfg.d_model;
+        debug_assert_eq!(k.len(), d);
+        let mut out = std::mem::take(&mut self.ws.last_out);
+        out.resize(d, 0.0);
+        let mut scratch = std::mem::take(&mut self.ws.own_scratch);
+        self.process_block(k, k, k, &mut out, &mut scratch, false);
+        self.ws.last_out = out;
+        self.ws.own_scratch = scratch;
+    }
+
+    /// Identity mode answers the query against the heads; a full stack
+    /// returns the output buffered by the preceding `write` (the stack
+    /// derives its own queries internally).
+    fn read(&self, q: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        if self.cfg.identity {
+            let dh = self.cfg.d_head;
+            for (head, mixer) in self.layers[0].heads.iter().enumerate() {
+                let (a, b) = (head * dh, (head + 1) * dh);
+                mixer.read(&q[a..b], &mut out[a..b], scratch);
+            }
+            return;
+        }
+        let _ = q;
+        if self.ws.last_out.len() == out.len() {
+            out.copy_from_slice(&self.ws.last_out);
+        } else {
+            // no preceding write (e.g. a probe on a fresh/restored stack):
+            // nothing is buffered, answer zeros
+            out.iter_mut().for_each(|o| *o = 0.0);
+        }
+    }
+
+    fn process_chunk(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        self.process_block(queries, keys, values, out, scratch, false);
+    }
+
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        self.process_block(queries, keys, values, out, scratch, true);
+    }
+
+    fn flush(&mut self) {
+        for layer in &mut self.layers {
+            for m in &mut layer.heads {
+                m.flush();
+            }
+        }
+    }
+
+    fn snapshot(&self, w: &mut snapshot::Writer) {
+        w.usize(self.cfg.layers);
+        w.usize(self.cfg.d_model);
+        w.usize(self.cfg.d_ff);
+        w.usize(self.cfg.heads);
+        w.usize(self.cfg.d_head);
+        w.usize(self.cfg.chunk);
+        w.bool(self.cfg.identity);
+        w.u64(self.init_seed);
+        w.usize(self.t);
+        for kind in &self.cfg.kinds {
+            write_kind(w, *kind);
+        }
+        for layer in &self.layers {
+            for m in &layer.heads {
+                w.bytes(&snapshot::save(m.as_ref()));
+            }
+        }
+    }
+
+    fn layer_stats(&self) -> Vec<LayerStat> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(l, layer)| LayerStat {
+                kind: self.cfg.kinds[l].name().to_string(),
+                state_bytes: layer.state_bytes(),
+                busy_ns: layer.busy_ns,
+                tokens: self.t,
+            })
+            .collect()
+    }
+}
+
+/// Tagged [`MixerKind`] serialization for stack snapshots (tag byte +
+/// one parameter word; unknown tags fail cleanly on read).
+fn write_kind(w: &mut snapshot::Writer, kind: MixerKind) {
+    let (tag, param) = match kind {
+        MixerKind::FullAttention => (0u8, 0usize),
+        MixerKind::SlidingWindow { window } => (1, window),
+        MixerKind::Ovq { n_max } => (2, n_max),
+        MixerKind::Vq { n } => (3, n),
+        MixerKind::LinearAttention => (4, 0),
+        MixerKind::Gdn => (5, 0),
+    };
+    w.u8(tag);
+    w.usize(param);
+}
+
+fn read_kind(r: &mut snapshot::Reader<'_>) -> Result<MixerKind> {
+    let tag = r.u8()?;
+    let param = r.usize()?;
+    Ok(match tag {
+        0 => MixerKind::FullAttention,
+        1 => MixerKind::SlidingWindow { window: param },
+        2 => MixerKind::Ovq { n_max: param },
+        3 => MixerKind::Vq { n: param },
+        4 => MixerKind::LinearAttention,
+        5 => MixerKind::Gdn,
+        other => bail!("unknown mixer-kind tag {other} in stack snapshot"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn small_cfg(layers: usize) -> StackConfig {
+        StackConfig::hybrid(
+            8,
+            16,
+            2,
+            4,
+            8,
+            (0..layers)
+                .map(|l| {
+                    if l % 2 == 0 {
+                        MixerKind::Ovq { n_max: 16 }
+                    } else {
+                        MixerKind::SlidingWindow { window: 12 }
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    fn run_chunks(st: &mut LayerStack, x: &[f32], arrival: usize) -> Vec<f32> {
+        let d = st.d_in();
+        let total = x.len() / d;
+        let mut out = vec![0.0f32; total * d];
+        let mut scratch = Scratch::new();
+        let mut i = 0;
+        while i < total {
+            let len = arrival.min(total - i);
+            let sl = &x[i * d..(i + len) * d];
+            st.process_chunk(sl, sl, sl, &mut out[i * d..(i + len) * d], &mut scratch);
+            i += len;
+        }
+        out
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_shapes() {
+        assert!(small_cfg(3).validate().is_ok());
+        let mut c = small_cfg(3);
+        c.kinds.pop();
+        assert!(c.validate().is_err(), "schedule/layer mismatch");
+        let mut c = small_cfg(2);
+        c.d_ff = 0;
+        assert!(c.validate().is_err(), "full stack needs d_ff");
+        let mut c = StackConfig::bare(MixerKind::Gdn, 2, 4, 8);
+        assert!(c.validate().is_ok());
+        c.layers = 2;
+        c.kinds.push(MixerKind::Gdn);
+        assert!(c.validate().is_err(), "identity stacks are single-layer");
+        let mut c = StackConfig::bare(MixerKind::Gdn, 2, 4, 8);
+        c.d_model = 5;
+        assert!(c.validate().is_err(), "identity needs heads*d_head == d_model");
+    }
+
+    #[test]
+    fn seeded_init_is_deterministic_and_seed_sensitive() {
+        let mut rng = Rng::new(1);
+        let x = randv(&mut rng, 12 * 8);
+        let mut a = LayerStack::new(small_cfg(2), 7);
+        let mut b = LayerStack::new(small_cfg(2), 7);
+        let mut c = LayerStack::new(small_cfg(2), 8);
+        let oa = run_chunks(&mut a, &x, 12);
+        let ob = run_chunks(&mut b, &x, 12);
+        let oc = run_chunks(&mut c, &x, 12);
+        assert_eq!(oa, ob, "same seed must reproduce the same stack");
+        assert_ne!(oa, oc, "different seeds must differ");
+        assert!(oa.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn arrival_chunking_is_invisible_bitwise() {
+        // per-token decode vs blocked decode vs prefill: one stream of
+        // bits, regardless of delivery granularity or path
+        let mut rng = Rng::new(2);
+        let total = 37usize;
+        let x = randv(&mut rng, total * 8);
+        let mut one = LayerStack::new(small_cfg(3), 5);
+        let mut many = LayerStack::new(small_cfg(3), 5);
+        let mut pre = LayerStack::new(small_cfg(3), 5);
+        let o1 = run_chunks(&mut one, &x, 1);
+        let o2 = run_chunks(&mut many, &x, 11);
+        let mut o3 = vec![0.0f32; total * 8];
+        let mut scratch = Scratch::new();
+        pre.process_prefill(&x, &x, &x, &mut o3, &mut scratch);
+        for i in 0..o1.len() {
+            assert_eq!(o1[i].to_bits(), o2[i].to_bits(), "chunked decode diverged at {i}");
+            assert_eq!(o1[i].to_bits(), o3[i].to_bits(), "prefill diverged at {i}");
+        }
+        assert_eq!(one.tokens(), total);
+        assert_eq!(pre.tokens(), total);
+    }
+
+    #[test]
+    fn write_read_loop_matches_process_chunk() {
+        let mut rng = Rng::new(3);
+        let total = 9usize;
+        let x = randv(&mut rng, total * 8);
+        let mut chunked = LayerStack::new(small_cfg(2), 11);
+        let want = run_chunks(&mut chunked, &x, total);
+        let mut serial = LayerStack::new(small_cfg(2), 11);
+        let mut scratch = Scratch::new();
+        let mut got = vec![0.0f32; total * 8];
+        for i in 0..total {
+            let row = &x[i * 8..(i + 1) * 8];
+            serial.write(row, row);
+            serial.read(row, &mut got[i * 8..(i + 1) * 8], &mut scratch);
+        }
+        assert_eq!(
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn state_and_param_accounting() {
+        let cfg = small_cfg(4);
+        let mut st = LayerStack::new(cfg.clone(), 1);
+        assert_eq!(st.state_bytes(), 0, "fresh stack has no dynamic state");
+        let d = cfg.d_model;
+        let hd = cfg.heads * cfg.d_head;
+        let per_layer =
+            (3 * hd * d + d * hd + 2 * d + 2 * cfg.d_ff * d + d * cfg.d_ff) * 4;
+        assert_eq!(st.param_bytes(), cfg.layers * per_layer);
+
+        let mut rng = Rng::new(4);
+        let x = randv(&mut rng, 24 * d);
+        run_chunks(&mut st, &x, 8);
+        st.flush();
+        assert_eq!(st.tokens(), 24);
+        let per_layer_state = st.layer_state_bytes();
+        assert_eq!(per_layer_state.len(), 4);
+        assert_eq!(per_layer_state.iter().sum::<usize>(), st.state_bytes());
+        // per-layer split carries the schedule's kinds and busy time
+        let stats = st.layer_stats();
+        assert_eq!(stats.len(), 4);
+        assert_eq!(stats[0].kind, "ovq");
+        assert_eq!(stats[1].kind, "sliding_window");
+        assert!(stats.iter().all(|s| s.tokens == 24));
+        assert!(stats.iter().all(|s| s.busy_ns > 0.0));
+    }
+
+    #[test]
+    fn identity_stack_passes_raw_streams_to_the_heads() {
+        // 2 heads of GDN behind the bridge == 2 bare GDNs on the packed
+        // head slices, bit for bit
+        let (heads, dh, total) = (2usize, 4usize, 10usize);
+        let hd = heads * dh;
+        let mut rng = Rng::new(5);
+        let q = randv(&mut rng, total * hd);
+        let k = randv(&mut rng, total * hd);
+        let v = randv(&mut rng, total * hd);
+        let mut st = LayerStack::new(StackConfig::bare(MixerKind::Gdn, heads, dh, 8), 3);
+        let mut out = vec![0.0f32; total * hd];
+        let mut scratch = Scratch::new();
+        st.process_chunk(&q, &k, &v, &mut out, &mut scratch);
+        for head in 0..heads {
+            let mut bare = MixerKind::Gdn.build(dh, 8, mixer_seed(3, 0, head));
+            for i in 0..total {
+                let row = i * hd + head * dh;
+                bare.write(&k[row..row + dh], &v[row..row + dh]);
+                let mut o = vec![0.0f32; dh];
+                bare.read(&q[row..row + dh], &mut o, &mut scratch);
+                for j in 0..dh {
+                    assert_eq!(
+                        out[row + j].to_bits(),
+                        o[j].to_bits(),
+                        "head {head} token {i} dim {j}"
+                    );
+                }
+            }
+        }
+        assert_eq!(st.tokens(), total);
+    }
+
+    #[test]
+    fn kind_tags_round_trip() {
+        let kinds = [
+            MixerKind::FullAttention,
+            MixerKind::SlidingWindow { window: 256 },
+            MixerKind::Ovq { n_max: 8192 },
+            MixerKind::Vq { n: 64 },
+            MixerKind::LinearAttention,
+            MixerKind::Gdn,
+        ];
+        let mut w = snapshot::Writer::new();
+        for k in kinds {
+            write_kind(&mut w, k);
+        }
+        let buf = w.into_bytes();
+        let mut r = snapshot::Reader::new(&buf);
+        for k in kinds {
+            assert_eq!(read_kind(&mut r).unwrap(), k);
+        }
+        let mut w = snapshot::Writer::new();
+        w.u8(99);
+        w.usize(0);
+        let buf = w.into_bytes();
+        assert!(read_kind(&mut snapshot::Reader::new(&buf)).is_err());
+    }
+}

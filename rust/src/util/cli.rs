@@ -1,8 +1,13 @@
 //! Hand-rolled CLI argument parser (clap is unavailable offline).
 //!
 //! Grammar: `ovq <subcommand> [positional...] [--key value | --flag]`.
+//! Numeric accessors return `anyhow` errors with a usage hint instead of
+//! panicking, so a typo'd flag surfaces as a clean CLI error, not a
+//! backtrace.
 
 use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -56,22 +61,31 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
-    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
-        self.opt(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
-            .unwrap_or(default)
+    /// Shared parse-or-default core for the numeric accessors.
+    fn parsed<T: std::str::FromStr>(&self, key: &str, default: T, what: &str) -> Result<T> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!(
+                    "--{key} expects {what}, got '{v}' \
+                     (usage: --{key} <{what}> or --{key}=<{what}>; \
+                     run `ovq` with no arguments for the full usage)"
+                ),
+            },
+        }
     }
 
-    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
-        self.opt(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
-            .unwrap_or(default)
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.parsed(key, default, "an integer")
     }
 
-    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
-        self.opt(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
-            .unwrap_or(default)
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.parsed(key, default, "an integer")
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.parsed(key, default, "a number")
     }
 
     pub fn has_flag(&self, key: &str) -> bool {
@@ -95,7 +109,7 @@ mod tests {
                                  "icr-sw-ovq", "--steps=100", "--quick"]));
         assert_eq!(a.subcommand, "train");
         assert_eq!(a.opt("model"), Some("icr-sw-ovq"));
-        assert_eq!(a.opt_usize("steps", 0), 100);
+        assert_eq!(a.opt_usize("steps", 0).unwrap(), 100);
         assert!(a.has_flag("quick"));
         assert_eq!(a.positional, vec!["taskname"]);
     }
@@ -104,8 +118,21 @@ mod tests {
     fn defaults() {
         let a = Args::parse(&s(&["x"]));
         assert_eq!(a.opt_or("missing", "d"), "d");
-        assert_eq!(a.opt_usize("n", 7), 7);
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 7);
         assert!(!a.has_flag("q"));
+    }
+
+    #[test]
+    fn bad_numeric_values_error_with_a_usage_hint() {
+        let a = Args::parse(&s(&["serve", "--threads=lots", "--seed", "soon", "--lr", "fast"]));
+        let e = a.opt_usize("threads", 1).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("--threads expects an integer"), "{msg}");
+        assert!(msg.contains("usage"), "hint missing: {msg}");
+        assert!(a.opt_u64("seed", 0).is_err());
+        assert!(a.opt_f64("lr", 0.1).is_err());
+        // untouched keys still fall back cleanly
+        assert_eq!(a.opt_f64("momentum", 0.9).unwrap(), 0.9);
     }
 
     #[test]

@@ -5,11 +5,13 @@
 
 use std::collections::HashMap;
 
-use ovq::coordinator::engine::{DecodeEngine, EngineConfig, EngineOut};
+use ovq::analysis::memory;
+use ovq::coordinator::engine::{session_seed, DecodeEngine, EngineConfig, EngineOut};
 use ovq::coordinator::traffic::{self, TrafficConfig};
-use ovq::ovqcore::bank::{DecodeChunk, MixerBank};
-use ovq::ovqcore::memstate::MixerKind;
+use ovq::ovqcore::bank::{DecodeChunk, MixerBank, ShardBank};
+use ovq::ovqcore::memstate::{MixerGeom, MixerKind};
 use ovq::ovqcore::mixer::{Scratch, SeqMixer};
+use ovq::ovqcore::stack::{LayerStack, StackConfig};
 use ovq::ovqcore::{gdn::GdnState, snapshot};
 use ovq::util::rng::Rng;
 
@@ -399,6 +401,169 @@ fn same_session_traffic_after_prefill_is_deferred_in_order() {
         s
     };
     assert_eq!(seqs, vec![1, 2, 3]);
+}
+
+// ---------------------------------------------------------------- stacks
+
+/// The 4-layer hybrid schedule the acceptance run serves: alternating
+/// OVQ and windowed exact attention, tiny dims so the 64k prompt stays
+/// tier-1-fast.
+fn hybrid_stack() -> StackConfig {
+    StackConfig::hybrid(
+        4,
+        8,
+        1,
+        4,
+        16,
+        vec![
+            MixerKind::Ovq { n_max: 16 },
+            MixerKind::SlidingWindow { window: 128 },
+            MixerKind::Ovq { n_max: 16 },
+            MixerKind::SlidingWindow { window: 128 },
+        ],
+    )
+}
+
+#[test]
+fn stack_session_evicted_mid_prompt_at_depth_resumes_bit_identically() {
+    // the satellite contract: a 3-layer stack session frozen between
+    // prefill quanta — pending tails buffered at every layer depth —
+    // must resume and finish the prompt bit-identically
+    let cfg = StackConfig::hybrid(
+        8,
+        16,
+        2,
+        4,
+        8,
+        vec![
+            MixerKind::Ovq { n_max: 16 },
+            MixerKind::SlidingWindow { window: 20 },
+            MixerKind::Ovq { n_max: 16 },
+        ],
+    );
+    let d = cfg.d_model;
+    let (total, cut) = (61usize, 27usize); // both mid-chunk (chunk = 8)
+    let mk_shard = |cfg: StackConfig| {
+        ShardBank::new(1, 4, move |id, _| {
+            Box::new(LayerStack::new(cfg.clone(), id)) as Box<dyn SeqMixer>
+        })
+    };
+    let mut shard = mk_shard(cfg.clone());
+    let mut mirror = mk_shard(cfg);
+    let mut rng = Rng::new(0x51AC);
+    let x: Vec<f32> = (0..total * d).map(|_| rng.normal() as f32).collect();
+
+    let mut got = shard
+        .process_prefill(4, &x[..cut * d], &x[..cut * d], &x[..cut * d])
+        .unwrap();
+    shard.evict(4); // freeze the whole stack mid-prompt
+    assert_eq!(shard.evictions, 1);
+    got.extend_from_slice(
+        &shard.process_prefill(4, &x[cut * d..], &x[cut * d..], &x[cut * d..]).unwrap(),
+    );
+    assert_eq!(shard.restores, 1, "re-arrival must thaw the stack blob");
+
+    let want = mirror.process_prefill(4, &x, &x, &x).unwrap();
+    assert_eq!(got.len(), want.len());
+    assert!(
+        got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "mid-prompt eviction changed a deep stack's prefill outputs"
+    );
+}
+
+#[test]
+fn hybrid_stack_64k_prefill_with_churn_is_thread_invariant_and_accounted() {
+    // the acceptance run: a hybrid 4-layer stack serves a 64k-prompt
+    // prefill plus concurrent decodes through the engine under LRU
+    // eviction churn; outputs are bit-identical across 1 vs 4 shard
+    // threads, and the live stack's state_bytes matches the
+    // analysis/memory.rs analytic count exactly
+    let stack = hybrid_stack();
+    let d_model = stack.d_model;
+    let prompt_len = 65_536usize;
+    let prompt_sess = 11u64;
+    let decode_sessions = [3u64, 5, 9];
+    let prompt = traffic::synth_chunk(0x64AC, prompt_sess, 0, prompt_len, d_model);
+
+    let run = |threads: usize| {
+        let mut cfg = EngineConfig::for_stack(hybrid_stack());
+        cfg.threads = threads;
+        cfg.max_resident = 1; // every session swap churns through snapshots
+        cfg.queue_depth = 16;
+        cfg.prefill_quantum = 1024;
+        cfg.collect_outputs = true;
+        let engine = DecodeEngine::start(cfg);
+        for seq in 0..3usize {
+            for &s in &decode_sessions {
+                engine.submit(s, traffic::synth_chunk(0xDEC, s, seq, 8, d_model));
+            }
+        }
+        engine.submit_prefill(prompt_sess, prompt.clone());
+        for seq in 3..6usize {
+            for &s in &decode_sessions {
+                engine.submit(s, traffic::synth_chunk(0xDEC, s, seq, 8, d_model));
+            }
+        }
+        engine.flush_all();
+        let report = engine.finish();
+        let outs: HashMap<(u64, usize), Vec<f32>> = report
+            .outputs
+            .iter()
+            .map(|o| ((o.session, o.seq), o.out.clone()))
+            .collect();
+        (report, outs)
+    };
+
+    let (r1, single) = run(1);
+    assert_eq!(r1.prefill_tokens(), prompt_len);
+    assert_eq!(r1.tokens, prompt_len + 3 * 6 * 8);
+    assert!(r1.evictions() > 0, "cap 1 with 4 sessions must churn");
+    assert!(r1.restores() > 0);
+    assert_eq!(single.len(), 1 + 3 * 6, "one prompt output + every decode chunk");
+
+    let (r4, multi) = run(4);
+    assert_eq!(r4.prefill_tokens(), prompt_len);
+    assert_eq!(single.len(), multi.len(), "4 threads lost outputs");
+    for (key, out) in &single {
+        let got = multi.get(key).unwrap_or_else(|| panic!("4 threads missing {key:?}"));
+        assert_eq!(out.len(), got.len());
+        assert!(
+            out.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "session {} chunk {} differs between 1 and 4 threads",
+            key.0,
+            key.1
+        );
+    }
+
+    // per-layer telemetry: 4 rows following the hybrid schedule
+    let layers = r1.layer_split();
+    assert_eq!(layers.len(), 4);
+    assert_eq!(layers[0].kind, "ovq");
+    assert_eq!(layers[1].kind, "sliding_window");
+
+    // state accounting: the engine's prompt session is seeded
+    // deterministically, so a mirror stack fed the same prompt holds the
+    // same state — and it must equal the analytic whole-stack count
+    // EXACTLY (every layer at t = 64k: saturated OVQ dictionaries and
+    // full windows)
+    let seed = EngineConfig::for_stack(hybrid_stack()).seed;
+    let mut mirror = LayerStack::new(hybrid_stack(), session_seed(seed, prompt_sess, 0));
+    let mut out = vec![0.0f32; prompt_len * d_model];
+    let mut scratch = Scratch::new();
+    mirror.process_prefill(&prompt.queries, &prompt.keys, &prompt.values, &mut out, &mut scratch);
+    assert!(
+        out.iter().zip(&single[&(prompt_sess, 1)]).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "mirror stack diverged from the engine's prefill output"
+    );
+    mirror.flush();
+    let g = MixerGeom { heads: 1, d_head: 4 };
+    let analytic = memory::stack_state_bytes(&hybrid_stack().kinds, g, prompt_len);
+    assert_eq!(
+        mirror.state_bytes(),
+        analytic,
+        "live stack state must match the analytic accounting exactly"
+    );
+    assert!(analytic > 0);
 }
 
 // ------------------------------------------------------------ backpressure

@@ -13,6 +13,7 @@ use ovq::ovqcore::memstate::MixerKind;
 use ovq::ovqcore::mixer::{Scratch, SeqMixer};
 use ovq::ovqcore::ovq::{OvqConfig, OvqState};
 use ovq::ovqcore::snapshot;
+use ovq::ovqcore::stack::{mixer_seed, LayerStack, StackConfig};
 use ovq::util::prop::Prop;
 use ovq::util::rng::Rng;
 
@@ -336,6 +337,149 @@ fn ovq_prefill_cut_mid_pending_tail_is_exact() {
         assert_eq!(a.to_bits(), b.to_bits(), "flat index {i} (token {})", i / d);
     }
     assert_eq!(snapshot::save(&serial), snapshot::save(&blocked));
+}
+
+// ------------------------------------------------------------------ stacks
+
+#[test]
+fn identity_stack_is_the_bare_mixer_bit_for_bit() {
+    // the bare-mixer bridge: a 1-layer identity stack over any kind must
+    // reproduce the standalone mixer exactly — decode path, prefill path,
+    // token counts — proving LayerStack strictly generalizes PRs 1–3
+    let (d, chunk, total) = (8usize, 16usize, 56usize);
+    let kinds = [
+        MixerKind::Ovq { n_max: 32 },
+        MixerKind::Vq { n: 16 },
+        MixerKind::LinearAttention,
+        MixerKind::Gdn,
+        MixerKind::FullAttention,
+        MixerKind::SlidingWindow { window: 24 },
+    ];
+    let mut rng = Rng::new(0x57AC);
+    let q = randv(&mut rng, total * d);
+    let k = randv(&mut rng, total * d);
+    let v = randv(&mut rng, total * d);
+    for kind in kinds {
+        let seed = 0xB0B;
+        let mut stack = LayerStack::new(StackConfig::bare(kind, 1, d, chunk), seed);
+        let mut bare = kind.build(d, chunk, mixer_seed(seed, 0, 0));
+        let got = stream_through(&mut stack, &q, &k, &v, total, 13);
+        let want = stream_through(bare.as_mut(), &q, &k, &v, total, 13);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}: decode diverges at {i}");
+        }
+        assert_eq!(stack.tokens(), bare.tokens(), "{kind:?}");
+        assert_eq!(stack.state_bytes(), bare.state_bytes(), "{kind:?}");
+
+        let mut stack_p = LayerStack::new(StackConfig::bare(kind, 1, d, chunk), seed);
+        let mut bare_p = kind.build(d, chunk, mixer_seed(seed, 0, 0));
+        let got = prefill_through(&mut stack_p, &q, &k, &v, total, 19);
+        let want = prefill_through(bare_p.as_mut(), &q, &k, &v, total, 19);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}: prefill diverges at {i}");
+        }
+    }
+}
+
+/// Feed a full-mode stack `total` embedding rows (the keys stream) in
+/// arrival chunks of `arrival` through `process_chunk`.
+fn stack_decode(st: &mut LayerStack, x: &[f32], total: usize, arrival: usize) -> Vec<f32> {
+    stream_through(st, x, x, x, total, arrival)
+}
+
+fn hybrid_cfg(layers: usize, chunk: usize) -> StackConfig {
+    let kinds = (0..layers)
+        .map(|l| match l % 3 {
+            0 => MixerKind::Ovq { n_max: 24 },
+            1 => MixerKind::SlidingWindow { window: 17 },
+            _ => MixerKind::Gdn,
+        })
+        .collect();
+    StackConfig::hybrid(8, 16, 2, 4, chunk, kinds)
+}
+
+#[test]
+fn prop_stack_prefill_is_bit_identical_to_serial_stack_decode() {
+    // the tentpole contract at the whole-model level: blocked prefill
+    // through every dense op and mixer must reproduce token-at-a-time
+    // stack decode exactly — outputs and post-state snapshots — for
+    // hybrid schedules, any depth, any arrival slicing
+    Prop::new(0x57A1).cases(12).check(|c| {
+        let layers = 1 + c.rng.usize_below(3);
+        let chunk = 4 + c.rng.usize_below(13);
+        let total = chunk * (1 + c.rng.usize_below(3)) + c.rng.usize_below(chunk);
+        let arrival = 1 + c.rng.usize_below(2 * chunk + 1);
+        let cfg = hybrid_cfg(layers, chunk);
+        let d = cfg.d_model;
+        let x: Vec<f32> = (0..total * d).map(|_| c.rng.normal() as f32).collect();
+
+        let mut serial = LayerStack::new(cfg.clone(), 5);
+        let mut blocked = LayerStack::new(cfg, 5);
+        let out_serial = stack_decode(&mut serial, &x, total, 1);
+        let out_blocked = prefill_through(&mut blocked, &x, &x, &x, total, arrival);
+        if let Some(i) = out_serial
+            .iter()
+            .zip(&out_blocked)
+            .position(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(format!(
+                "layers={layers} chunk={chunk} total={total} arrival={arrival}: \
+                 stack prefill diverges at flat index {i}"
+            ));
+        }
+        if snapshot::save(&serial) != snapshot::save(&blocked) {
+            return Err(format!(
+                "layers={layers} chunk={chunk} total={total}: post-prefill \
+                 stack snapshots diverged"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stack_snapshot_restore_continue_is_token_identical_mid_pending_tail() {
+    // freeze a 3-layer hybrid stack mid-stream — with OVQ pending tails
+    // buffered at layer depth > 1 — thaw through the container frame,
+    // and keep decoding: every later output must match the uninterrupted
+    // run to the bit
+    let (chunk, total) = (16usize, 3 * 16 + 9);
+    let cut = 16 + 7; // mid-chunk: pending tails are non-empty
+    let cfg = hybrid_cfg(3, chunk);
+    let d = cfg.d_model;
+    let mut rng = Rng::new(0x5EED);
+    let x = randv(&mut rng, total * d);
+
+    let mut gold = LayerStack::new(cfg.clone(), 9);
+    let mut out_gold = stack_decode(&mut gold, &x, cut, 5);
+    out_gold.extend_from_slice(&stream_through(
+        &mut gold,
+        &x[cut * d..],
+        &x[cut * d..],
+        &x[cut * d..],
+        total - cut,
+        5,
+    ));
+
+    let mut a = LayerStack::new(cfg, 9);
+    let mut out = stack_decode(&mut a, &x, cut, 5);
+    let blob = snapshot::save(&a);
+    let mut b = snapshot::restore(&blob).expect("stack blob must thaw");
+    assert_eq!(b.kind_name(), "stack");
+    assert_eq!(b.tokens(), cut);
+    out.extend_from_slice(&stream_through(
+        b.as_mut(),
+        &x[cut * d..],
+        &x[cut * d..],
+        &x[cut * d..],
+        total - cut,
+        5,
+    ));
+    assert_eq!(out.len(), out_gold.len());
+    for (i, (p, g)) in out.iter().zip(&out_gold).enumerate() {
+        assert_eq!(p.to_bits(), g.to_bits(), "restore broke the stream at flat index {i}");
+    }
+    assert_eq!(snapshot::save(b.as_ref()), snapshot::save(&gold), "final snapshots diverged");
 }
 
 #[test]

@@ -66,7 +66,7 @@ fn train_step_reduces_loss_on_fixed_batch() {
     let model = rt.load_model("quickstart").unwrap();
     let mut state = model.init(1).unwrap();
     let (b, t) = model.train_shape().unwrap();
-    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256));
+    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256)).unwrap();
     let mut rng = Rng::new(3);
     let batch = Batch::generate_train(gen.as_ref(), &mut rng, b, t);
     // repeated steps on the SAME batch must drive the loss down
@@ -92,7 +92,7 @@ fn eval_consistent_across_calls() {
     let Some(rt) = mk_rt() else { return };
     let model = rt.load_model("quickstart").unwrap();
     let state = model.init(2).unwrap();
-    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256));
+    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256)).unwrap();
     let mut rng = Rng::new(4);
     let batch = Batch::generate(gen.as_ref(), &mut rng, 2, 128);
     let a = model
@@ -115,7 +115,7 @@ fn checkpoint_roundtrip_preserves_training() {
     let model = rt.load_model("quickstart").unwrap();
     let mut state = model.init(5).unwrap();
     let (b, t) = model.train_shape().unwrap();
-    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256));
+    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256)).unwrap();
     let mut rng = Rng::new(6);
     let batch = Batch::generate_train(gen.as_ref(), &mut rng, b, t);
     model
@@ -157,7 +157,7 @@ fn eval_at_longer_context_than_train_works() {
     let Some(rt) = mk_rt() else { return };
     let model = rt.load_model("quickstart").unwrap();
     let state = model.init(9).unwrap();
-    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256));
+    let gen = by_name("icr", model.manifest.cfg_usize("vocab", 256)).unwrap();
     let mut rng = Rng::new(10);
     let batch = Batch::generate(gen.as_ref(), &mut rng, 2, 256);
     let out = model
