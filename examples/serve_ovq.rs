@@ -9,7 +9,13 @@
 //!     [`SeqMixer`] state through the sharded [`DecodeEngine`] (latency
 //!     path) — per-stream state stays flat as context grows, which is
 //!     the paper's deployment argument. See `examples/storm_ovq.rs` for
-//!     the full traffic-replay + session-lifecycle storm.
+//!     the full traffic-replay + session-lifecycle storm;
+//!  3. end-to-end autoregressive generation: token prompts prefill
+//!     through a hybrid `ovq|kv` model stack, then each session
+//!     self-feeds sampled tokens (greedy and the full
+//!     temperature/top-k/top-p chain side by side) until its stop rule
+//!     fires — prompt in, tokens out, with the engine's three-way
+//!     decode/prefill/generate occupancy split.
 //!
 //!     cargo run --release --example serve_ovq
 //!
@@ -21,7 +27,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use ovq::coordinator::engine::{DecodeEngine, EngineConfig};
+use ovq::coordinator::sampler::{SamplingParams, StopCriteria};
 use ovq::coordinator::server::{run_decode_engine, serve_loop, DecodeConfig, ScoreRequest};
+use ovq::coordinator::traffic;
+use ovq::ovqcore::lm::LmConfig;
+use ovq::ovqcore::memstate::MixerKind;
+use ovq::ovqcore::stack::StackConfig;
 use ovq::runtime::Runtime;
 use ovq::util::rng::Rng;
 
@@ -47,7 +59,54 @@ fn main() -> Result<()> {
         "  context grew 0 -> {} tokens per stream; total state held at {} bytes",
         cfg.tokens, report.state_bytes
     );
+
+    // ---- path 3: autoregressive generation ------------------------------
+    generation_demo();
     Ok(())
+}
+
+/// Prompt in, sampled tokens out: four sessions over a 2-layer hybrid
+/// `ovq|kv` stack, half greedy, half with the sampled chain, all
+/// interleaved by the continuous-batching scheduler on 2 shard threads.
+fn generation_demo() {
+    println!("\n== autoregressive generation (LmModel/submit_generate path) ==");
+    let vocab = 64usize;
+    let lm = LmConfig::new(
+        vocab,
+        StackConfig::hybrid(
+            32,
+            64,
+            2,
+            16,
+            16,
+            vec![MixerKind::Ovq { n_max: 128 }, MixerKind::SlidingWindow { window: 64 }],
+        ),
+    );
+    let mut ecfg = EngineConfig::for_lm(lm);
+    ecfg.threads = 2;
+    ecfg.prefill_quantum = 64;
+    let engine = DecodeEngine::start(ecfg);
+    for s in 0..4u64 {
+        let prompt = traffic::synth_tokens(0xDE40, s, 96, vocab);
+        let params = if s % 2 == 0 {
+            SamplingParams::greedy()
+        } else {
+            SamplingParams::sampled(0x5A + s)
+        };
+        engine.submit_generate(s, prompt, params, StopCriteria::max_new(48));
+    }
+    let report = engine.finish();
+    for g in &report.generations {
+        let mode = if g.session % 2 == 0 { "greedy " } else { "sampled" };
+        let shown: Vec<String> = g.tokens.iter().take(12).map(|t| t.to_string()).collect();
+        println!(
+            "  session {} ({mode}): {:>2} tokens  [{} ...]",
+            g.session,
+            g.tokens.len(),
+            shown.join(" "),
+        );
+    }
+    report.print();
 }
 
 fn batched_scoring(rt: &Runtime) -> Result<()> {

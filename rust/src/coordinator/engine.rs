@@ -30,7 +30,9 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use super::sampler::{SamplerStack, SamplingParams, StopCriteria};
 use crate::ovqcore::bank::{ring_push, DecodeChunk, ShardBank, StreamStats};
+use crate::ovqcore::lm::{LmConfig, LmModel, TokenId};
 use crate::ovqcore::memstate::MixerKind;
 use crate::ovqcore::mixer::{merge_layer_stats, print_layer_split, LayerStat, SeqMixer};
 use crate::ovqcore::stack::{LayerStack, StackConfig};
@@ -68,6 +70,18 @@ pub struct EngineConfig {
     /// packed row IS the embedding stream ([`EngineConfig::for_stack`]
     /// keeps the invariant).
     pub stack: Option<StackConfig>,
+    /// serve token-in/logits-out language models: each session admits one
+    /// seeded [`LmModel`] (embedding table + stack + tied unembedding),
+    /// which enables [`DecodeEngine::submit_generate`] — the self-feeding
+    /// generation path. Implies the stack row-width invariant (build with
+    /// [`EngineConfig::for_lm`]); f32 decode/prefill submissions still
+    /// work against LM sessions through the trait.
+    pub lm: Option<LmConfig>,
+    /// self-feeding generation: tokens sampled for one session per
+    /// scheduling round before the worker rotates to other work — the
+    /// continuous-batching granularity of the generate path (the analogue
+    /// of `prefill_quantum` for the decode phase of a generation)
+    pub gen_quantum: usize,
 }
 
 impl EngineConfig {
@@ -84,6 +98,8 @@ impl EngineConfig {
             seed: 0xE6617E,
             collect_outputs: false,
             stack: None,
+            lm: None,
+            gen_quantum: 16,
         }
     }
 
@@ -94,6 +110,14 @@ impl EngineConfig {
         let kind = stack.kinds.first().copied().unwrap_or(MixerKind::Gdn);
         let mut cfg = EngineConfig::new(kind, 1, stack.d_model, stack.chunk);
         cfg.stack = Some(stack);
+        cfg
+    }
+
+    /// An engine serving language models: one seeded [`LmModel`] per
+    /// session, with the generation path armed.
+    pub fn for_lm(lm: LmConfig) -> EngineConfig {
+        let mut cfg = EngineConfig::for_stack(lm.stack.clone());
+        cfg.lm = Some(lm);
         cfg
     }
 }
@@ -121,6 +145,13 @@ pub fn shard_of(session: u64, threads: usize) -> usize {
 enum EngineMsg {
     Chunk { session: u64, chunk: DecodeChunk, submitted: Instant },
     Prefill { session: u64, chunk: DecodeChunk, submitted: Instant },
+    Generate {
+        session: u64,
+        prompt: Vec<TokenId>,
+        params: SamplingParams,
+        stop: StopCriteria,
+        submitted: Instant,
+    },
     Evict { session: u64 },
     FlushAll,
 }
@@ -132,6 +163,16 @@ pub struct EngineOut {
     pub session: u64,
     pub seq: usize,
     pub out: Vec<f32>,
+}
+
+/// One completed generation request: the sampled completion (stop token
+/// included when one fired), tagged like [`EngineOut`] with the session's
+/// sequence number. Always collected — the tokens ARE the product of a
+/// generate request, and their size is bounded by `max_new`.
+pub struct GenOut {
+    pub session: u64,
+    pub seq: usize,
+    pub tokens: Vec<TokenId>,
 }
 
 /// Telemetry of one shard over the engine's lifetime.
@@ -151,13 +192,23 @@ pub struct ShardReport {
     /// time spent inside chunk/quantum processing (utilization = busy /
     /// wall); `prefill_busy` is the prefill share of it
     pub busy: Duration,
-    /// busy time spent ingesting prefill quanta — `busy - prefill_busy`
-    /// is the decode share, so the report splits shard occupancy
+    /// busy time spent ingesting prefill quanta (including the prompt
+    /// phase of generate requests) — with `gen_busy`, splits shard
+    /// occupancy three ways: decode = `busy - prefill_busy - gen_busy`
     pub prefill_busy: Duration,
+    /// busy time spent in the self-feeding generation loop (sampling +
+    /// token steps)
+    pub gen_busy: Duration,
     /// completed prefill prompts
     pub prefill_chunks: usize,
     /// prompt tokens ingested through the prefill path
     pub prefill_tokens: usize,
+    /// tokens sampled by completed generation requests
+    pub gen_tokens: usize,
+    /// completed generation requests
+    pub completions: usize,
+    /// submit→last-token wall latency of recent completions, ns (ring)
+    pub completion_ns: Vec<f64>,
     /// submit→prefill-complete wall latency (prompt time-to-first-token)
     /// of the most recent prompts, nanoseconds (ring)
     pub ttft_ns: Vec<f64>,
@@ -195,6 +246,8 @@ pub struct EngineReport {
     pub sessions: Vec<(u64, StreamStats)>,
     /// per-chunk outputs (only when `collect_outputs` was set)
     pub outputs: Vec<EngineOut>,
+    /// completed generations, sorted by (session, seq) — always collected
+    pub generations: Vec<GenOut>,
 }
 
 impl EngineReport {
@@ -245,6 +298,29 @@ impl EngineReport {
         self.shards.iter().map(|s| s.prefill_chunks).sum()
     }
 
+    /// Tokens sampled by completed generation requests, all shards.
+    pub fn gen_tokens(&self) -> usize {
+        self.shards.iter().map(|s| s.gen_tokens).sum()
+    }
+
+    /// Completed generation requests, all shards.
+    pub fn completions(&self) -> usize {
+        self.shards.iter().map(|s| s.completions).sum()
+    }
+
+    /// End-to-end completion latency percentile across shards (submit →
+    /// last sampled token), microseconds. NaN when nothing generated.
+    pub fn completion_us(&self, p: f64) -> f64 {
+        let all: Vec<f64> =
+            self.shards.iter().flat_map(|s| s.completion_ns.iter().copied()).collect();
+        stats::percentile(&all, p) / 1e3
+    }
+
+    /// Aggregate generation throughput: sampled tokens per wall second.
+    pub fn gen_tokens_per_sec(&self) -> f64 {
+        self.gen_tokens() as f64 / self.wall.as_secs_f64()
+    }
+
     /// Per-shard busy fraction of the run's wall clock.
     pub fn utilization(&self) -> Vec<f64> {
         let w = self.wall.as_secs_f64().max(1e-12);
@@ -262,15 +338,17 @@ impl EngineReport {
         acc
     }
 
-    /// Per-shard (decode, prefill) occupancy — each shard's busy time
-    /// split by path, as fractions of the run's wall clock.
-    pub fn occupancy(&self) -> Vec<(f64, f64)> {
+    /// Per-shard (decode, prefill, generate) occupancy — each shard's
+    /// busy time split three ways by path, as fractions of the run's
+    /// wall clock.
+    pub fn occupancy(&self) -> Vec<(f64, f64, f64)> {
         let w = self.wall.as_secs_f64().max(1e-12);
         self.shards
             .iter()
             .map(|s| {
                 let p = s.prefill_busy.as_secs_f64() / w;
-                (s.busy.as_secs_f64() / w - p, p)
+                let g = s.gen_busy.as_secs_f64() / w;
+                (s.busy.as_secs_f64() / w - p - g, p, g)
             })
             .collect()
     }
@@ -304,20 +382,32 @@ impl EngineReport {
                 self.ttft_us(99.0),
             );
         }
+        if self.completions() > 0 {
+            println!(
+                "  generate: {} completions / {} tokens ({:.0} tok/s sampled)  \
+                 completion p50 {:.1} us  p99 {:.1} us",
+                self.completions(),
+                self.gen_tokens(),
+                self.gen_tokens_per_sec(),
+                self.completion_us(50.0),
+                self.completion_us(99.0),
+            );
+        }
         if self.failed_chunks() > 0 {
             println!("  WARNING: {} chunks dropped on failed restores", self.failed_chunks());
         }
         print_layer_split(&self.layer_split(), self.wall * self.threads as u32);
-        for (s, (du, pu)) in self.shards.iter().zip(self.occupancy()) {
+        for (s, (du, pu, gu)) in self.shards.iter().zip(self.occupancy()) {
             println!(
                 "  shard {:>2}: {:>4} sessions {:>7} tokens  occupancy {:>5.1}% decode \
-                 + {:>5.1}% prefill  max queue {:>3}  evict/restore {}/{}  \
-                 resident {:.1} KiB + snapshots {:.1} KiB",
+                 + {:>5.1}% prefill + {:>5.1}% generate  max queue {:>3}  \
+                 evict/restore {}/{}  resident {:.1} KiB + snapshots {:.1} KiB",
                 s.shard,
                 s.sessions,
                 s.tokens,
                 100.0 * du,
                 100.0 * pu,
+                100.0 * gu,
                 s.max_queue,
                 s.evictions,
                 s.restores,
@@ -335,6 +425,7 @@ pub struct DecodeEngine {
     txs: Vec<SyncSender<EngineMsg>>,
     handles: Vec<thread::JoinHandle<(ShardReport, Vec<(u64, StreamStats)>)>>,
     out_rx: Receiver<EngineOut>,
+    gen_rx: Receiver<GenOut>,
     /// per-shard (gauge, high-water) of queued + in-service chunks
     queue_gauge: Vec<Arc<AtomicUsize>>,
     queue_high: Vec<Arc<AtomicUsize>>,
@@ -347,6 +438,17 @@ impl DecodeEngine {
     /// [`LayerStack`] per session, served unchanged through the trait.
     pub fn start(cfg: EngineConfig) -> DecodeEngine {
         let seed = cfg.seed;
+        if let Some(lm) = cfg.lm.clone() {
+            assert!(
+                cfg.heads == 1 && cfg.d_head == lm.stack.d_model,
+                "lm engines pack one [len, d_model] row per token \
+                 (build the config with EngineConfig::for_lm)"
+            );
+            return Self::start_with(cfg, move |session, _head| {
+                Box::new(LmModel::new(lm.clone(), session_seed(seed, session, 0)))
+                    as Box<dyn SeqMixer>
+            });
+        }
         if let Some(stack) = cfg.stack.clone() {
             assert!(
                 cfg.heads == 1 && cfg.d_head == stack.d_model,
@@ -373,6 +475,7 @@ impl DecodeEngine {
     ) -> DecodeEngine {
         assert!(cfg.threads > 0 && cfg.heads > 0 && cfg.queue_depth > 0);
         let (out_tx, out_rx) = mpsc::channel::<EngineOut>();
+        let (gen_tx, gen_rx) = mpsc::channel::<GenOut>();
         let mut txs = Vec::with_capacity(cfg.threads);
         let mut handles = Vec::with_capacity(cfg.threads);
         let mut queue_gauge = Vec::with_capacity(cfg.threads);
@@ -382,6 +485,7 @@ impl DecodeEngine {
             let gauge = Arc::new(AtomicUsize::new(0));
             let high = Arc::new(AtomicUsize::new(0));
             let worker_out = cfg.collect_outputs.then(|| out_tx.clone());
+            let worker_gen = gen_tx.clone();
             let worker_gauge = Arc::clone(&gauge);
             let worker_high = Arc::clone(&high);
             let factory = factory.clone();
@@ -392,16 +496,29 @@ impl DecodeEngine {
                 hd: cfg.heads * cfg.d_head,
                 queue_depth: cfg.queue_depth,
                 prefill_quantum: cfg.prefill_quantum.max(1),
+                gen_quantum: cfg.gen_quantum.max(1),
+                vocab: cfg.lm.as_ref().map_or(0, |l| l.vocab),
+                seed: cfg.seed,
             };
             handles.push(thread::spawn(move || {
-                shard_worker(wcfg, factory, rx, worker_out, worker_gauge, worker_high)
+                shard_worker(wcfg, factory, rx, worker_out, worker_gen, worker_gauge, worker_high)
             }));
             txs.push(tx);
             queue_gauge.push(gauge);
             queue_high.push(high);
         }
         drop(out_tx); // workers hold the only senders
-        DecodeEngine { cfg, txs, handles, out_rx, queue_gauge, queue_high, t0: Instant::now() }
+        drop(gen_tx);
+        DecodeEngine {
+            cfg,
+            txs,
+            handles,
+            out_rx,
+            gen_rx,
+            queue_gauge,
+            queue_high,
+            t0: Instant::now(),
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -449,6 +566,39 @@ impl DecodeEngine {
             .expect("shard worker died");
     }
 
+    /// Enqueue a generation request: the prompt token ids are routed
+    /// through the session's [`LmModel`] prefill (in
+    /// [`EngineConfig::prefill_quantum`]-token quanta, continuous-batched
+    /// like any prompt), then the shard worker runs a self-feeding decode
+    /// loop — sample with `params` through the
+    /// [`SamplerStack`] chain, step the model, repeat, at most
+    /// [`EngineConfig::gen_quantum`] tokens per scheduling round so other
+    /// sessions' decode chunks, prompts and generations interleave.
+    /// Completion (per `stop`) emits a [`GenOut`]. Requires an LM engine
+    /// ([`EngineConfig::for_lm`]); on a non-LM engine the request is
+    /// dropped and counted under `failed_chunks`. Blocks on the shard
+    /// queue like every submit (backpressure).
+    pub fn submit_generate(
+        &self,
+        session: u64,
+        prompt: Vec<TokenId>,
+        params: SamplingParams,
+        stop: StopCriteria,
+    ) {
+        let s = shard_of(session, self.cfg.threads);
+        let submitted = Instant::now();
+        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
+        self.queue_high[s].fetch_max(v, Ordering::SeqCst);
+        self.txs[s]
+            .send(EngineMsg::Generate { session, prompt, params, stop, submitted })
+            .expect("shard worker died");
+    }
+
+    /// The LM vocabulary when this engine serves language models.
+    pub fn lm_vocab(&self) -> Option<usize> {
+        self.cfg.lm.as_ref().map(|l| l.vocab)
+    }
+
     /// Ask a session's shard to evict it to a snapshot blob (client
     /// abandon). Queued chunks for the session are processed first (the
     /// message travels the same ordered queue).
@@ -471,10 +621,16 @@ impl DecodeEngine {
         self.out_rx.try_iter().collect()
     }
 
+    /// Non-blocking drain of completed generations — the streaming
+    /// consumption path for long generate runs.
+    pub fn try_generations(&self) -> Vec<GenOut> {
+        self.gen_rx.try_iter().collect()
+    }
+
     /// Shut down: close the queues, join the workers, gather telemetry
     /// and any remaining outputs.
     pub fn finish(self) -> EngineReport {
-        let DecodeEngine { cfg, txs, handles, out_rx, t0, .. } = self;
+        let DecodeEngine { cfg, txs, handles, out_rx, gen_rx, t0, .. } = self;
         drop(txs); // workers exit when their queues drain
         let mut shards = Vec::with_capacity(handles.len());
         let mut sessions: Vec<(u64, StreamStats)> = Vec::new();
@@ -488,9 +644,20 @@ impl DecodeEngine {
         // sort yields one global, deterministic ordering
         sessions.sort_by_key(|&(id, _)| id);
         let outputs: Vec<EngineOut> = out_rx.try_iter().collect();
+        let mut generations: Vec<GenOut> = gen_rx.try_iter().collect();
+        generations.sort_by_key(|g| (g.session, g.seq));
         let tokens = shards.iter().map(|s| s.tokens).sum();
         let chunks = shards.iter().map(|s| s.chunks).sum();
-        EngineReport { threads: cfg.threads, wall, tokens, chunks, shards, sessions, outputs }
+        EngineReport {
+            threads: cfg.threads,
+            wall,
+            tokens,
+            chunks,
+            shards,
+            sessions,
+            outputs,
+            generations,
+        }
     }
 }
 
@@ -504,6 +671,12 @@ struct WorkerCfg {
     hd: usize,
     queue_depth: usize,
     prefill_quantum: usize,
+    /// tokens sampled per generate-job scheduling round
+    gen_quantum: usize,
+    /// LM vocabulary (0 when the engine does not serve language models)
+    vocab: usize,
+    /// engine seed, mixed into per-request generation-RNG seeds
+    seed: u64,
 }
 
 /// An in-flight long-prompt admission, ingested one quantum at a time.
@@ -520,18 +693,63 @@ struct PrefillJob {
     out: Option<Vec<f32>>,
 }
 
+/// An in-flight generation request: prompt ingestion (quantized, like a
+/// prefill), then the self-feeding sample/step loop. The job carries the
+/// request *config* (sampler chain, stop rule) and pure data (the prompt,
+/// the last-position logits, the output tokens); the state that must
+/// survive LRU eviction — history ring, sampling RNG, produced count —
+/// lives inside the session's [`LmModel`] snapshot.
+struct GenJob {
+    session: u64,
+    prompt: Vec<TokenId>,
+    /// prompt tokens ingested so far
+    done: usize,
+    sampler: SamplerStack,
+    /// deterministic sampling-RNG seed (engine seed x params seed x
+    /// session — never the shard or thread count)
+    gen_seed: u64,
+    rep_window: usize,
+    submitted: Instant,
+    busy_ns: f64,
+    /// begin_gen has run (exactly once per request, after the prompt)
+    started: bool,
+    /// logits of the last ingested/stepped position, `[vocab]`
+    logits: Vec<f32>,
+    out: Vec<TokenId>,
+}
+
+/// One slot of the worker's continuous-batching job queue. Jobs advance
+/// one quantum per scheduling round and rotate to the back, so prompts
+/// and generations of different sessions make interleaved progress.
+enum Job {
+    Prefill(PrefillJob),
+    Generate(GenJob),
+}
+
+impl Job {
+    fn session(&self) -> u64 {
+        match self {
+            Job::Prefill(j) => j.session,
+            Job::Generate(j) => j.session,
+        }
+    }
+}
+
 /// Everything one shard worker mutates while scheduling. The worker
 /// interleaves two sources of work: messages from the bounded queue
 /// (processed immediately unless ordering forces a deferral) and the
-/// front [`PrefillJob`], advanced one quantum per scheduling round —
-/// continuous batching, so neither path can starve the other.
+/// job queue, whose front advances one quantum per scheduling round and
+/// rotates to the back — continuous batching across decode chunks,
+/// prompts, and self-feeding generations, so no path can starve another.
 struct WorkerState {
     cfg: WorkerCfg,
     bank: ShardBank,
-    /// FIFO of admitted prompts; only the front job makes progress, so
-    /// prompt ingestion order is deterministic and average TTFT is
-    /// minimized
-    jobs: VecDeque<PrefillJob>,
+    /// round-robin queue of admitted prompts and generation requests;
+    /// the front advances one quantum, then rotates behind the others,
+    /// so concurrent long jobs share the shard fairly (per-session
+    /// outputs stay deterministic — scheduling order never touches a
+    /// session's own state sequence)
+    jobs: VecDeque<Job>,
     /// messages that must wait to preserve ordering: anything for a
     /// session with a queued/in-flight prompt, anything behind a deferred
     /// message for its session, and global flushes behind everything.
@@ -541,28 +759,35 @@ struct WorkerState {
     /// sync_channel and blocks the submitter (the backpressure contract).
     deferred: VecDeque<EngineMsg>,
     out_tx: Option<Sender<EngineOut>>,
+    gen_tx: Sender<GenOut>,
     gauge: Arc<AtomicUsize>,
     busy: Duration,
     prefill_busy: Duration,
+    gen_busy: Duration,
     latency_ns: Vec<f64>,
     latency_i: usize,
     ttft_ns: Vec<f64>,
     ttft_i: usize,
+    completion_ns: Vec<f64>,
+    completion_i: usize,
     chunks: usize,
     tokens: usize,
     failed_chunks: usize,
     prefill_chunks: usize,
     prefill_tokens: usize,
+    gen_tokens: usize,
+    completions: usize,
 }
 
 impl WorkerState {
     /// Would processing a message for `session` now break per-session
     /// (or flush) ordering?
     fn session_blocked(&self, session: u64) -> bool {
-        self.jobs.iter().any(|j| j.session == session)
+        self.jobs.iter().any(|j| j.session() == session)
             || self.deferred.iter().any(|m| match m {
                 EngineMsg::Chunk { session: s, .. }
                 | EngineMsg::Prefill { session: s, .. }
+                | EngineMsg::Generate { session: s, .. }
                 | EngineMsg::Evict { session: s } => *s == session,
                 EngineMsg::FlushAll => true,
             })
@@ -573,6 +798,7 @@ impl WorkerState {
         let blocked = match &msg {
             EngineMsg::Chunk { session, .. }
             | EngineMsg::Prefill { session, .. }
+            | EngineMsg::Generate { session, .. }
             | EngineMsg::Evict { session } => self.session_blocked(*session),
             EngineMsg::FlushAll => !self.jobs.is_empty() || !self.deferred.is_empty(),
         };
@@ -587,7 +813,7 @@ impl WorkerState {
             EngineMsg::Prefill { session, chunk, submitted } => {
                 let total = chunk.keys.len() / self.cfg.hd;
                 let out = self.out_tx.is_some().then(|| Vec::with_capacity(chunk.values.len()));
-                self.jobs.push_back(PrefillJob {
+                self.jobs.push_back(Job::Prefill(PrefillJob {
                     session,
                     chunk,
                     done: 0,
@@ -595,7 +821,29 @@ impl WorkerState {
                     submitted,
                     busy_ns: 0.0,
                     out,
-                });
+                }));
+            }
+            EngineMsg::Generate { session, prompt, params, stop, submitted } => {
+                // the sampling-RNG seed mixes engine seed, request seed
+                // and session id — never the shard or thread count, so
+                // generation is bit-identical across engine shapes. The
+                // head slot (1 << 20) is outside any real head index, so
+                // it cannot collide with a model seed.
+                let gen_seed =
+                    session_seed(self.cfg.seed ^ params.seed.rotate_left(17), session, 1 << 20);
+                self.jobs.push_back(Job::Generate(GenJob {
+                    session,
+                    prompt,
+                    done: 0,
+                    gen_seed,
+                    rep_window: params.rep_window,
+                    sampler: SamplerStack::new(&params, stop),
+                    submitted,
+                    busy_ns: 0.0,
+                    started: false,
+                    logits: vec![0.0; self.cfg.vocab.max(1)],
+                    out: Vec::new(),
+                }));
             }
             EngineMsg::Evict { session } => self.bank.evict(session),
             EngineMsg::FlushAll => self.bank.flush_all(),
@@ -628,12 +876,12 @@ impl WorkerState {
         }
     }
 
-    /// Advance the front prefill job by one quantum; on completion,
-    /// account the prompt, emit its output, and re-dispatch deferred
+    /// Advance the front job by one quantum, then rotate it behind the
+    /// other jobs (continuous batching across sessions); on completion,
+    /// account the request, emit its output, and re-dispatch deferred
     /// messages that were waiting on it.
     fn run_quantum(&mut self) {
-        let hd = self.cfg.hd;
-        let Some(job) = self.jobs.front_mut() else {
+        let Some(job) = self.jobs.pop_front() else {
             // unreachable by the deferral invariant (deferred non-empty
             // implies a queued job), but never risk a spin
             if !self.deferred.is_empty() {
@@ -641,6 +889,14 @@ impl WorkerState {
             }
             return;
         };
+        match job {
+            Job::Prefill(j) => self.advance_prefill(j),
+            Job::Generate(j) => self.advance_generate(j),
+        }
+    }
+
+    fn advance_prefill(&mut self, mut job: PrefillJob) {
+        let hd = self.cfg.hd;
         let take = self.cfg.prefill_quantum.min(job.total - job.done);
         let (a, b) = (job.done * hd, (job.done + take) * hd);
         let t0 = Instant::now();
@@ -671,7 +927,6 @@ impl WorkerState {
             }
         };
         if failed || job.done >= job.total {
-            let job = self.jobs.pop_front().expect("front job exists");
             self.gauge.fetch_sub(1, Ordering::SeqCst);
             if failed {
                 self.failed_chunks += 1;
@@ -688,7 +943,120 @@ impl WorkerState {
                 }
             }
             self.redispatch();
+        } else {
+            self.jobs.push_back(Job::Prefill(job));
         }
+    }
+
+    /// One scheduling round of a generation request: a prompt quantum
+    /// while the prompt lasts, then up to `gen_quantum` sample/step
+    /// iterations of the self-feeding loop. The session is reached
+    /// through [`ShardBank::with_lm`], so LRU eviction between rounds is
+    /// transparent — the history ring, RNG and produced count thaw from
+    /// the `"lm"` blob and the stream continues bit-identically.
+    fn advance_generate(&mut self, mut job: GenJob) {
+        if job.done < job.prompt.len() {
+            let take = self.cfg.prefill_quantum.min(job.prompt.len() - job.done);
+            let (a, b) = (job.done, job.done + take);
+            let (prompt, logits) = (&job.prompt, &mut job.logits);
+            let t0 = Instant::now();
+            let res = self
+                .bank
+                .with_lm(job.session, |lm, sc| lm.prefill_tokens(&prompt[a..b], logits, sc));
+            let el = t0.elapsed();
+            self.busy += el;
+            self.prefill_busy += el;
+            job.busy_ns += el.as_nanos() as f64;
+            if let Err(e) = res {
+                self.drop_generate(job.session, &e);
+                return;
+            }
+            job.done = b;
+            if job.done < job.prompt.len() {
+                self.jobs.push_back(Job::Generate(job));
+                return;
+            }
+            // prompt fully ingested — fall through and sample this same
+            // round, so TTFT means time to the first sampled token
+        }
+
+        let GenJob { session, sampler, started, logits, out, gen_seed, rep_window, .. } =
+            &mut job;
+        let quantum = self.cfg.gen_quantum;
+        let first_round = out.is_empty();
+        let mut finished = false;
+        let t0 = Instant::now();
+        let res = self.bank.with_lm(*session, |lm, scratch| {
+            if !*started {
+                // exactly once per request — a mid-generation restore
+                // thaws the core instead of re-arming it
+                lm.begin_gen(*gen_seed, *rep_window);
+                *started = true;
+            }
+            for _ in 0..quantum {
+                let tok = {
+                    let g = lm.gen_mut().expect("generation armed");
+                    // cap met before sampling (max_new 0 emits nothing)
+                    if sampler.exhausted(g.produced) {
+                        finished = true;
+                        break;
+                    }
+                    let (hist, rng) = g.split();
+                    sampler.next_token(hist, logits, rng)
+                };
+                let g = lm.gen_mut().expect("generation armed");
+                g.push(tok);
+                let produced = g.produced;
+                out.push(tok);
+                if sampler.should_stop(tok, produced) {
+                    finished = true;
+                    break;
+                }
+                lm.step_token(tok, logits, scratch);
+            }
+        });
+        let el = t0.elapsed();
+        self.busy += el;
+        self.gen_busy += el;
+        job.busy_ns += el.as_nanos() as f64;
+        if let Err(e) = res {
+            self.drop_generate(job.session, &e);
+            return;
+        }
+        if first_round && !job.out.is_empty() {
+            ring_push(&mut self.ttft_ns, self.ttft_i, job.submitted.elapsed().as_nanos() as f64);
+            self.ttft_i += 1;
+        }
+        if finished {
+            self.gauge.fetch_sub(1, Ordering::SeqCst);
+            self.completions += 1;
+            self.gen_tokens += job.out.len();
+            self.prefill_tokens += job.prompt.len();
+            self.tokens += job.prompt.len() + job.out.len();
+            let done_ns = job.submitted.elapsed().as_nanos() as f64;
+            ring_push(&mut self.completion_ns, self.completion_i, done_ns);
+            self.completion_i += 1;
+            let seq = self.bank.record_generate(job.session, job.prompt.len(), job.out.len());
+            // drop the sampler core so the session's state bytes and any
+            // later eviction blob shrink back to mixer state
+            let _ = self.bank.with_lm(job.session, |lm, _| lm.end_gen());
+            let _ = self.gen_tx.send(GenOut { session: job.session, seq, tokens: job.out });
+            self.redispatch();
+        } else {
+            self.jobs.push_back(Job::Generate(job));
+        }
+    }
+
+    /// A generate request that cannot proceed (non-LM engine, corrupt
+    /// restore) costs that request, not the shard.
+    fn drop_generate(&mut self, session: u64, e: &anyhow::Error) {
+        self.gauge.fetch_sub(1, Ordering::SeqCst);
+        self.failed_chunks += 1;
+        eprintln!(
+            "shard {}: dropping generate request for session {session}: {e}",
+            self.cfg.shard
+        );
+        self.redispatch();
     }
 
     /// Re-dispatch every deferred message in order; messages still blocked
@@ -706,6 +1074,7 @@ fn shard_worker(
     factory: impl Fn(u64, usize) -> Box<dyn SeqMixer> + Send + 'static,
     rx: Receiver<EngineMsg>,
     out_tx: Option<Sender<EngineOut>>,
+    gen_tx: Sender<GenOut>,
     gauge: Arc<AtomicUsize>,
     high: Arc<AtomicUsize>,
 ) -> (ShardReport, Vec<(u64, StreamStats)>) {
@@ -715,18 +1084,24 @@ fn shard_worker(
         jobs: VecDeque::new(),
         deferred: VecDeque::new(),
         out_tx,
+        gen_tx,
         gauge,
         busy: Duration::ZERO,
         prefill_busy: Duration::ZERO,
+        gen_busy: Duration::ZERO,
         latency_ns: Vec::new(),
         latency_i: 0,
         ttft_ns: Vec::new(),
         ttft_i: 0,
+        completion_ns: Vec::new(),
+        completion_i: 0,
         chunks: 0,
         tokens: 0,
         failed_chunks: 0,
         prefill_chunks: 0,
         prefill_tokens: 0,
+        gen_tokens: 0,
+        completions: 0,
     };
     let mut open = true;
     loop {
@@ -777,8 +1152,12 @@ fn shard_worker(
         tokens: st.tokens,
         busy: st.busy,
         prefill_busy: st.prefill_busy,
+        gen_busy: st.gen_busy,
         prefill_chunks: st.prefill_chunks,
         prefill_tokens: st.prefill_tokens,
+        gen_tokens: st.gen_tokens,
+        completions: st.completions,
+        completion_ns: st.completion_ns,
         ttft_ns: st.ttft_ns,
         evictions: st.bank.evictions,
         restores: st.bank.restores,
@@ -882,6 +1261,72 @@ mod tests {
             "per-layer split must cover the engine's total state"
         );
         assert!(layers.iter().all(|l| l.busy_ns > 0.0));
+    }
+
+    #[test]
+    fn engine_generates_greedy_completions_with_three_way_occupancy() {
+        let lm = LmConfig::new(
+            24,
+            StackConfig::uniform(2, 8, 16, 2, 4, 8, MixerKind::Ovq { n_max: 16 }),
+        );
+        let mut cfg = EngineConfig::for_lm(lm);
+        cfg.threads = 2;
+        cfg.gen_quantum = 4;
+        let engine = DecodeEngine::start(cfg);
+        assert_eq!(engine.lm_vocab(), Some(24));
+        for s in 0..4u64 {
+            engine.submit_generate(
+                s,
+                vec![1, 2, 3, 4, 5],
+                SamplingParams::greedy(),
+                StopCriteria::max_new(12),
+            );
+        }
+        let r = engine.finish();
+        assert_eq!(r.completions(), 4);
+        assert_eq!(r.gen_tokens(), 4 * 12);
+        assert_eq!(r.generations.len(), 4);
+        for g in &r.generations {
+            assert_eq!(g.tokens.len(), 12, "session {} under-generated", g.session);
+            assert!(g.tokens.iter().all(|&t| (t as usize) < 24));
+            assert_eq!(g.seq, 1);
+        }
+        assert_eq!(r.tokens, 4 * (5 + 12), "prompt + sampled tokens both count");
+        assert_eq!(r.prefill_tokens(), 4 * 5);
+        assert!(r.shards.iter().any(|s| s.gen_busy > Duration::ZERO));
+        assert!(r.completion_us(50.0) > 0.0);
+        // the sampler core was dropped at completion: session state is
+        // back to pure mixer state, so no blob carries generation bytes
+        let (du, pu, gu) = r.occupancy()[0];
+        assert!(du >= 0.0 && pu >= 0.0 && gu >= 0.0);
+    }
+
+    #[test]
+    fn max_new_zero_completes_with_no_sampled_tokens() {
+        let lm = LmConfig::new(24, StackConfig::uniform(1, 8, 16, 2, 4, 8, MixerKind::Gdn));
+        let engine = DecodeEngine::start(EngineConfig::for_lm(lm));
+        let stop = StopCriteria::max_new(0);
+        engine.submit_generate(1, vec![1, 2, 3], SamplingParams::greedy(), stop);
+        let r = engine.finish();
+        assert_eq!(r.completions(), 1);
+        assert_eq!(r.gen_tokens(), 0, "max_new 0 must sample nothing");
+        assert!(r.generations[0].tokens.is_empty());
+        assert_eq!(r.tokens, 3, "the prompt is still ingested and counted");
+    }
+
+    #[test]
+    fn generate_on_a_non_lm_engine_fails_the_request_not_the_shard() {
+        let mut cfg = EngineConfig::new(MixerKind::Gdn, 1, 4, 8);
+        cfg.threads = 1;
+        let engine = DecodeEngine::start(cfg);
+        engine.submit_generate(1, vec![0, 1], SamplingParams::greedy(), StopCriteria::max_new(4));
+        // the shard survives and keeps serving decode traffic
+        let mut rng = Rng::new(5);
+        engine.submit(2, chunk_of(&mut rng, 8, 4));
+        let r = engine.finish();
+        assert_eq!(r.failed_chunks(), 1);
+        assert_eq!(r.completions(), 0);
+        assert_eq!(r.chunks, 1);
     }
 
     #[test]

@@ -1,13 +1,15 @@
 //! L3 coordinator: the training loop, length-sweep evaluator, experiment
 //! drivers (one per paper figure/table), the batched scoring server, and
 //! the serving stack's decode side — the sharded multi-threaded decode
-//! [`engine`] with session lifecycle and the [`traffic`] load generator
-//! that drives it.
+//! [`engine`] with session lifecycle (decode, prefill, and self-feeding
+//! generation via the [`sampler`] stack) and the [`traffic`] load
+//! generator that drives it.
 
 pub mod engine;
 pub mod evaluator;
 pub mod experiments;
 pub mod metrics;
+pub mod sampler;
 pub mod server;
 pub mod trainer;
 pub mod traffic;

@@ -1,0 +1,536 @@
+//! The sampling side of the generation subsystem: a composable
+//! [`LogitsProcessor`] chain (repetition penalty → temperature → top-k →
+//! top-p, the mistral.rs-style split of "shape the distribution" from
+//! "draw from it") feeding a deterministic seeded [`Sampler`].
+//!
+//! Everything here is a pure function of (logits, history, RNG state):
+//! the processors own only scratch buffers, the RNG lives in the model's
+//! [`GenCore`](crate::ovqcore::lm::GenCore) (so it snapshots with the
+//! session), and every tie-break is explicit — a fixed seed replays the
+//! same token stream on any platform, thread count, or eviction schedule.
+//! [`SamplingParams`] is per-request *config* (it travels with the engine
+//! job, not the snapshot); [`StopCriteria`] ends the self-feeding loop.
+
+use anyhow::{bail, Result};
+
+use crate::ovqcore::kernels;
+use crate::ovqcore::lm::TokenId;
+use crate::util::rng::Rng;
+
+/// Per-request sampling configuration. `temperature == 0` selects greedy
+/// decoding (the processors still apply — a repetition penalty shifts
+/// the argmax too); the other knobs deactivate at their neutral values
+/// (`top_k == 0`, `top_p >= 1`, `rep_penalty == 1`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    /// keep only the k highest logits (0 = off)
+    pub top_k: usize,
+    /// nucleus sampling: keep the smallest prefix of the sorted
+    /// distribution with cumulative probability >= top_p (>= 1 = off)
+    pub top_p: f32,
+    /// divide (positive) / multiply (negative) the logits of recently
+    /// emitted tokens (1 = off; > 1 discourages repeats)
+    pub rep_penalty: f32,
+    /// how many recent tokens the penalty ring retains
+    pub rep_window: usize,
+    /// sampling-stream seed; mixed with the engine seed and session id so
+    /// concurrent sessions draw independent, replayable streams
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    /// Greedy decoding: argmax, no masking, no penalty.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            rep_penalty: 1.0,
+            rep_window: 0,
+            seed: 0,
+        }
+    }
+
+    /// A standard sampled mix: temperature 0.8, top-k 40, top-p 0.95,
+    /// mild repetition penalty over a 64-token window.
+    pub fn sampled(seed: u64) -> SamplingParams {
+        SamplingParams {
+            temperature: 0.8,
+            top_k: 40,
+            top_p: 0.95,
+            rep_penalty: 1.1,
+            rep_window: 64,
+            seed,
+        }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            bail!("--temp must be a finite value >= 0 (0 = greedy), got {}", self.temperature);
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 {
+            bail!("--top-p must be in (0, 1] (1 = off), got {}", self.top_p);
+        }
+        if !self.rep_penalty.is_finite() || self.rep_penalty <= 0.0 {
+            bail!("--rep-penalty must be > 0 (1 = off), got {}", self.rep_penalty);
+        }
+        // the generation ring must stay under the snapshot-restore bound
+        // (GenCore rejects caps > 2^20 as corrupt), so an accepted request
+        // can always thaw mid-generation
+        if self.rep_window > (1 << 20) {
+            bail!("--rep-window must be <= {} (got {})", 1 << 20, self.rep_window);
+        }
+        Ok(())
+    }
+}
+
+/// When the self-feeding loop ends: a hard cap on new tokens plus an
+/// optional stop-token set (the stop token is emitted, then the request
+/// completes — the usual EOS convention).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StopCriteria {
+    pub max_new: usize,
+    pub stop_tokens: Vec<TokenId>,
+}
+
+impl StopCriteria {
+    pub fn max_new(n: usize) -> StopCriteria {
+        StopCriteria { max_new: n, stop_tokens: Vec::new() }
+    }
+
+    pub fn with_stop_tokens(mut self, toks: Vec<TokenId>) -> StopCriteria {
+        self.stop_tokens = toks;
+        self
+    }
+
+    /// Has the request finished after emitting `tok` as token number
+    /// `produced` (1-based)?
+    pub fn should_stop(&self, tok: TokenId, produced: usize) -> bool {
+        produced >= self.max_new || self.stop_tokens.contains(&tok)
+    }
+}
+
+/// One link of the logits chain: reshape the distribution in place,
+/// given the session's recent-token history. Mutable so processors can
+/// own scratch (the top-k keep-buffer, the nucleus sort) without
+/// per-token allocation.
+pub trait LogitsProcessor: Send {
+    fn name(&self) -> &'static str;
+    fn process(&mut self, history: &[TokenId], logits: &mut [f32]);
+}
+
+/// CTRL-style repetition penalty: each *distinct* token in the history
+/// window has its logit divided (if positive) or multiplied (if
+/// negative) by the penalty.
+pub struct RepetitionPenalty {
+    pub penalty: f32,
+}
+
+impl LogitsProcessor for RepetitionPenalty {
+    fn name(&self) -> &'static str {
+        "repetition_penalty"
+    }
+
+    fn process(&mut self, history: &[TokenId], logits: &mut [f32]) {
+        for (i, &t) in history.iter().enumerate() {
+            // once per distinct token: skip later duplicates (the window
+            // is small — rep_window — so the quadratic scan is cheap)
+            if history[..i].contains(&t) {
+                continue;
+            }
+            let Some(l) = logits.get_mut(t as usize) else { continue };
+            if *l > 0.0 {
+                *l /= self.penalty;
+            } else {
+                *l *= self.penalty;
+            }
+        }
+    }
+}
+
+/// Divide every logit by the temperature (> 0, != 1 when active).
+pub struct Temperature {
+    pub t: f32,
+}
+
+impl LogitsProcessor for Temperature {
+    fn name(&self) -> &'static str {
+        "temperature"
+    }
+
+    fn process(&mut self, _history: &[TokenId], logits: &mut [f32]) {
+        let inv = 1.0 / self.t;
+        for l in logits.iter_mut() {
+            *l *= inv;
+        }
+    }
+}
+
+/// Keep the k highest logits, mask the rest to -inf. Threshold via the
+/// partial select in [`kernels::top_k_threshold`]; logits tied with the
+/// k-th value all survive (deterministic, order-free).
+pub struct TopK {
+    pub k: usize,
+    keep: Vec<f32>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        TopK { k, keep: Vec::new() }
+    }
+}
+
+impl LogitsProcessor for TopK {
+    fn name(&self) -> &'static str {
+        "top_k"
+    }
+
+    fn process(&mut self, _history: &[TokenId], logits: &mut [f32]) {
+        let thr = kernels::top_k_threshold(logits, self.k, &mut self.keep);
+        if thr == f32::NEG_INFINITY {
+            return; // k == 0 or k >= vocab: nothing to mask
+        }
+        for l in logits.iter_mut() {
+            if *l < thr {
+                *l = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+/// Nucleus (top-p) masking: keep the smallest set of tokens whose
+/// softmax probabilities sum to >= p, mask the rest. Ties sort by index
+/// (ascending) so the kept set is a pure function of the logits.
+pub struct TopP {
+    pub p: f32,
+    order: Vec<(f32, u32)>,
+}
+
+impl TopP {
+    pub fn new(p: f32) -> TopP {
+        TopP { p, order: Vec::new() }
+    }
+}
+
+impl LogitsProcessor for TopP {
+    fn name(&self) -> &'static str {
+        "top_p"
+    }
+
+    fn process(&mut self, _history: &[TokenId], logits: &mut [f32]) {
+        if self.p >= 1.0 {
+            return;
+        }
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if m == f32::NEG_INFINITY {
+            return;
+        }
+        let mut z = 0.0f32;
+        self.order.clear();
+        for (i, &l) in logits.iter().enumerate() {
+            let w = if l > f32::NEG_INFINITY { (l - m).exp() } else { 0.0 };
+            z += w;
+            // zero-weight entries (masked by an earlier processor, or
+            // underflowed) can never be sampled and are already outside
+            // the nucleus — keep the sort at O(live log live), not
+            // O(vocab log vocab), on the per-token hot path
+            if w > 0.0 {
+                self.order.push((w, i as u32));
+            }
+        }
+        self.order.sort_unstable_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        // walk the sorted mass until the nucleus is covered; everything
+        // after the crossing entry is masked
+        let target = self.p * z;
+        let mut acc = 0.0f32;
+        let mut cut = self.order.len();
+        for (rank, &(w, _)) in self.order.iter().enumerate() {
+            acc += w;
+            if acc >= target {
+                cut = rank + 1;
+                break;
+            }
+        }
+        for &(_, i) in &self.order[cut..] {
+            logits[i as usize] = f32::NEG_INFINITY;
+        }
+    }
+}
+
+/// Build the processor chain a request's params call for, in the fixed
+/// order penalty → temperature → top-k → top-p. Neutral knobs are
+/// omitted, so greedy-with-defaults runs an empty chain.
+pub fn chain_for(params: &SamplingParams) -> Vec<Box<dyn LogitsProcessor>> {
+    let mut chain: Vec<Box<dyn LogitsProcessor>> = Vec::new();
+    if params.rep_penalty != 1.0 && params.rep_window > 0 {
+        chain.push(Box::new(RepetitionPenalty { penalty: params.rep_penalty }));
+    }
+    if !params.is_greedy() && params.temperature != 1.0 {
+        chain.push(Box::new(Temperature { t: params.temperature }));
+    }
+    if params.top_k > 0 {
+        chain.push(Box::new(TopK::new(params.top_k)));
+    }
+    if params.top_p < 1.0 {
+        chain.push(Box::new(TopP::new(params.top_p)));
+    }
+    chain
+}
+
+/// The terminal draw: greedy argmax, or a categorical draw over the
+/// softmax of the (processed) logits through the seeded
+/// [`Rng::categorical`] — one uniform per token, fully replayable.
+pub struct Sampler {
+    greedy: bool,
+    probs: Vec<f32>,
+}
+
+impl Sampler {
+    pub fn for_params(params: &SamplingParams) -> Sampler {
+        Sampler { greedy: params.is_greedy(), probs: Vec::new() }
+    }
+
+    pub fn sample(&mut self, logits: &[f32], rng: &mut Rng) -> TokenId {
+        if self.greedy {
+            return kernels::argmax(logits) as TokenId;
+        }
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if m == f32::NEG_INFINITY {
+            return 0; // degenerate: no live logit (matches argmax's fallback)
+        }
+        self.probs.clear();
+        self.probs.extend(logits.iter().map(|&l| {
+            if l > f32::NEG_INFINITY {
+                (l - m).exp()
+            } else {
+                0.0
+            }
+        }));
+        rng.categorical(&self.probs) as TokenId
+    }
+}
+
+/// One request's complete sampler stack: the processor chain, the
+/// terminal sampler, and the stop rule. Owned by the engine's generate
+/// job (config + scratch — the *state* that must survive eviction lives
+/// in the model's `GenCore`).
+pub struct SamplerStack {
+    chain: Vec<Box<dyn LogitsProcessor>>,
+    sampler: Sampler,
+    stop: StopCriteria,
+}
+
+impl SamplerStack {
+    pub fn new(params: &SamplingParams, stop: StopCriteria) -> SamplerStack {
+        SamplerStack { chain: chain_for(params), sampler: Sampler::for_params(params), stop }
+    }
+
+    /// Run the chain over `logits` in place and draw the next token.
+    pub fn next_token(
+        &mut self,
+        history: &[TokenId],
+        logits: &mut [f32],
+        rng: &mut Rng,
+    ) -> TokenId {
+        for p in &mut self.chain {
+            p.process(history, logits);
+        }
+        self.sampler.sample(logits, rng)
+    }
+
+    pub fn should_stop(&self, tok: TokenId, produced: usize) -> bool {
+        self.stop.should_stop(tok, produced)
+    }
+
+    /// True when `produced` tokens already meet the cap — checked BEFORE
+    /// sampling, so `max_new == 0` emits nothing at all.
+    pub fn exhausted(&self, produced: usize) -> bool {
+        produced >= self.stop.max_new
+    }
+
+    /// Chain link names, for reports and tests.
+    pub fn chain_names(&self) -> Vec<&'static str> {
+        self.chain.iter().map(|p| p.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn softmax(logits: &[f32]) -> Vec<f32> {
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let w: Vec<f32> = logits
+            .iter()
+            .map(|&l| if l > f32::NEG_INFINITY { (l - m).exp() } else { 0.0 })
+            .collect();
+        let z: f32 = w.iter().sum();
+        w.iter().map(|&x| x / z).collect()
+    }
+
+    #[test]
+    fn greedy_is_argmax_and_ignores_monotone_knobs() {
+        let logits = [0.1f32, 2.5, -1.0, 2.4];
+        let mut rng = Rng::new(1);
+        let mut stack = SamplerStack::new(&SamplingParams::greedy(), StopCriteria::max_new(4));
+        assert!(stack.chain_names().is_empty(), "neutral knobs build an empty chain");
+        let mut l = logits.to_vec();
+        assert_eq!(stack.next_token(&[], &mut l, &mut rng), 1);
+        // top-k masking cannot change the argmax
+        let mut p = SamplingParams::greedy();
+        p.top_k = 2;
+        let mut stack = SamplerStack::new(&p, StopCriteria::max_new(4));
+        let mut l = logits.to_vec();
+        assert_eq!(stack.next_token(&[], &mut l, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_masks_all_but_k() {
+        let mut tk = TopK::new(2);
+        let mut l = vec![0.5f32, 3.0, 1.0, 2.0, -4.0];
+        tk.process(&[], &mut l);
+        assert_eq!(l[1], 3.0);
+        assert_eq!(l[3], 2.0);
+        for i in [0usize, 2, 4] {
+            assert_eq!(l[i], f32::NEG_INFINITY, "index {i} must be masked");
+        }
+        // k >= len is a no-op
+        let mut l = vec![1.0f32, 2.0];
+        TopK::new(5).process(&[], &mut l);
+        assert_eq!(l, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn top_p_keeps_the_minimal_nucleus() {
+        // probs ~ [0.643, 0.236, 0.087, 0.032, ...]: p=0.8 keeps exactly
+        // the top two (0.643 < 0.8 <= 0.879)
+        let mut tp = TopP::new(0.8);
+        let mut l = vec![4.0f32, 3.0, 2.0, 1.0, 0.0];
+        tp.process(&[], &mut l);
+        assert!(l[0].is_finite() && l[1].is_finite());
+        for i in 2..5 {
+            assert_eq!(l[i], f32::NEG_INFINITY, "index {i} must be outside the nucleus");
+        }
+        // p >= 1 is a no-op; the top token alone always survives
+        let mut l = vec![9.0f32, 0.0];
+        TopP::new(1.0).process(&[], &mut l);
+        assert!(l.iter().all(|x| x.is_finite()));
+        let mut l = vec![9.0f32, 0.0];
+        TopP::new(0.01).process(&[], &mut l);
+        assert!(l[0].is_finite());
+        assert_eq!(l[1], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn repetition_penalty_applies_once_per_distinct_token() {
+        let mut rp = RepetitionPenalty { penalty: 2.0 };
+        let mut l = vec![4.0f32, -2.0, 1.0];
+        // token 0 appears twice in history: still one division
+        rp.process(&[0, 1, 0], &mut l);
+        assert_eq!(l[0], 2.0, "positive logit divided once");
+        assert_eq!(l[1], -4.0, "negative logit multiplied once");
+        assert_eq!(l[2], 1.0, "unseen token untouched");
+        // out-of-vocab history ids are ignored, not a panic
+        rp.process(&[99], &mut l);
+        assert_eq!(l, vec![2.0, -4.0, 1.0]);
+    }
+
+    #[test]
+    fn sampled_stream_is_seed_deterministic_and_in_support() {
+        let params = SamplingParams::sampled(11);
+        let logits = [1.0f32, 0.5, 3.0, 2.0, -1.0, 0.0];
+        let draw = |seed: u64| -> Vec<TokenId> {
+            let mut rng = Rng::new(seed);
+            let mut stack = SamplerStack::new(&params, StopCriteria::max_new(64));
+            let mut hist: Vec<TokenId> = Vec::new();
+            (0..64)
+                .map(|_| {
+                    let mut l = logits.to_vec();
+                    let t = stack.next_token(&hist, &mut l, &mut rng);
+                    hist.push(t);
+                    if hist.len() > 8 {
+                        hist.remove(0);
+                    }
+                    t
+                })
+                .collect()
+        };
+        let a = draw(5);
+        assert_eq!(a, draw(5), "same seed must replay the same stream");
+        assert_ne!(a, draw(6), "different seeds must diverge");
+        assert!(a.iter().all(|&t| (t as usize) < logits.len()));
+        assert!(a.iter().any(|&t| t != a[0]), "temperature 0.8 should mix tokens");
+    }
+
+    #[test]
+    fn chain_for_composes_in_order() {
+        let names = SamplerStack::new(&SamplingParams::sampled(0), StopCriteria::max_new(1))
+            .chain_names();
+        assert_eq!(names, vec!["repetition_penalty", "temperature", "top_k", "top_p"]);
+        let mut p = SamplingParams::greedy();
+        p.rep_penalty = 1.3;
+        p.rep_window = 16;
+        let names = SamplerStack::new(&p, StopCriteria::max_new(1)).chain_names();
+        assert_eq!(names, vec!["repetition_penalty"]);
+    }
+
+    #[test]
+    fn stop_criteria() {
+        let s = StopCriteria::max_new(3).with_stop_tokens(vec![7]);
+        assert!(!s.should_stop(1, 1));
+        assert!(s.should_stop(7, 1), "stop token fires immediately");
+        assert!(s.should_stop(1, 3), "max_new caps the loop");
+        // exhaustion is checked BEFORE sampling: max_new 0 emits nothing
+        let stack = SamplerStack::new(&SamplingParams::greedy(), StopCriteria::max_new(0));
+        assert!(stack.exhausted(0));
+        let stack = SamplerStack::new(&SamplingParams::greedy(), StopCriteria::max_new(2));
+        assert!(!stack.exhausted(1));
+        assert!(stack.exhausted(2));
+    }
+
+    #[test]
+    fn params_validation() {
+        assert!(SamplingParams::greedy().validate().is_ok());
+        assert!(SamplingParams::sampled(1).validate().is_ok());
+        let mut p = SamplingParams::greedy();
+        p.temperature = -1.0;
+        assert!(p.validate().is_err());
+        let mut p = SamplingParams::greedy();
+        p.top_p = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = SamplingParams::greedy();
+        p.rep_penalty = 0.0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn categorical_respects_the_shaped_distribution() {
+        // with a huge mass gap, the sampled stream should almost always
+        // pick the heavy token — a smoke check that the probs wiring is
+        // not inverted
+        let mut params = SamplingParams::sampled(0);
+        params.top_k = 0;
+        params.top_p = 1.0;
+        params.rep_penalty = 1.0;
+        params.temperature = 1.0;
+        let mut stack = SamplerStack::new(&params, StopCriteria::max_new(1));
+        let mut rng = Rng::new(2);
+        let mut heavy = 0usize;
+        for _ in 0..200 {
+            let mut l = vec![0.0f32, 8.0, 0.0];
+            if stack.next_token(&[], &mut l, &mut rng) == 1 {
+                heavy += 1;
+            }
+        }
+        assert!(heavy > 190, "heavy token drawn only {heavy}/200 times");
+        let probs = softmax(&[0.0, 8.0, 0.0]);
+        assert!(probs[1] > 0.99);
+    }
+}

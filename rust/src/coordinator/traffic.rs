@@ -28,7 +28,9 @@
 use std::collections::HashMap;
 
 use crate::coordinator::engine::DecodeEngine;
+use crate::coordinator::sampler::{SamplingParams, StopCriteria};
 use crate::ovqcore::bank::DecodeChunk;
+use crate::ovqcore::lm::TokenId;
 use crate::util::rng::Rng;
 
 /// Shape of a synthetic workload.
@@ -60,6 +62,22 @@ pub struct TrafficConfig {
     /// probability a fresh session opens with a long prompt (only
     /// consulted when `prompt_sizes` is non-empty)
     pub prompt_p: f64,
+    /// generation requests: when non-empty, a fresh session's first
+    /// arrival is, with probability `gen_p`, a generate request whose
+    /// prompt length is drawn uniformly from here — the autoregressive
+    /// workload (requires replaying into an LM engine). Empty by
+    /// default, leaving legacy traces untouched.
+    pub gen_prompt_sizes: Vec<usize>,
+    /// probability a fresh session opens with a generate request (only
+    /// consulted when `gen_prompt_sizes` is non-empty; checked before
+    /// the plain-prompt coin)
+    pub gen_p: f64,
+    /// completion-length distribution: each generate request's max_new
+    /// is drawn uniformly from here
+    pub gen_max_new: Vec<usize>,
+    /// share of generate requests using the sampled (temperature/top-k/
+    /// top-p/repetition-penalty) parameter mix instead of greedy
+    pub gen_sampled_p: f64,
     pub seed: u64,
 }
 
@@ -76,6 +94,10 @@ impl TrafficConfig {
             chunk_sizes: vec![1, 8, 32],
             prompt_sizes: Vec::new(),
             prompt_p: 0.0,
+            gen_prompt_sizes: Vec::new(),
+            gen_p: 0.0,
+            gen_max_new: Vec::new(),
+            gen_sampled_p: 0.0,
             seed: 0x7AFF1C,
         }
     }
@@ -86,6 +108,25 @@ impl TrafficConfig {
     pub fn with_prompts(mut self, sizes: Vec<usize>, p: f64) -> TrafficConfig {
         self.prompt_sizes = sizes;
         self.prompt_p = p;
+        self
+    }
+
+    /// Enable generation requests: a fresh session opens, with
+    /// probability `p`, with a generate request (prompt length from
+    /// `prompt_sizes`, completion cap from `max_new`, and a
+    /// `sampled_p`-share using the sampled parameter mix over greedy).
+    pub fn with_generates(
+        mut self,
+        prompt_sizes: Vec<usize>,
+        max_new: Vec<usize>,
+        p: f64,
+        sampled_p: f64,
+    ) -> TrafficConfig {
+        assert!(!max_new.is_empty(), "generate traffic needs a completion-length mix");
+        self.gen_prompt_sizes = prompt_sizes;
+        self.gen_max_new = max_new;
+        self.gen_p = p;
+        self.gen_sampled_p = sampled_p;
         self
     }
 }
@@ -103,6 +144,13 @@ pub struct TrafficEvent {
     /// long-prompt admission: the replayer submits this event through the
     /// engine's quantized prefill path instead of the decode path
     pub prefill: bool,
+    /// generation request: `len` is the token-prompt length; the replayer
+    /// routes it through `submit_generate` on an LM engine
+    pub generate: bool,
+    /// completion cap of a generate event (0 otherwise)
+    pub max_new: usize,
+    /// generate event uses the sampled parameter mix (greedy otherwise)
+    pub sampled: bool,
 }
 
 /// Generate a deterministic arrival trace.
@@ -134,19 +182,40 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<TrafficEvent> {
                 s
             }
         };
-        // a session's first-ever arrival may be a long prompt (guard the
-        // rng draws so prompt-free configs keep their legacy streams)
-        let prefill = !seen[session as usize]
-            && !cfg.prompt_sizes.is_empty()
-            && rng.bool(cfg.prompt_p);
+        // a session's first-ever arrival may be a generate request or a
+        // long prompt (guard every rng draw so configs without these
+        // features keep their legacy streams byte-identical)
+        let fresh = !seen[session as usize];
+        let generate = fresh && !cfg.gen_prompt_sizes.is_empty() && rng.bool(cfg.gen_p);
+        let prefill =
+            !generate && fresh && !cfg.prompt_sizes.is_empty() && rng.bool(cfg.prompt_p);
         seen[session as usize] = true;
-        let len = if prefill {
+        let len = if generate {
+            cfg.gen_prompt_sizes[rng.usize_below(cfg.gen_prompt_sizes.len())]
+        } else if prefill {
             cfg.prompt_sizes[rng.usize_below(cfg.prompt_sizes.len())]
         } else {
             cfg.chunk_sizes[rng.usize_below(cfg.chunk_sizes.len())]
         };
+        let (max_new, sampled) = if generate {
+            (
+                cfg.gen_max_new[rng.usize_below(cfg.gen_max_new.len())],
+                rng.bool(cfg.gen_sampled_p),
+            )
+        } else {
+            (0, false)
+        };
         let abandon = rng.bool(cfg.abandon_p);
-        events.push(TrafficEvent { at_us: t_us, session, len, abandon, prefill });
+        events.push(TrafficEvent {
+            at_us: t_us,
+            session,
+            len,
+            abandon,
+            prefill,
+            generate,
+            max_new,
+            sampled,
+        });
         if abandon {
             dormant[session as usize] = true;
             burst = None;
@@ -167,6 +236,11 @@ pub struct TraceSummary {
     pub prompts: usize,
     /// tokens arriving as prompts (subset of `tokens`)
     pub prompt_tokens: usize,
+    /// generation requests in the trace
+    pub generates: usize,
+    /// completion-cap tokens requested by generate events (not part of
+    /// `tokens` — the completion is produced by the engine, not offered)
+    pub gen_max_new_total: usize,
     /// share of all events going to the single hottest session
     pub hottest_share: f64,
     /// longest same-session back-to-back run
@@ -178,6 +252,7 @@ pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
     let mut per_session: HashMap<u64, usize> = HashMap::new();
     let mut tokens = 0usize;
     let (mut prompts, mut prompt_tokens) = (0usize, 0usize);
+    let (mut generates, mut gen_max_new_total) = (0usize, 0usize);
     let (mut max_burst, mut cur_burst) = (0usize, 0usize);
     let mut last: Option<u64> = None;
     for e in events {
@@ -186,6 +261,10 @@ pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
         if e.prefill {
             prompts += 1;
             prompt_tokens += e.len;
+        }
+        if e.generate {
+            generates += 1;
+            gen_max_new_total += e.max_new;
         }
         cur_burst = if last == Some(e.session) { cur_burst + 1 } else { 1 };
         max_burst = max_burst.max(cur_burst);
@@ -198,6 +277,8 @@ pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
         tokens,
         prompts,
         prompt_tokens,
+        generates,
+        gen_max_new_total,
         hottest_share: hottest as f64 / events.len().max(1) as f64,
         max_burst,
         span_us: events.last().map_or(0, |e| e.at_us),
@@ -215,6 +296,16 @@ pub fn synth_chunk(data_seed: u64, session: u64, seq: usize, len: usize, hd: usi
     );
     let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
     DecodeChunk { queries: mk(len * hd), keys: mk(len * hd), values: mk(len * hd) }
+}
+
+/// Deterministic token prompt for a generate request — the token-id twin
+/// of [`synth_chunk`]: a pure function of (data_seed, session), so any
+/// thread count replays the same prompt to the same session.
+pub fn synth_tokens(data_seed: u64, session: u64, len: usize, vocab: usize) -> Vec<TokenId> {
+    let mut rng = Rng::new(
+        data_seed ^ session.wrapping_mul(0xA076_1D64_78BD_642F) ^ 0x7E4E_6E5E_ED01_C0DE,
+    );
+    (0..len).map(|_| rng.below(vocab as u64) as TokenId).collect()
 }
 
 /// Number of distinct payload variants the replay pool keeps per chunk
@@ -249,6 +340,31 @@ pub fn replay(
     let mut pool: HashMap<(usize, u64), DecodeChunk> = HashMap::new();
     let mut tokens = 0usize;
     for e in events {
+        if e.generate {
+            // autoregressive request: a deterministic token prompt routed
+            // through the generation path (greedy or the sampled mix per
+            // the event's coin). Offered tokens count the prompt only —
+            // the completion is produced, not offered.
+            let vocab = engine
+                .lm_vocab()
+                .expect("trace has generate events but the engine is not in LM mode");
+            let prompt = synth_tokens(data_seed, e.session, e.len, vocab);
+            let params = if e.sampled {
+                SamplingParams::sampled(data_seed ^ e.session)
+            } else {
+                SamplingParams::greedy()
+            };
+            engine.submit_generate(e.session, prompt, params, StopCriteria::max_new(e.max_new));
+            *seq.entry(e.session).or_insert(0) += 1;
+            tokens += e.len;
+            if e.abandon {
+                engine.evict(e.session);
+            }
+            if let Some(out) = sink.as_mut() {
+                out.extend(engine.try_outputs());
+            }
+            continue;
+        }
         let s = seq.entry(e.session).or_insert(0);
         let variants = if e.prefill { REPLAY_PROMPT_VARIANTS } else { REPLAY_POOL_VARIANTS };
         let variant = e
@@ -348,6 +464,73 @@ mod tests {
         // prompt-free configs are byte-for-byte what they were before
         let plain = TrafficConfig::new(64, 2000);
         assert!(generate(&plain).iter().all(|e| !e.prefill));
+    }
+
+    #[test]
+    fn generate_arrivals_open_sessions_with_caps_and_mixes() {
+        let cfg =
+            TrafficConfig::new(64, 2000).with_generates(vec![64, 256], vec![16, 64], 0.7, 0.5);
+        let events = generate(&cfg);
+        let t = summarize(&events);
+        assert!(t.generates > 10, "expected generate admissions, got {}", t.generates);
+        assert!(t.gen_max_new_total >= t.generates * 16);
+        let mut seen = std::collections::HashSet::new();
+        let (mut greedy, mut sampled) = (0usize, 0usize);
+        for e in &events {
+            if e.generate {
+                assert!(seen.insert(e.session), "session {} generated twice", e.session);
+                assert!(cfg.gen_prompt_sizes.contains(&e.len), "bad gen prompt len {}", e.len);
+                assert!(cfg.gen_max_new.contains(&e.max_new));
+                assert!(!e.prefill, "an event is one path, not both");
+                if e.sampled {
+                    sampled += 1;
+                } else {
+                    greedy += 1;
+                }
+            } else {
+                assert_eq!(e.max_new, 0);
+                assert!(!e.sampled);
+                seen.insert(e.session);
+            }
+        }
+        assert!(greedy > 0 && sampled > 0, "both parameter mixes must appear");
+        // generate-free configs keep their legacy streams
+        let plain = TrafficConfig::new(64, 2000);
+        assert!(generate(&plain).iter().all(|e| !e.generate));
+    }
+
+    #[test]
+    fn synth_tokens_is_deterministic_and_in_vocab() {
+        let a = synth_tokens(3, 7, 50, 24);
+        assert_eq!(a, synth_tokens(3, 7, 50, 24));
+        assert_eq!(a.len(), 50);
+        assert!(a.iter().all(|&t| (t as usize) < 24));
+        assert_ne!(a, synth_tokens(3, 8, 50, 24), "session must matter");
+    }
+
+    #[test]
+    fn replay_routes_generate_events_through_the_lm_engine() {
+        use crate::coordinator::engine::EngineConfig;
+        use crate::ovqcore::lm::LmConfig;
+        use crate::ovqcore::memstate::MixerKind;
+        use crate::ovqcore::stack::StackConfig;
+        let cfg = TrafficConfig::new(8, 60).with_generates(vec![8, 16], vec![4, 8], 0.9, 0.5);
+        let events = generate(&cfg);
+        let shape = summarize(&events);
+        assert!(shape.generates > 0, "trace must contain generate events");
+        let lm = LmConfig::new(
+            24,
+            StackConfig::uniform(1, 8, 16, 2, 4, 8, MixerKind::Ovq { n_max: 16 }),
+        );
+        let mut ecfg = EngineConfig::for_lm(lm);
+        ecfg.threads = 2;
+        let engine = DecodeEngine::start(ecfg);
+        let tokens = replay(&engine, &events, 0x9, None);
+        let report = engine.finish();
+        assert_eq!(tokens, shape.tokens, "offered tokens count prompts, not completions");
+        assert_eq!(report.completions(), shape.generates, "every request must complete");
+        assert!(report.gen_tokens() > 0);
+        assert_eq!(report.generations.len(), shape.generates);
     }
 
     #[test]

@@ -22,6 +22,13 @@ fn usage() -> ! {
                                         [--layers L --d-model D --d-ff F --schedule S]\n\
                                         (--schedule: per-layer mixers, e.g.\n\
                                          'ovq:1024,kv:win256' cycled over L)\n\
+           generate                     autoregressive generation through the engine:\n\
+                                        prompt prefill -> sampler stack -> self-feeding\n\
+                                        decode [--vocab V --sessions N --prompt-tokens P\n\
+                                        --max-new M --temp T --top-k K --top-p P\n\
+                                        --rep-penalty R --stop-token T --threads W]\n\
+                                        plus the serve stack flags (--layers --d-model\n\
+                                        --d-ff --schedule); --temp 0 = greedy\n\
            flops                        print the App. D FLOPs tables\n\
          \n\
          options: --artifacts DIR (or $OVQ_ARTIFACTS), --out DIR (results)\n"
@@ -38,6 +45,7 @@ fn main() -> Result<()> {
         "eval" => ovq::coordinator::cmd_eval(&args),
         "exp" => ovq::coordinator::experiments::cmd_exp(&args),
         "serve" => ovq::coordinator::server::cmd_serve(&args),
+        "generate" => ovq::coordinator::server::cmd_generate(&args),
         "flops" => ovq::analysis::flops::cmd_flops(&args),
         _ => usage(),
     }

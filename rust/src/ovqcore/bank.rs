@@ -27,6 +27,7 @@ use std::collections::{HashMap, VecDeque};
 
 use anyhow::{Context, Result};
 
+use super::lm::LmModel;
 use super::mixer::{merge_layer_stats, LayerStat, Scratch, SeqMixer};
 use super::snapshot;
 
@@ -71,6 +72,11 @@ pub struct StreamStats {
     /// apart from `chunk_ns` so a 64k prompt doesn't drown the decode
     /// percentiles
     pub prefill_ns: Vec<f64>,
+    /// tokens produced by the self-feeding generation loop (subset of
+    /// `tokens`; a generate request's prompt counts under `prefill_tokens`)
+    pub gen_tokens: usize,
+    /// completed generation requests (subset of `chunks`)
+    pub gen_chunks: usize,
 }
 
 impl StreamStats {
@@ -93,6 +99,19 @@ impl StreamStats {
         self.prefill_tokens += tokens;
         self.prefill_chunks += 1;
         ring_push(&mut self.prefill_ns, self.prefill_chunks - 1, elapsed_ns);
+        self.chunks
+    }
+
+    /// Account one completed generation request: `prompt_tokens` ingested
+    /// through the prefill path, then `new_tokens` sampled by the
+    /// self-feeding loop. One sequence unit, like a prompt — returns the
+    /// stream's sequence number.
+    pub fn record_generate(&mut self, prompt_tokens: usize, new_tokens: usize) -> usize {
+        self.tokens += prompt_tokens + new_tokens;
+        self.chunks += 1;
+        self.prefill_tokens += prompt_tokens;
+        self.gen_tokens += new_tokens;
+        self.gen_chunks += 1;
         self.chunks
     }
 }
@@ -550,6 +569,38 @@ impl ShardBank {
         self.stats.entry(id).or_default().record_prefill(tokens, elapsed_ns)
     }
 
+    /// Account one completed generation request (prompt ingested +
+    /// completion sampled); returns the session's sequence number.
+    pub fn record_generate(&mut self, id: u64, prompt_tokens: usize, new_tokens: usize) -> usize {
+        self.stats.entry(id).or_default().record_generate(prompt_tokens, new_tokens)
+    }
+
+    /// Run `f` against the resident [`LmModel`] of session `id` — the
+    /// token-level access path of the generation engine. Admission,
+    /// restore and the LRU clock behave exactly as for
+    /// [`ShardBank::process`], so a generating session LRU-evicted
+    /// between scheduling rounds thaws transparently (generation state
+    /// rides inside the `"lm"` snapshot frame) and keeps sampling the
+    /// same stream. Errors if the session's machine is not an LM — the
+    /// engine was not started in LM mode — costing that request, not the
+    /// shard.
+    pub fn with_lm<R>(
+        &mut self,
+        id: u64,
+        f: impl FnOnce(&mut LmModel, &mut Scratch) -> R,
+    ) -> Result<R> {
+        let slot = self.ensure_resident(id)?;
+        self.clock += 1;
+        self.resident[slot].last_used = self.clock;
+        let resident = &mut self.resident[slot];
+        let lm = resident
+            .mixers
+            .first_mut()
+            .and_then(|m| m.as_lm_mut())
+            .ok_or_else(|| anyhow::anyhow!("session {id} is not a language-model session"))?;
+        Ok(f(lm, &mut self.scratch))
+    }
+
     /// Make `id` resident (create / restore), evicting LRU sessions if the
     /// cap would be exceeded. Returns the resident slot index.
     fn ensure_resident(&mut self, id: u64) -> Result<usize> {
@@ -973,6 +1024,58 @@ mod tests {
         assert_eq!(out2.len(), 4 * 8);
         assert_eq!(seq2, 2);
         assert_eq!(shard.restores, 1);
+    }
+
+    #[test]
+    fn shard_with_lm_freezes_and_thaws_generation_state() {
+        // the generation engine's access path: an LM session reached
+        // through with_lm, explicitly evicted mid-generation, must thaw
+        // with history ring, RNG stream and token counts intact
+        use crate::ovqcore::lm::{LmConfig, LmModel};
+        use crate::ovqcore::memstate::MixerKind;
+        use crate::ovqcore::stack::StackConfig;
+        let cfg = LmConfig::new(
+            24,
+            StackConfig::hybrid(8, 16, 2, 4, 8, vec![MixerKind::Ovq { n_max: 16 }]),
+        );
+        let mut shard = ShardBank::new(1, 4, move |id, _| {
+            Box::new(LmModel::new(cfg.clone(), id)) as Box<dyn SeqMixer>
+        });
+        let mut logits = vec![0.0f32; 24];
+        shard
+            .with_lm(5, |lm, scratch| {
+                lm.prefill_tokens(&[1, 2, 3, 4, 5], &mut logits, scratch);
+                lm.begin_gen(0xAB, 8);
+                lm.gen_mut().unwrap().push(7);
+            })
+            .unwrap();
+        let draw_before = shard.with_lm(5, |lm, _| lm.gen_mut().unwrap().rng.next_u64()).unwrap();
+        shard.evict(5);
+        assert_eq!(shard.evictions, 1);
+        let (recent, produced, draw_after) = shard
+            .with_lm(5, |lm, _| {
+                let g = lm.gen_mut().unwrap();
+                (g.recent().to_vec(), g.produced, g.rng.next_u64())
+            })
+            .unwrap();
+        assert_eq!(shard.restores, 1);
+        assert_eq!(recent, vec![7]);
+        assert_eq!(produced, 1);
+        assert_ne!(draw_before, draw_after, "rng must continue, not restart");
+        let seq = shard.record_generate(5, 5, 1);
+        assert_eq!(seq, 1);
+        let st = shard.session_stats(5).unwrap();
+        assert_eq!(st.tokens, 6);
+        assert_eq!(st.prefill_tokens, 5);
+        assert_eq!(st.gen_tokens, 1);
+        assert_eq!(st.gen_chunks, 1);
+    }
+
+    #[test]
+    fn with_lm_on_a_plain_mixer_session_errs_cleanly() {
+        let mut shard = ovq_shard(1, 8, 32, 16, 4);
+        let err = shard.with_lm(9, |_, _| ()).unwrap_err();
+        assert!(format!("{err}").contains("not a language-model"), "{err}");
     }
 
     #[test]

@@ -29,7 +29,15 @@ impl GdnState {
 
     /// Rebuild from a [`snapshot::save`] payload.
     pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<GdnState> {
-        let mut st = GdnState::new(r.usize()?);
+        let d = r.usize()?;
+        // bound d BEFORE GdnState::new allocates the [d, d] state — a
+        // corrupt blob must err cleanly, never overflow d * d or demand
+        // a wild allocation (snapshot's no-panics-on-untrusted-bytes)
+        anyhow::ensure!(
+            d > 0 && d <= (1 << 12),
+            "gdn snapshot claims an implausible width (d={d})"
+        );
+        let mut st = GdnState::new(d);
         st.t = r.usize()?;
         st.alpha = r.f32()?;
         st.beta = r.f32()?;

@@ -218,6 +218,48 @@ pub fn nearest_rows(
     }
 }
 
+/// Index of the maximum element, first occurrence winning ties — the
+/// greedy-sampling hot path (one pass, no allocation). Returns 0 for an
+/// empty slice and for all-NEG_INFINITY input (callers treat token 0 as
+/// the degenerate fallback, matching [`crate::util::rng::Rng::categorical`]
+/// on zero mass).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Value of the k-th largest element (k >= 1) via partial selection: a
+/// sorted descending keep-buffer of at most k entries, each candidate
+/// admitted by binary search — O(n log k) comparisons and O(k) state, so
+/// the top-k sampling mask never sorts the whole vocab. `keep` is a
+/// caller-owned scratch reused across calls. Returns NEG_INFINITY when
+/// k == 0 or k >= len (nothing would be masked); ties at the threshold
+/// are resolved by the caller keeping everything >= the returned value.
+pub fn top_k_threshold(xs: &[f32], k: usize, keep: &mut Vec<f32>) -> f32 {
+    if k == 0 || k >= xs.len() {
+        return f32::NEG_INFINITY;
+    }
+    keep.clear();
+    for &x in xs {
+        if keep.len() < k {
+            let pos = keep.partition_point(|&y| y > x);
+            keep.insert(pos, x);
+        } else if x > keep[k - 1] {
+            let pos = keep.partition_point(|&y| y > x);
+            keep.insert(pos, x);
+            keep.pop();
+        }
+    }
+    keep[k - 1]
+}
+
 /// Streaming-softmax combine over a logit slice and its value rows:
 /// `out += sum_s exp(logits[s] - m) * values[s]`, returning the partial
 /// normalizer. `NEG_INFINITY` logits are skipped. Weights are materialized
@@ -366,6 +408,56 @@ mod tests {
         nearest_rows(&dict, 8, 4, &keys, 1, &mut idx, &mut sim);
         assert_eq!(idx[0], 99);
         assert_eq!(sim[0], 1e9);
+    }
+
+    #[test]
+    fn argmax_matches_naive_and_breaks_ties_low() {
+        let mut rng = Rng::new(5);
+        for n in [1usize, 2, 7, 64, 257] {
+            let xs = randv(&mut rng, n);
+            let got = argmax(&xs);
+            let naive = xs
+                .iter()
+                .enumerate()
+                .fold((0usize, f32::NEG_INFINITY), |(bi, bv), (i, &x)| {
+                    if x > bv {
+                        (i, x)
+                    } else {
+                        (bi, bv)
+                    }
+                })
+                .0;
+            assert_eq!(got, naive, "n={n}");
+        }
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY; 4]), 0);
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1, "first max wins ties");
+    }
+
+    #[test]
+    fn top_k_threshold_matches_full_sort() {
+        let mut rng = Rng::new(6);
+        let mut keep = Vec::new();
+        for n in [1usize, 5, 64, 300] {
+            let xs = randv(&mut rng, n);
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for k in [0usize, 1, 2, n / 2, n.saturating_sub(1), n, n + 5] {
+                let got = top_k_threshold(&xs, k, &mut keep);
+                if k == 0 || k >= n {
+                    assert_eq!(got, f32::NEG_INFINITY, "n={n} k={k}: nothing to mask");
+                } else {
+                    assert_eq!(got.to_bits(), sorted[k - 1].to_bits(), "n={n} k={k}");
+                    // masking below the threshold keeps at least k entries
+                    let kept = xs.iter().filter(|&&x| x >= got).count();
+                    assert!(kept >= k, "n={n} k={k}: kept {kept}");
+                }
+            }
+        }
+        // duplicates land on the duplicated value
+        let xs = [2.0f32, 5.0, 5.0, 1.0, 5.0];
+        assert_eq!(top_k_threshold(&xs, 2, &mut keep), 5.0);
+        assert_eq!(top_k_threshold(&xs, 4, &mut keep), 2.0);
     }
 
     #[test]

@@ -36,7 +36,11 @@ impl KvCache {
     /// Rebuild from a [`snapshot::save`] payload (full or windowed — the
     /// window is part of the blob).
     pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<KvCache> {
-        let mut c = KvCache::new(r.usize()?);
+        let d = r.usize()?;
+        // d = 0 from a corrupt blob would divide-by-zero the shape checks
+        // below (snapshot's no-panics-on-untrusted-bytes contract)
+        anyhow::ensure!(d > 0, "kv_cache snapshot claims zero width");
+        let mut c = KvCache::new(d);
         c.beta = r.f32()?;
         c.window = r.opt_usize()?;
         c.t = r.usize()?;

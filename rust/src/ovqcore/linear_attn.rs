@@ -35,7 +35,15 @@ impl LinearAttnState {
 
     /// Rebuild from a [`snapshot::save`] payload.
     pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<LinearAttnState> {
-        let mut st = LinearAttnState::new(r.usize()?, r.usize()?);
+        let (dk, dv) = (r.usize()?, r.usize()?);
+        // bound the dims BEFORE the [dk, dv] state allocation — a corrupt
+        // blob must err cleanly, never overflow dk * dv or demand a wild
+        // allocation (snapshot's no-panics-on-untrusted-bytes contract)
+        anyhow::ensure!(
+            dk > 0 && dk <= (1 << 12) && dv > 0 && dv <= (1 << 12),
+            "linear_attn snapshot claims an implausible shape (dk={dk} dv={dv})"
+        );
+        let mut st = LinearAttnState::new(dk, dv);
         st.t = r.usize()?;
         st.s = r.f32s()?;
         st.z = r.f32s()?;

@@ -1,0 +1,572 @@
+//! The language model over a [`LayerStack`] — the piece that closes the
+//! generation loop. [`LmModel`] wraps a token-embedding table, a full
+//! multi-layer stack, and a **tied** unembedding (logits = E·h, the same
+//! matrix both ways), exposing the two calls a generation engine needs:
+//!
+//! - [`LmModel::prefill_tokens`]: ingest a prompt slice through the
+//!   blocked stack prefill and return the logits of its last position;
+//! - [`LmModel::step_token`]: absorb one (sampled) token and return the
+//!   next-token logits — the self-feeding decode step.
+//!
+//! Contracts, inherited from the stack and load-bearing for the engine:
+//!
+//! - **Weights are f(seed).** The embedding table follows the stack's
+//!   weights-are-deterministic-in-the-init-seed rule ([`init_matrix`]),
+//!   so snapshots store config + seed only and an evicted session's blob
+//!   stays proportional to its *dynamic* state.
+//! - **Chunked prefill ≡ token-at-a-time steps, bitwise.** Both paths
+//!   run the same stack ops ([`SeqMixer::process_prefill`] is golden-
+//!   tested bit-identical to the serial token loop) and the same tied
+//!   unembedding matvec, so the final logits cannot depend on how the
+//!   prompt was delivered — rust/tests/golden.rs pins this.
+//! - **Generation state snapshots with the model.** [`GenCore`] — the
+//!   repetition-penalty history ring, the sampling RNG mid-stream, and
+//!   the produced-token count — is part of the `"lm"` snapshot payload,
+//!   so a session LRU-evicted *mid-generation* thaws and keeps sampling
+//!   the exact same token stream (rust/tests/engine.rs pins this too).
+//!
+//! `LmModel` implements [`SeqMixer`] (kind `"lm"`, delegating the f32
+//! row interface to the inner stack), so ShardBank admission, LRU
+//! eviction, restore, and per-layer telemetry all serve LM sessions
+//! unchanged; the token-level API is reached through
+//! [`SeqMixer::as_lm_mut`].
+
+use anyhow::{bail, Context, Result};
+
+use super::kernels;
+use super::mixer::{LayerStat, Scratch, SeqMixer};
+use super::snapshot;
+use super::stack::{init_matrix, mixer_seed, LayerStack, StackConfig};
+use crate::util::rng::Rng;
+
+/// Vocabulary token id. u32 everywhere: prompts, histories, outputs.
+pub type TokenId = u32;
+
+/// Shape of an [`LmModel`]: a vocabulary over a full model stack.
+#[derive(Debug, Clone)]
+pub struct LmConfig {
+    pub vocab: usize,
+    pub stack: StackConfig,
+}
+
+impl LmConfig {
+    pub fn new(vocab: usize, stack: StackConfig) -> LmConfig {
+        LmConfig { vocab, stack }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.stack.validate()?;
+        if self.vocab < 2 {
+            bail!("an LM needs a vocabulary of at least 2 tokens (got {})", self.vocab);
+        }
+        // far above any servable per-session table (sessions own their
+        // weights in this design), while bounding what a corrupt-but-
+        // in-bounds snapshot can make a restore allocate
+        if self.vocab.saturating_mul(self.stack.d_model) > (1 << 24) {
+            bail!(
+                "embedding table {} x {} exceeds the 2^24-element cap",
+                self.vocab,
+                self.stack.d_model
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-session generation state: the sampling RNG mid-stream, the
+/// repetition-penalty history ring, and the produced-token count. Lives
+/// inside the model (not the scheduler) precisely so it rides the `"lm"`
+/// snapshot frame through eviction — sampler *parameters* (temperature,
+/// top-k, ...) are request config and stay with the engine job.
+#[derive(Debug, Clone)]
+pub struct GenCore {
+    pub rng: Rng,
+    /// unordered recent-token ring, capacity `cap` (0 disables history)
+    history: Vec<TokenId>,
+    /// next overwrite position once the ring is full
+    head: usize,
+    cap: usize,
+    /// tokens sampled so far in this generation
+    pub produced: usize,
+}
+
+impl GenCore {
+    pub fn new(seed: u64, history_cap: usize) -> GenCore {
+        GenCore { rng: Rng::new(seed), history: Vec::new(), head: 0, cap: history_cap, produced: 0 }
+    }
+
+    /// Record one sampled token into the ring and the produced count.
+    pub fn push(&mut self, tok: TokenId) {
+        self.produced += 1;
+        if self.cap == 0 {
+            return;
+        }
+        if self.history.len() < self.cap {
+            self.history.push(tok);
+        } else {
+            self.history[self.head] = tok;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// The retained recent tokens (unordered — the repetition penalty is
+    /// order-blind).
+    pub fn recent(&self) -> &[TokenId] {
+        &self.history
+    }
+
+    /// Borrow the history and the RNG at once — the shape the sampler
+    /// needs (`next_token(history, logits, rng)`) without fighting the
+    /// borrow checker over one struct.
+    pub fn split(&mut self) -> (&[TokenId], &mut Rng) {
+        (&self.history, &mut self.rng)
+    }
+
+    fn state_bytes(&self) -> usize {
+        32 + self.history.len() * 4 + 3 * 8
+    }
+
+    fn save(&self, w: &mut snapshot::Writer) {
+        for word in self.rng.state() {
+            w.u64(word);
+        }
+        w.usize(self.cap);
+        w.usize(self.head);
+        w.usize(self.produced);
+        w.usize(self.history.len());
+        for &t in &self.history {
+            w.u32(t);
+        }
+    }
+
+    fn load(r: &mut snapshot::Reader<'_>) -> Result<GenCore> {
+        let mut state = [0u64; 4];
+        for word in &mut state {
+            *word = r.u64()?;
+        }
+        let cap = r.usize()?;
+        let head = r.usize()?;
+        let produced = r.usize()?;
+        let hlen = r.usize()?;
+        anyhow::ensure!(
+            cap <= (1 << 20) && hlen <= cap && (head == 0 || head < cap),
+            "lm snapshot has an implausible generation ring (cap={cap} len={hlen} head={head})"
+        );
+        let mut history = Vec::with_capacity(hlen);
+        for _ in 0..hlen {
+            history.push(r.u32()?);
+        }
+        Ok(GenCore { rng: Rng::from_state(state), history, head, cap, produced })
+    }
+}
+
+/// A token-in, logits-out language model: embedding table + [`LayerStack`]
+/// + tied unembedding, plus the optional in-flight [`GenCore`].
+pub struct LmModel {
+    cfg: LmConfig,
+    init_seed: u64,
+    /// `[vocab, d_model]` row-major — used for both embed and unembed
+    embed: Vec<f32>,
+    stack: LayerStack,
+    gen: Option<GenCore>,
+    /// prompt-slice activation staging, `[len, d_model]` (workspace, not
+    /// state — grown on first use, never serialized)
+    ws_x: Vec<f32>,
+    ws_out: Vec<f32>,
+    /// single-token stack output row, `[d_model]`
+    ws_row: Vec<f32>,
+}
+
+/// Embedding-table seed: derived through [`mixer_seed`] at a layer index
+/// no real stack can occupy (layers are capped at 4096), so it never
+/// collides with a per-(layer, head) mixer or weight seed.
+fn embed_seed(init_seed: u64) -> u64 {
+    mixer_seed(init_seed, 1 << 20, 0)
+}
+
+fn grow(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
+
+impl LmModel {
+    /// Build with deterministic seeded weights (embedding and stack).
+    /// Panics on an invalid config — validate with [`LmConfig::validate`]
+    /// first when the shape comes from user input.
+    pub fn new(cfg: LmConfig, init_seed: u64) -> LmModel {
+        cfg.validate().expect("invalid lm config");
+        let d = cfg.stack.d_model;
+        let embed = init_matrix(embed_seed(init_seed), cfg.vocab, d);
+        let stack = LayerStack::new(cfg.stack.clone(), init_seed);
+        LmModel {
+            cfg,
+            init_seed,
+            embed,
+            stack,
+            gen: None,
+            ws_x: Vec::new(),
+            ws_out: Vec::new(),
+            ws_row: Vec::new(),
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.cfg.stack.d_model
+    }
+
+    pub fn cfg(&self) -> &LmConfig {
+        &self.cfg
+    }
+
+    /// Weight bytes (embedding + stack) — model cost, not session state.
+    pub fn param_bytes(&self) -> usize {
+        self.embed.len() * 4 + self.stack.param_bytes()
+    }
+
+    /// Start a generation: fresh sampling RNG and history ring. Called by
+    /// the engine exactly once per generate request, after the prompt is
+    /// fully ingested (restores must NOT re-begin — the thawed core is
+    /// the mid-stream one). The ring cap is clamped to the
+    /// snapshot-restore bound so a live core can always freeze and thaw.
+    pub fn begin_gen(&mut self, seed: u64, history_cap: usize) {
+        self.gen = Some(GenCore::new(seed, history_cap.min(1 << 20)));
+    }
+
+    /// Drop the generation state (request complete) so the session's
+    /// state bytes and snapshot blob shrink back to the mixer state.
+    pub fn end_gen(&mut self) {
+        self.gen = None;
+    }
+
+    pub fn gen(&self) -> Option<&GenCore> {
+        self.gen.as_ref()
+    }
+
+    pub fn gen_mut(&mut self) -> Option<&mut GenCore> {
+        self.gen.as_mut()
+    }
+
+    /// Ingest a prompt slice through the blocked stack prefill and write
+    /// the logits of its LAST position into `logits` (`[vocab]`). Slicing
+    /// is invisible: any quantum split of the same prompt yields the same
+    /// final logits, bit for bit. `toks` must be non-empty.
+    pub fn prefill_tokens(&mut self, toks: &[TokenId], logits: &mut [f32], scratch: &mut Scratch) {
+        assert!(!toks.is_empty(), "prefill_tokens needs at least one token");
+        let LmModel { cfg, embed, stack, ws_x, ws_out, .. } = self;
+        let d = cfg.stack.d_model;
+        let len = toks.len();
+        let x = grow(ws_x, len * d);
+        for (i, &t) in toks.iter().enumerate() {
+            // sampled/prompt tokens are always < vocab; clamp rather than
+            // panic so a corrupt replay degrades deterministically
+            let t = (t as usize).min(cfg.vocab - 1);
+            x[i * d..(i + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+        }
+        let out = grow(ws_out, len * d);
+        let x = &ws_x[..len * d];
+        stack.process_prefill(x, x, x, out, scratch);
+        kernels::matvec(embed, cfg.vocab, d, &ws_out[(len - 1) * d..len * d], logits);
+    }
+
+    /// Absorb one token (write-then-read through the stack) and write the
+    /// next-token logits into `logits` (`[vocab]`).
+    pub fn step_token(&mut self, tok: TokenId, logits: &mut [f32], scratch: &mut Scratch) {
+        let LmModel { cfg, embed, stack, ws_row, .. } = self;
+        let d = cfg.stack.d_model;
+        let t = (tok as usize).min(cfg.vocab - 1);
+        let row = &embed[t * d..(t + 1) * d];
+        stack.write(row, row);
+        let out = grow(ws_row, d);
+        stack.read(row, out, scratch);
+        kernels::matvec(embed, cfg.vocab, d, &ws_row[..d], logits);
+    }
+
+    /// Rebuild from a [`snapshot::save`] payload: config + seed are read
+    /// back, the embedding is regenerated from the seed, the stack thaws
+    /// from its nested container frame, and any in-flight [`GenCore`]
+    /// (RNG mid-stream, history ring, produced count) comes back exactly.
+    pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<LmModel> {
+        let vocab = r.usize()?;
+        let init_seed = r.u64()?;
+        let gen = if r.bool()? { Some(GenCore::load(r)?) } else { None };
+        let child = r.bytes()?;
+        let kind = snapshot::peek_kind(child).context("lm stack frame")?;
+        anyhow::ensure!(kind == "stack", "lm snapshot nests a {kind:?} frame, expected a stack");
+        // strip the validated frame header, then thaw the concrete stack
+        let mut rr = snapshot::Reader::new(child);
+        let _ = rr.u32()?; // magic (checked by peek_kind)
+        let _ = rr.u16()?; // version
+        let _ = rr.str()?; // kind
+        let stack = LayerStack::from_snapshot(&mut rr).context("lm stack frame")?;
+        anyhow::ensure!(
+            rr.remaining() == 0,
+            "lm stack frame has {} trailing bytes",
+            rr.remaining()
+        );
+        let cfg = LmConfig::new(vocab, stack.cfg().clone());
+        // the embedding bound BEFORE the table is regenerated — a corrupt
+        // vocab must err cleanly, never demand a wild allocation
+        cfg.validate()?;
+        let embed = init_matrix(embed_seed(init_seed), vocab, cfg.stack.d_model);
+        Ok(LmModel {
+            cfg,
+            init_seed,
+            embed,
+            stack,
+            gen,
+            ws_x: Vec::new(),
+            ws_out: Vec::new(),
+            ws_row: Vec::new(),
+        })
+    }
+}
+
+impl SeqMixer for LmModel {
+    fn kind_name(&self) -> &'static str {
+        "lm"
+    }
+
+    fn d_in(&self) -> usize {
+        self.stack.d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.stack.d_out()
+    }
+
+    fn tokens(&self) -> usize {
+        self.stack.tokens()
+    }
+
+    /// Dynamic state only: the stack's mixer state plus the in-flight
+    /// generation core. The embedding is f(seed) — model cost
+    /// ([`LmModel::param_bytes`]), not session state.
+    fn state_bytes(&self) -> usize {
+        self.stack.state_bytes() + self.gen.as_ref().map_or(0, |g| g.state_bytes())
+    }
+
+    fn update_bytes_per_chunk(&self, l: usize) -> usize {
+        self.stack.update_bytes_per_chunk(l)
+    }
+
+    fn write(&mut self, k: &[f32], v: &[f32]) {
+        self.stack.write(k, v);
+    }
+
+    fn read(&self, q: &[f32], out: &mut [f32], scratch: &mut Scratch) {
+        self.stack.read(q, out, scratch);
+    }
+
+    fn process_chunk(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        self.stack.process_chunk(queries, keys, values, out, scratch);
+    }
+
+    fn process_prefill(
+        &mut self,
+        queries: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        self.stack.process_prefill(queries, keys, values, out, scratch);
+    }
+
+    fn flush(&mut self) {
+        self.stack.flush();
+    }
+
+    fn snapshot(&self, w: &mut snapshot::Writer) {
+        w.usize(self.cfg.vocab);
+        w.u64(self.init_seed);
+        match &self.gen {
+            Some(g) => {
+                w.bool(true);
+                g.save(w);
+            }
+            None => w.bool(false),
+        }
+        w.bytes(&snapshot::save(&self.stack));
+    }
+
+    fn layer_stats(&self) -> Vec<LayerStat> {
+        self.stack.layer_stats()
+    }
+
+    fn as_lm_mut(&mut self) -> Option<&mut LmModel> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ovqcore::memstate::MixerKind;
+
+    fn small_cfg() -> LmConfig {
+        LmConfig::new(
+            24,
+            StackConfig::hybrid(
+                8,
+                16,
+                2,
+                4,
+                8,
+                vec![MixerKind::Ovq { n_max: 16 }, MixerKind::SlidingWindow { window: 12 }],
+            ),
+        )
+    }
+
+    fn toks(seed: u64, n: usize, vocab: usize) -> Vec<TokenId> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.below(vocab as u64) as TokenId).collect()
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(small_cfg().validate().is_ok());
+        let mut c = small_cfg();
+        c.vocab = 1;
+        assert!(c.validate().is_err(), "vocab of 1 cannot be sampled");
+        let mut c = small_cfg();
+        c.vocab = 1 << 30;
+        assert!(c.validate().is_err(), "embedding cap");
+    }
+
+    #[test]
+    fn logits_are_seed_deterministic() {
+        let prompt = toks(1, 13, 24);
+        let mut logits_a = vec![0.0f32; 24];
+        let mut logits_b = vec![0.0f32; 24];
+        let mut logits_c = vec![0.0f32; 24];
+        let mut scratch = Scratch::new();
+        LmModel::new(small_cfg(), 7).prefill_tokens(&prompt, &mut logits_a, &mut scratch);
+        LmModel::new(small_cfg(), 7).prefill_tokens(&prompt, &mut logits_b, &mut scratch);
+        LmModel::new(small_cfg(), 8).prefill_tokens(&prompt, &mut logits_c, &mut scratch);
+        assert_eq!(logits_a, logits_b, "same seed must reproduce the same model");
+        assert_ne!(logits_a, logits_c, "different seeds must differ");
+        assert!(logits_a.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn chunked_prefill_equals_token_steps_bitwise() {
+        // the golden generation contract (c): the same prompt through
+        // (a) one prefill call, (b) misaligned quantum slices, and
+        // (c) token-at-a-time step_token must yield the same final
+        // logits, bit for bit
+        let prompt = toks(2, 29, 24); // crosses chunk boundaries (chunk=8)
+        let vocab = 24;
+        let mut scratch = Scratch::new();
+
+        let mut whole = LmModel::new(small_cfg(), 3);
+        let mut l_whole = vec![0.0f32; vocab];
+        whole.prefill_tokens(&prompt, &mut l_whole, &mut scratch);
+
+        let mut sliced = LmModel::new(small_cfg(), 3);
+        let mut l_sliced = vec![0.0f32; vocab];
+        let mut i = 0;
+        while i < prompt.len() {
+            let len = 5.min(prompt.len() - i); // 5 is coprime to chunk=8
+            sliced.prefill_tokens(&prompt[i..i + len], &mut l_sliced, &mut scratch);
+            i += len;
+        }
+
+        let mut stepped = LmModel::new(small_cfg(), 3);
+        let mut l_step = vec![0.0f32; vocab];
+        for &t in &prompt {
+            stepped.step_token(t, &mut l_step, &mut scratch);
+        }
+
+        for i in 0..vocab {
+            assert_eq!(l_whole[i].to_bits(), l_sliced[i].to_bits(), "sliced diverged at {i}");
+            assert_eq!(l_whole[i].to_bits(), l_step[i].to_bits(), "stepped diverged at {i}");
+        }
+        assert_eq!(whole.tokens(), prompt.len());
+        assert_eq!(stepped.tokens(), prompt.len());
+    }
+
+    #[test]
+    fn gen_core_ring_wraps_and_counts() {
+        let mut g = GenCore::new(1, 3);
+        for t in 0..5u32 {
+            g.push(t);
+        }
+        assert_eq!(g.produced, 5);
+        let mut recent: Vec<u32> = g.recent().to_vec();
+        recent.sort_unstable();
+        assert_eq!(recent, vec![2, 3, 4], "ring keeps the 3 most recent");
+        // cap 0 disables history but still counts
+        let mut g0 = GenCore::new(1, 0);
+        g0.push(9);
+        assert_eq!(g0.produced, 1);
+        assert!(g0.recent().is_empty());
+    }
+
+    #[test]
+    fn snapshot_round_trips_mid_generation_bit_exactly() {
+        // freeze a model mid-generation — prompt ingested, RNG advanced,
+        // history ring partially wrapped — and thaw: the refreeze must be
+        // byte-equal and the continued stream (logits AND rng draws) must
+        // match the uninterrupted run exactly
+        let vocab = 24;
+        let mut scratch = Scratch::new();
+        let mut m = LmModel::new(small_cfg(), 5);
+        let mut logits = vec![0.0f32; vocab];
+        m.prefill_tokens(&toks(4, 11, vocab), &mut logits, &mut scratch);
+        m.begin_gen(0xFACE, 4);
+        for t in [3u32, 7, 7, 1, 9] {
+            m.gen_mut().unwrap().push(t);
+        }
+        let _ = m.gen_mut().unwrap().rng.next_u64(); // rng mid-stream
+
+        let blob = snapshot::save(&m);
+        let mut thawed = snapshot::restore(&blob).expect("lm blob must thaw");
+        assert_eq!(thawed.kind_name(), "lm");
+        assert_eq!(thawed.tokens(), m.tokens());
+        assert_eq!(thawed.state_bytes(), m.state_bytes());
+        assert_eq!(snapshot::save(thawed.as_ref()), blob, "lm refreeze differs");
+
+        let t = thawed.as_lm_mut().expect("lm downcast");
+        assert_eq!(t.gen().unwrap().produced, 5);
+        assert_eq!(t.gen().unwrap().recent(), m.gen().unwrap().recent());
+        // continued sampling stream is identical
+        for _ in 0..8 {
+            assert_eq!(
+                t.gen_mut().unwrap().rng.next_u64(),
+                m.gen_mut().unwrap().rng.next_u64(),
+                "thawed rng diverged"
+            );
+        }
+        // continued decode is identical
+        let mut la = vec![0.0f32; vocab];
+        let mut lb = vec![0.0f32; vocab];
+        m.step_token(3, &mut la, &mut scratch);
+        t.step_token(3, &mut lb, &mut scratch);
+        assert_eq!(la, lb, "thawed model diverged on the next step");
+
+        // end_gen drops the sampler state from blob and accounting
+        m.end_gen();
+        assert!(m.gen().is_none());
+        let lean = snapshot::save(&m);
+        assert!(lean.len() < blob.len());
+    }
+
+    #[test]
+    fn non_lm_mixers_do_not_downcast() {
+        let mut plain = MixerKind::Gdn.build(4, 8, 1);
+        assert!(plain.as_lm_mut().is_none());
+    }
+}

@@ -218,6 +218,16 @@ pub trait SeqMixer: Send {
     /// implementations only write their payload here.
     fn snapshot(&self, w: &mut super::snapshot::Writer);
 
+    /// Token-level access for language-model sessions: [`super::lm::LmModel`]
+    /// overrides with `Some(self)`, everything else stays `None`. The
+    /// generation engine serves LM sessions through the same banks and
+    /// snapshot machinery as every other mixer and reaches the
+    /// prefill-tokens / step-token / sampler-state API through this hook
+    /// (the one concession to the trait being f32-row-shaped).
+    fn as_lm_mut(&mut self) -> Option<&mut super::lm::LmModel> {
+        None
+    }
+
     /// Per-layer telemetry split. A plain mixer is its own single layer;
     /// multi-layer composites ([`super::stack::LayerStack`]) override with
     /// one row per layer so serving reports can show where state and busy

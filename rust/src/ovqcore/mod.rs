@@ -14,7 +14,10 @@
 //! [`mixer::SeqMixer`] trait and runs its hot loops through the blocked
 //! [`kernels`]; [`stack::LayerStack`] composes the machines into full
 //! multi-layer model stacks (norms, q/k/v/output projections, gated MLP,
-//! residuals) that are themselves `SeqMixer`s; [`snapshot`] freezes/thaws
+//! residuals) that are themselves `SeqMixer`s; [`lm::LmModel`] puts a
+//! token embedding + tied unembedding around a stack, turning it into a
+//! token-in/logits-out language model with in-snapshot generation state
+//! (the autoregressive serving unit); [`snapshot`] freezes/thaws
 //! any mixer — stacks included, via nested container frames — to a
 //! bit-exact binary blob (the session-lifecycle persistence layer);
 //! [`bank::MixerBank`] scales the trait to H heads x S concurrent decode
@@ -29,6 +32,7 @@ pub mod gdn;
 pub mod kernels;
 pub mod kvcache;
 pub mod linear_attn;
+pub mod lm;
 pub mod memstate;
 pub mod mixer;
 pub mod ovq;

@@ -117,7 +117,16 @@ impl OvqState {
     /// [`SeqMixer::snapshot`]. The update scratch is transient (cleared at
     /// the top of every `update_chunk`) and is not part of the format.
     pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<OvqState> {
-        let mut cfg = OvqConfig::new(r.usize()?, r.usize()?, r.usize()?);
+        let (d, n_max, chunk) = (r.usize()?, r.usize()?, r.usize()?);
+        // bound the dims BEFORE construction: OvqState::new reserves
+        // chunk * d pending capacity, so a corrupt blob claiming 2^60
+        // must err here, not overflow or demand a wild allocation (the
+        // snapshot module's no-panics-on-untrusted-bytes contract)
+        anyhow::ensure!(
+            d > 0 && d <= (1 << 16) && chunk <= (1 << 20) && d.saturating_mul(chunk) <= (1 << 26),
+            "ovq snapshot claims an implausible shape (d={d} n_max={n_max} chunk={chunk})"
+        );
+        let mut cfg = OvqConfig::new(d, n_max, chunk);
         cfg.beta = r.f32()?;
         cfg.const_lr = r.opt_f32()?;
         cfg.linear_growth = r.bool()?;
@@ -133,12 +142,14 @@ impl OvqState {
         st.pending_len = r.usize()?;
         st.pending_k = r.f32s()?;
         st.pending_v = r.f32s()?;
+        // saturating: n_active/pending_len come from the blob, so the
+        // consistency check itself must not overflow in debug builds
         anyhow::ensure!(
-            st.dk.len() == st.n_active * st.cfg.d
-                && st.dv.len() == st.n_active * st.cfg.d
+            st.dk.len() == st.n_active.saturating_mul(st.cfg.d)
+                && st.dv.len() == st.n_active.saturating_mul(st.cfg.d)
                 && st.counts.len() == st.n_active
-                && st.pending_k.len() == st.pending_len * st.cfg.d
-                && st.pending_v.len() == st.pending_len * st.cfg.d,
+                && st.pending_k.len() == st.pending_len.saturating_mul(st.cfg.d)
+                && st.pending_v.len() == st.pending_len.saturating_mul(st.cfg.d),
             "ovq snapshot has inconsistent shapes"
         );
         Ok(st)

@@ -12,9 +12,10 @@
 //! back by its `from_snapshot` constructor; [`restore`] dispatches on the
 //! kind name, so a blob is self-describing — the reviver does not need to
 //! know what kind of session it is thawing. Container kinds nest: a
-//! `"stack"` blob holds one full child frame per (layer, head) mixer, so
-//! a whole multi-layer model session freezes into one self-describing
-//! byte string.
+//! `"stack"` blob holds one full child frame per (layer, head) mixer, and
+//! an `"lm"` blob holds generation state (sampling RNG, history ring)
+//! plus a nested stack frame — so a whole language-model session, mid-
+//! generation, freezes into one self-describing byte string.
 //!
 //! Failure model: nothing in this module panics on untrusted bytes. Every
 //! structural defect — truncation, bad magic, an unsupported version, an
@@ -29,6 +30,7 @@ use anyhow::{Context, Result};
 use super::gdn::GdnState;
 use super::kvcache::KvCache;
 use super::linear_attn::LinearAttnState;
+use super::lm::LmModel;
 use super::mixer::SeqMixer;
 use super::ovq::OvqState;
 use super::stack::LayerStack;
@@ -335,6 +337,7 @@ pub fn restore(bytes: &[u8]) -> Result<Box<dyn SeqMixer>> {
         "gdn" => Box::new(GdnState::from_snapshot(&mut r)?),
         "kv_cache" | "sliding_window" => Box::new(KvCache::from_snapshot(&mut r)?),
         "stack" => Box::new(LayerStack::from_snapshot(&mut r).context("stack container")?),
+        "lm" => Box::new(LmModel::from_snapshot(&mut r).context("lm container")?),
         other => return Err(SnapshotError::UnknownKind(other.to_string()).into()),
     };
     if r.remaining() != 0 {
@@ -487,6 +490,122 @@ mod tests {
         let n = bad.len();
         bad.truncate(n - 3);
         assert!(restore(&bad).is_err());
+    }
+
+    /// One populated blob per registered kind — every bare mixer
+    /// mid-pending-tail, a hybrid stack, and an LM session frozen
+    /// mid-generation — the corpus the fuzz tests mutate.
+    fn fuzz_corpus() -> Vec<(String, Vec<u8>)> {
+        use crate::ovqcore::lm::{LmConfig, LmModel};
+        use crate::ovqcore::stack::{LayerStack, StackConfig};
+        let (d, chunk) = (8usize, 16usize);
+        let mut rng = Rng::new(0xF022);
+        let mut blobs = Vec::new();
+        for kind in [
+            MixerKind::Ovq { n_max: 32 },
+            MixerKind::Vq { n: 16 },
+            MixerKind::LinearAttention,
+            MixerKind::Gdn,
+            MixerKind::FullAttention,
+            MixerKind::SlidingWindow { window: 24 },
+        ] {
+            let mut m = kind.build(d, chunk, 3);
+            for _ in 0..(chunk + 5) {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                m.write(&k, &v);
+            }
+            blobs.push((format!("{kind:?}"), save(m.as_ref())));
+        }
+        let scfg = StackConfig::hybrid(
+            8,
+            16,
+            2,
+            4,
+            8,
+            vec![MixerKind::Ovq { n_max: 16 }, MixerKind::SlidingWindow { window: 12 }],
+        );
+        let mut st = LayerStack::new(scfg.clone(), 0xFE);
+        let mut scratch = Scratch::new();
+        let x: Vec<f32> = (0..13 * 8).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; 13 * 8];
+        st.process_chunk(&x, &x, &x, &mut out, &mut scratch);
+        blobs.push(("stack".to_string(), save(&st)));
+        let mut lm = LmModel::new(LmConfig::new(24, scfg), 0xFE);
+        lm.prefill_tokens(&[1, 5, 9, 2, 17, 3, 3], &mut vec![0.0f32; 24], &mut scratch);
+        lm.begin_gen(0xD1CE, 4);
+        for t in [2u32, 19, 2] {
+            lm.gen_mut().unwrap().push(t);
+        }
+        blobs.push(("lm".to_string(), save(&lm)));
+        blobs
+    }
+
+    #[test]
+    fn fuzz_truncated_blobs_always_err_never_panic() {
+        // cut every corpus blob at random offsets (plus the all-prefix
+        // sweep near the header): restore must return a clean Err — the
+        // typed-SnapshotError / ensure! failure model — and never panic,
+        // whatever structure the cut lands inside (nested frames included)
+        let mut rng = Rng::new(0x7C);
+        for (name, blob) in fuzz_corpus() {
+            for cut in 0..blob.len().min(16) {
+                assert!(restore(&blob[..cut]).is_err(), "{name}: {cut}-byte prefix thawed");
+            }
+            for _ in 0..48 {
+                let cut = rng.usize_below(blob.len());
+                assert!(restore(&blob[..cut]).is_err(), "{name}: truncation at {cut} thawed");
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_bit_flips_never_panic() {
+        // flip random single bits in every corpus blob: a flip may yield
+        // a clean typed error (corrupt framing/lengths/dims) or a valid
+        // blob encoding a different state (a payload-f32 flip) — both are
+        // fine; what must NEVER happen is a panic, an arithmetic
+        // overflow, or a wild allocation. Running under the test harness
+        // is the panic assertion.
+        let mut rng = Rng::new(0xB17);
+        for (name, blob) in fuzz_corpus() {
+            for _ in 0..96 {
+                let mut bad = blob.clone();
+                let at = rng.usize_below(bad.len());
+                bad[at] ^= 1 << rng.usize_below(8);
+                match restore(&bad) {
+                    // a surviving blob must still be internally coherent
+                    Ok(m) => {
+                        let _ = m.state_bytes();
+                        let _ = m.tokens();
+                    }
+                    Err(e) => {
+                        let msg = format!("{e}");
+                        assert!(!msg.is_empty(), "{name}: empty error");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lm_blob_with_corrupt_generation_ring_errs_cleanly() {
+        // targeted (not random) corruption of the lm frame's generation
+        // fields: an implausible ring cap must surface as a typed error
+        use crate::ovqcore::lm::{LmConfig, LmModel};
+        use crate::ovqcore::stack::StackConfig;
+        let scfg = StackConfig::hybrid(8, 16, 2, 4, 8, vec![MixerKind::Gdn]);
+        let mut lm = LmModel::new(LmConfig::new(24, scfg), 1);
+        lm.begin_gen(9, 4);
+        let blob = save(&lm);
+        // payload layout after the frame header: vocab u64 | seed u64 |
+        // has_gen u8 | rng 4*u64 | cap u64 | ...  — poke the cap field
+        let header = 4 + 2 + 4 + "lm".len();
+        let cap_off = header + 8 + 8 + 1 + 32;
+        let mut bad = blob;
+        bad[cap_off..cap_off + 8].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        let e = restore(&bad).unwrap_err();
+        assert!(format!("{e}").contains("generation ring"), "{e}");
     }
 
     #[test]

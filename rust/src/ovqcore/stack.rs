@@ -166,6 +166,35 @@ impl StackConfig {
         } else if self.d_model == 0 || self.d_ff == 0 {
             bail!("full stack needs d_model/d_ff > 0 (got {}/{})", self.d_model, self.d_ff);
         }
+        // the same size bound `from_snapshot` enforces, applied at
+        // creation — a stack that validates here is guaranteed to restore
+        // from its own eviction blob (nothing constructible is
+        // un-thawable). 2^28 weight elements is a 1 GiB f32 model PER
+        // SESSION (sessions own their weights), far above servable.
+        let row = self
+            .heads
+            .saturating_mul(self.d_head)
+            .saturating_mul(4)
+            .saturating_add(self.d_ff.saturating_mul(3))
+            .saturating_add(2);
+        let weight_elems = self.d_model.saturating_mul(row).saturating_mul(self.layers);
+        if self.layers > 4096
+            || self.heads > 4096
+            || self.chunk > (1 << 20)
+            || (weight_elems as u64) > (1u64 << 28)
+        {
+            bail!(
+                "stack too large to serve: {} layers x {} heads, d_model={} d_ff={} \
+                 d_head={} chunk={} ({} weight elements exceeds the 2^28 cap)",
+                self.layers,
+                self.heads,
+                self.d_model,
+                self.d_ff,
+                self.d_head,
+                self.chunk,
+                weight_elems
+            );
+        }
         Ok(())
     }
 }
@@ -190,8 +219,10 @@ fn mix(mut z: u64) -> u64 {
 }
 
 /// `[rows, cols]` row-major init, normal(0, 1/cols) — the standard
-/// fan-in scaling, deterministic in the seed.
-fn init_matrix(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
+/// fan-in scaling, deterministic in the seed. Shared with the LM head
+/// ([`super::lm`]), whose embedding table follows the same
+/// weights-are-f(seed) contract.
+pub(crate) fn init_matrix(seed: u64, rows: usize, cols: usize) -> Vec<f32> {
     let mut rng = crate::util::rng::Rng::new(seed);
     let scale = 1.0 / (cols as f64).sqrt();
     (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect()
@@ -401,10 +432,12 @@ impl LayerStack {
         // corrupt blob claiming a 2^40-wide model must surface as a clean
         // error, never an arithmetic overflow or a wild allocation (the
         // snapshot module's no-panics-on-untrusted-bytes contract). The
-        // cap is deliberately far above any servable stack (2^33 weight
-        // elements) so everything `save` can produce restores; it exists
-        // to keep the index arithmetic overflow-free. Saturating math:
-        // the bound check itself must not overflow either.
+        // cap is deliberately far above any servable stack (2^28 weight
+        // elements, a 1 GiB f32 model) so everything `save` can produce
+        // restores, while keeping the worst allocation a corrupt-but-
+        // in-bounds blob can demand survivable (the snapshot fuzz tests
+        // flip random bits in real blobs). Saturating math: the bound
+        // check itself must not overflow either.
         let row = heads
             .saturating_mul(d_head)
             .saturating_mul(4)
@@ -415,7 +448,7 @@ impl LayerStack {
             layers <= 4096
                 && heads <= 4096
                 && chunk <= (1 << 20)
-                && (weight_elems as u64) <= (1u64 << 33),
+                && (weight_elems as u64) <= (1u64 << 28),
             "stack snapshot claims an implausible shape ({layers} layers x {heads} heads, \
              d_model={d_model} d_ff={d_ff} d_head={d_head} chunk={chunk})"
         );
@@ -840,6 +873,10 @@ mod tests {
         let mut c = StackConfig::bare(MixerKind::Gdn, 2, 4, 8);
         c.d_model = 5;
         assert!(c.validate().is_err(), "identity needs heads*d_head == d_model");
+        // the restore-side size cap is enforced at creation too, so every
+        // stack that builds is guaranteed to thaw from its eviction blob
+        let c = StackConfig::uniform(64, 4096, 16384, 8, 128, 32, MixerKind::Gdn);
+        assert!(c.validate().is_err(), "oversized stacks must be rejected up front");
     }
 
     #[test]

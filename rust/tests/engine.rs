@@ -7,8 +7,10 @@ use std::collections::HashMap;
 
 use ovq::analysis::memory;
 use ovq::coordinator::engine::{session_seed, DecodeEngine, EngineConfig, EngineOut};
+use ovq::coordinator::sampler::{SamplingParams, StopCriteria};
 use ovq::coordinator::traffic::{self, TrafficConfig};
 use ovq::ovqcore::bank::{DecodeChunk, MixerBank, ShardBank};
+use ovq::ovqcore::lm::LmConfig;
 use ovq::ovqcore::memstate::{MixerGeom, MixerKind};
 use ovq::ovqcore::mixer::{Scratch, SeqMixer};
 use ovq::ovqcore::stack::{LayerStack, StackConfig};
@@ -564,6 +566,184 @@ fn hybrid_stack_64k_prefill_with_churn_is_thread_invariant_and_accounted() {
         "live stack state must match the analytic accounting exactly"
     );
     assert!(analytic > 0);
+}
+
+// ------------------------------------------------------------- generation
+
+/// The LM every generation test serves: a 2-layer hybrid (OVQ + windowed
+/// exact attention) over a small vocabulary, with dims tiny enough that
+/// self-feeding loops stay tier-1-fast.
+fn gen_lm_cfg() -> LmConfig {
+    LmConfig::new(
+        24,
+        StackConfig::hybrid(
+            8,
+            16,
+            2,
+            4,
+            8,
+            vec![MixerKind::Ovq { n_max: 16 }, MixerKind::SlidingWindow { window: 20 }],
+        ),
+    )
+}
+
+/// Run `sessions` generation requests through an LM engine and return
+/// (completions keyed by session, the finished report).
+fn run_generate(
+    threads: usize,
+    max_resident: usize,
+    sessions: u64,
+    params: &SamplingParams,
+    stop: &StopCriteria,
+) -> (HashMap<u64, Vec<u32>>, ovq::coordinator::engine::EngineReport) {
+    let mut cfg = EngineConfig::for_lm(gen_lm_cfg());
+    cfg.threads = threads;
+    cfg.max_resident = max_resident;
+    cfg.prefill_quantum = 16; // several quanta per 40-token prompt
+    cfg.gen_quantum = 4; // several scheduling rounds per completion
+    let engine = DecodeEngine::start(cfg);
+    for s in 0..sessions {
+        let prompt = traffic::synth_tokens(0x6E7, s, 40, 24);
+        engine.submit_generate(s, prompt, params.clone(), stop.clone());
+    }
+    let report = engine.finish();
+    let outs = report.generations.iter().map(|g| (g.session, g.tokens.clone())).collect();
+    (outs, report)
+}
+
+#[test]
+fn greedy_generation_is_bit_identical_across_threads_and_eviction() {
+    // the acceptance golden, parts (a) and (b): greedy generation from a
+    // fixed seed must produce identical token streams across (a) 1 vs 4
+    // shard threads and (b) with vs without mid-generation eviction under
+    // max_resident = 1 — six concurrent sessions on one shard guarantee
+    // every scheduling round swaps residency, so each session's history
+    // ring, RNG and stack state churn through snapshot blobs repeatedly
+    // while its completion is still being sampled
+    let stop = StopCriteria::max_new(24);
+    let (base, r1) = run_generate(1, 64, 6, &SamplingParams::greedy(), &stop);
+    assert_eq!(r1.completions(), 6);
+    assert_eq!(r1.evictions(), 0, "uncapped run must not evict");
+    for (s, toks) in &base {
+        assert_eq!(toks.len(), 24, "session {s} under-generated");
+        assert!(toks.iter().all(|&t| (t as usize) < 24));
+    }
+
+    let (threaded, r4) = run_generate(4, 64, 6, &SamplingParams::greedy(), &stop);
+    assert_eq!(r4.completions(), 6);
+    assert_eq!(base, threaded, "thread count changed a greedy completion");
+
+    let (churned, rc) = run_generate(1, 1, 6, &SamplingParams::greedy(), &stop);
+    assert!(rc.evictions() > 0, "cap 1 with 6 sessions must churn mid-generation");
+    assert!(rc.restores() > 0);
+    assert_eq!(base, churned, "mid-generation eviction changed a completion");
+}
+
+#[test]
+fn sampled_generation_replays_deterministically_under_churn() {
+    // categorical sampling (temperature + top-k + top-p + repetition
+    // penalty) with a fixed request seed: the full sampler state — RNG
+    // mid-stream and penalty history ring — must survive snapshot churn
+    // and thread-count changes, token for token
+    let params = SamplingParams::sampled(0xD1E5);
+    let stop = StopCriteria::max_new(20);
+    let (base, _) = run_generate(1, 64, 5, &params, &stop);
+    assert!(base.values().any(|t| t.windows(2).any(|w| w[0] != w[1])), "sampling should mix");
+    let (threaded, _) = run_generate(4, 64, 5, &params, &stop);
+    assert_eq!(base, threaded, "thread count changed a sampled completion");
+    let (churned, rc) = run_generate(1, 1, 5, &params, &stop);
+    assert!(rc.evictions() > 0);
+    assert_eq!(base, churned, "eviction changed a sampled completion");
+}
+
+#[test]
+fn stop_tokens_truncate_the_completion() {
+    // take an unconstrained greedy completion, then rerun with its 5th
+    // token as a stop token: the rerun must emit exactly the first 5
+    // tokens (stop token included) and nothing after
+    let stop = StopCriteria::max_new(24);
+    let (base, _) = run_generate(1, 64, 1, &SamplingParams::greedy(), &stop);
+    let full = &base[&0];
+    let stop_tok = full[4];
+    // the stop token must not appear earlier, or the rerun stops sooner —
+    // pick the FIRST occurrence index to make the expectation exact
+    let first_at = full.iter().position(|&t| t == stop_tok).unwrap();
+    let stop = StopCriteria::max_new(24).with_stop_tokens(vec![stop_tok]);
+    let (cut, r) = run_generate(1, 64, 1, &SamplingParams::greedy(), &stop);
+    assert_eq!(cut[&0][..], full[..first_at + 1], "completion must end AT the stop token");
+    assert_eq!(r.gen_tokens(), first_at + 1);
+}
+
+#[test]
+fn generation_interleaves_with_decode_and_prefill_traffic() {
+    // the three workloads coexist on one shard: a generating session, a
+    // plain-decode session, and a long-prompt prefill session. Everything
+    // completes, per-session ordering holds across the generate boundary,
+    // and the decode stream is bit-identical to a generation-free run.
+    let d = 8;
+    let mk_cfg = || {
+        let mut cfg = EngineConfig::for_lm(gen_lm_cfg());
+        cfg.threads = 1;
+        cfg.prefill_quantum = 32;
+        cfg.gen_quantum = 4;
+        cfg.collect_outputs = true;
+        cfg
+    };
+    let (gen_s, dec_s, pre_s) = (1u64, 2u64, 3u64);
+
+    let engine = DecodeEngine::start(mk_cfg());
+    engine.submit_generate(
+        gen_s,
+        traffic::synth_tokens(1, gen_s, 64, 24),
+        SamplingParams::greedy(),
+        StopCriteria::max_new(16),
+    );
+    for seq in 0..4usize {
+        engine.submit(dec_s, traffic::synth_chunk(0xDC, dec_s, seq, 8, d));
+    }
+    engine.submit_prefill(pre_s, traffic::synth_chunk(0xBB, pre_s, 0, 128, d));
+    // a decode chunk for the GENERATING session, submitted mid-request:
+    // must defer behind the whole generation and still process
+    engine.submit(gen_s, traffic::synth_chunk(0xDC, gen_s, 99, 8, d));
+    engine.flush_all();
+    let mixed = engine.finish();
+
+    assert_eq!(mixed.completions(), 1);
+    assert_eq!(mixed.generations[0].tokens.len(), 16);
+    assert_eq!(mixed.prefill_chunks(), 1, "the plain prompt completed");
+    let shard = &mixed.shards[0];
+    assert!(shard.gen_busy > std::time::Duration::ZERO);
+    assert!(shard.prefill_busy > std::time::Duration::ZERO);
+    assert!(shard.busy > shard.gen_busy + shard.prefill_busy, "decode share visible");
+    // the deferred decode chunk for the generating session ran after the
+    // generation (seq 1 = the generate request, seq 2 = the chunk)
+    assert_eq!(mixed.generations[0].seq, 1);
+    let late = mixed
+        .outputs
+        .iter()
+        .find(|o| o.session == gen_s)
+        .expect("deferred chunk processed");
+    assert_eq!(late.seq, 2);
+
+    // generation-free mirror: the decode session must not feel the
+    // generating neighbour at all
+    let engine = DecodeEngine::start(mk_cfg());
+    for seq in 0..4usize {
+        engine.submit(dec_s, traffic::synth_chunk(0xDC, dec_s, seq, 8, d));
+    }
+    engine.flush_all();
+    let plain = engine.finish();
+    let pick = |r: &ovq::coordinator::engine::EngineReport| -> Vec<(usize, Vec<u32>)> {
+        let mut v: Vec<(usize, Vec<u32>)> = r
+            .outputs
+            .iter()
+            .filter(|o| o.session == dec_s)
+            .map(|o| (o.seq, o.out.iter().map(|x| x.to_bits()).collect()))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(pick(&mixed), pick(&plain), "a neighbour's generation changed decode bits");
 }
 
 // ------------------------------------------------------------ backpressure
