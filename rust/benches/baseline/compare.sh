@@ -6,7 +6,10 @@
 #
 # The JSON is the repo's own single-line util::json output, so plain
 # sed/grep is enough: extract (name, tok_per_s) pairs per file and join
-# on name.
+# on name. Against a seeded baseline every shared row gets a signed
+# delta-% column, and each bench ends with a one-line delta summary
+# (mean / best / worst / new-row count) so a PR check log surfaces
+# regressions without downloading the artifact.
 set -u
 
 extract() {
@@ -26,17 +29,40 @@ for bench in ovqcore server; do
     if grep -q '"seeded": false' "$base" 2>/dev/null; then
         echo "  baseline unseeded — copy a CI bench-json artifact over $base to start the trajectory"
         extract "$cur" | while read -r name tps; do
-            printf '  %-32s %14.0f tok/s (no baseline)\n' "$name" "$tps"
+            printf '  %-34s %14.0f tok/s (no baseline)\n' "$name" "$tps"
         done
         continue
     fi
-    extract "$cur" | while read -r name tps; do
-        btps=$(extract "$base" | awk -v n="$name" '$1 == n { print $2; exit }')
-        if [ -n "${btps:-}" ]; then
-            printf '  %-32s %14.0f tok/s   baseline %14.0f\n' "$name" "$tps" "$btps"
-        else
-            printf '  %-32s %14.0f tok/s   (new row)\n' "$name" "$tps"
-        fi
-    done
+    basepairs=$(extract "$base")
+    extract "$cur" | awk -v basepairs="$basepairs" '
+        BEGIN {
+            nb = split(basepairs, lines, "\n")
+            for (i = 1; i <= nb; i++) {
+                split(lines[i], f, " ")
+                if (f[1] != "") b[f[1]] = f[2]
+            }
+        }
+        {
+            name = $1; tps = $2
+            if (name in b && b[name] + 0 > 0) {
+                d = (tps - b[name]) / b[name] * 100.0
+                printf "  %-34s %14.0f tok/s   baseline %12.0f   %+7.1f%%\n", \
+                    name, tps, b[name], d
+                n++; sum += d
+                if (n == 1 || d < worst) { worst = d; wname = name }
+                if (n == 1 || d > best) { best = d; bname = name }
+            } else {
+                printf "  %-34s %14.0f tok/s   (new row)\n", name, tps
+                newrows++
+            }
+        }
+        END {
+            printf "  -- delta summary: %d shared rows", n
+            if (n > 0)
+                printf ", mean %+.1f%%, best %+.1f%% (%s), worst %+.1f%% (%s)", \
+                    sum / n, best, bname, worst, wname
+            if (newrows > 0) printf ", %d new", newrows
+            printf " --\n"
+        }'
 done
 exit 0

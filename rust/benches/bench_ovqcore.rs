@@ -17,9 +17,11 @@
 use std::collections::BTreeMap;
 
 use ovq::ovqcore::bank::{DecodeChunk, MixerBank};
+use ovq::ovqcore::kernels;
 use ovq::ovqcore::memstate::MixerKind;
 use ovq::ovqcore::mixer::{Scratch, SeqMixer};
 use ovq::ovqcore::ovq::{OvqConfig, OvqState};
+use ovq::ovqcore::quant::{QuantMode, QuantTensor};
 use ovq::util::bench::Bench;
 use ovq::util::json::Json;
 use ovq::util::rng::Rng;
@@ -60,8 +62,8 @@ mod scalar_baseline {
         /// (lazily-grown) live storage back out to capacity.
         pub fn from_state(st: &super::OvqState) -> ScalarOvq {
             let (d, n_max) = (st.cfg.d, st.cfg.n_max);
-            let mut dk = st.dk.clone();
-            let mut dv = st.dv.clone();
+            let mut dk = st.dk.to_f32_vec();
+            let mut dv = st.dv.to_f32_vec();
             let mut counts = st.counts.clone();
             dk.resize(n_max * d, 0.0);
             dv.resize(n_max * d, 0.0);
@@ -300,6 +302,76 @@ fn main() {
         println!("   N={n:>6}: blocked is {speedup:.2}x the scalar path");
     }
 
+    // ---- kernel microbenches: scalar tiles vs dispatch x storage mode --
+    // The dispatch rows measure whatever kernels::backend() resolves to
+    // ("scalar" on a default build, "avx2" under --features simd on
+    // supporting hardware); the scalar rows pin the always-available
+    // fallback, so the pair IS the SIMD speedup when the feature is on.
+    println!(
+        "\n-- kernel microbenches (backend: {}) — rows=4096, d={d} --",
+        kernels::backend()
+    );
+    {
+        let nrows = 4096usize;
+        let batch = 8usize;
+        let m = randv(&mut rng, nrows * d);
+        let x = randv(&mut rng, d);
+        let xs = randv(&mut rng, batch * d);
+        let mut outv = vec![0.0f32; nrows];
+        let mut outm = vec![0.0f32; batch * nrows];
+        let mut idx = vec![0usize; batch];
+        let mut sim = vec![f32::NEG_INFINITY; batch];
+
+        let r = b.run_throughput("kernel_matvec_scalar", nrows as f64, "row/s", || {
+            kernels::scalar::matvec(&m, nrows, d, &x, &mut outv);
+            outv[0]
+        });
+        push_row(&mut rows, "kernel_matvec_scalar", "kernel", nrows, r.mean_ns, nrows as f64);
+        let r = b.run_throughput("kernel_matvec_dispatch", nrows as f64, "row/s", || {
+            kernels::matvec(&m, nrows, d, &x, &mut outv);
+            outv[0]
+        });
+        push_row(&mut rows, "kernel_matvec_dispatch", "kernel", nrows, r.mean_ns, nrows as f64);
+
+        // quantized storage: fused dequant-dot rows (f32 accumulation)
+        for quant in [QuantMode::F16, QuantMode::I8] {
+            let qt = QuantTensor::from_f32(quant, nrows, d, &m);
+            let name = format!("kernel_matvec_{}", quant.name());
+            let r = b.run_throughput(&name, nrows as f64, "row/s", || {
+                qt.matvec(&x, &mut outv);
+                outv[0]
+            });
+            push_row(&mut rows, &name, "kernel", nrows, r.mean_ns, nrows as f64);
+        }
+
+        let dots = (batch * nrows) as f64;
+        let r = b.run_throughput("kernel_matmul_rows_scalar", dots, "dot/s", || {
+            kernels::scalar::matmul_rows(&m, nrows, d, &xs, batch, &mut outm);
+            outm[0]
+        });
+        push_row(&mut rows, "kernel_matmul_rows_scalar", "kernel", nrows, r.mean_ns, dots);
+        let r = b.run_throughput("kernel_matmul_rows_dispatch", dots, "dot/s", || {
+            kernels::matmul_rows(&m, nrows, d, &xs, batch, &mut outm);
+            outm[0]
+        });
+        push_row(&mut rows, "kernel_matmul_rows_dispatch", "kernel", nrows, r.mean_ns, dots);
+
+        let r = b.run_throughput("kernel_nearest_scalar", dots, "dot/s", || {
+            idx.iter_mut().for_each(|i| *i = 0);
+            sim.iter_mut().for_each(|s| *s = f32::NEG_INFINITY);
+            kernels::scalar::nearest_rows(&m, nrows, d, &xs, batch, &mut idx, &mut sim);
+            idx[0]
+        });
+        push_row(&mut rows, "kernel_nearest_scalar", "kernel", nrows, r.mean_ns, dots);
+        let r = b.run_throughput("kernel_nearest_dispatch", dots, "dot/s", || {
+            idx.iter_mut().for_each(|i| *i = 0);
+            sim.iter_mut().for_each(|s| *s = f32::NEG_INFINITY);
+            kernels::nearest_rows(&m, nrows, d, &xs, batch, &mut idx, &mut sim);
+            idx[0]
+        });
+        push_row(&mut rows, "kernel_nearest_dispatch", "kernel", nrows, r.mean_ns, dots);
+    }
+
     // ---- single-token decode per mixer x N, through the trait ----------
     println!("\n-- single-token decode (write+read) per mixer x N, via SeqMixer --");
     let context = 2048usize;
@@ -348,6 +420,30 @@ fn main() {
             })
         };
         push_row(&mut rows, &name, label, n, r.mean_ns, 1.0);
+    }
+
+    // quantized dictionary storage through the same trait path: decode
+    // cost with the OVQ dictionaries held in f16/i8 (fused dequant reads)
+    for quant in [QuantMode::F16, QuantMode::I8] {
+        let mut m = MixerKind::Ovq { n_max: 1024 }.build_quant(d, chunk, 7, quant);
+        for _ in 0..context {
+            let k = randv(&mut rng, d);
+            let v = randv(&mut rng, d);
+            m.write(&k, &v);
+        }
+        m.flush();
+        let q = randv(&mut rng, d);
+        let k = randv(&mut rng, d);
+        let v = randv(&mut rng, d);
+        let mut out = vec![0.0f32; m.d_out()];
+        let mut scratch = Scratch::new();
+        let name = format!("decode_ovq_N1024_{}", quant.name());
+        let r = b.run_throughput(&name, 1.0, "tok/s", || {
+            m.write(&k, &v);
+            m.read(&q, &mut out, &mut scratch);
+            out[0]
+        });
+        push_row(&mut rows, &name, "ovq", 1024, r.mean_ns, 1.0);
     }
 
     // ---- multi-stream multi-head decode through MixerBank --------------
@@ -445,6 +541,7 @@ fn main() {
         .collect();
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("ovqcore".to_string()));
+    top.insert("backend".to_string(), Json::Str(kernels::backend().to_string()));
     top.insert("d".to_string(), Json::Num(d as f64));
     top.insert("chunk".to_string(), Json::Num(chunk as f64));
     top.insert(

@@ -4,6 +4,7 @@
 //! ovqcore::memstate.
 
 use crate::ovqcore::memstate::{MixerGeom, MixerKind};
+use crate::ovqcore::quant::QuantMode;
 use crate::util::csv::CsvWriter;
 
 #[derive(Debug, Clone)]
@@ -77,7 +78,21 @@ pub fn fig4_right(out_dir: &str) -> anyhow::Result<()> {
 /// stack's `state_bytes()` below — the serving path and this analytic
 /// model cannot drift apart.
 pub fn stack_state_bytes(kinds: &[MixerKind], g: MixerGeom, t: usize) -> usize {
-    kinds.iter().map(|k| k.state_bytes(g, t)).sum()
+    stack_state_bytes_quant(kinds, g, t, QuantMode::None)
+}
+
+/// [`stack_state_bytes`] with the dictionary tensors held in `quant`
+/// storage — the analytic twin of a stack built with
+/// [`crate::ovqcore::stack::StackConfig::with_quant`]. Hot per-token
+/// state (kv rings, fast-weight matrices, counts, pending buffers)
+/// stays f32 in every mode, exactly as the live mixers keep it.
+pub fn stack_state_bytes_quant(
+    kinds: &[MixerKind],
+    g: MixerGeom,
+    t: usize,
+    quant: QuantMode,
+) -> usize {
+    kinds.iter().map(|k| k.state_bytes_quant(g, t, quant)).sum()
 }
 
 /// Dense-weight bytes of a full stack (per layer: q/k/v projections
@@ -87,13 +102,26 @@ pub fn stack_state_bytes(kinds: &[MixerKind], g: MixerGeom, t: usize) -> usize {
 /// on snapshot restore — kept separate from the per-session
 /// [`stack_state_bytes`] the eviction contract bills for.
 pub fn stack_param_bytes(layers: usize, d_model: usize, d_ff: usize, g: MixerGeom) -> usize {
+    stack_param_bytes_quant(layers, d_model, d_ff, g, QuantMode::None)
+}
+
+/// [`stack_param_bytes`] with the weight matrices held in `quant`
+/// storage: each matrix costs `rows * QuantMode::row_bytes(cols)`
+/// (per-row i8 scales included); the RMSNorm gains stay f32.
+pub fn stack_param_bytes_quant(
+    layers: usize,
+    d_model: usize,
+    d_ff: usize,
+    g: MixerGeom,
+    quant: QuantMode,
+) -> usize {
     let hd = g.heads * g.d_head;
-    let per_layer = 3 * hd * d_model // q/k/v projections
-        + d_model * hd // output projection
-        + 2 * d_model // norm gains
-        + 2 * d_ff * d_model // MLP gate + up
-        + d_model * d_ff; // MLP down
-    layers * per_layer * 4
+    let per_layer = 3 * hd * quant.row_bytes(d_model) // q/k/v projections
+        + d_model * quant.row_bytes(hd) // output projection
+        + 2 * d_model * 4 // norm gains (always f32)
+        + 2 * d_ff * quant.row_bytes(d_model) // MLP gate + up
+        + d_model * quant.row_bytes(d_ff); // MLP down
+    layers * per_layer
 }
 
 pub fn human(b: usize) -> String {
@@ -143,23 +171,35 @@ mod tests {
             MixerKind::Ovq { n_max: 16 },
             MixerKind::FullAttention,
         ];
-        let cfg = StackConfig::hybrid(d_model, d_ff, g.heads, g.d_head, chunk, kinds.clone());
-        let mut st = LayerStack::new(cfg, 99);
-        let mut rng = Rng::new(21);
-        let x: Vec<f32> = (0..t * d_model).map(|_| rng.normal() as f32).collect();
-        let mut out = vec![0.0f32; t * d_model];
-        let mut scratch = Scratch::new();
-        st.process_chunk(&x, &x, &x, &mut out, &mut scratch);
-        st.flush(); // merge OVQ pending tails so growth is at N_t(t)
+        for quant in [QuantMode::None, QuantMode::F16, QuantMode::I8] {
+            let cfg = StackConfig::hybrid(d_model, d_ff, g.heads, g.d_head, chunk, kinds.clone())
+                .with_quant(quant);
+            let mut st = LayerStack::new(cfg, 99);
+            let mut rng = Rng::new(21);
+            let x: Vec<f32> = (0..t * d_model).map(|_| rng.normal() as f32).collect();
+            let mut out = vec![0.0f32; t * d_model];
+            let mut scratch = Scratch::new();
+            st.process_chunk(&x, &x, &x, &mut out, &mut scratch);
+            st.flush(); // merge OVQ pending tails so growth is at N_t(t)
+            assert_eq!(
+                st.state_bytes(),
+                stack_state_bytes_quant(&kinds, g, t, quant),
+                "{quant:?}: live stack state diverged from the analytic accounting"
+            );
+            assert_eq!(
+                st.param_bytes(),
+                stack_param_bytes_quant(4, d_model, d_ff, g, quant),
+                "{quant:?}: live stack weights diverged from the analytic parameter count"
+            );
+        }
+        // the f32 paths still go through the plain entry points
         assert_eq!(
-            st.state_bytes(),
             stack_state_bytes(&kinds, g, t),
-            "live stack state diverged from the analytic accounting"
+            stack_state_bytes_quant(&kinds, g, t, QuantMode::None)
         );
         assert_eq!(
-            st.param_bytes(),
             stack_param_bytes(4, d_model, d_ff, g),
-            "live stack weights diverged from the analytic parameter count"
+            stack_param_bytes_quant(4, d_model, d_ff, g, QuantMode::None)
         );
         // and the analytic split is per-layer additive
         let per_layer: usize = kinds.iter().map(|k| k.state_bytes(g, t)).sum();

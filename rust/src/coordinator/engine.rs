@@ -35,6 +35,7 @@ use crate::ovqcore::bank::{ring_push, DecodeChunk, ShardBank, StreamStats};
 use crate::ovqcore::lm::{LmConfig, LmModel, TokenId};
 use crate::ovqcore::memstate::MixerKind;
 use crate::ovqcore::mixer::{merge_layer_stats, print_layer_split, LayerStat, SeqMixer};
+use crate::ovqcore::quant::QuantMode;
 use crate::ovqcore::stack::{LayerStack, StackConfig};
 use crate::util::stats;
 
@@ -82,6 +83,11 @@ pub struct EngineConfig {
     /// continuous-batching granularity of the generate path (the analogue
     /// of `prefill_quantum` for the decode phase of a generation)
     pub gen_quantum: usize,
+    /// cold-tensor storage for bare-mixer sessions (dictionary tensors);
+    /// stack/LM engines carry the mode inside [`StackConfig`]`::quant`
+    /// instead ([`EngineConfig::for_stack`] mirrors it here so telemetry
+    /// reads one place)
+    pub quant: QuantMode,
 }
 
 impl EngineConfig {
@@ -100,6 +106,7 @@ impl EngineConfig {
             stack: None,
             lm: None,
             gen_quantum: 16,
+            quant: QuantMode::None,
         }
     }
 
@@ -109,6 +116,7 @@ impl EngineConfig {
     pub fn for_stack(stack: StackConfig) -> EngineConfig {
         let kind = stack.kinds.first().copied().unwrap_or(MixerKind::Gdn);
         let mut cfg = EngineConfig::new(kind, 1, stack.d_model, stack.chunk);
+        cfg.quant = stack.quant;
         cfg.stack = Some(stack);
         cfg
     }
@@ -460,9 +468,9 @@ impl DecodeEngine {
                     as Box<dyn SeqMixer>
             });
         }
-        let (kind, d_head, chunk) = (cfg.kind, cfg.d_head, cfg.chunk);
+        let (kind, d_head, chunk, quant) = (cfg.kind, cfg.d_head, cfg.chunk, cfg.quant);
         Self::start_with(cfg, move |session, head| {
-            kind.build(d_head, chunk, session_seed(seed, session, head))
+            kind.build_quant(d_head, chunk, session_seed(seed, session, head), quant)
         })
     }
 

@@ -26,9 +26,11 @@ use anyhow::Result;
 use super::engine::{DecodeEngine, EngineConfig, ShardReport};
 use super::sampler::{SamplingParams, StopCriteria};
 use crate::ovqcore::bank::DecodeChunk;
+use crate::ovqcore::kernels;
 use crate::ovqcore::lm::LmConfig;
 use crate::ovqcore::memstate::{parse_schedule, MixerKind};
 use crate::ovqcore::mixer::{print_layer_split, LayerStat};
+use crate::ovqcore::quant::QuantMode;
 use crate::ovqcore::stack::StackConfig;
 use crate::runtime::Model;
 use crate::util::cli::Args;
@@ -192,6 +194,10 @@ pub struct DecodeConfig {
     /// row width becomes d_model and `kind`/`heads`/`d_head` describe the
     /// per-layer attention inside the stack
     pub stack: Option<StackConfig>,
+    /// cold-tensor storage mode (`--quant none|f16|i8`): dictionary
+    /// tensors for bare mixers, plus weights/embedding when serving
+    /// stacks or LMs
+    pub quant: QuantMode,
 }
 
 impl DecodeConfig {
@@ -210,6 +216,7 @@ impl DecodeConfig {
             prompt_tokens: 0,
             prefill_quantum: 512,
             stack: None,
+            quant: QuantMode::None,
         }
     }
 
@@ -224,9 +231,10 @@ impl DecodeConfig {
 
     fn engine_config(&self) -> EngineConfig {
         let mut e = match &self.stack {
-            Some(s) => EngineConfig::for_stack(s.clone()),
+            Some(s) => EngineConfig::for_stack(s.clone().with_quant(self.quant)),
             None => EngineConfig::new(self.kind, self.heads, self.d_head, self.chunk),
         };
+        e.quant = self.quant;
         e.threads = self.threads;
         e.max_resident = self.max_resident;
         e.queue_depth = self.queue_depth;
@@ -300,6 +308,11 @@ impl DecodeReport {
                 self.cfg.threads,
             ),
         }
+        println!(
+            "  kernels: {} backend  |  cold-tensor quant: {}",
+            kernels::backend(),
+            self.cfg.quant.name(),
+        );
         println!(
             "  {} tokens in {:.2}s -> {:.0} tok/s aggregate  ({:.1} KiB total mixer state)",
             self.tokens_total,
@@ -425,6 +438,7 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 ///            [--streams S] [--heads H] [--dhead D] [--nmax N]
 ///            [--decode-tokens T] [--threads W] [--max-resident R]
 ///            [--queue-depth Q] [--prompt-tokens P] [--prefill-quantum Q]
+///            [--quant none|f16|i8]
 ///            [--layers L --d-model D --d-ff F --schedule S]`
 /// Demo driver: phase 1 runs the batched scorer against the compiled HLO
 /// program (skipped with a notice when no backend/artifacts are
@@ -453,6 +467,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     dcfg.queue_depth = args.opt_usize("queue-depth", dcfg.queue_depth)?;
     dcfg.prompt_tokens = args.opt_usize("prompt-tokens", dcfg.prompt_tokens)?;
     dcfg.prefill_quantum = args.opt_usize("prefill-quantum", dcfg.prefill_quantum)?;
+    dcfg.quant = QuantMode::parse(&args.opt_or("quant", "none"))?;
     let layers = args.opt_usize("layers", 0)?;
     if layers > 0 {
         let d_model = args.opt_usize("d-model", dcfg.heads * dcfg.d_head)?;
@@ -494,7 +509,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 ///               [--layers L] [--d-model D] [--d-ff F] [--heads H]
 ///               [--dhead D] [--chunk C] [--schedule S] [--threads W]
 ///               [--max-resident R] [--prefill-quantum Q]
-///               [--gen-quantum G] [--seed S]`
+///               [--gen-quantum G] [--quant none|f16|i8] [--seed S]`
 ///
 /// End-to-end autoregressive generation: every session submits a
 /// deterministic synthetic token prompt; the engine prefills it in
@@ -516,7 +531,11 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     let chunk = args.opt_usize("chunk", 32)?;
     let schedule = args.opt_or("schedule", "ovq:256,kv:win128");
     let kinds = parse_schedule(&schedule, layers)?;
-    let lm = LmConfig::new(vocab, StackConfig::hybrid(d_model, d_ff, heads, d_head, chunk, kinds));
+    let quant = QuantMode::parse(&args.opt_or("quant", "none"))?;
+    let lm = LmConfig::new(
+        vocab,
+        StackConfig::hybrid(d_model, d_ff, heads, d_head, chunk, kinds).with_quant(quant),
+    );
     lm.validate()?;
 
     let params = SamplingParams {
@@ -543,9 +562,12 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     ecfg.seed = args.opt_u64("seed", 0x6E6E)?;
     crate::info!(
         "generate: {sessions} sessions x {prompt_tokens}-token prompts -> up to {} new tokens \
-         ({} sampling, [{schedule}] x {layers} layers, vocab {vocab}) over {} shard threads",
+         ({} sampling, [{schedule}] x {layers} layers, vocab {vocab}, quant {}, {} kernels) \
+         over {} shard threads",
         stop.max_new,
         if params.is_greedy() { "greedy" } else { "categorical" },
+        quant.name(),
+        kernels::backend(),
         ecfg.threads
     );
 
@@ -765,6 +787,29 @@ mod tests {
         let argv: Vec<String> =
             ["generate", "--temp", "-1"].iter().map(|s| s.to_string()).collect();
         assert!(cmd_generate(&Args::parse(&argv)).is_err());
+    }
+
+    #[test]
+    fn decode_engine_serves_quantized_dictionaries() {
+        // --quant i8 through the whole serve path: same token accounting,
+        // smaller mixer state (the dictionary grows on the same
+        // deterministic schedule in every storage mode)
+        let mut cfg = DecodeConfig::new(64);
+        cfg.streams = 2;
+        cfg.heads = 1;
+        cfg.d_head = 8;
+        cfg.chunk = 16;
+        cfg.tokens = 64;
+        let f32_run = run_decode_engine(&cfg);
+        cfg.quant = QuantMode::I8;
+        let i8_run = run_decode_engine(&cfg);
+        assert_eq!(i8_run.tokens_total, 2 * 64);
+        assert!(
+            i8_run.state_bytes < f32_run.state_bytes,
+            "i8 dictionaries must shrink engine state ({} vs {})",
+            i8_run.state_bytes,
+            f32_run.state_bytes
+        );
     }
 
     #[test]

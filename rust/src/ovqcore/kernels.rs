@@ -9,95 +9,98 @@
 //! `kvcache`. Tiles are sized so a slot block (`SLOT_BLOCK` rows at
 //! d <= 128) stays resident in L1 while it is swept by every query of a
 //! chunk.
+//!
+//! Backends: the public entry points (`dot`, `matvec`, `matmul_rows`,
+//! `axpy_rows`, `nearest_rows`, `dot_i8`) dispatch at runtime to an
+//! AVX2/FMA implementation when the crate is built with the `simd` cargo
+//! feature on x86_64 AND the CPU reports both features (cached
+//! `is_x86_feature_detected!` probe). The [`scalar`] module is always
+//! compiled and is both the fallback and the golden reference: the
+//! default build's bit-exact golden/snapshot tests pin the scalar path,
+//! while the SIMD path (FMA reassociates, so bits differ) is covered by
+//! the tolerance-mode test family at the bottom of this file. Which path
+//! is live is reported by [`backend`] and surfaced in serve/bench
+//! telemetry.
+//!
+//! Within one process the backend never changes (the CPUID probe is
+//! cached), so the [`matvec`] ↔ [`matmul_rows`] bit-identity contract the
+//! prefill goldens rely on holds per-backend: both scalar tiles share
+//! their 4-row accumulation groups, and both AVX2 paths share one
+//! `dot_avx2` core per (row, query) pair.
 
 /// Rows per dictionary tile in [`nearest_rows`]; 64 rows x 128 dims x 4 B
 /// = 32 KiB, the common L1 size.
 pub const SLOT_BLOCK: usize = 64;
 
-/// Dot product with four independent accumulators. The seed's
-/// `iter().zip().map().sum()` chains the f32 adds serially (FP addition is
-/// non-associative, so LLVM cannot reorder them); splitting the
-/// accumulation into four lanes makes the reduction associative-by-
-/// construction and lets the backend vectorize it.
+/// Which kernel backend serves the dispatched entry points: `"avx2"` when
+/// the `simd` feature is compiled in and the CPU reports AVX2+FMA,
+/// `"scalar"` otherwise. Surfaced in serve and bench telemetry so a run's
+/// numbers are attributable to the path that produced them.
+pub fn backend() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            return "avx2";
+        }
+    }
+    "scalar"
+}
+
+/// Dot product. Dispatches to the AVX2 backend when live; the scalar tile
+/// splits the accumulation into four independent lanes (see
+/// [`scalar::dot`]).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
-    for (x, y) in (&mut ca).zip(&mut cb) {
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            return simd::dot(a, b);
+        }
     }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s += x * y;
+    scalar::dot(a, b)
+}
+
+/// Fused dequant-dot over one i8 row with a per-row scale:
+/// `scale * sum_j row[j] * x[j]`, accumulated in f32. The i8 elements are
+/// widened lane-by-lane inside the loop — no dequantized row is ever
+/// materialized. This is the hot read path for `--quant i8` dictionaries
+/// ([`super::quant::QuantTensor`]).
+#[inline]
+pub fn dot_i8(row: &[i8], scale: f32, x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            return simd::dot_i8(row, scale, x);
+        }
     }
-    s
+    scalar::dot_i8(row, scale, x)
 }
 
 /// `out[r] = dot(m[r], x)` for `r in 0..rows` — the dictionary-logit
-/// matvec, blocked four rows at a time so each load of `x` feeds four
-/// accumulating lanes.
+/// matvec. Dispatches per-backend; see [`scalar::matvec`] for the
+/// reference tile.
 pub fn matvec(m: &[f32], rows: usize, d: usize, x: &[f32], out: &mut [f32]) {
-    debug_assert!(m.len() >= rows * d);
-    debug_assert!(out.len() >= rows);
-    debug_assert_eq!(x.len(), d);
-    let x = &x[..d];
-    let mut r = 0;
-    while r + 4 <= rows {
-        let m0 = &m[r * d..r * d + d];
-        let m1 = &m[(r + 1) * d..(r + 1) * d + d];
-        let m2 = &m[(r + 2) * d..(r + 2) * d + d];
-        let m3 = &m[(r + 3) * d..(r + 3) * d + d];
-        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        for j in 0..d {
-            let xj = x[j];
-            a0 += m0[j] * xj;
-            a1 += m1[j] * xj;
-            a2 += m2[j] * xj;
-            a3 += m3[j] * xj;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            simd::matvec(m, rows, d, x, out);
+            return;
         }
-        out[r] = a0;
-        out[r + 1] = a1;
-        out[r + 2] = a2;
-        out[r + 3] = a3;
-        r += 4;
     }
-    while r < rows {
-        out[r] = dot(&m[r * d..r * d + d], x);
-        r += 1;
-    }
+    scalar::matvec(m, rows, d, x, out)
 }
 
 /// `acc[..d] += sum_r w[r] * m[r]`, skipping rows with zero weight — the
-/// softmax value gather. Rows are walked in pairs so the two row streams
-/// overlap loads.
+/// softmax value gather. Dispatches per-backend; see [`scalar::axpy_rows`].
 pub fn axpy_rows(m: &[f32], rows: usize, d: usize, w: &[f32], acc: &mut [f32]) {
-    debug_assert!(m.len() >= rows * d);
-    debug_assert!(w.len() >= rows);
-    debug_assert!(acc.len() >= d);
-    let acc = &mut acc[..d];
-    let mut r = 0;
-    while r + 2 <= rows {
-        let (w0, w1) = (w[r], w[r + 1]);
-        if w0 != 0.0 || w1 != 0.0 {
-            let m0 = &m[r * d..r * d + d];
-            let m1 = &m[(r + 1) * d..(r + 1) * d + d];
-            for j in 0..d {
-                acc[j] += w0 * m0[j] + w1 * m1[j];
-            }
-        }
-        r += 2;
-    }
-    if r < rows && w[r] != 0.0 {
-        let m0 = &m[r * d..r * d + d];
-        for j in 0..d {
-            acc[j] += w[r] * m0[j];
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            simd::axpy_rows(m, rows, d, w, acc);
+            return;
         }
     }
+    scalar::axpy_rows(m, rows, d, w, acc)
 }
 
 /// Batched (prefill) form of [`matvec`]: `out[i * rows + r] = dot(m[r],
@@ -106,50 +109,21 @@ pub fn axpy_rows(m: &[f32], rows: usize, d: usize, w: &[f32], acc: &mut [f32]) {
 /// chunk streams the dictionary once per tile instead of once per token.
 ///
 /// Bit-identity contract: for every (query, row) pair the accumulation
-/// order is exactly [`matvec`]'s — tiles are [`SLOT_BLOCK`]-aligned
-/// (a multiple of 4), so the 4-row groups and the `dot`-based tail fall
-/// on the same row boundaries as a per-query `matvec` call over the full
-/// matrix. The prefill golden tests (rust/tests/golden.rs) rely on this
-/// to keep blocked prefill bit-identical to serial decode.
+/// order is exactly [`matvec`]'s *on the same backend* — the scalar tiles
+/// share their 4-row groups and `dot`-based tail (tiles are
+/// [`SLOT_BLOCK`]-aligned, a multiple of 4), and the AVX2 paths compute
+/// every (row, query) pair through one shared `dot_avx2` core. The
+/// prefill golden tests (rust/tests/golden.rs) rely on this to keep
+/// blocked prefill bit-identical to serial decode.
 pub fn matmul_rows(m: &[f32], rows: usize, d: usize, xs: &[f32], len: usize, out: &mut [f32]) {
-    debug_assert!(m.len() >= rows * d);
-    debug_assert!(xs.len() >= len * d);
-    debug_assert!(out.len() >= len * rows);
-    let mut s0 = 0;
-    while s0 < rows {
-        let sn = (s0 + SLOT_BLOCK).min(rows);
-        let block = &m[s0 * d..sn * d];
-        let brows = sn - s0;
-        for i in 0..len {
-            let x = &xs[i * d..(i + 1) * d];
-            let orow = &mut out[i * rows + s0..i * rows + sn];
-            let mut r = 0;
-            while r + 4 <= brows {
-                let m0 = &block[r * d..r * d + d];
-                let m1 = &block[(r + 1) * d..(r + 1) * d + d];
-                let m2 = &block[(r + 2) * d..(r + 2) * d + d];
-                let m3 = &block[(r + 3) * d..(r + 3) * d + d];
-                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                for j in 0..d {
-                    let xj = x[j];
-                    a0 += m0[j] * xj;
-                    a1 += m1[j] * xj;
-                    a2 += m2[j] * xj;
-                    a3 += m3[j] * xj;
-                }
-                orow[r] = a0;
-                orow[r + 1] = a1;
-                orow[r + 2] = a2;
-                orow[r + 3] = a3;
-                r += 4;
-            }
-            while r < brows {
-                orow[r] = dot(&block[r * d..r * d + d], x);
-                r += 1;
-            }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            simd::matmul_rows(m, rows, d, xs, len, out);
+            return;
         }
-        s0 = sn;
     }
+    scalar::matmul_rows(m, rows, d, xs, len, out)
 }
 
 /// Tiled nearest-row search: for each of `len` keys, the index and value
@@ -169,52 +143,460 @@ pub fn nearest_rows(
     best_idx: &mut [usize],
     best_sim: &mut [f32],
 ) {
-    debug_assert!(dict.len() >= n * d);
-    debug_assert!(keys.len() >= len * d);
-    debug_assert!(best_idx.len() >= len && best_sim.len() >= len);
-    let mut s0 = 0;
-    while s0 < n {
-        let sn = (s0 + SLOT_BLOCK).min(n);
-        let block = &dict[s0 * d..sn * d];
-        let rows = sn - s0;
-        for i in 0..len {
-            let k = &keys[i * d..(i + 1) * d];
-            let (mut bi, mut bv) = (best_idx[i], best_sim[i]);
-            let mut r = 0;
-            // four-row blocks: one pass of k feeds four similarity lanes
-            while r + 4 <= rows {
-                let m0 = &block[r * d..r * d + d];
-                let m1 = &block[(r + 1) * d..(r + 1) * d + d];
-                let m2 = &block[(r + 2) * d..(r + 2) * d + d];
-                let m3 = &block[(r + 3) * d..(r + 3) * d + d];
-                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            simd::nearest_rows(dict, n, d, keys, len, best_idx, best_sim);
+            return;
+        }
+    }
+    scalar::nearest_rows(dict, n, d, keys, len, best_idx, best_sim)
+}
+
+/// The always-compiled scalar reference tiles. These are the exact
+/// kernels the repo's bit-exact goldens were recorded against; the
+/// dispatched entry points above fall back here whenever the AVX2
+/// backend is compiled out or the CPU lacks it, and the bench harness
+/// calls them directly to measure the scalar-vs-SIMD spread.
+pub mod scalar {
+    use super::SLOT_BLOCK;
+
+    /// Dot product with four independent accumulators. The seed's
+    /// `iter().zip().map().sum()` chains the f32 adds serially (FP
+    /// addition is non-associative, so LLVM cannot reorder them);
+    /// splitting the accumulation into four lanes makes the reduction
+    /// associative-by-construction and lets the backend vectorize it.
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f32; 4];
+        let mut ca = a.chunks_exact(4);
+        let mut cb = b.chunks_exact(4);
+        for (x, y) in (&mut ca).zip(&mut cb) {
+            acc[0] += x[0] * y[0];
+            acc[1] += x[1] * y[1];
+            acc[2] += x[2] * y[2];
+            acc[3] += x[3] * y[3];
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            s += x * y;
+        }
+        s
+    }
+
+    /// Scalar fused dequant-dot over an i8 row (see [`super::dot_i8`]);
+    /// same four-lane accumulation shape as [`dot`].
+    #[inline]
+    pub fn dot_i8(row: &[i8], scale: f32, x: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), x.len());
+        let mut acc = [0.0f32; 4];
+        let mut ca = row.chunks_exact(4);
+        let mut cb = x.chunks_exact(4);
+        for (q, y) in (&mut ca).zip(&mut cb) {
+            acc[0] += q[0] as f32 * y[0];
+            acc[1] += q[1] as f32 * y[1];
+            acc[2] += q[2] as f32 * y[2];
+            acc[3] += q[3] as f32 * y[3];
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for (q, y) in ca.remainder().iter().zip(cb.remainder()) {
+            s += *q as f32 * y;
+        }
+        s * scale
+    }
+
+    /// `out[r] = dot(m[r], x)`, blocked four rows at a time so each load
+    /// of `x` feeds four accumulating lanes.
+    pub fn matvec(m: &[f32], rows: usize, d: usize, x: &[f32], out: &mut [f32]) {
+        debug_assert!(m.len() >= rows * d);
+        debug_assert!(out.len() >= rows);
+        debug_assert_eq!(x.len(), d);
+        let x = &x[..d];
+        let mut r = 0;
+        while r + 4 <= rows {
+            let m0 = &m[r * d..r * d + d];
+            let m1 = &m[(r + 1) * d..(r + 1) * d + d];
+            let m2 = &m[(r + 2) * d..(r + 2) * d + d];
+            let m3 = &m[(r + 3) * d..(r + 3) * d + d];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for j in 0..d {
+                let xj = x[j];
+                a0 += m0[j] * xj;
+                a1 += m1[j] * xj;
+                a2 += m2[j] * xj;
+                a3 += m3[j] * xj;
+            }
+            out[r] = a0;
+            out[r + 1] = a1;
+            out[r + 2] = a2;
+            out[r + 3] = a3;
+            r += 4;
+        }
+        while r < rows {
+            out[r] = dot(&m[r * d..r * d + d], x);
+            r += 1;
+        }
+    }
+
+    /// `acc[..d] += sum_r w[r] * m[r]`, skipping rows with zero weight.
+    /// Rows are walked in pairs so the two row streams overlap loads.
+    pub fn axpy_rows(m: &[f32], rows: usize, d: usize, w: &[f32], acc: &mut [f32]) {
+        debug_assert!(m.len() >= rows * d);
+        debug_assert!(w.len() >= rows);
+        debug_assert!(acc.len() >= d);
+        let acc = &mut acc[..d];
+        let mut r = 0;
+        while r + 2 <= rows {
+            let (w0, w1) = (w[r], w[r + 1]);
+            if w0 != 0.0 || w1 != 0.0 {
+                let m0 = &m[r * d..r * d + d];
+                let m1 = &m[(r + 1) * d..(r + 1) * d + d];
                 for j in 0..d {
-                    let kj = k[j];
-                    a0 += m0[j] * kj;
-                    a1 += m1[j] * kj;
-                    a2 += m2[j] * kj;
-                    a3 += m3[j] * kj;
+                    acc[j] += w0 * m0[j] + w1 * m1[j];
                 }
-                for (off, a) in [a0, a1, a2, a3].into_iter().enumerate() {
+            }
+            r += 2;
+        }
+        if r < rows && w[r] != 0.0 {
+            let m0 = &m[r * d..r * d + d];
+            for j in 0..d {
+                acc[j] += w[r] * m0[j];
+            }
+        }
+    }
+
+    /// Scalar tile of [`super::matmul_rows`]; see the bit-identity
+    /// contract there.
+    pub fn matmul_rows(m: &[f32], rows: usize, d: usize, xs: &[f32], len: usize, out: &mut [f32]) {
+        debug_assert!(m.len() >= rows * d);
+        debug_assert!(xs.len() >= len * d);
+        debug_assert!(out.len() >= len * rows);
+        let mut s0 = 0;
+        while s0 < rows {
+            let sn = (s0 + SLOT_BLOCK).min(rows);
+            let block = &m[s0 * d..sn * d];
+            let brows = sn - s0;
+            for i in 0..len {
+                let x = &xs[i * d..(i + 1) * d];
+                let orow = &mut out[i * rows + s0..i * rows + sn];
+                let mut r = 0;
+                while r + 4 <= brows {
+                    let m0 = &block[r * d..r * d + d];
+                    let m1 = &block[(r + 1) * d..(r + 1) * d + d];
+                    let m2 = &block[(r + 2) * d..(r + 2) * d + d];
+                    let m3 = &block[(r + 3) * d..(r + 3) * d + d];
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                    for j in 0..d {
+                        let xj = x[j];
+                        a0 += m0[j] * xj;
+                        a1 += m1[j] * xj;
+                        a2 += m2[j] * xj;
+                        a3 += m3[j] * xj;
+                    }
+                    orow[r] = a0;
+                    orow[r + 1] = a1;
+                    orow[r + 2] = a2;
+                    orow[r + 3] = a3;
+                    r += 4;
+                }
+                while r < brows {
+                    orow[r] = dot(&block[r * d..r * d + d], x);
+                    r += 1;
+                }
+            }
+            s0 = sn;
+        }
+    }
+
+    /// Scalar tile of [`super::nearest_rows`]: four-row similarity blocks,
+    /// strict-greater compare so the earliest row wins exact ties.
+    pub fn nearest_rows(
+        dict: &[f32],
+        n: usize,
+        d: usize,
+        keys: &[f32],
+        len: usize,
+        best_idx: &mut [usize],
+        best_sim: &mut [f32],
+    ) {
+        debug_assert!(dict.len() >= n * d);
+        debug_assert!(keys.len() >= len * d);
+        debug_assert!(best_idx.len() >= len && best_sim.len() >= len);
+        let mut s0 = 0;
+        while s0 < n {
+            let sn = (s0 + SLOT_BLOCK).min(n);
+            let block = &dict[s0 * d..sn * d];
+            let rows = sn - s0;
+            for i in 0..len {
+                let k = &keys[i * d..(i + 1) * d];
+                let (mut bi, mut bv) = (best_idx[i], best_sim[i]);
+                let mut r = 0;
+                // four-row blocks: one pass of k feeds four similarity lanes
+                while r + 4 <= rows {
+                    let m0 = &block[r * d..r * d + d];
+                    let m1 = &block[(r + 1) * d..(r + 1) * d + d];
+                    let m2 = &block[(r + 2) * d..(r + 2) * d + d];
+                    let m3 = &block[(r + 3) * d..(r + 3) * d + d];
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                    for j in 0..d {
+                        let kj = k[j];
+                        a0 += m0[j] * kj;
+                        a1 += m1[j] * kj;
+                        a2 += m2[j] * kj;
+                        a3 += m3[j] * kj;
+                    }
+                    for (off, a) in [a0, a1, a2, a3].into_iter().enumerate() {
+                        if a > bv {
+                            bv = a;
+                            bi = s0 + r + off;
+                        }
+                    }
+                    r += 4;
+                }
+                while r < rows {
+                    let a = dot(&block[r * d..r * d + d], k);
                     if a > bv {
                         bv = a;
-                        bi = s0 + r + off;
+                        bi = s0 + r;
                     }
+                    r += 1;
                 }
-                r += 4;
+                best_idx[i] = bi;
+                best_sim[i] = bv;
             }
-            while r < rows {
-                let a = dot(&block[r * d..r * d + d], k);
-                if a > bv {
-                    bv = a;
-                    bi = s0 + r;
-                }
-                r += 1;
-            }
-            best_idx[i] = bi;
-            best_sim[i] = bv;
+            s0 = sn;
         }
-        s0 = sn;
+    }
+}
+
+/// AVX2/FMA backend, compiled only with the `simd` feature on x86_64 and
+/// entered only after the cached CPUID probe confirms both features. One
+/// `dot_avx2` core (4 × 8-lane FMA accumulators, 8-lane remainder, scalar
+/// tail) serves every per-row similarity/logit, which is what keeps
+/// `matvec` and `matmul_rows` bit-identical to each other on this path.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) mod simd {
+    use super::SLOT_BLOCK;
+    use std::arch::x86_64::*;
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    /// 0 = unprobed, 1 = avx2+fma present, 2 = absent.
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+
+    /// Cached runtime probe for AVX2 + FMA. The result is stable for the
+    /// life of the process, so every kernel in a run uses one backend.
+    #[inline]
+    pub fn avx2_available() -> bool {
+        match AVX2.load(Ordering::Relaxed) {
+            1 => true,
+            2 => false,
+            _ => {
+                let yes = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+                AVX2.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+
+    /// Horizontal sum of one 8-lane register.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// The shared per-row core: 4 × 8-lane FMA accumulators (32 floats
+    /// per iteration), an 8-lane remainder loop, then a scalar tail for
+    /// the last `len % 8` elements.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 16)),
+                _mm256_loadu_ps(pb.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 24)),
+                _mm256_loadu_ps(pb.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Fused i8 dequant-dot: 8 quantized bytes widen to 8 f32 lanes
+    /// (cvtepi8_epi32 → cvtepi32_ps) and FMA against `x`; the per-row
+    /// scale is applied once to the f32 accumulator.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_i8_avx2(row: &[i8], scale: f32, x: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), x.len());
+        let n = row.len();
+        let (pq, px) = (row.as_ptr(), x.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let q8 = _mm_loadl_epi64(pq.add(i) as *const __m128i);
+            let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q8));
+            acc = _mm256_fmadd_ps(qf, _mm256_loadu_ps(px.add(i)), acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += row[i] as f32 * x[i];
+            i += 1;
+        }
+        s * scale
+    }
+
+    /// `acc += w * row`, 8 lanes per FMA with a scalar tail.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_row_avx2(row: &[f32], w: f32, acc: &mut [f32]) {
+        debug_assert_eq!(row.len(), acc.len());
+        let d = row.len();
+        let wv = _mm256_set1_ps(w);
+        let (pr, pa) = (row.as_ptr(), acc.as_mut_ptr());
+        let mut j = 0usize;
+        while j + 8 <= d {
+            let a = _mm256_loadu_ps(pa.add(j));
+            let r = _mm256_loadu_ps(pr.add(j));
+            _mm256_storeu_ps(pa.add(j), _mm256_fmadd_ps(wv, r, a));
+            j += 8;
+        }
+        while j < d {
+            acc[j] += w * row[j];
+            j += 1;
+        }
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert!(avx2_available());
+        // SAFETY: dispatchers only enter this module after avx2_available().
+        unsafe { dot_avx2(a, b) }
+    }
+
+    pub fn dot_i8(row: &[i8], scale: f32, x: &[f32]) -> f32 {
+        debug_assert!(avx2_available());
+        // SAFETY: dispatchers only enter this module after avx2_available().
+        unsafe { dot_i8_avx2(row, scale, x) }
+    }
+
+    pub fn matvec(m: &[f32], rows: usize, d: usize, x: &[f32], out: &mut [f32]) {
+        debug_assert!(avx2_available());
+        debug_assert!(m.len() >= rows * d);
+        debug_assert_eq!(x.len(), d);
+        let x = &x[..d];
+        for (r, o) in out[..rows].iter_mut().enumerate() {
+            // SAFETY: gated on avx2_available() above.
+            *o = unsafe { dot_avx2(&m[r * d..r * d + d], x) };
+        }
+    }
+
+    pub fn axpy_rows(m: &[f32], rows: usize, d: usize, w: &[f32], acc: &mut [f32]) {
+        debug_assert!(avx2_available());
+        debug_assert!(m.len() >= rows * d);
+        debug_assert!(acc.len() >= d);
+        let acc = &mut acc[..d];
+        for (r, &wr) in w[..rows].iter().enumerate() {
+            if wr != 0.0 {
+                // SAFETY: gated on avx2_available() above.
+                unsafe { axpy_row_avx2(&m[r * d..r * d + d], wr, acc) };
+            }
+        }
+    }
+
+    /// Same tiling as the scalar path; every (query, row) result is one
+    /// `dot_avx2` call, so this is bit-identical to per-query
+    /// [`matvec`] on this backend.
+    pub fn matmul_rows(m: &[f32], rows: usize, d: usize, xs: &[f32], len: usize, out: &mut [f32]) {
+        debug_assert!(avx2_available());
+        debug_assert!(m.len() >= rows * d);
+        debug_assert!(xs.len() >= len * d);
+        debug_assert!(out.len() >= len * rows);
+        let mut s0 = 0;
+        while s0 < rows {
+            let sn = (s0 + SLOT_BLOCK).min(rows);
+            let block = &m[s0 * d..sn * d];
+            let brows = sn - s0;
+            for i in 0..len {
+                let x = &xs[i * d..(i + 1) * d];
+                let orow = &mut out[i * rows + s0..i * rows + sn];
+                let mut r = 0;
+                while r < brows {
+                    // SAFETY: gated on avx2_available() above.
+                    orow[r] = unsafe { dot_avx2(&block[r * d..r * d + d], x) };
+                    r += 1;
+                }
+            }
+            s0 = sn;
+        }
+    }
+
+    pub fn nearest_rows(
+        dict: &[f32],
+        n: usize,
+        d: usize,
+        keys: &[f32],
+        len: usize,
+        best_idx: &mut [usize],
+        best_sim: &mut [f32],
+    ) {
+        debug_assert!(avx2_available());
+        debug_assert!(dict.len() >= n * d);
+        debug_assert!(keys.len() >= len * d);
+        debug_assert!(best_idx.len() >= len && best_sim.len() >= len);
+        let mut s0 = 0;
+        while s0 < n {
+            let sn = (s0 + SLOT_BLOCK).min(n);
+            let block = &dict[s0 * d..sn * d];
+            let rows = sn - s0;
+            for i in 0..len {
+                let k = &keys[i * d..(i + 1) * d];
+                let (mut bi, mut bv) = (best_idx[i], best_sim[i]);
+                let mut r = 0;
+                while r < rows {
+                    // SAFETY: gated on avx2_available() above.
+                    let a = unsafe { dot_avx2(&block[r * d..r * d + d], k) };
+                    if a > bv {
+                        bv = a;
+                        bi = s0 + r;
+                    }
+                    r += 1;
+                }
+                best_idx[i] = bi;
+                best_sim[i] = bv;
+            }
+            s0 = sn;
+        }
     }
 }
 
@@ -264,7 +646,8 @@ pub fn top_k_threshold(xs: &[f32], k: usize, keep: &mut Vec<f32>) -> f32 {
 /// `out += sum_s exp(logits[s] - m) * values[s]`, returning the partial
 /// normalizer. `NEG_INFINITY` logits are skipped. Weights are materialized
 /// into `w_scratch` (len >= rows) so the value gather runs through the
-/// blocked [`axpy_rows`].
+/// blocked [`axpy_rows`] — which is also where this function picks up the
+/// SIMD backend; the exp loop stays scalar on every path.
 pub fn softmax_accumulate(
     logits: &[f32],
     values: &[f32],
@@ -312,6 +695,19 @@ mod tests {
     }
 
     #[test]
+    fn dot_i8_matches_widened_naive() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 3, 7, 8, 9, 31, 64, 129] {
+            let row: Vec<i8> = (0..n).map(|_| (rng.normal() * 40.0) as i8).collect();
+            let x = randv(&mut rng, n);
+            let scale = 0.037f32;
+            let got = dot_i8(&row, scale, &x);
+            let want: f32 = row.iter().zip(&x).map(|(&q, y)| q as f32 * y).sum::<f32>() * scale;
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
     fn matvec_matches_naive() {
         let mut rng = Rng::new(2);
         for (rows, d) in [(1usize, 5usize), (4, 8), (7, 16), (130, 64)] {
@@ -350,7 +746,9 @@ mod tests {
     fn matmul_rows_is_bit_identical_to_per_query_matvec() {
         // the prefill contract: the batched form must not just be close,
         // it must reproduce matvec's bits for every (query, row) pair —
-        // exercised across tile boundaries and 4-row tail remainders
+        // exercised across tile boundaries and 4-row tail remainders.
+        // This runs against the dispatched entry points, so it pins the
+        // contract on whichever backend is live (scalar or avx2).
         let mut rng = Rng::new(7);
         for (rows, d, len) in [(1usize, 4usize, 1usize), (7, 8, 3), (64, 16, 5), (131, 32, 9)] {
             let m = randv(&mut rng, rows * d);
@@ -408,6 +806,16 @@ mod tests {
         nearest_rows(&dict, 8, 4, &keys, 1, &mut idx, &mut sim);
         assert_eq!(idx[0], 99);
         assert_eq!(sim[0], 1e9);
+    }
+
+    #[test]
+    fn backend_report_is_consistent_with_build() {
+        let b = backend();
+        if cfg!(feature = "simd") {
+            assert!(b == "avx2" || b == "scalar");
+        } else {
+            assert_eq!(b, "scalar");
+        }
     }
 
     #[test]
@@ -471,5 +879,134 @@ mod tests {
         // masked row contributes nothing; (1+3)/2, (2+4)/2 after /z
         assert!((out[0] / z - 2.0).abs() < 1e-6);
         assert!((out[1] / z - 3.0).abs() < 1e-6);
+    }
+}
+
+/// Tolerance-mode test family for the SIMD backend. FMA contracts the
+/// multiply-add rounding and the 8-lane reduction reassociates the sum,
+/// so the AVX2 path is held to a documented epsilon against the scalar
+/// reference instead of bit-equality:
+///
+/// ```text
+/// |simd - scalar| <= EPS_REL * (1 + |scalar|),   EPS_REL = 1e-4
+/// ```
+///
+/// Sizes deliberately include odd dims (d not a multiple of the 8-float
+/// lane width or the 32-float unroll) and row counts below one
+/// [`SLOT_BLOCK`] tile, so every remainder path is exercised. On a CPU
+/// without AVX2 the dispatched calls fall back to scalar and these
+/// assertions hold trivially.
+#[cfg(all(test, feature = "simd", target_arch = "x86_64"))]
+mod simd_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const EPS_REL: f32 = 1e-4;
+
+    fn close(got: f32, want: f32) -> bool {
+        (got - want).abs() <= EPS_REL * (1.0 + want.abs())
+    }
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    const DIMS: [usize; 10] = [1, 3, 7, 8, 9, 17, 31, 33, 64, 100];
+    const ROWS: [usize; 7] = [1, 2, 3, 5, 63, 64, 130];
+
+    #[test]
+    fn simd_dot_matches_scalar_within_eps() {
+        let mut rng = Rng::new(21);
+        for n in [0usize, 1, 3, 7, 8, 9, 31, 32, 33, 100, 257] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let (got, want) = (dot(&a, &b), scalar::dot(&a, &b));
+            assert!(close(got, want), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn simd_dot_i8_matches_scalar_within_eps() {
+        let mut rng = Rng::new(22);
+        for n in [1usize, 5, 7, 8, 9, 63, 64, 65, 129] {
+            let row: Vec<i8> = (0..n).map(|_| (rng.normal() * 50.0) as i8).collect();
+            let x = randv(&mut rng, n);
+            let (got, want) = (dot_i8(&row, 0.021, &x), scalar::dot_i8(&row, 0.021, &x));
+            assert!(close(got, want), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn simd_matvec_matches_scalar_within_eps() {
+        let mut rng = Rng::new(23);
+        for &rows in &ROWS {
+            for &d in &DIMS {
+                let m = randv(&mut rng, rows * d);
+                let x = randv(&mut rng, d);
+                let mut got = vec![0.0f32; rows];
+                let mut want = vec![0.0f32; rows];
+                matvec(&m, rows, d, &x, &mut got);
+                scalar::matvec(&m, rows, d, &x, &mut want);
+                for r in 0..rows {
+                    assert!(close(got[r], want[r]), "rows={rows} d={d} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matmul_rows_matches_scalar_within_eps() {
+        let mut rng = Rng::new(24);
+        for (rows, d, len) in [(1usize, 3usize, 2usize), (7, 9, 3), (63, 17, 5), (130, 33, 4)] {
+            let m = randv(&mut rng, rows * d);
+            let xs = randv(&mut rng, len * d);
+            let mut got = vec![0.0f32; len * rows];
+            let mut want = vec![0.0f32; len * rows];
+            matmul_rows(&m, rows, d, &xs, len, &mut got);
+            scalar::matmul_rows(&m, rows, d, &xs, len, &mut want);
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(close(g, w), "rows={rows} d={d} flat={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_axpy_rows_matches_scalar_within_eps() {
+        let mut rng = Rng::new(25);
+        for &rows in &ROWS {
+            for &d in &DIMS {
+                let m = randv(&mut rng, rows * d);
+                let mut w = randv(&mut rng, rows);
+                w[0] = 0.0; // exercise the zero-weight skip
+                let mut got = vec![0.25f32; d];
+                let mut want = got.clone();
+                axpy_rows(&m, rows, d, &w, &mut got);
+                scalar::axpy_rows(&m, rows, d, &w, &mut want);
+                for j in 0..d {
+                    assert!(close(got[j], want[j]), "rows={rows} d={d} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_nearest_rows_matches_scalar_within_eps() {
+        let mut rng = Rng::new(26);
+        for (n, d, len) in [(1usize, 3usize, 2usize), (5, 9, 3), (63, 17, 7), (130, 33, 5)] {
+            let dict = randv(&mut rng, n * d);
+            let keys = randv(&mut rng, len * d);
+            let mut idx = vec![0usize; len];
+            let mut sim = vec![f32::NEG_INFINITY; len];
+            let mut sidx = vec![0usize; len];
+            let mut ssim = vec![f32::NEG_INFINITY; len];
+            nearest_rows(&dict, n, d, &keys, len, &mut idx, &mut sim);
+            scalar::nearest_rows(&dict, n, d, &keys, len, &mut sidx, &mut ssim);
+            for i in 0..len {
+                // indices may break FP near-ties differently; the chosen
+                // similarity value must agree within epsilon
+                assert!(idx[i] < n);
+                assert!(close(sim[i], ssim[i]), "n={n} d={d} key={i}");
+            }
+        }
     }
 }

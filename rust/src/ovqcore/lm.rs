@@ -33,8 +33,8 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::kernels;
 use super::mixer::{LayerStat, Scratch, SeqMixer};
+use super::quant::QuantTensor;
 use super::snapshot;
 use super::stack::{init_matrix, mixer_seed, LayerStack, StackConfig};
 use crate::util::rng::Rng;
@@ -165,8 +165,11 @@ impl GenCore {
 pub struct LmModel {
     cfg: LmConfig,
     init_seed: u64,
-    /// `[vocab, d_model]` row-major — used for both embed and unembed
-    embed: Vec<f32>,
+    /// `[vocab, d_model]` row-major — used for both embed and unembed.
+    /// Stored in the stack's quant format (it is by far the largest cold
+    /// tensor in an LM session); logits come out of the fused
+    /// dequant-matvec with f32 accumulation.
+    embed: QuantTensor,
     stack: LayerStack,
     gen: Option<GenCore>,
     /// prompt-slice activation staging, `[len, d_model]` (workspace, not
@@ -175,6 +178,8 @@ pub struct LmModel {
     ws_out: Vec<f32>,
     /// single-token stack output row, `[d_model]`
     ws_row: Vec<f32>,
+    /// single-token dequantized embedding row, `[d_model]`
+    ws_emb: Vec<f32>,
 }
 
 /// Embedding-table seed: derived through [`mixer_seed`] at a layer index
@@ -198,7 +203,12 @@ impl LmModel {
     pub fn new(cfg: LmConfig, init_seed: u64) -> LmModel {
         cfg.validate().expect("invalid lm config");
         let d = cfg.stack.d_model;
-        let embed = init_matrix(embed_seed(init_seed), cfg.vocab, d);
+        let embed = QuantTensor::from_f32(
+            cfg.stack.quant,
+            cfg.vocab,
+            d,
+            &init_matrix(embed_seed(init_seed), cfg.vocab, d),
+        );
         let stack = LayerStack::new(cfg.stack.clone(), init_seed);
         LmModel {
             cfg,
@@ -209,6 +219,7 @@ impl LmModel {
             ws_x: Vec::new(),
             ws_out: Vec::new(),
             ws_row: Vec::new(),
+            ws_emb: Vec::new(),
         }
     }
 
@@ -225,8 +236,9 @@ impl LmModel {
     }
 
     /// Weight bytes (embedding + stack) — model cost, not session state.
+    /// Quantized builds count the stored (compressed) embedding bytes.
     pub fn param_bytes(&self) -> usize {
-        self.embed.len() * 4 + self.stack.param_bytes()
+        self.embed.state_bytes() + self.stack.param_bytes()
     }
 
     /// Start a generation: fresh sampling RNG and history ring. Called by
@@ -266,25 +278,26 @@ impl LmModel {
             // sampled/prompt tokens are always < vocab; clamp rather than
             // panic so a corrupt replay degrades deterministically
             let t = (t as usize).min(cfg.vocab - 1);
-            x[i * d..(i + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+            embed.read_row(t, &mut x[i * d..(i + 1) * d]);
         }
         let out = grow(ws_out, len * d);
         let x = &ws_x[..len * d];
         stack.process_prefill(x, x, x, out, scratch);
-        kernels::matvec(embed, cfg.vocab, d, &ws_out[(len - 1) * d..len * d], logits);
+        embed.matvec(&ws_out[(len - 1) * d..len * d], logits);
     }
 
     /// Absorb one token (write-then-read through the stack) and write the
     /// next-token logits into `logits` (`[vocab]`).
     pub fn step_token(&mut self, tok: TokenId, logits: &mut [f32], scratch: &mut Scratch) {
-        let LmModel { cfg, embed, stack, ws_row, .. } = self;
+        let LmModel { cfg, embed, stack, ws_row, ws_emb, .. } = self;
         let d = cfg.stack.d_model;
         let t = (tok as usize).min(cfg.vocab - 1);
-        let row = &embed[t * d..(t + 1) * d];
+        embed.read_row(t, grow(ws_emb, d));
+        let row = &ws_emb[..d];
         stack.write(row, row);
         let out = grow(ws_row, d);
         stack.read(row, out, scratch);
-        kernels::matvec(embed, cfg.vocab, d, &ws_row[..d], logits);
+        embed.matvec(&ws_row[..d], logits);
     }
 
     /// Rebuild from a [`snapshot::save`] payload: config + seed are read
@@ -313,7 +326,14 @@ impl LmModel {
         // the embedding bound BEFORE the table is regenerated — a corrupt
         // vocab must err cleanly, never demand a wild allocation
         cfg.validate()?;
-        let embed = init_matrix(embed_seed(init_seed), vocab, cfg.stack.d_model);
+        // regenerated from the seed, then requantized into the stack's
+        // quant mode — deterministic, so the refreeze stays byte-equal
+        let embed = QuantTensor::from_f32(
+            cfg.stack.quant,
+            vocab,
+            cfg.stack.d_model,
+            &init_matrix(embed_seed(init_seed), vocab, cfg.stack.d_model),
+        );
         Ok(LmModel {
             cfg,
             init_seed,
@@ -323,6 +343,7 @@ impl LmModel {
             ws_x: Vec::new(),
             ws_out: Vec::new(),
             ws_row: Vec::new(),
+            ws_emb: Vec::new(),
         })
     }
 }
@@ -415,6 +436,7 @@ impl SeqMixer for LmModel {
 mod tests {
     use super::*;
     use crate::ovqcore::memstate::MixerKind;
+    use crate::ovqcore::quant::QuantMode;
 
     fn small_cfg() -> LmConfig {
         LmConfig::new(
@@ -562,6 +584,50 @@ mod tests {
         assert!(m.gen().is_none());
         let lean = snapshot::save(&m);
         assert!(lean.len() < blob.len());
+    }
+
+    #[test]
+    fn quantized_lm_runs_shrinks_and_refreezes_bit_exactly() {
+        // lossy modes: the model stays usable (finite logits, both decode
+        // paths agree bitwise since both read the same stored rows), the
+        // param footprint shrinks, and the snapshot refreezes byte-equal
+        // (weights regenerate + requantize deterministically from seed)
+        let prompt = toks(6, 17, 24);
+        let f32_params = LmModel::new(small_cfg(), 11).param_bytes();
+        let mut scratch = Scratch::new();
+        for quant in [QuantMode::F16, QuantMode::I8] {
+            let mut cfg = small_cfg();
+            cfg.stack = cfg.stack.with_quant(quant);
+            let mut m = LmModel::new(cfg.clone(), 11);
+            let mut logits = vec![0.0f32; 24];
+            m.prefill_tokens(&prompt, &mut logits, &mut scratch);
+            assert!(logits.iter().all(|l| l.is_finite()), "{quant:?}: non-finite logits");
+            assert!(
+                m.param_bytes() < f32_params,
+                "{quant:?}: params did not shrink ({} vs {f32_params})",
+                m.param_bytes()
+            );
+
+            // token-at-a-time matches prefill under quantization too
+            let mut stepped = LmModel::new(cfg, 11);
+            let mut l_step = vec![0.0f32; 24];
+            for &t in &prompt {
+                stepped.step_token(t, &mut l_step, &mut scratch);
+            }
+            for i in 0..24 {
+                assert_eq!(
+                    logits[i].to_bits(),
+                    l_step[i].to_bits(),
+                    "{quant:?}: stepped diverged at {i}"
+                );
+            }
+
+            m.flush();
+            let blob = snapshot::save(&m);
+            let thawed = snapshot::restore(&blob).expect("quantized lm blob must thaw");
+            assert_eq!(thawed.state_bytes(), m.state_bytes());
+            assert_eq!(snapshot::save(thawed.as_ref()), blob, "{quant:?}: refreeze differs");
+        }
     }
 
     #[test]

@@ -16,6 +16,7 @@ use super::kvcache::KvCache;
 use super::linear_attn::LinearAttnState;
 use super::mixer::SeqMixer;
 use super::ovq::{OvqConfig, OvqState};
+use super::quant::QuantMode;
 use super::vq::VqState;
 use crate::util::rng::Rng;
 
@@ -96,17 +97,26 @@ impl MixerKind {
         }
     }
 
-    /// State bytes per layer at context length t.
+    /// State bytes per layer at context length t (f32 storage).
     pub fn state_bytes(&self, g: MixerGeom, t: usize) -> usize {
+        self.state_bytes_quant(g, t, QuantMode::None)
+    }
+
+    /// State bytes per layer at context length t with the cold dictionary
+    /// tensors held in `quant` storage. Only the dictionary kinds (OVQ,
+    /// VQ) have cold tensors; KV caches and the dense recurrent states
+    /// are hot (rewritten every token) and stay f32 in every mode.
+    pub fn state_bytes_quant(&self, g: MixerGeom, t: usize, quant: QuantMode) -> usize {
         let hd4 = g.heads * g.d_head * 4;
         match *self {
             MixerKind::FullAttention => 2 * t * hd4,
             MixerKind::SlidingWindow { window } => 2 * t.min(window) * hd4,
             MixerKind::Ovq { n_max } => {
                 let n_t = super::growth_n_t(t, n_max);
-                2 * n_t * hd4 + n_t * g.heads * 4 // D_k + D_v + counts
+                // D_k + D_v rows in stored format + f32 counts, per head
+                g.heads * (2 * n_t * quant.row_bytes(g.d_head) + n_t * 4)
             }
-            MixerKind::Vq { n } => 2 * n * hd4 + n * g.heads * 4,
+            MixerKind::Vq { n } => g.heads * (2 * n * quant.row_bytes(g.d_head) + n * 4),
             MixerKind::LinearAttention => {
                 g.heads * (g.d_head * g.d_head + g.d_head) * 4
             }
@@ -135,13 +145,27 @@ impl MixerKind {
     /// for, through the unified [`SeqMixer`] interface. `chunk` is the OVQ
     /// chunk length; `seed` seeds the VQ baseline's pretrained dictionary.
     pub fn build(&self, d_head: usize, chunk: usize, seed: u64) -> Box<dyn SeqMixer> {
+        self.build_quant(d_head, chunk, seed, QuantMode::None)
+    }
+
+    /// [`MixerKind::build`] with the cold dictionary tensors held in
+    /// `quant` storage (a no-op for the non-dictionary kinds).
+    pub fn build_quant(
+        &self,
+        d_head: usize,
+        chunk: usize,
+        seed: u64,
+        quant: QuantMode,
+    ) -> Box<dyn SeqMixer> {
         match *self {
             MixerKind::FullAttention => Box::new(KvCache::new(d_head)),
             MixerKind::SlidingWindow { window } => {
                 Box::new(KvCache::with_window(d_head, window))
             }
             MixerKind::Ovq { n_max } => {
-                Box::new(OvqState::new(OvqConfig::new(d_head, n_max, chunk)))
+                let mut cfg = OvqConfig::new(d_head, n_max, chunk);
+                cfg.quant = quant;
+                Box::new(OvqState::new(cfg))
             }
             MixerKind::Vq { n } => {
                 // unit-norm pretrained key dictionary (the Lingle setup)
@@ -156,7 +180,7 @@ impl MixerKind {
                     let norm = norm.sqrt().max(1e-12);
                     row.iter_mut().for_each(|x| *x /= norm);
                 }
-                Box::new(VqState::new(d_head, dk))
+                Box::new(VqState::with_quant(d_head, dk, quant))
             }
             MixerKind::LinearAttention => Box::new(LinearAttnState::new(d_head, d_head)),
             MixerKind::Gdn => Box::new(GdnState::new(d_head)),
@@ -312,6 +336,52 @@ mod tests {
                 kind,
                 m.kind_name()
             );
+        }
+    }
+
+    #[test]
+    fn quant_accounting_matches_live_mixers_and_i8_shrinks() {
+        // same invariant, per quant mode: the analytic state_bytes_quant
+        // formula must equal the live machine's state_bytes() EXACTLY for
+        // every storage mode — and the i8 OVQ dictionary must come in at
+        // least 3.5x smaller than f32 (the acceptance criterion; at
+        // d_head=64 the exact ratio is 516/140 ≈ 3.69x).
+        use crate::util::rng::Rng;
+        let (d, chunk, t) = (64usize, 32usize, 512usize);
+        let g1 = MixerGeom { heads: 1, d_head: d };
+        let kinds = [MixerKind::Ovq { n_max: 128 }, MixerKind::Vq { n: 48 }];
+        let modes = [QuantMode::None, QuantMode::F16, QuantMode::I8];
+        for kind in kinds {
+            let mut per_mode = Vec::new();
+            for quant in modes {
+                let mut rng = Rng::new(13);
+                let mut m = kind.build_quant(d, chunk, 7, quant);
+                for _ in 0..t {
+                    let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    m.write(&k, &v);
+                }
+                m.flush();
+                assert_eq!(
+                    m.state_bytes(),
+                    kind.state_bytes_quant(g1, t, quant),
+                    "quant accounting drift for {kind:?} / {quant:?}"
+                );
+                per_mode.push(m.state_bytes());
+            }
+            let shrink = per_mode[0] as f64 / per_mode[2] as f64;
+            assert!(shrink >= 3.5, "{kind:?}: i8 shrink {shrink:.2}x < 3.5x");
+            assert!(per_mode[1] < per_mode[0], "{kind:?}: f16 must shrink");
+        }
+        // the non-dictionary kinds are quant-invariant by definition
+        for kind in [MixerKind::FullAttention, MixerKind::LinearAttention, MixerKind::Gdn] {
+            for quant in modes {
+                assert_eq!(
+                    kind.state_bytes_quant(g1, 256, quant),
+                    kind.state_bytes(g1, 256),
+                    "{kind:?} must not depend on quant mode"
+                );
+            }
         }
     }
 }

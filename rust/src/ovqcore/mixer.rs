@@ -14,6 +14,7 @@
 //! rust/tests/golden.rs holds the chunked-vs-streaming property test.
 
 use super::kernels;
+use super::quant::QuantTensor;
 
 /// Reusable scratch for [`SeqMixer::read`]/[`SeqMixer::process_chunk`].
 /// Callers allocate one and pass it to every call, eliminating the
@@ -247,12 +248,17 @@ pub trait SeqMixer: Send {
 /// `out = softmax(beta * q . Dk^T + ln(counts)) . Dv` over slots with
 /// counts > 0, optionally extended by `extra` visible (k, v) rows (the
 /// in-chunk prefix, bias-free). Returns nothing; `out` is normalized in
-/// place. All heavy loops go through the blocked kernels.
+/// place. All heavy loops go through the blocked kernels; the
+/// dictionaries arrive as [`QuantTensor`]s, whose `None` mode delegates
+/// to the raw kernels verbatim (bit-identical to the pre-quant path) and
+/// whose lossy modes run fused dequant-dot sweeps. The pending-tail
+/// `extra` rows are always plain f32 — only the cold dictionary
+/// quantizes.
 #[allow(clippy::too_many_arguments)]
 pub fn dict_softmax_read(
     q: &[f32],
-    dk: &[f32],
-    dv: &[f32],
+    dk: &QuantTensor,
+    dv: &QuantTensor,
     counts: &[f32],
     n: usize,
     d: usize,
@@ -263,10 +269,11 @@ pub fn dict_softmax_read(
     out: &mut [f32],
     scratch: &mut Scratch,
 ) {
+    debug_assert!(dk.rows() == n && dk.d() == d);
     {
         let (logits, _) = scratch.logit_buffers(n + extra_len);
         // slot similarities: q . Dk^T (bias applied in the finish)
-        kernels::matvec(dk, n, d, q, logits);
+        dk.matvec(q, logits);
     }
     let (logits, weights) = scratch.logit_buffers(n + extra_len);
     dict_softmax_finish(
@@ -284,7 +291,7 @@ pub fn dict_softmax_read(
 #[allow(clippy::too_many_arguments)]
 pub fn dict_softmax_finish(
     q: &[f32],
-    dv: &[f32],
+    dv: &QuantTensor,
     counts: &[f32],
     n: usize,
     d: usize,
@@ -296,6 +303,7 @@ pub fn dict_softmax_finish(
     weights: &mut [f32],
     out: &mut [f32],
 ) {
+    debug_assert!(dv.rows() == n && dv.d() == d);
     let total = n + extra_len;
     out.iter_mut().for_each(|o| *o = 0.0);
     if total == 0 {
@@ -325,7 +333,7 @@ pub fn dict_softmax_finish(
         return;
     }
 
-    let mut z = kernels::softmax_accumulate(&logits[..n], dv, n, d, m, &mut weights[..n], out);
+    let mut z = dv.softmax_accumulate(&logits[..n], m, &mut weights[..n], out);
     z += kernels::softmax_accumulate(
         &logits[n..],
         extra_v,
@@ -361,33 +369,43 @@ mod tests {
         assert_eq!(s.idx_buf(3).len(), 3);
     }
 
+    use crate::ovqcore::quant::{QuantMode, QuantTensor};
+
     #[test]
     fn dict_read_is_convex_and_count_biased() {
-        // two active slots with equal similarity: counts decide the mix
+        // two active slots with equal similarity: counts decide the mix —
+        // and the invariant must hold in every dictionary storage mode
+        // (the lossy modes represent 0/1/3 exactly)
         let d = 4;
-        let dk = vec![0.0f32; 2 * d]; // zero keys -> equal sims
-        let mut dv = vec![0.0f32; 2 * d];
-        dv[..d].iter_mut().for_each(|x| *x = 1.0);
-        dv[d..].iter_mut().for_each(|x| *x = 3.0);
-        let counts = [3.0f32, 1.0];
-        let q = vec![1.0f32; d];
-        let mut out = vec![0.0f32; d];
-        let mut scratch = Scratch::new();
-        dict_softmax_read(&q, &dk, &dv, &counts, 2, d, 8.0, &[], &[], 0, &mut out, &mut scratch);
-        // weights are 3/4 and 1/4 -> 0.75*1 + 0.25*3 = 1.5
-        for &o in &out {
-            assert!((o - 1.5).abs() < 1e-5, "{o}");
+        for mode in [QuantMode::None, QuantMode::F16, QuantMode::I8] {
+            let dk = QuantTensor::new(mode, 2, d); // zero keys -> equal sims
+            let mut dvf = vec![0.0f32; 2 * d];
+            dvf[..d].iter_mut().for_each(|x| *x = 1.0);
+            dvf[d..].iter_mut().for_each(|x| *x = 3.0);
+            let dv = QuantTensor::from_f32(mode, 2, d, &dvf);
+            let counts = [3.0f32, 1.0];
+            let q = vec![1.0f32; d];
+            let mut out = vec![0.0f32; d];
+            let mut scratch = Scratch::new();
+            dict_softmax_read(
+                &q, &dk, &dv, &counts, 2, d, 8.0, &[], &[], 0, &mut out, &mut scratch,
+            );
+            // weights are 3/4 and 1/4 -> 0.75*1 + 0.25*3 = 1.5
+            for &o in &out {
+                assert!((o - 1.5).abs() < 1e-4, "{mode:?}: {o}");
+            }
         }
     }
 
     #[test]
     fn dict_read_empty_state_is_zero() {
+        let empty = QuantTensor::new(QuantMode::None, 0, 4);
         let mut out = vec![7.0f32; 4];
         let mut scratch = Scratch::new();
         dict_softmax_read(
             &[1.0; 4],
-            &[],
-            &[],
+            &empty,
+            &empty,
             &[],
             0,
             4,
@@ -405,14 +423,15 @@ mod tests {
     fn dict_read_sees_extra_rows() {
         // empty dictionary, one visible chunk row: output == that value
         let d = 4;
+        let empty = QuantTensor::new(QuantMode::None, 0, d);
         let k = vec![0.5f32; d];
         let v = vec![2.0f32; d];
         let mut out = vec![0.0f32; d];
         let mut scratch = Scratch::new();
         dict_softmax_read(
             &[1.0; d],
-            &[],
-            &[],
+            &empty,
+            &empty,
             &[],
             0,
             d,

@@ -36,6 +36,7 @@ pub mod lm;
 pub mod memstate;
 pub mod mixer;
 pub mod ovq;
+pub mod quant;
 pub mod snapshot;
 pub mod stack;
 pub mod vq;

@@ -18,8 +18,8 @@
 use anyhow::Result;
 
 use super::growth_n_new;
-use super::kernels;
 use super::mixer::{dict_softmax_finish, dict_softmax_read, Scratch, SeqMixer};
+use super::quant::{QuantMode, QuantTensor};
 use super::snapshot;
 
 #[derive(Debug, Clone)]
@@ -34,6 +34,9 @@ pub struct OvqConfig {
     pub rand_assign: bool,
     /// horizon used by the linear-growth ablation to spread centroids
     pub linear_growth_chunks: usize,
+    /// storage format for the cold dictionary tensors (dk/dv); the hot
+    /// pending tail and counts stay f32
+    pub quant: QuantMode,
 }
 
 impl OvqConfig {
@@ -47,6 +50,7 @@ impl OvqConfig {
             linear_growth: false,
             rand_assign: false,
             linear_growth_chunks: 64,
+            quant: QuantMode::None,
         }
     }
 }
@@ -62,6 +66,10 @@ struct UpdateScratch {
     assign: Vec<usize>,
     slot_sums: Vec<f32>,
     touched: Vec<usize>,
+    /// merge staging rows — centroids are dequantized here, updated in
+    /// f32, then written back (one requant per touched slot per chunk)
+    row_k: Vec<f32>,
+    row_v: Vec<f32>,
 }
 
 /// The OVQ memory state. Dictionary storage is allocated lazily, growing
@@ -72,10 +80,11 @@ struct UpdateScratch {
 #[derive(Debug, Clone)]
 pub struct OvqState {
     pub cfg: OvqConfig,
-    /// [n_active, d] row-major key centroids (grows to [n_max, d])
-    pub dk: Vec<f32>,
-    /// [n_active, d] value centroids
-    pub dv: Vec<f32>,
+    /// [n_active, d] row-major key centroids (grows to [n_max, d]),
+    /// stored in `cfg.quant` format
+    pub dk: QuantTensor,
+    /// [n_active, d] value centroids, stored in `cfg.quant` format
+    pub dv: QuantTensor,
     /// per-slot assignment counts, one per allocated slot
     pub counts: Vec<f32>,
     pub n_active: usize,
@@ -93,10 +102,11 @@ impl OvqState {
     pub fn new(cfg: OvqConfig) -> OvqState {
         let d = cfg.d;
         let chunk = cfg.chunk;
+        let quant = cfg.quant;
         OvqState {
             cfg,
-            dk: Vec::new(),
-            dv: Vec::new(),
+            dk: QuantTensor::new(quant, 0, d),
+            dv: QuantTensor::new(quant, 0, d),
             counts: Vec::new(),
             n_active: 0,
             t: 0,
@@ -132,12 +142,15 @@ impl OvqState {
         cfg.linear_growth = r.bool()?;
         cfg.rand_assign = r.bool()?;
         cfg.linear_growth_chunks = r.usize()?;
+        cfg.quant = super::quant::QuantMode::from_tag(r.u8()?)?;
         let mut st = OvqState::new(cfg);
         st.n_active = r.usize()?;
         st.t = r.usize()?;
         st.chunk_idx = r.usize()?;
-        st.dk = r.f32s()?;
-        st.dv = r.f32s()?;
+        // the dictionaries thaw in their stored form — a quantized
+        // snapshot is never re-quantized on restore
+        st.dk = QuantTensor::load(r)?;
+        st.dv = QuantTensor::load(r)?;
         st.counts = r.f32s()?;
         st.pending_len = r.usize()?;
         st.pending_k = r.f32s()?;
@@ -145,8 +158,12 @@ impl OvqState {
         // saturating: n_active/pending_len come from the blob, so the
         // consistency check itself must not overflow in debug builds
         anyhow::ensure!(
-            st.dk.len() == st.n_active.saturating_mul(st.cfg.d)
-                && st.dv.len() == st.n_active.saturating_mul(st.cfg.d)
+            st.dk.rows() == st.n_active
+                && st.dk.d() == st.cfg.d
+                && st.dk.mode() == st.cfg.quant
+                && st.dv.rows() == st.n_active
+                && st.dv.d() == st.cfg.d
+                && st.dv.mode() == st.cfg.quant
                 && st.counts.len() == st.n_active
                 && st.pending_k.len() == st.pending_len.saturating_mul(st.cfg.d)
                 && st.pending_v.len() == st.pending_len.saturating_mul(st.cfg.d),
@@ -173,8 +190,8 @@ impl OvqState {
         let n = self.n_active;
         dict_softmax_read(
             q,
-            &self.dk[..n * d],
-            &self.dv[..n * d],
+            &self.dk,
+            &self.dv,
             &self.counts[..n],
             n,
             d,
@@ -206,15 +223,7 @@ impl OvqState {
         upd.best_idx.resize(len, 0);
         upd.best_sim.clear();
         upd.best_sim.resize(len, f32::NEG_INFINITY);
-        kernels::nearest_rows(
-            &self.dk[..self.n_active * d],
-            self.n_active,
-            d,
-            keys,
-            len,
-            &mut upd.best_idx,
-            &mut upd.best_sim,
-        );
+        self.dk.nearest_rows(keys, len, &mut upd.best_idx, &mut upd.best_sim);
 
         // growth count for this chunk
         let n_new = if self.cfg.linear_growth {
@@ -252,8 +261,8 @@ impl OvqState {
         // allocate storage for the newly claimed slots (lazy growth: the
         // dictionary holds exactly the active rows, capped at n_max)
         let new_total = self.n_active + n_new;
-        self.dk.resize(new_total * d, 0.0);
-        self.dv.resize(new_total * d, 0.0);
+        self.dk.resize_rows(new_total);
+        self.dv.resize_rows(new_total);
         self.counts.resize(new_total, 0.0);
 
         // assignments: new items claim fresh slots in position order
@@ -296,26 +305,36 @@ impl OvqState {
                 sv[j] += values[i * d + j];
             }
         }
+        // centroid rows are staged through f32 buffers: dequantize, merge
+        // in f32, requantize on write-back. For the f32 passthrough mode
+        // this is a copy-in/copy-out of the same arithmetic, bit-identical
+        // to the in-place update it replaces.
+        upd.row_k.resize(d, 0.0);
+        upd.row_v.resize(d, 0.0);
         for (ti, &s) in upd.touched.iter().enumerate() {
             let c_old = self.counts[s];
             let cc = cc[ti];
             let sk = &sum_k[ti * d..(ti + 1) * d];
             let sv = &sum_v[ti * d..(ti + 1) * d];
+            self.dk.read_row(s, &mut upd.row_k);
+            self.dv.read_row(s, &mut upd.row_v);
             match self.cfg.const_lr {
                 Some(lr) if c_old > 0.0 => {
                     for j in 0..d {
-                        self.dk[s * d + j] += lr * (sk[j] - cc * self.dk[s * d + j]);
-                        self.dv[s * d + j] += lr * (sv[j] - cc * self.dv[s * d + j]);
+                        upd.row_k[j] += lr * (sk[j] - cc * upd.row_k[j]);
+                        upd.row_v[j] += lr * (sv[j] - cc * upd.row_v[j]);
                     }
                 }
                 _ => {
                     let denom = c_old + cc;
                     for j in 0..d {
-                        self.dk[s * d + j] = (c_old * self.dk[s * d + j] + sk[j]) / denom;
-                        self.dv[s * d + j] = (c_old * self.dv[s * d + j] + sv[j]) / denom;
+                        upd.row_k[j] = (c_old * upd.row_k[j] + sk[j]) / denom;
+                        upd.row_v[j] = (c_old * upd.row_v[j] + sv[j]) / denom;
                     }
                 }
             }
+            self.dk.write_row(s, &upd.row_k);
+            self.dv.write_row(s, &upd.row_v);
             self.counts[s] = c_old + cc;
         }
 
@@ -341,9 +360,12 @@ impl SeqMixer for OvqState {
         self.t + self.pending_len
     }
 
-    /// Live state: active dictionary rows + counts + the staged chunk tail.
+    /// Live state: active dictionary rows (in their stored format) +
+    /// f32 counts + the staged f32 chunk tail.
     fn state_bytes(&self) -> usize {
-        (2 * self.n_active * self.cfg.d + self.n_active) * 4
+        self.dk.state_bytes()
+            + self.dv.state_bytes()
+            + self.n_active * 4
             + 2 * self.pending_len * self.cfg.d * 4
     }
 
@@ -413,14 +435,7 @@ impl SeqMixer for OvqState {
             if buf.len() < take * n {
                 buf.resize(take * n, 0.0);
             }
-            kernels::matmul_rows(
-                &self.dk[..n * d],
-                n,
-                d,
-                &queries[i * d..(i + take) * d],
-                take,
-                buf,
-            );
+            self.dk.matmul_rows(&queries[i * d..(i + take) * d], take, buf);
             for t in 0..take {
                 let upto = base + t + 1;
                 let total = n + upto;
@@ -433,7 +448,7 @@ impl SeqMixer for OvqState {
                 logits[..n].copy_from_slice(&buf[t * n..(t + 1) * n]);
                 dict_softmax_finish(
                     &queries[(i + t) * d..(i + t + 1) * d],
-                    &self.dv[..n * d],
+                    &self.dv,
                     &self.counts[..n],
                     n,
                     d,
@@ -473,11 +488,12 @@ impl SeqMixer for OvqState {
         w.bool(self.cfg.linear_growth);
         w.bool(self.cfg.rand_assign);
         w.usize(self.cfg.linear_growth_chunks);
+        w.u8(self.cfg.quant.tag());
         w.usize(self.n_active);
         w.usize(self.t);
         w.usize(self.chunk_idx);
-        w.f32s(&self.dk);
-        w.f32s(&self.dv);
+        self.dk.save(w);
+        self.dv.save(w);
         w.f32s(&self.counts);
         w.usize(self.pending_len);
         w.f32s(&self.pending_k);
@@ -539,16 +555,22 @@ mod tests {
 
     #[test]
     fn output_is_convex_combination() {
-        // all values equal => output equals that value
-        let mut st = OvqState::new(OvqConfig::new(4, 32, 8));
-        let mut rng = Rng::new(3);
-        for _ in 0..4 {
-            let k = rand_vec(&mut rng, 8 * 4);
-            let v = vec![2.5f32; 8 * 4];
-            let q = rand_vec(&mut rng, 8 * 4);
-            let out = process_chunk_vec(&mut st, &q, &k, &v);
-            for &o in &out {
-                assert!((o - 2.5).abs() < 1e-4, "o={o}");
+        // all values equal => output equals that value. 2.5 is exactly
+        // representable in every storage mode (f16 trivially; i8 as
+        // q=127, scale=2.5/127), so the invariant holds quantized too.
+        for quant in [QuantMode::None, QuantMode::F16, QuantMode::I8] {
+            let mut cfg = OvqConfig::new(4, 32, 8);
+            cfg.quant = quant;
+            let mut st = OvqState::new(cfg);
+            let mut rng = Rng::new(3);
+            for _ in 0..4 {
+                let k = rand_vec(&mut rng, 8 * 4);
+                let v = vec![2.5f32; 8 * 4];
+                let q = rand_vec(&mut rng, 8 * 4);
+                let out = process_chunk_vec(&mut st, &q, &k, &v);
+                for &o in &out {
+                    assert!((o - 2.5).abs() < 1e-3, "{quant:?}: o={o}");
+                }
             }
         }
     }
@@ -562,10 +584,11 @@ mod tests {
         let k = rand_vec(&mut rng, 8 * 2);
         let v = rand_vec(&mut rng, 8 * 2);
         st.update_chunk(&k, &v);
+        let dk = st.dk.to_f32_vec();
         let mut weighted = vec![0.0f32; 2];
         for s in 0..st.n_active {
             for j in 0..2 {
-                weighted[j] += st.counts[s] * st.dk[s * 2 + j];
+                weighted[j] += st.counts[s] * dk[s * 2 + j];
             }
         }
         let mut total = vec![0.0f32; 2];
@@ -600,10 +623,11 @@ mod tests {
                     }
                 }
                 st.update_chunk(&k, &v);
+                let dk = st.dk.to_f32_vec();
                 let mut w = vec![0.0f64; d];
                 for s in 0..st.n_active {
                     for j in 0..d {
-                        w[j] += (st.counts[s] * st.dk[s * d + j]) as f64;
+                        w[j] += (st.counts[s] * dk[s * d + j]) as f64;
                     }
                 }
                 for j in 0..d {
@@ -634,13 +658,41 @@ mod tests {
         }
         // same growth, different centroids
         assert_eq!(a.n_active, b.n_active);
-        let diff: f32 = a
-            .dk
-            .iter()
-            .zip(&b.dk)
-            .map(|(x, y)| (x - y).abs())
-            .sum();
+        let (adk, bdk) = (a.dk.to_f32_vec(), b.dk.to_f32_vec());
+        let diff: f32 = adk.iter().zip(&bdk).map(|(x, y)| (x - y).abs()).sum();
         assert!(diff > 1e-3, "ablation should change the state");
+    }
+
+    #[test]
+    fn quantized_snapshot_refreezes_bit_exactly_and_shrinks() {
+        // every storage mode: save -> restore -> save is byte-identical
+        // (restore never requantizes), and at d=64 the i8 dictionary
+        // state is >= 3.5x smaller than f32
+        let mut per_mode_bytes = Vec::new();
+        for quant in [QuantMode::None, QuantMode::F16, QuantMode::I8] {
+            let mut cfg = OvqConfig::new(64, 64, 16);
+            cfg.quant = quant;
+            let mut st = OvqState::new(cfg);
+            let mut rng = Rng::new(11);
+            for _ in 0..8 {
+                let k = rand_vec(&mut rng, 16 * 64);
+                let v = rand_vec(&mut rng, 16 * 64);
+                st.update_chunk(&k, &v);
+            }
+            let mut w = snapshot::Writer::new();
+            st.snapshot(&mut w);
+            let blob = w.into_bytes();
+            let mut r = snapshot::Reader::new(&blob);
+            let back = OvqState::from_snapshot(&mut r).unwrap();
+            assert_eq!(r.remaining(), 0, "{quant:?}: trailing bytes");
+            let mut w2 = snapshot::Writer::new();
+            back.snapshot(&mut w2);
+            assert_eq!(w2.into_bytes(), blob, "{quant:?}: refreeze differs");
+            assert_eq!(back.state_bytes(), st.state_bytes());
+            per_mode_bytes.push(st.state_bytes());
+        }
+        assert!(per_mode_bytes[0] as f64 / per_mode_bytes[2] as f64 >= 3.5);
+        assert!(per_mode_bytes[1] < per_mode_bytes[0]);
     }
 
     #[test]

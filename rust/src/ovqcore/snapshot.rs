@@ -39,9 +39,12 @@ use super::vq::VqState;
 /// `b"OVQS"` little-endian.
 pub const MAGIC: u32 = 0x5351_564F;
 /// Format version in the header. v2 added the `"stack"` container frame
-/// (nested per-(layer, head) child blobs); v1 blobs are not accepted —
-/// snapshots are transient session state, never a durable archive.
-pub const VERSION: u16 = 2;
+/// (nested per-(layer, head) child blobs); v3 stores OVQ/VQ dictionaries
+/// as self-describing [`super::quant::QuantTensor`] payloads (quantized
+/// dictionaries serialize in their quantized form) and adds the quant
+/// mode to the stack config. Older blobs are not accepted — snapshots are
+/// transient session state, never a durable archive.
+pub const VERSION: u16 = 3;
 
 /// Typed snapshot failure — the reasons a blob cannot be thawed.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -27,7 +27,7 @@
 //!   session's blob holds only the dynamic per-layer mixer state — the
 //!   byte-accounting contract that makes eviction cheap stays intact.
 //! - **Prefill ≡ decode, bitwise.** The blocked block path runs every
-//!   dense op through [`kernels::matmul_rows`] (bit-identical to the
+//!   dense op through [`super::kernels::matmul_rows`] (bit-identical to the
 //!   per-token `matvec` by construction) and hands each head's panel to
 //!   the mixer's own `process_prefill`; rust/tests/golden.rs compares the
 //!   two paths with `to_bits` equality.
@@ -41,9 +41,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::kernels;
 use super::memstate::MixerKind;
 use super::mixer::{LayerStat, Scratch, SeqMixer};
+use super::quant::{QuantMode, QuantTensor};
 use super::snapshot;
 
 /// RMSNorm epsilon (kept out of the config: one value, everywhere).
@@ -70,6 +70,9 @@ pub struct StackConfig {
     /// (q, k, v) streams feed the heads directly. Requires `layers == 1`
     /// and `heads * d_head == d_model`.
     pub identity: bool,
+    /// storage format for the cold tensors — dense layer weights and the
+    /// head mixers' dictionaries (CLI `--quant {none,f16,i8}`)
+    pub quant: QuantMode,
 }
 
 impl StackConfig {
@@ -92,6 +95,7 @@ impl StackConfig {
             chunk,
             kinds: vec![kind; layers],
             identity: false,
+            quant: QuantMode::None,
         }
     }
 
@@ -114,6 +118,7 @@ impl StackConfig {
             chunk,
             kinds,
             identity: false,
+            quant: QuantMode::None,
         }
     }
 
@@ -129,7 +134,15 @@ impl StackConfig {
             chunk,
             kinds: vec![kind],
             identity: true,
+            quant: QuantMode::None,
         }
+    }
+
+    /// Builder: hold the cold tensors (dense weights, head dictionaries)
+    /// in `quant` storage.
+    pub fn with_quant(mut self, quant: QuantMode) -> StackConfig {
+        self.quant = quant;
+        self
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -249,19 +262,21 @@ fn rmsnorm_row(x: &[f32], w: &[f32], out: &mut [f32]) {
 /// One transformer layer: dense weights + its mixer heads. Weights are
 /// empty in identity mode.
 struct StackLayer {
-    /// q/k/v projections, `[heads * d_head, d_model]` row-major
-    wq: Vec<f32>,
-    wk: Vec<f32>,
-    wv: Vec<f32>,
+    /// q/k/v projections, `[heads * d_head, d_model]` row-major, in the
+    /// config's quant storage (cold: read every token, written never)
+    wq: QuantTensor,
+    wk: QuantTensor,
+    wv: QuantTensor,
     /// output projection, `[d_model, heads * d_head]`
-    wo: Vec<f32>,
-    /// pre-attention / pre-MLP RMSNorm gains, `[d_model]`
+    wo: QuantTensor,
+    /// pre-attention / pre-MLP RMSNorm gains, `[d_model]` — tiny and on
+    /// the accumulation path, always f32
     norm1: Vec<f32>,
     norm2: Vec<f32>,
     /// gated MLP: gate/up `[d_ff, d_model]`, down `[d_model, d_ff]`
-    w_gate: Vec<f32>,
-    w_up: Vec<f32>,
-    w_down: Vec<f32>,
+    w_gate: QuantTensor,
+    w_up: QuantTensor,
+    w_down: QuantTensor,
     heads: Vec<Box<dyn SeqMixer>>,
     /// processing time spent inside this layer, nanoseconds (telemetry,
     /// not state — never serialized)
@@ -273,54 +288,62 @@ impl StackLayer {
         let heads = if build_heads {
             (0..cfg.heads)
                 .map(|h| {
-                    cfg.kinds[layer].build(cfg.d_head, cfg.chunk, mixer_seed(init_seed, layer, h))
+                    cfg.kinds[layer].build_quant(
+                        cfg.d_head,
+                        cfg.chunk,
+                        mixer_seed(init_seed, layer, h),
+                        cfg.quant,
+                    )
                 })
                 .collect()
         } else {
             Vec::with_capacity(cfg.heads)
         };
+        let q = cfg.quant;
         if cfg.identity {
             return StackLayer {
-                wq: Vec::new(),
-                wk: Vec::new(),
-                wv: Vec::new(),
-                wo: Vec::new(),
+                wq: QuantTensor::new(q, 0, 0),
+                wk: QuantTensor::new(q, 0, 0),
+                wv: QuantTensor::new(q, 0, 0),
+                wo: QuantTensor::new(q, 0, 0),
                 norm1: Vec::new(),
                 norm2: Vec::new(),
-                w_gate: Vec::new(),
-                w_up: Vec::new(),
-                w_down: Vec::new(),
+                w_gate: QuantTensor::new(q, 0, 0),
+                w_up: QuantTensor::new(q, 0, 0),
+                w_down: QuantTensor::new(q, 0, 0),
                 heads,
                 busy_ns: 0.0,
             };
         }
         let (d, hd, dff) = (cfg.d_model, cfg.heads * cfg.d_head, cfg.d_ff);
+        let mat = |tag: u64, rows: usize, cols: usize| {
+            QuantTensor::from_f32(q, rows, cols, &init_matrix(weight_seed(init_seed, layer, tag), rows, cols))
+        };
         StackLayer {
-            wq: init_matrix(weight_seed(init_seed, layer, 1), hd, d),
-            wk: init_matrix(weight_seed(init_seed, layer, 2), hd, d),
-            wv: init_matrix(weight_seed(init_seed, layer, 3), hd, d),
-            wo: init_matrix(weight_seed(init_seed, layer, 4), d, hd),
+            wq: mat(1, hd, d),
+            wk: mat(2, hd, d),
+            wv: mat(3, hd, d),
+            wo: mat(4, d, hd),
             norm1: vec![1.0; d],
             norm2: vec![1.0; d],
-            w_gate: init_matrix(weight_seed(init_seed, layer, 5), dff, d),
-            w_up: init_matrix(weight_seed(init_seed, layer, 6), dff, d),
-            w_down: init_matrix(weight_seed(init_seed, layer, 7), d, dff),
+            w_gate: mat(5, dff, d),
+            w_up: mat(6, dff, d),
+            w_down: mat(7, d, dff),
             busy_ns: 0.0,
             heads,
         }
     }
 
+    /// Stored weight bytes (quant-aware) + the f32 norm gains.
     fn param_bytes(&self) -> usize {
-        (self.wq.len()
-            + self.wk.len()
-            + self.wv.len()
-            + self.wo.len()
-            + self.norm1.len()
-            + self.norm2.len()
-            + self.w_gate.len()
-            + self.w_up.len()
-            + self.w_down.len())
-            * 4
+        self.wq.state_bytes()
+            + self.wk.state_bytes()
+            + self.wv.state_bytes()
+            + self.wo.state_bytes()
+            + self.w_gate.state_bytes()
+            + self.w_up.state_bytes()
+            + self.w_down.state_bytes()
+            + (self.norm1.len() + self.norm2.len()) * 4
     }
 
     fn state_bytes(&self) -> usize {
@@ -426,6 +449,7 @@ impl LayerStack {
         let d_head = r.usize()?;
         let chunk = r.usize()?;
         let identity = r.bool()?;
+        let quant = QuantMode::from_tag(r.u8()?)?;
         let init_seed = r.u64()?;
         let t = r.usize()?;
         // bound the shape BEFORE any allocation or weight init — a
@@ -456,7 +480,8 @@ impl LayerStack {
         for _ in 0..layers {
             kinds.push(read_kind(r)?);
         }
-        let cfg = StackConfig { layers, d_model, d_ff, heads, d_head, chunk, kinds, identity };
+        let cfg =
+            StackConfig { layers, d_model, d_ff, heads, d_head, chunk, kinds, identity, quant };
         cfg.validate()?;
         // weights are regenerated from the seed (O(params), the price of
         // keeping eviction blobs proportional to dynamic state); the head
@@ -492,7 +517,7 @@ impl LayerStack {
     }
 
     /// The shared block path: `len` embedding rows through every layer,
-    /// layer-blocked (all dense ops via the tiled [`kernels::matmul_rows`],
+    /// layer-blocked (all dense ops via the tiled [`super::kernels::matmul_rows`],
     /// each head's whole panel through one mixer call). Bit-identical to
     /// the serial per-token loop in both modes.
     fn process_block(
@@ -554,9 +579,9 @@ impl LayerStack {
             }
             // q/k/v projections, one tiled sweep each
             let hn = &ws.h[..len * d];
-            kernels::matmul_rows(&layer.wq, hd, d, hn, len, grow(&mut ws.q, len * hd));
-            kernels::matmul_rows(&layer.wk, hd, d, hn, len, grow(&mut ws.k, len * hd));
-            kernels::matmul_rows(&layer.wv, hd, d, hn, len, grow(&mut ws.v, len * hd));
+            layer.wq.matmul_rows(hn, len, grow(&mut ws.q, len * hd));
+            layer.wk.matmul_rows(hn, len, grow(&mut ws.k, len * hd));
+            layer.wv.matmul_rows(hn, len, grow(&mut ws.v, len * hd));
             // heads: contiguous panels through each mixer
             grow(&mut ws.attn, len * hd);
             for (head, mixer) in layer.heads.iter_mut().enumerate() {
@@ -574,14 +599,7 @@ impl LayerStack {
                 scatter_head(&ws.po[..len * dh], attn, len, hd, head * dh, dh);
             }
             // output projection + residual
-            kernels::matmul_rows(
-                &layer.wo,
-                d,
-                hd,
-                &ws.attn[..len * hd],
-                len,
-                grow(&mut ws.tmp, len * d),
-            );
+            layer.wo.matmul_rows(&ws.attn[..len * hd], len, grow(&mut ws.tmp, len * d));
             for (xj, pj) in ws.x[..len * d].iter_mut().zip(&ws.tmp[..len * d]) {
                 *xj += pj;
             }
@@ -590,33 +608,12 @@ impl LayerStack {
             for i in 0..len {
                 rmsnorm_row(&ws.x[i * d..(i + 1) * d], &layer.norm2, &mut h[i * d..(i + 1) * d]);
             }
-            kernels::matmul_rows(
-                &layer.w_gate,
-                dff,
-                d,
-                &ws.h[..len * d],
-                len,
-                grow(&mut ws.gate, len * dff),
-            );
-            kernels::matmul_rows(
-                &layer.w_up,
-                dff,
-                d,
-                &ws.h[..len * d],
-                len,
-                grow(&mut ws.up, len * dff),
-            );
+            layer.w_gate.matmul_rows(&ws.h[..len * d], len, grow(&mut ws.gate, len * dff));
+            layer.w_up.matmul_rows(&ws.h[..len * d], len, grow(&mut ws.up, len * dff));
             for (gj, uj) in ws.gate[..len * dff].iter_mut().zip(&ws.up[..len * dff]) {
                 *gj = silu(*gj) * uj;
             }
-            kernels::matmul_rows(
-                &layer.w_down,
-                d,
-                dff,
-                &ws.gate[..len * dff],
-                len,
-                grow(&mut ws.tmp, len * d),
-            );
+            layer.w_down.matmul_rows(&ws.gate[..len * dff], len, grow(&mut ws.tmp, len * d));
             for (xj, mj) in ws.x[..len * d].iter_mut().zip(&ws.tmp[..len * d]) {
                 *xj += mj;
             }
@@ -758,6 +755,7 @@ impl SeqMixer for LayerStack {
         w.usize(self.cfg.d_head);
         w.usize(self.cfg.chunk);
         w.bool(self.cfg.identity);
+        w.u8(self.cfg.quant.tag());
         w.u64(self.init_seed);
         w.usize(self.t);
         for kind in &self.cfg.kinds {
@@ -964,6 +962,45 @@ mod tests {
         assert_eq!(stats[1].kind, "sliding_window");
         assert!(stats.iter().all(|s| s.tokens == 24));
         assert!(stats.iter().all(|s| s.busy_ns > 0.0));
+    }
+
+    #[test]
+    fn quantized_stack_runs_and_refreezes_bit_exactly() {
+        // cold-tensor storage end to end at the stack level: lossy modes
+        // produce finite outputs close to f32, param/state bytes shrink,
+        // and snapshot -> restore -> snapshot is byte-identical (weights
+        // regenerate from the seed and requantize deterministically; the
+        // dictionaries thaw in stored form)
+        let mut rng = Rng::new(21);
+        let x = randv(&mut rng, 24 * 8);
+        let mut base = LayerStack::new(small_cfg(2), 7);
+        let want = run_chunks(&mut base, &x, 8);
+        for quant in [QuantMode::F16, QuantMode::I8] {
+            let cfg = small_cfg(2).with_quant(quant);
+            let mut st = LayerStack::new(cfg, 7);
+            let got = run_chunks(&mut st, &x, 8);
+            assert!(got.iter().all(|v| v.is_finite()), "{quant:?}");
+            // same model, lossy weights: outputs track the f32 stack
+            // (loose bound — mixer assignments may flip under quantization,
+            // this guards against blow-ups, not bit drift)
+            let err: f32 = want
+                .iter()
+                .zip(&got)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(err < 5.0, "{quant:?}: max deviation {err} vs f32 stack");
+            assert!(st.param_bytes() < base.param_bytes(), "{quant:?}: params must shrink");
+            st.flush();
+            let blob = snapshot::save(&st);
+            let m = snapshot::restore(&blob).unwrap();
+            assert_eq!(snapshot::save(m.as_ref()), blob, "{quant:?}: refreeze differs");
+            assert_eq!(m.state_bytes(), st.state_bytes());
+        }
+        // i8 weights shrink toward 4x; at these tiny test dims (d=8) the
+        // per-row f32 scales cost relatively more, so expect >= 2.5x
+        let i8_stack = LayerStack::new(small_cfg(2).with_quant(QuantMode::I8), 7);
+        let ratio = base.param_bytes() as f64 / i8_stack.param_bytes() as f64;
+        assert!(ratio >= 2.5, "i8 param shrink only {ratio:.2}x");
     }
 
     #[test]

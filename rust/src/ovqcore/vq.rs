@@ -4,65 +4,92 @@
 
 use anyhow::Result;
 
-use super::kernels;
 use super::mixer::{dict_softmax_finish, dict_softmax_read, Scratch, SeqMixer};
+use super::quant::{QuantMode, QuantTensor};
 use super::snapshot;
 
 #[derive(Debug, Clone)]
 pub struct VqState {
     pub d: usize,
     pub n: usize,
-    /// static pretrained key centroids [n, d] (unit-norm)
-    pub dk: Vec<f32>,
+    /// static pretrained key centroids [n, d] (unit-norm), stored in the
+    /// tensor's quant format
+    pub dk: QuantTensor,
     /// online value centroids [n, d]
-    pub dv: Vec<f32>,
+    pub dv: QuantTensor,
     pub counts: Vec<f32>,
     pub beta: f32,
     /// tokens absorbed
     pub t: usize,
+    /// merge staging row (transient, not snapshotted)
+    row_v: Vec<f32>,
 }
 
 impl VqState {
     pub fn new(d: usize, dk: Vec<f32>) -> VqState {
+        VqState::with_quant(d, dk, QuantMode::None)
+    }
+
+    /// Build with the dictionaries held in `quant` storage (the pretrained
+    /// key dictionary is quantized once here, at load time).
+    pub fn with_quant(d: usize, dk: Vec<f32>, quant: QuantMode) -> VqState {
         let n = dk.len() / d;
         VqState {
             d,
             n,
-            dk,
-            dv: vec![0.0; n * d],
+            dk: QuantTensor::from_f32(quant, n, d, &dk),
+            dv: QuantTensor::new(quant, n, d),
             counts: vec![0.0; n],
             beta: 8.0,
             t: 0,
+            row_v: vec![0.0; d],
         }
+    }
+
+    /// Storage format of the dictionaries.
+    pub fn quant(&self) -> QuantMode {
+        self.dk.mode()
     }
 
     /// Rebuild from a [`snapshot::save`] payload. The pretrained key
     /// dictionary travels with the blob — a restored session does not
-    /// depend on the factory seed that originally built it.
+    /// depend on the factory seed that originally built it — and thaws
+    /// in its stored form (no requantization on restore).
     pub fn from_snapshot(r: &mut snapshot::Reader<'_>) -> Result<VqState> {
         let d = r.usize()?;
         let beta = r.f32()?;
         let t = r.usize()?;
-        let dk = r.f32s()?;
-        let dv = r.f32s()?;
+        let dk = QuantTensor::load(r)?;
+        let dv = QuantTensor::load(r)?;
         let counts = r.f32s()?;
         anyhow::ensure!(
-            d > 0 && dk.len() % d == 0 && dv.len() == dk.len() && counts.len() == dk.len() / d,
+            d > 0
+                && d <= (1 << 16)
+                && dk.d() == d
+                && dv.d() == d
+                && dv.rows() == dk.rows()
+                && dv.mode() == dk.mode()
+                && counts.len() == dk.rows(),
             "vq snapshot has inconsistent shapes"
         );
-        let mut st = VqState::new(d, dk);
-        st.beta = beta;
-        st.t = t;
-        st.dv = dv;
-        st.counts = counts;
-        Ok(st)
+        let n = dk.rows();
+        Ok(VqState {
+            d,
+            n,
+            dk,
+            dv,
+            counts,
+            beta,
+            t,
+            row_v: vec![0.0; d],
+        })
     }
 
     /// Index of the key centroid with maximum inner product (blocked scan).
     pub fn nearest(&self, k: &[f32]) -> usize {
         let mut idx = [0usize];
         let mut sim = [f32::NEG_INFINITY];
-        kernels::nearest_rows(&self.dk, self.n, self.d, k, 1, &mut idx, &mut sim);
+        self.dk.nearest_rows(k, 1, &mut idx, &mut sim);
         idx[0]
     }
 }
@@ -85,7 +112,7 @@ impl SeqMixer for VqState {
     }
 
     fn state_bytes(&self) -> usize {
-        (self.dk.len() + self.dv.len() + self.counts.len()) * 4
+        self.dk.state_bytes() + self.dv.state_bytes() + self.counts.len() * 4
     }
 
     /// Sparse like OVQ: each token touches one value row + one count.
@@ -94,13 +121,17 @@ impl SeqMixer for VqState {
     }
 
     /// Absorb one (k, v): count-weighted mean into the assigned slot.
+    /// The value row is staged through f32 (dequant, merge, requant) —
+    /// a plain copy-in/copy-out for the f32 passthrough mode.
     fn write(&mut self, k: &[f32], v: &[f32]) {
         let s = self.nearest(k);
         let d = self.d;
         let c = self.counts[s];
+        self.dv.read_row(s, &mut self.row_v);
         for j in 0..d {
-            self.dv[s * d + j] = (c * self.dv[s * d + j] + v[j]) / (c + 1.0);
+            self.row_v[j] = (c * self.row_v[j] + v[j]) / (c + 1.0);
         }
+        self.dv.write_row(s, &self.row_v);
         self.counts[s] = c + 1.0;
         self.t += 1;
     }
@@ -154,8 +185,8 @@ impl SeqMixer for VqState {
         let (sims, best) = buf.split_at_mut(len * n);
         let best = &mut best[..len];
         best.iter_mut().for_each(|b| *b = f32::NEG_INFINITY);
-        kernels::nearest_rows(&self.dk, n, d, keys, len, idx, best);
-        kernels::matmul_rows(&self.dk, n, d, queries, len, sims);
+        self.dk.nearest_rows(keys, len, idx, best);
+        self.dk.matmul_rows(queries, len, sims);
         if logits.len() < n {
             logits.resize(n, 0.0);
         }
@@ -167,9 +198,11 @@ impl SeqMixer for VqState {
             // same arithmetic as `write`, minus the per-token search)
             let s = idx[i];
             let c = self.counts[s];
+            self.dv.read_row(s, &mut self.row_v);
             for j in 0..d {
-                self.dv[s * d + j] = (c * self.dv[s * d + j] + values[i * d + j]) / (c + 1.0);
+                self.row_v[j] = (c * self.row_v[j] + values[i * d + j]) / (c + 1.0);
             }
+            self.dv.write_row(s, &self.row_v);
             self.counts[s] = c + 1.0;
             self.t += 1;
             // read: precomputed similarities, current counts/values
@@ -195,8 +228,8 @@ impl SeqMixer for VqState {
         w.usize(self.d);
         w.f32(self.beta);
         w.usize(self.t);
-        w.f32s(&self.dk);
-        w.f32s(&self.dv);
+        self.dk.save(w);
+        self.dv.save(w);
         w.f32s(&self.counts);
     }
 }
@@ -258,6 +291,33 @@ mod tests {
         let mut scratch = Scratch::new();
         st.read(&q, &mut out, &mut scratch);
         assert!(out[0] > 0.5, "count prior should dominate: {}", out[0]);
+    }
+
+    #[test]
+    fn quantized_vq_snapshot_refreezes_bit_exactly() {
+        let mut rng = Rng::new(9);
+        let dk = unit_dict(&mut rng, 16, 64);
+        let mut sizes = Vec::new();
+        for quant in [QuantMode::None, QuantMode::F16, QuantMode::I8] {
+            let mut st = VqState::with_quant(64, dk.clone(), quant);
+            assert_eq!(st.quant(), quant);
+            for _ in 0..32 {
+                let k: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+                st.write(&k, &[0.5; 64]);
+            }
+            let mut w = snapshot::Writer::new();
+            st.snapshot(&mut w);
+            let blob = w.into_bytes();
+            let mut r = snapshot::Reader::new(&blob);
+            let back = VqState::from_snapshot(&mut r).unwrap();
+            assert_eq!(r.remaining(), 0);
+            let mut w2 = snapshot::Writer::new();
+            back.snapshot(&mut w2);
+            assert_eq!(w2.into_bytes(), blob, "{quant:?}: refreeze differs");
+            sizes.push(st.state_bytes());
+        }
+        // d=64: (2*256n + 4n) / (2*68n + 4n) = 516/140 > 3.5
+        assert!(sizes[0] as f64 / sizes[2] as f64 >= 3.5);
     }
 
     #[test]

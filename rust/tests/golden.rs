@@ -77,7 +77,8 @@ fn ovq_chunked_matches_token_by_token() {
     sixteen.flush();
     assert_eq!(one.n_active, sixteen.n_active, "growth must not depend on arrival");
     assert_eq!(one.t, sixteen.t);
-    let sdiff = max_abs_diff(&one.dk, &sixteen.dk).max(max_abs_diff(&one.dv, &sixteen.dv));
+    let sdiff = max_abs_diff(&one.dk.to_f32_vec(), &sixteen.dk.to_f32_vec())
+        .max(max_abs_diff(&one.dv.to_f32_vec(), &sixteen.dv.to_f32_vec()));
     assert!(sdiff < 1e-5, "states diverged: max |Δ| = {sdiff}");
 }
 
