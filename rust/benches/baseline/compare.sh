@@ -9,8 +9,17 @@
 # on name. Against a seeded baseline every shared row gets a signed
 # delta-% column, and each bench ends with a one-line delta summary
 # (mean / best / worst / new-row count) so a PR check log surfaces
-# regressions without downloading the artifact.
+# regressions without downloading the artifact. Under GitHub Actions the
+# per-bench delta summaries are additionally appended to the job summary
+# page ($GITHUB_STEP_SUMMARY), so the trajectory is one click away.
 set -u
+
+# append a line to the workflow job summary when running under Actions
+summarize() {
+    if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+        printf '%s\n' "$1" >>"$GITHUB_STEP_SUMMARY"
+    fi
+}
 
 extract() {
     # one "name tok_per_s" pair per line
@@ -34,7 +43,7 @@ for bench in ovqcore server; do
         continue
     fi
     basepairs=$(extract "$base")
-    extract "$cur" | awk -v basepairs="$basepairs" '
+    report=$(extract "$cur" | awk -v basepairs="$basepairs" '
         BEGIN {
             nb = split(basepairs, lines, "\n")
             for (i = 1; i <= nb; i++) {
@@ -63,6 +72,8 @@ for bench in ovqcore server; do
                     sum / n, best, bname, worst, wname
             if (newrows > 0) printf ", %d new", newrows
             printf " --\n"
-        }'
+        }')
+    printf '%s\n' "$report"
+    summarize "\`$bench\`: $(printf '%s\n' "$report" | sed -n 's/^  -- delta summary: \(.*\) --$/\1/p')"
 done
 exit 0

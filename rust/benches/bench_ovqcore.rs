@@ -344,6 +344,21 @@ fn main() {
             push_row(&mut rows, &name, "kernel", nrows, r.mean_ns, nrows as f64);
         }
 
+        // the decode-read hot path's weighted row fold (GdnState::read and
+        // the linear-attn numerator): out[j] = sum_i x[i] * m[i][j]
+        let w = randv(&mut rng, nrows);
+        let mut outd = vec![0.0f32; d];
+        let r = b.run_throughput("kernel_vecmat_scalar", nrows as f64, "row/s", || {
+            kernels::scalar::vecmat(&w, &m, nrows, d, &mut outd);
+            outd[0]
+        });
+        push_row(&mut rows, "kernel_vecmat_scalar", "kernel", nrows, r.mean_ns, nrows as f64);
+        let r = b.run_throughput("kernel_vecmat_dispatch", nrows as f64, "row/s", || {
+            kernels::vecmat(&w, &m, nrows, d, &mut outd);
+            outd[0]
+        });
+        push_row(&mut rows, "kernel_vecmat_dispatch", "kernel", nrows, r.mean_ns, nrows as f64);
+
         let dots = (batch * nrows) as f64;
         let r = b.run_throughput("kernel_matmul_rows_scalar", dots, "dot/s", || {
             kernels::scalar::matmul_rows(&m, nrows, d, &xs, batch, &mut outm);

@@ -26,15 +26,19 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use super::sampler::{SamplerStack, SamplingParams, StopCriteria};
-use crate::ovqcore::bank::{ring_push, DecodeChunk, ShardBank, StreamStats};
+use crate::ovqcore::bank::{
+    process_packed_prefill, ring_push, unpack_session, DecodeChunk, ShardBank, StreamStats,
+};
 use crate::ovqcore::lm::{LmConfig, LmModel, TokenId};
 use crate::ovqcore::memstate::MixerKind;
-use crate::ovqcore::mixer::{merge_layer_stats, print_layer_split, LayerStat, SeqMixer};
+use crate::ovqcore::mixer::{
+    merge_layer_stats, print_layer_split, LayerStat, PrefillMode, Scratch, SeqMixer,
+};
 use crate::ovqcore::quant::QuantMode;
 use crate::ovqcore::stack::{LayerStack, StackConfig};
 use crate::util::stats;
@@ -88,6 +92,22 @@ pub struct EngineConfig {
     /// instead ([`EngineConfig::for_stack`] mirrors it here so telemetry
     /// reads one place)
     pub quant: QuantMode,
+    /// prefill numerics policy applied to every session
+    /// ([`ShardBank::set_prefill_mode`]). `Exact` (the default) keeps the
+    /// serial, bit-pinned forms; `Chunkwise` opts the scan mixers
+    /// (gdn / linear attention) into their chunkwise-parallel prefill
+    /// forms, whose outputs match serial within a relative tolerance
+    /// (the `--prefill-tolerance` serving mode)
+    pub prefill_mode: PrefillMode,
+    /// intra-request fan-out: idle shard workers replay a long prompt's
+    /// output segments from per-quantum state snapshots while the owner
+    /// advances state through the writes-only path. Outputs stay
+    /// bit-identical to the serial path at any worker count (segmentation
+    /// is always at `prefill_quantum` boundaries). Only bare-mixer
+    /// engines with `threads > 1` actually fan out — stack/LM sessions
+    /// gain nothing from writes-only prefill, so they keep the serial
+    /// path regardless
+    pub prefill_fanout: bool,
 }
 
 impl EngineConfig {
@@ -107,6 +127,8 @@ impl EngineConfig {
             lm: None,
             gen_quantum: 16,
             quant: QuantMode::None,
+            prefill_mode: PrefillMode::Exact,
+            prefill_fanout: true,
         }
     }
 
@@ -162,6 +184,97 @@ enum EngineMsg {
     },
     Evict { session: u64 },
     FlushAll,
+}
+
+/// One fanned-out output segment of a long prompt: replay tokens
+/// `[start, end)` of the prompt against the owner's session-state
+/// snapshot at the segment boundary, and deliver the packed outputs back
+/// to the owner. Segments are independent given their snapshots, so any
+/// idle worker (or the owner itself, stealing at completion time) can
+/// run one.
+struct SegmentTask {
+    /// owner-unique job id (shard in the high bits) — the owner's key
+    /// for stealing back its own unclaimed segments
+    job: u64,
+    /// segment index in prompt order (the merge key)
+    seg: usize,
+    /// [`crate::ovqcore::bank::pack_session`] blob of the session at the
+    /// segment start
+    blob: Arc<Vec<u8>>,
+    chunk: Arc<DecodeChunk>,
+    /// token range [start, end) of the prompt
+    start: usize,
+    end: usize,
+    heads: usize,
+    /// packed row width, heads * d_head
+    hd: usize,
+    /// blobs thaw in Exact mode; the replay re-applies the engine policy
+    mode: PrefillMode,
+    tx: Sender<SegResult>,
+}
+
+struct SegResult {
+    seg: usize,
+    out: Vec<f32>,
+    /// segment compute time, folded into the prompt's telemetry
+    busy_ns: f64,
+}
+
+/// The engine-wide queue of fanned-out prefill segments, shared by every
+/// shard worker. Plain FIFO under one mutex: segments are quantum-sized
+/// (hundreds of microseconds of compute each), so contention on the
+/// queue is negligible next to the work it hands out.
+#[derive(Default)]
+struct PrefillPool {
+    tasks: Mutex<VecDeque<SegmentTask>>,
+}
+
+impl PrefillPool {
+    fn push(&self, t: SegmentTask) {
+        self.tasks.lock().unwrap().push_back(t);
+    }
+
+    fn pop(&self) -> Option<SegmentTask> {
+        self.tasks.lock().unwrap().pop_front()
+    }
+
+    /// Remove one still-unclaimed segment belonging to `job` (owner
+    /// steal-back at completion time).
+    fn steal(&self, job: u64) -> Option<SegmentTask> {
+        let mut q = self.tasks.lock().unwrap();
+        let i = q.iter().position(|t| t.job == job)?;
+        q.remove(i)
+    }
+}
+
+/// Execute one fanned-out segment: thaw the boundary snapshot, re-apply
+/// the engine's prefill mode (blobs always thaw in Exact), replay the
+/// token range through the full blocked prefill, and deliver the packed
+/// outputs. The thawed state is discarded afterwards — the owner shard
+/// advances the real session state through the writes-only path, which
+/// lands on the identical state by the [`SeqMixer::prefill_writes`]
+/// contract. Returns the segment's compute time.
+fn run_segment(task: SegmentTask, scratch: &mut Scratch, panel: &mut Vec<f32>) -> Duration {
+    let t0 = Instant::now();
+    let mut mixers = unpack_session(&task.blob, task.heads)
+        .expect("fan-out snapshot must round-trip (pack_session/unpack_session)");
+    for m in &mut mixers {
+        m.set_prefill_mode(task.mode);
+    }
+    let (a, b) = (task.start * task.hd, task.end * task.hd);
+    let out = process_packed_prefill(
+        &mut mixers,
+        &task.chunk.queries[a..b],
+        &task.chunk.keys[a..b],
+        &task.chunk.values[a..b],
+        scratch,
+        panel,
+    );
+    let el = t0.elapsed();
+    // the owner may already have dropped the job (failed writes path) —
+    // a dead receiver just discards the segment
+    let _ = task.tx.send(SegResult { seg: task.seg, out, busy_ns: el.as_nanos() as f64 });
+    el
 }
 
 /// One completed chunk, tagged with the session's chunk sequence number
@@ -488,6 +601,11 @@ impl DecodeEngine {
         let mut handles = Vec::with_capacity(cfg.threads);
         let mut queue_gauge = Vec::with_capacity(cfg.threads);
         let mut queue_high = Vec::with_capacity(cfg.threads);
+        // fan-out only pays when there are helpers to take segments and
+        // the writes-only path is actually cheaper than the full prefill
+        // (bare mixers; stack/LM prefill_writes is the full forward pass)
+        let fanout = cfg.prefill_fanout && cfg.stack.is_none() && cfg.threads > 1;
+        let pool = Arc::new(PrefillPool::default());
         for shard in 0..cfg.threads {
             let (tx, rx) = mpsc::sync_channel::<EngineMsg>(cfg.queue_depth);
             let gauge = Arc::new(AtomicUsize::new(0));
@@ -507,9 +625,21 @@ impl DecodeEngine {
                 gen_quantum: cfg.gen_quantum.max(1),
                 vocab: cfg.lm.as_ref().map_or(0, |l| l.vocab),
                 seed: cfg.seed,
+                prefill_mode: cfg.prefill_mode,
+                fanout,
             };
+            let worker_pool = Arc::clone(&pool);
             handles.push(thread::spawn(move || {
-                shard_worker(wcfg, factory, rx, worker_out, worker_gen, worker_gauge, worker_high)
+                shard_worker(
+                    wcfg,
+                    factory,
+                    rx,
+                    worker_out,
+                    worker_gen,
+                    worker_gauge,
+                    worker_high,
+                    worker_pool,
+                )
             }));
             txs.push(tx);
             queue_gauge.push(gauge);
@@ -685,20 +815,40 @@ struct WorkerCfg {
     vocab: usize,
     /// engine seed, mixed into per-request generation-RNG seeds
     seed: u64,
+    /// prefill numerics policy, applied to the shard's bank at startup
+    prefill_mode: PrefillMode,
+    /// intra-request fan-out armed for this engine (see EngineConfig)
+    fanout: bool,
 }
 
 /// An in-flight long-prompt admission, ingested one quantum at a time.
 struct PrefillJob {
     session: u64,
-    chunk: DecodeChunk,
+    /// shared with fanned-out segment tasks (zero-copy slicing)
+    chunk: Arc<DecodeChunk>,
     /// tokens ingested so far / total prompt tokens
     done: usize,
     total: usize,
     submitted: Instant,
-    /// processing time across this job's quanta, nanoseconds
+    /// processing time across this job's quanta, nanoseconds — for a
+    /// fanned-out prompt this is the total across every thread that
+    /// touched it (owner writes + all segment replays)
     busy_ns: f64,
     /// accumulated packed outputs (only in collect mode)
     out: Option<Vec<f32>>,
+    /// Some when this prompt's output segments go through the fan-out
+    /// pool instead of the serial process_prefill path
+    fan: Option<FanState>,
+}
+
+/// Fan-out bookkeeping of one prompt: the owner-unique job id, how many
+/// segments were published, and the result channel the segments deliver
+/// into (in any order; the owner merges by segment index).
+struct FanState {
+    job: u64,
+    segs: usize,
+    tx: Sender<SegResult>,
+    rx: Receiver<SegResult>,
 }
 
 /// An in-flight generation request: prompt ingestion (quantized, like a
@@ -768,6 +918,15 @@ struct WorkerState {
     deferred: VecDeque<EngineMsg>,
     out_tx: Option<Sender<EngineOut>>,
     gen_tx: Sender<GenOut>,
+    /// engine-wide fan-out segment queue (shared with every worker)
+    pool: Arc<PrefillPool>,
+    /// per-shard fan-out job counter (combined with the shard id into
+    /// engine-unique job ids)
+    fan_seq: u64,
+    /// scratch/panel for running pooled segments — separate from the
+    /// bank's own buffers, which stay private to its sessions
+    helper_scratch: Scratch,
+    helper_panel: Vec<f32>,
     gauge: Arc<AtomicUsize>,
     busy: Duration,
     prefill_busy: Duration,
@@ -821,14 +980,28 @@ impl WorkerState {
             EngineMsg::Prefill { session, chunk, submitted } => {
                 let total = chunk.keys.len() / self.cfg.hd;
                 let out = self.out_tx.is_some().then(|| Vec::with_capacity(chunk.values.len()));
+                // fan out only when the prompt spans at least two quanta —
+                // a single-segment job has nothing to parallelize and
+                // would pay a snapshot for no one
+                let fan = (self.cfg.fanout && total >= 2 * self.cfg.prefill_quantum).then(|| {
+                    let (tx, rx) = mpsc::channel();
+                    self.fan_seq += 1;
+                    FanState {
+                        job: ((self.cfg.shard as u64) << 32) | self.fan_seq,
+                        segs: 0,
+                        tx,
+                        rx,
+                    }
+                });
                 self.jobs.push_back(Job::Prefill(PrefillJob {
                     session,
-                    chunk,
+                    chunk: Arc::new(chunk),
                     done: 0,
                     total,
                     submitted,
                     busy_ns: 0.0,
                     out,
+                    fan,
                 }));
             }
             EngineMsg::Generate { session, prompt, params, stop, submitted } => {
@@ -904,6 +1077,10 @@ impl WorkerState {
     }
 
     fn advance_prefill(&mut self, mut job: PrefillJob) {
+        if job.fan.is_some() {
+            self.advance_prefill_fanout(job);
+            return;
+        }
         let hd = self.cfg.hd;
         let take = self.cfg.prefill_quantum.min(job.total - job.done);
         let (a, b) = (job.done * hd, (job.done + take) * hd);
@@ -954,6 +1131,120 @@ impl WorkerState {
         } else {
             self.jobs.push_back(Job::Prefill(job));
         }
+    }
+
+    /// One scheduling round of a fanned-out prompt: snapshot the session
+    /// at the quantum boundary, publish the quantum's output replay to
+    /// the pool as a [`SegmentTask`], and advance the real state through
+    /// the writes-only path (bit-identical state at roughly the write
+    /// half of the cost). On the last quantum, collect every segment's
+    /// outputs — stealing back whatever the idle workers never claimed —
+    /// merge them in segment order, and complete exactly like the serial
+    /// path. Segmentation is always at `prefill_quantum` boundaries,
+    /// independent of worker count, so the merged outputs are
+    /// bit-identical to the serial path at any thread count, in Exact
+    /// AND Chunkwise modes (chunkwise blocking restarts per quantum on
+    /// both paths).
+    fn advance_prefill_fanout(&mut self, mut job: PrefillJob) {
+        let hd = self.cfg.hd;
+        let take = self.cfg.prefill_quantum.min(job.total - job.done);
+        let (a, b) = (job.done * hd, (job.done + take) * hd);
+        let t0 = Instant::now();
+        let res = match self.bank.snapshot_session(job.session) {
+            Ok(blob) => {
+                let fan = job.fan.as_mut().expect("fan-out job");
+                self.pool.push(SegmentTask {
+                    job: fan.job,
+                    seg: fan.segs,
+                    blob: Arc::new(blob),
+                    chunk: Arc::clone(&job.chunk),
+                    start: job.done,
+                    end: job.done + take,
+                    heads: self.cfg.heads,
+                    hd,
+                    mode: self.bank.prefill_mode(),
+                    tx: fan.tx.clone(),
+                });
+                fan.segs += 1;
+                self.bank.process_prefill_writes(
+                    job.session,
+                    &job.chunk.keys[a..b],
+                    &job.chunk.values[a..b],
+                )
+            }
+            Err(e) => Err(e),
+        };
+        let el = t0.elapsed();
+        self.busy += el;
+        self.prefill_busy += el;
+        job.busy_ns += el.as_nanos() as f64;
+        match res {
+            Ok(()) => job.done += take,
+            Err(e) => {
+                eprintln!(
+                    "shard {}: dropping prompt for session {}: {e}",
+                    self.cfg.shard, job.session
+                );
+                // dropping the job drops the result receiver; in-flight
+                // segments deliver into a dead channel and are discarded
+                self.gauge.fetch_sub(1, Ordering::SeqCst);
+                self.failed_chunks += 1;
+                self.redispatch();
+                return;
+            }
+        }
+        if job.done < job.total {
+            self.jobs.push_back(Job::Prefill(job));
+            return;
+        }
+
+        // every quantum written: merge the output segments in order
+        let fan = job.fan.take().expect("fan-out job");
+        let mut outs: Vec<Option<Vec<f32>>> = (0..fan.segs).map(|_| None).collect();
+        let mut received = 0;
+        while received < fan.segs {
+            // steal back everything the idle workers never claimed —
+            // the owner must finish even if every other shard is busy
+            while let Some(task) = self.pool.steal(fan.job) {
+                self.help_segment(task);
+            }
+            // collect one result; this blocks only while a helper is
+            // mid-segment (the pool holds nothing of ours), and helpers
+            // never block while holding a segment — so this terminates
+            match fan.rx.recv() {
+                Ok(r) => {
+                    job.busy_ns += r.busy_ns;
+                    outs[r.seg] = Some(r.out);
+                    received += 1;
+                }
+                Err(_) => unreachable!("fan state holds a live sender"),
+            }
+        }
+        self.gauge.fetch_sub(1, Ordering::SeqCst);
+        let ttft = job.submitted.elapsed().as_nanos() as f64;
+        ring_push(&mut self.ttft_ns, self.ttft_i, ttft);
+        self.ttft_i += 1;
+        self.prefill_chunks += 1;
+        self.prefill_tokens += job.total;
+        self.tokens += job.total;
+        let seq = self.bank.record_prefill(job.session, job.total, job.busy_ns);
+        if let (Some(tx), Some(mut acc)) = (&self.out_tx, job.out) {
+            for seg in outs.into_iter().flatten() {
+                acc.extend_from_slice(&seg);
+            }
+            let _ = tx.send(EngineOut { session: job.session, seq, out: acc });
+        }
+        self.redispatch();
+    }
+
+    /// Run one pooled fan-out segment on this worker. The compute is
+    /// accounted to THIS shard's busy/prefill time (it occupied this
+    /// core); the owner additionally folds the reported nanoseconds into
+    /// the prompt's own telemetry.
+    fn help_segment(&mut self, task: SegmentTask) {
+        let el = run_segment(task, &mut self.helper_scratch, &mut self.helper_panel);
+        self.busy += el;
+        self.prefill_busy += el;
     }
 
     /// One scheduling round of a generation request: a prompt quantum
@@ -1077,6 +1368,7 @@ impl WorkerState {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn shard_worker(
     cfg: WorkerCfg,
     factory: impl Fn(u64, usize) -> Box<dyn SeqMixer> + Send + 'static,
@@ -1085,14 +1377,21 @@ fn shard_worker(
     gen_tx: Sender<GenOut>,
     gauge: Arc<AtomicUsize>,
     high: Arc<AtomicUsize>,
+    pool: Arc<PrefillPool>,
 ) -> (ShardReport, Vec<(u64, StreamStats)>) {
+    let mut bank = ShardBank::new(cfg.heads, cfg.max_resident, factory);
+    bank.set_prefill_mode(cfg.prefill_mode);
     let mut st = WorkerState {
         cfg,
-        bank: ShardBank::new(cfg.heads, cfg.max_resident, factory),
+        bank,
         jobs: VecDeque::new(),
         deferred: VecDeque::new(),
         out_tx,
         gen_tx,
+        pool,
+        fan_seq: 0,
+        helper_scratch: Scratch::new(),
+        helper_panel: Vec::new(),
         gauge,
         busy: Duration::ZERO,
         prefill_busy: Duration::ZERO,
@@ -1115,12 +1414,38 @@ fn shard_worker(
     loop {
         if st.jobs.is_empty() && st.deferred.is_empty() {
             if !open {
+                // our channel closed and our own work drained: lend the
+                // thread to any still-unclaimed fan-out segments before
+                // exiting (owners steal back whatever is left after this)
+                while let Some(task) = st.pool.pop() {
+                    st.help_segment(task);
+                }
                 break;
             }
-            // fully idle: block for the next message
-            match rx.recv() {
-                Ok(msg) => st.dispatch(msg),
-                Err(_) => break,
+            if st.cfg.fanout {
+                // idle with fan-out armed: alternate between helping
+                // with pooled segments and polling for traffic. The
+                // short timeout bounds how stale an idle worker's view
+                // of the pool can get; it costs one wakeup per 500us
+                // only while a shard is fully idle.
+                if let Some(task) = st.pool.pop() {
+                    st.help_segment(task);
+                } else {
+                    match rx.recv_timeout(Duration::from_micros(500)) {
+                        Ok(msg) => st.dispatch(msg),
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            continue;
+                        }
+                    }
+                }
+            } else {
+                // fully idle: block for the next message
+                match rx.recv() {
+                    Ok(msg) => st.dispatch(msg),
+                    Err(_) => break,
+                }
             }
         }
         if open {
@@ -1335,6 +1660,59 @@ mod tests {
         assert_eq!(r.failed_chunks(), 1);
         assert_eq!(r.completions(), 0);
         assert_eq!(r.chunks, 1);
+    }
+
+    #[test]
+    fn fanned_out_prefill_matches_serial_bit_exactly() {
+        // one long OVQ prompt through a 4-thread fan-out engine must
+        // reproduce the 1-thread serial outputs to the bit, and decode
+        // submitted behind the prompt must still be ordered after it
+        let (heads, d, total) = (2usize, 8usize, 600usize);
+        let hd = heads * d;
+        let mut rng = Rng::new(21);
+        let prompt = chunk_of(&mut rng, total, hd);
+        let tail = chunk_of(&mut rng, 8, hd);
+        let run = |threads: usize, fanout: bool| {
+            let mut cfg = EngineConfig::new(MixerKind::Ovq { n_max: 32 }, heads, d, 16);
+            cfg.threads = threads;
+            cfg.prefill_fanout = fanout;
+            cfg.prefill_quantum = 64;
+            cfg.collect_outputs = true;
+            let engine = DecodeEngine::start(cfg);
+            engine.submit_prefill(
+                7,
+                DecodeChunk {
+                    queries: prompt.queries.clone(),
+                    keys: prompt.keys.clone(),
+                    values: prompt.values.clone(),
+                },
+            );
+            engine.submit(
+                7,
+                DecodeChunk {
+                    queries: tail.queries.clone(),
+                    keys: tail.keys.clone(),
+                    values: tail.values.clone(),
+                },
+            );
+            let r = engine.finish();
+            let mut outs: Vec<(usize, Vec<f32>)> =
+                r.outputs.into_iter().map(|o| (o.seq, o.out)).collect();
+            outs.sort_by_key(|&(seq, _)| seq);
+            outs
+        };
+        let serial = run(1, false);
+        let fanned = run(4, true);
+        assert_eq!(serial.len(), 2);
+        assert_eq!(fanned.len(), 2);
+        for ((s_seq, s_out), (f_seq, f_out)) in serial.iter().zip(&fanned) {
+            assert_eq!(s_seq, f_seq);
+            assert_eq!(s_out.len(), f_out.len());
+            assert!(
+                s_out.iter().zip(f_out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fan-out diverged from the serial path"
+            );
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::ovqcore::bank::DecodeChunk;
 use crate::ovqcore::kernels;
 use crate::ovqcore::lm::LmConfig;
 use crate::ovqcore::memstate::{parse_schedule, MixerKind};
-use crate::ovqcore::mixer::{print_layer_split, LayerStat};
+use crate::ovqcore::mixer::{print_layer_split, LayerStat, PrefillMode};
 use crate::ovqcore::quant::QuantMode;
 use crate::ovqcore::stack::StackConfig;
 use crate::runtime::Model;
@@ -198,6 +198,13 @@ pub struct DecodeConfig {
     /// tensors for bare mixers, plus weights/embedding when serving
     /// stacks or LMs
     pub quant: QuantMode,
+    /// prefill numerics policy (`--prefill-tolerance [--prefill-chunk C]`
+    /// opts into the chunkwise-parallel scan forms; default stays the
+    /// bit-pinned serial forms)
+    pub prefill_mode: PrefillMode,
+    /// intra-request fan-out of long prompts across idle shard workers
+    /// (`--no-prefill-fanout` disables it)
+    pub prefill_fanout: bool,
 }
 
 impl DecodeConfig {
@@ -217,6 +224,8 @@ impl DecodeConfig {
             prefill_quantum: 512,
             stack: None,
             quant: QuantMode::None,
+            prefill_mode: PrefillMode::Exact,
+            prefill_fanout: true,
         }
     }
 
@@ -239,6 +248,8 @@ impl DecodeConfig {
         e.max_resident = self.max_resident;
         e.queue_depth = self.queue_depth;
         e.prefill_quantum = self.prefill_quantum;
+        e.prefill_mode = self.prefill_mode;
+        e.prefill_fanout = self.prefill_fanout;
         e.seed = self.seed;
         e
     }
@@ -438,7 +449,8 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 ///            [--streams S] [--heads H] [--dhead D] [--nmax N]
 ///            [--decode-tokens T] [--threads W] [--max-resident R]
 ///            [--queue-depth Q] [--prompt-tokens P] [--prefill-quantum Q]
-///            [--quant none|f16|i8]
+///            [--quant none|f16|i8] [--prefill-tolerance]
+///            [--prefill-chunk C] [--no-prefill-fanout]
 ///            [--layers L --d-model D --d-ff F --schedule S]`
 /// Demo driver: phase 1 runs the batched scorer against the compiled HLO
 /// program (skipped with a notice when no backend/artifacts are
@@ -446,7 +458,13 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 /// bare mixers by default, or over full multi-layer model stacks when
 /// `--layers` is set. `--schedule` is a comma-separated per-layer mixer
 /// list cycled over the depth (e.g. `ovq:1024` uniform, or
-/// `ovq:1024,kv:win256` for a hybrid stack).
+/// `ovq:1024,kv:win256` for a hybrid stack). `--prefill-tolerance` opts
+/// the scan mixers (gdn/lin) into the chunkwise-parallel prefill forms
+/// (`--prefill-chunk` tokens per block, default 64) — faster prompt
+/// ingestion within the documented error tolerance instead of the
+/// bit-pinned serial forms. Long prompts additionally fan out across
+/// idle shard workers whenever `--threads > 1`; `--no-prefill-fanout`
+/// pins prompt ingestion back onto the owner shard.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     match super::runtime_from(args) {
         Ok(rt) => serve_batched(&rt, args)?,
@@ -467,6 +485,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     dcfg.queue_depth = args.opt_usize("queue-depth", dcfg.queue_depth)?;
     dcfg.prompt_tokens = args.opt_usize("prompt-tokens", dcfg.prompt_tokens)?;
     dcfg.prefill_quantum = args.opt_usize("prefill-quantum", dcfg.prefill_quantum)?;
+    // accept `--prefill-tolerance` both as a bare flag and as an option
+    // (the bare form swallows a following non-`--` token, so also honor
+    // `--prefill-tolerance=1` placements)
+    if args.has_flag("prefill-tolerance") || args.opt("prefill-tolerance").is_some() {
+        dcfg.prefill_mode = PrefillMode::Chunkwise { chunk: args.opt_usize("prefill-chunk", 64)? };
+    }
+    dcfg.prefill_fanout = !args.has_flag("no-prefill-fanout");
     dcfg.quant = QuantMode::parse(&args.opt_or("quant", "none"))?;
     let layers = args.opt_usize("layers", 0)?;
     if layers > 0 {
@@ -787,6 +812,32 @@ mod tests {
         let argv: Vec<String> =
             ["generate", "--temp", "-1"].iter().map(|s| s.to_string()).collect();
         assert!(cmd_generate(&Args::parse(&argv)).is_err());
+    }
+
+    #[test]
+    fn decode_engine_tolerance_mode_serves_scan_mixers() {
+        // chunkwise-parallel prefill (--prefill-tolerance) through the
+        // whole serve path for a scan mixer: full token accounting, and
+        // two runs with the same fixed chunk size agree bit-for-bit on
+        // per-stream token counts and state bytes (reproducibility of the
+        // blocked schedule — the numerics contract is pinned by the mixer
+        // tolerance tests)
+        let mut cfg = DecodeConfig::new(64);
+        cfg.kind = MixerKind::Gdn;
+        cfg.streams = 2;
+        cfg.heads = 1;
+        cfg.d_head = 8;
+        cfg.chunk = 16;
+        cfg.tokens = 32;
+        cfg.prompt_tokens = 200;
+        cfg.prefill_quantum = 64;
+        cfg.prefill_mode = PrefillMode::Chunkwise { chunk: 32 };
+        let a = run_decode_engine(&cfg);
+        assert_eq!(a.prefill_tokens, 2 * 200);
+        assert_eq!(a.tokens_total, 2 * (200 + 32));
+        let b = run_decode_engine(&cfg);
+        assert_eq!(a.tokens_total, b.tokens_total);
+        assert_eq!(a.state_bytes, b.state_bytes);
     }
 
     #[test]

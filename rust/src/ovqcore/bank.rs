@@ -28,7 +28,7 @@ use std::collections::{HashMap, VecDeque};
 use anyhow::{Context, Result};
 
 use super::lm::LmModel;
-use super::mixer::{merge_layer_stats, LayerStat, Scratch, SeqMixer};
+use super::mixer::{merge_layer_stats, LayerStat, PrefillMode, Scratch, SeqMixer};
 use super::snapshot;
 
 /// One queued decode chunk for a stream, packed `[len, heads, d]`.
@@ -156,6 +156,40 @@ pub fn process_packed_prefill(
     panel: &mut Vec<f32>,
 ) -> Vec<f32> {
     process_packed_inner(mixers, queries, keys, values, scratch, panel, true)
+}
+
+/// The writes-only half of [`process_packed_prefill`]: advance every
+/// head's state over the packed keys/values without computing any
+/// outputs. Post-call mixer state is bit-identical to the full prefill
+/// over the same slice ([`SeqMixer::prefill_writes`] contract). This is
+/// what the fan-out engine runs on the owner shard while helper threads
+/// compute the (state-independent-given-a-snapshot) output segments.
+pub fn process_packed_prefill_writes(
+    mixers: &mut [Box<dyn SeqMixer>],
+    keys: &[f32],
+    values: &[f32],
+    scratch: &mut Scratch,
+    panel: &mut Vec<f32>,
+) {
+    let h = mixers.len();
+    let (di, dv) = (mixers[0].d_in(), mixers[0].d_out());
+    let len = keys.len() / (h * di);
+    debug_assert_eq!(values.len(), len * h * dv);
+    // panel layout: k [len*di] | v [len*dv]
+    let need = len * (di + dv);
+    if panel.len() < need {
+        panel.resize(need, 0.0);
+    }
+    for (head, mixer) in mixers.iter_mut().enumerate() {
+        let (pk, pv) = panel[..need].split_at_mut(len * di);
+        for i in 0..len {
+            let krow = (i * h + head) * di;
+            pk[i * di..(i + 1) * di].copy_from_slice(&keys[krow..krow + di]);
+            let vrow = (i * h + head) * dv;
+            pv[i * dv..(i + 1) * dv].copy_from_slice(&values[vrow..vrow + dv]);
+        }
+        mixer.prefill_writes(pk, pv, scratch);
+    }
 }
 
 fn process_packed_inner(
@@ -404,6 +438,10 @@ pub struct ShardBank {
     pub restores: usize,
     scratch: Scratch,
     panel: Vec<f32>,
+    /// prefill policy applied to every admitted or restored session.
+    /// Runtime-only: snapshots never carry it (a thawed mixer is Exact
+    /// until the shard re-applies its policy here).
+    prefill_mode: PrefillMode,
 }
 
 impl ShardBank {
@@ -432,7 +470,26 @@ impl ShardBank {
             restores: 0,
             scratch: Scratch::new(),
             panel: Vec::new(),
+            prefill_mode: PrefillMode::Exact,
         }
+    }
+
+    /// Set the shard's prefill policy. Applied to sessions already
+    /// resident and to every future admit/restore. Call before serving
+    /// traffic — mid-stream switches are well-defined (the mode only
+    /// gates how `process_prefill` blocks its math) but make outputs a
+    /// mixture of the two forms.
+    pub fn set_prefill_mode(&mut self, mode: PrefillMode) {
+        self.prefill_mode = mode;
+        for r in &mut self.resident {
+            for m in &mut r.mixers {
+                m.set_prefill_mode(mode);
+            }
+        }
+    }
+
+    pub fn prefill_mode(&self) -> PrefillMode {
+        self.prefill_mode
     }
 
     pub fn heads(&self) -> usize {
@@ -562,6 +619,39 @@ impl ShardBank {
         ))
     }
 
+    /// Advance session `id`'s state over one prefill quantum WITHOUT
+    /// computing outputs — the owner-shard half of fanned-out prefill
+    /// (helper threads produce the output segments from state snapshots).
+    /// Post-call state is bit-identical to [`ShardBank::process_prefill`]
+    /// over the same slice; admission/restore/LRU behave identically.
+    pub fn process_prefill_writes(&mut self, id: u64, keys: &[f32], values: &[f32]) -> Result<()> {
+        let slot = self.ensure_resident(id)?;
+        self.clock += 1;
+        self.resident[slot].last_used = self.clock;
+        process_packed_prefill_writes(
+            &mut self.resident[slot].mixers,
+            keys,
+            values,
+            &mut self.scratch,
+            &mut self.panel,
+        );
+        Ok(())
+    }
+
+    /// Capture session `id`'s full state as a [`pack_session`] blob
+    /// without disturbing residency — the fan-out engine hands these to
+    /// helper threads so they can replay output segments against the
+    /// exact state the owner had at the segment boundary. Admits or
+    /// restores the session first if needed (a snapshot of a
+    /// never-seen session is its factory-fresh state). Pending chunk
+    /// tails ride inside the blob; nothing is flushed.
+    pub fn snapshot_session(&mut self, id: u64) -> Result<Vec<u8>> {
+        let slot = self.ensure_resident(id)?;
+        self.clock += 1;
+        self.resident[slot].last_used = self.clock;
+        Ok(pack_session(&self.resident[slot].mixers))
+    }
+
     /// Account one completed prefill prompt (all quanta processed) of
     /// `tokens` tokens that took `elapsed_ns` of processing; returns the
     /// session's sequence number, shared with decode chunks.
@@ -610,7 +700,7 @@ impl ShardBank {
         while self.resident.len() >= self.max_resident {
             self.evict_lru();
         }
-        let mixers = match self.evicted.remove(&id) {
+        let mut mixers = match self.evicted.remove(&id) {
             Some(blob) => {
                 // the blob is consumed either way: on a decode failure the
                 // session is discarded and a re-arrival starts it fresh
@@ -621,6 +711,14 @@ impl ShardBank {
             }
             None => (0..self.heads).map(|h| (self.factory)(id, h)).collect(),
         };
+        // the shard's prefill policy is runtime state, not session state:
+        // snapshots thaw in Exact mode and the policy is re-applied here,
+        // on admission and on every restore
+        if self.prefill_mode != PrefillMode::Exact {
+            for m in &mut mixers {
+                m.set_prefill_mode(self.prefill_mode);
+            }
+        }
         // the dim invariant MixerBank hard-asserts, as a recoverable error
         // here: a mismatched factory or cross-shape blob must cost this
         // session (failed chunk), never corrupt panels or kill the shard
@@ -842,6 +940,34 @@ mod tests {
             got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
             "mid-prompt eviction changed the prefill outputs"
         );
+    }
+
+    #[test]
+    fn shard_prefill_writes_matches_full_prefill_state_bit_exactly() {
+        // the fan-out contract: advancing state through the writes-only
+        // path must land on exactly the state the full prefill produces,
+        // and snapshot_session must capture it without evicting
+        let (heads, d, total) = (2usize, 8usize, 50usize);
+        let mut rng = Rng::new(13);
+        let mut shard = ovq_shard(heads, d, 32, 16, 4);
+        let mut mirror = ovq_shard(heads, d, 32, 16, 4);
+        let c = chunk_of(&mut rng, total, heads * d);
+
+        shard.process_prefill_writes(4, &c.keys, &c.values).unwrap();
+        mirror.process_prefill(4, &c.queries, &c.keys, &c.values).unwrap();
+
+        let a = shard.snapshot_session(4).unwrap();
+        let b = mirror.snapshot_session(4).unwrap();
+        assert_eq!(a, b, "writes-only prefill state diverged from full prefill");
+        // snapshot_session is non-destructive: the session stays resident
+        assert_eq!(shard.resident_sessions(), 1);
+        assert_eq!(shard.evictions, 0);
+        // and a snapshot of a never-seen session is its factory state
+        let factory_fresh: Vec<Box<dyn SeqMixer>> = (0..heads)
+            .map(|_| Box::new(OvqState::new(OvqConfig::new(d, 32, 16))) as Box<dyn SeqMixer>)
+            .collect();
+        let fresh = shard.snapshot_session(77).unwrap();
+        assert_eq!(fresh, pack_session(&factory_fresh));
     }
 
     #[test]

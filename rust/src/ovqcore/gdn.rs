@@ -7,7 +7,8 @@
 
 use anyhow::Result;
 
-use super::mixer::{Scratch, SeqMixer};
+use super::kernels;
+use super::mixer::{PrefillMode, Scratch, SeqMixer};
 use super::snapshot;
 
 #[derive(Debug, Clone)]
@@ -20,11 +21,40 @@ pub struct GdnState {
     pub alpha: f32,
     /// default write-strength gate used by the trait-level `write`
     pub beta: f32,
+    /// prefill policy (runtime-only — never serialized, snapshots thaw
+    /// in `Exact` and the serving layer re-applies its configured mode)
+    pub mode: PrefillMode,
+}
+
+/// Reusable per-prefill-call workspace for the chunkwise scan form —
+/// allocated once per `process_prefill`/`prefill_writes` call and reused
+/// across every block of the slice.
+#[derive(Default)]
+struct ChunkWs {
+    /// `[L, L]` intra-block key Gram matrix `k_i . k_j`
+    kk: Vec<f32>,
+    /// `[L, L]` query-key similarities `q_i . k_j`
+    qk: Vec<f32>,
+    /// `[L, d]` solved pseudo-values `u_i`
+    u: Vec<f32>,
+    /// `[L, d]` state-carry rows `k_i S_0`
+    carry: Vec<f32>,
+    /// `[L]` per-row combination weights
+    w: Vec<f32>,
+    /// `[L + 1]` decay powers `alpha^0 .. alpha^L`
+    apow: Vec<f32>,
+}
+
+fn grow(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
 }
 
 impl GdnState {
     pub fn new(d: usize) -> GdnState {
-        GdnState { d, s: vec![0.0; d * d], t: 0, alpha: 1.0, beta: 1.0 }
+        GdnState { d, s: vec![0.0; d * d], t: 0, alpha: 1.0, beta: 1.0, mode: PrefillMode::Exact }
     }
 
     /// Rebuild from a [`snapshot::save`] payload.
@@ -63,18 +93,10 @@ impl GdnState {
         pred: &mut [f32],
     ) {
         let d = self.d;
-        // pred = k S  (length d)
+        // pred = k S (length d) — the dispatched transpose-matvec, whose
+        // scalar tile is bit-identical to the historical hand-rolled loop
         let pred = &mut pred[..d];
-        pred.iter_mut().for_each(|p| *p = 0.0);
-        for i in 0..d {
-            let ki = k[i];
-            if ki != 0.0 {
-                let row = &self.s[i * d..(i + 1) * d];
-                for (p, &sj) in pred.iter_mut().zip(row) {
-                    *p += ki * sj;
-                }
-            }
-        }
+        kernels::vecmat(&k[..d], &self.s, d, d, pred);
         for i in 0..d {
             let row = &mut self.s[i * d..(i + 1) * d];
             let ki = beta * k[i];
@@ -83,6 +105,124 @@ impl GdnState {
             }
         }
         self.t += 1;
+    }
+
+    /// One chunkwise-blocked gated-delta block of `l` tokens with the
+    /// CONSTANT gates the prefill path uses (`alpha`, `beta`). Instead of
+    /// materializing the `[L, d, d]` ΔS tensor (the paper's §3.4 cost),
+    /// the block is reduced to `[L, L]` similarity matrices plus an
+    /// `[L, d]` forward substitution:
+    ///
+    /// ```text
+    ///   u_i = v_i − αⁱ (k_i S₀) − Σ_{j<i} β α^{i−1−j} (k_i·k_j) u_j
+    ///   o_i = α^{i+1} (q_i S₀) + Σ_{j≤i} β α^{i−j} (q_i·k_j) u_j
+    ///   S_L = α^L S₀ + Σ_j β α^{L−1−j} k_jᵀ u_j
+    /// ```
+    ///
+    /// Every heavy sweep is a tiled kernel ([`kernels::matmul_rows`] for
+    /// the Gram matrices, [`kernels::axpy_rows`] for the combinations).
+    /// This reassociates the FP accumulation relative to the serial
+    /// recurrence, so it only runs in `Chunkwise` mode under the
+    /// documented tolerance. `queries`/`out` are optional: `None` skips
+    /// the output half entirely (the fanned-out owner advance).
+    fn chunkwise_block(
+        &mut self,
+        queries: Option<&[f32]>,
+        keys: &[f32],
+        values: &[f32],
+        out: Option<&mut [f32]>,
+        ws: &mut ChunkWs,
+    ) {
+        let d = self.d;
+        let l = keys.len() / d;
+        let (a, b) = (self.alpha, self.beta);
+        ws.apow.clear();
+        ws.apow.reserve(l + 1);
+        let mut p = 1.0f32;
+        for _ in 0..=l {
+            ws.apow.push(p);
+            p *= a;
+        }
+        let kk = grow(&mut ws.kk, l * l);
+        kernels::matmul_rows(keys, l, d, keys, l, kk);
+        let carry = grow(&mut ws.carry, l * d);
+        for i in 0..l {
+            let ci = &mut carry[i * d..(i + 1) * d];
+            kernels::vecmat(&keys[i * d..(i + 1) * d], &self.s, d, d, ci);
+        }
+        grow(&mut ws.u, l * d);
+        grow(&mut ws.w, l);
+        for i in 0..l {
+            let (head, tail) = ws.u.split_at_mut(i * d);
+            let ui = &mut tail[..d];
+            for j in 0..d {
+                ui[j] = values[i * d + j] - ws.apow[i] * ws.carry[i * d + j];
+            }
+            if i > 0 {
+                for j in 0..i {
+                    ws.w[j] = -b * ws.apow[i - 1 - j] * ws.kk[i * l + j];
+                }
+                kernels::axpy_rows(head, i, d, &ws.w[..i], ui);
+            }
+        }
+        if let (Some(queries), Some(out)) = (queries, out) {
+            let qk = grow(&mut ws.qk, l * l);
+            kernels::matmul_rows(keys, l, d, queries, l, qk);
+            for i in 0..l {
+                let oi = &mut out[i * d..(i + 1) * d];
+                kernels::vecmat(&queries[i * d..(i + 1) * d], &self.s, d, d, oi);
+                let ai = ws.apow[i + 1];
+                for x in oi.iter_mut() {
+                    *x *= ai;
+                }
+                for j in 0..=i {
+                    ws.w[j] = b * ws.apow[i - j] * ws.qk[i * l + j];
+                }
+                kernels::axpy_rows(&ws.u[..(i + 1) * d], i + 1, d, &ws.w[..=i], oi);
+            }
+        }
+        if ws.apow[l] != 1.0 {
+            for x in self.s.iter_mut() {
+                *x *= ws.apow[l];
+            }
+        }
+        for r in 0..d {
+            for j in 0..l {
+                ws.w[j] = b * ws.apow[l - 1 - j] * keys[j * d + r];
+            }
+            kernels::axpy_rows(&ws.u[..l * d], l, d, &ws.w[..l], &mut self.s[r * d..(r + 1) * d]);
+        }
+        self.t += l;
+    }
+
+    /// Cut a prompt slice into `chunk`-token blocks and run each through
+    /// [`GdnState::chunkwise_block`]; blocks compose left-to-right through
+    /// the live state.
+    fn chunkwise_prefill(
+        &mut self,
+        queries: Option<&[f32]>,
+        keys: &[f32],
+        values: &[f32],
+        mut out: Option<&mut [f32]>,
+        chunk: usize,
+    ) {
+        let d = self.d;
+        let len = keys.len() / d;
+        let c = chunk.max(1);
+        let mut ws = ChunkWs::default();
+        let mut i = 0;
+        while i < len {
+            let l = c.min(len - i);
+            let (lo, hi) = (i * d, (i + l) * d);
+            self.chunkwise_block(
+                queries.map(|q| &q[lo..hi]),
+                &keys[lo..hi],
+                &values[lo..hi],
+                out.as_deref_mut().map(|o| &mut o[lo..hi]),
+                &mut ws,
+            );
+            i += l;
+        }
     }
 }
 
@@ -117,26 +257,26 @@ impl SeqMixer for GdnState {
     }
 
     fn read(&self, q: &[f32], out: &mut [f32], _scratch: &mut Scratch) {
+        // o = q S — the dispatched transpose-matvec (scalar tile is
+        // bit-identical to the historical loop; AVX2 applies when built)
         let d = self.d;
-        out.iter_mut().for_each(|o| *o = 0.0);
-        for i in 0..d {
-            let qi = q[i];
-            if qi != 0.0 {
-                let row = &self.s[i * d..(i + 1) * d];
-                for (o, &sj) in out.iter_mut().zip(row) {
-                    *o += qi * sj;
-                }
-            }
-        }
+        kernels::vecmat(&q[..d], &self.s, d, d, out);
+    }
+
+    fn set_prefill_mode(&mut self, mode: PrefillMode) {
+        self.mode = mode;
     }
 
     /// Prompt ingestion. The delta-rule recurrence is dense and strictly
     /// sequential (S_t depends on S_{t-1} through the prediction term), so
-    /// a chunk-parallel form would materialize the [L, d, d] ΔS tensor —
-    /// the §3.4 cost this repo exists to avoid — AND reassociate the FP
-    /// accumulation, breaking bit-identity with serial decode. What CAN
-    /// batch safely: the per-token `pred` scratch comes from the shared
-    /// [`Scratch`] instead of a fresh heap allocation per token.
+    /// the default `Exact` mode keeps the serial token loop — bit-identical
+    /// to decode, with the per-token `pred` scratch coming from the shared
+    /// [`Scratch`] instead of a heap allocation per token. Opting into
+    /// `Chunkwise` mode switches to the blocked scan form
+    /// ([`GdnState::chunkwise_block`]): tiled `[L, L]` similarity sweeps +
+    /// an `[L, d]` forward substitution instead of the §3.4 `[L, d, d]` ΔS
+    /// tensor. That reassociates FP accumulation, so chunkwise outputs are
+    /// tolerance-tested, never golden-pinned.
     fn process_prefill(
         &mut self,
         queries: &[f32],
@@ -150,6 +290,10 @@ impl SeqMixer for GdnState {
         debug_assert_eq!(queries.len(), len * d);
         debug_assert_eq!(values.len(), len * d);
         debug_assert_eq!(out.len(), len * d);
+        if let PrefillMode::Chunkwise { chunk } = self.mode {
+            self.chunkwise_prefill(Some(queries), keys, values, Some(out), chunk);
+            return;
+        }
         if scratch.buf.len() < d {
             scratch.buf.resize(d, 0.0);
         }
@@ -161,6 +305,28 @@ impl SeqMixer for GdnState {
                 self.write_gated_into(k, v, a, b, pred);
             }
             self.read(&queries[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d], scratch);
+        }
+    }
+
+    /// State-only prompt advance (the owner half of fanned-out prefill):
+    /// identical state evolution to [`GdnState::process_prefill`] in both
+    /// modes, without computing any output row.
+    fn prefill_writes(&mut self, keys: &[f32], values: &[f32], scratch: &mut Scratch) {
+        let d = self.d;
+        let len = keys.len() / d;
+        debug_assert_eq!(values.len(), len * d);
+        if let PrefillMode::Chunkwise { chunk } = self.mode {
+            self.chunkwise_prefill(None, keys, values, None, chunk);
+            return;
+        }
+        if scratch.buf.len() < d {
+            scratch.buf.resize(d, 0.0);
+        }
+        let (a, b) = (self.alpha, self.beta);
+        for i in 0..len {
+            let pred = &mut scratch.buf[..d];
+            let (k, v) = (&keys[i * d..(i + 1) * d], &values[i * d..(i + 1) * d]);
+            self.write_gated_into(k, v, a, b, pred);
         }
     }
 
@@ -211,6 +377,128 @@ mod tests {
         for &o in &out {
             assert!((o - 9.0).abs() < 1e-3, "expected overwrite, got {o}");
         }
+    }
+
+    /// Tolerance band for the chunkwise scan form (documented FP
+    /// reassociation — same idiom as the kernel `simd_tests`).
+    const EPS_REL: f32 = 1e-3;
+
+    fn close(got: f32, want: f32) -> bool {
+        (got - want).abs() <= EPS_REL * (1.0 + want.abs())
+    }
+
+    fn stream(seed: u64, n: usize, d: usize, scale: f32) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n * d).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn chunkwise_prefill_matches_serial_within_eps() {
+        // the tolerance family: odd lengths, exact block multiples, and
+        // lengths that leave a short tail block
+        let d = 16;
+        let kscale = 1.0 / (d as f32).sqrt(); // keep |k| ~ 1 so the delta rule is stable
+        for &(total, chunk) in
+            &[(1usize, 4usize), (3, 4), (8, 4), (9, 4), (37, 8), (64, 16), (65, 16)]
+        {
+            let q = stream(100 + total as u64, total, d, kscale);
+            let k = stream(200 + total as u64, total, d, kscale);
+            let v = stream(300 + total as u64, total, d, 1.0);
+            let mut scratch = Scratch::new();
+
+            let mut serial = GdnState::new(d);
+            serial.alpha = 0.95;
+            serial.beta = 0.7;
+            let mut par = serial.clone();
+            par.set_prefill_mode(PrefillMode::Chunkwise { chunk });
+
+            let mut want = vec![0.0f32; total * d];
+            serial.process_prefill(&q, &k, &v, &mut want, &mut scratch);
+            let mut got = vec![0.0f32; total * d];
+            par.process_prefill(&q, &k, &v, &mut got, &mut scratch);
+            for i in 0..total * d {
+                assert!(
+                    close(got[i], want[i]),
+                    "total={total} chunk={chunk} flat={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+            for i in 0..d * d {
+                assert!(close(par.s[i], serial.s[i]), "state total={total} chunk={chunk} i={i}");
+            }
+            assert_eq!(par.t, serial.t);
+
+            // writes-only advance leaves the chunkwise state bit-identical
+            // to the full chunkwise prefill (the fan-out owner contract)
+            let mut wr = GdnState::new(d);
+            wr.alpha = 0.95;
+            wr.beta = 0.7;
+            wr.set_prefill_mode(PrefillMode::Chunkwise { chunk });
+            wr.prefill_writes(&k, &v, &mut scratch);
+            for i in 0..d * d {
+                assert_eq!(
+                    wr.s[i].to_bits(),
+                    par.s[i].to_bits(),
+                    "prefill_writes state diverged (total={total} chunk={chunk} i={i})"
+                );
+            }
+            assert_eq!(wr.t, par.t);
+        }
+    }
+
+    #[test]
+    fn chunkwise_mid_block_cuts_stay_within_eps() {
+        // a prompt delivered in two prefill calls cut mid-block restarts
+        // the blocking at the cut — a different (still valid) chunkwise
+        // evaluation order that must stay within the same band of serial
+        let d = 8;
+        let (total, chunk, cut) = (29usize, 8usize, 13usize);
+        let kscale = 1.0 / (d as f32).sqrt();
+        let q = stream(1, total, d, kscale);
+        let k = stream(2, total, d, kscale);
+        let v = stream(3, total, d, 1.0);
+        let mut scratch = Scratch::new();
+
+        let mut serial = GdnState::new(d);
+        serial.alpha = 0.9;
+        serial.beta = 0.6;
+        let mut par = serial.clone();
+        par.set_prefill_mode(PrefillMode::Chunkwise { chunk });
+
+        let mut want = vec![0.0f32; total * d];
+        serial.process_prefill(&q, &k, &v, &mut want, &mut scratch);
+        let mut got = vec![0.0f32; total * d];
+        let at = cut * d;
+        par.process_prefill(&q[..at], &k[..at], &v[..at], &mut got[..at], &mut scratch);
+        par.process_prefill(&q[at..], &k[at..], &v[at..], &mut got[at..], &mut scratch);
+        for i in 0..total * d {
+            assert!(close(got[i], want[i]), "flat={i}: {} vs {}", got[i], want[i]);
+        }
+        for i in 0..d * d {
+            assert!(close(par.s[i], serial.s[i]), "state i={i}");
+        }
+    }
+
+    #[test]
+    fn exact_mode_prefill_writes_matches_process_prefill_state() {
+        let d = 8;
+        let total = 21;
+        let q = stream(7, total, d, 0.3);
+        let k = stream(8, total, d, 0.3);
+        let v = stream(9, total, d, 1.0);
+        let mut scratch = Scratch::new();
+        let mut full = GdnState::new(d);
+        full.alpha = 0.9;
+        full.beta = 0.5;
+        let mut wr = full.clone();
+        let mut out = vec![0.0f32; total * d];
+        full.process_prefill(&q, &k, &v, &mut out, &mut scratch);
+        wr.prefill_writes(&k, &v, &mut scratch);
+        for i in 0..d * d {
+            assert_eq!(wr.s[i].to_bits(), full.s[i].to_bits(), "i={i}");
+        }
+        assert_eq!(wr.t, full.t);
     }
 
     #[test]

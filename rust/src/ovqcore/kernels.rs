@@ -103,6 +103,27 @@ pub fn axpy_rows(m: &[f32], rows: usize, d: usize, w: &[f32], acc: &mut [f32]) {
     scalar::axpy_rows(m, rows, d, w, acc)
 }
 
+/// Transposed matvec: `out[j] = sum_i x[i] * m[i * d + j]` — `out` is
+/// OVERWRITTEN, and rows whose weight `x[i]` is exactly zero are skipped.
+/// This is the `o = q S` read shape of the dense-state mixers (GDN fast
+/// weights, linear-attention `S`), which walks the state row-major with a
+/// per-row scalar weight — the opposite orientation from [`matvec`], so
+/// it gets its own kernel. The scalar tile reproduces the historical
+/// hand-rolled mixer read loops bit for bit (same row order, same
+/// accumulation order, same zero skip); the AVX2 path broadcasts the row
+/// weight and FMAs across columns in the same row order, so it lands
+/// within the documented simd tolerance band.
+pub fn vecmat(x: &[f32], m: &[f32], rows: usize, d: usize, out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd::avx2_available() {
+            simd::vecmat(x, m, rows, d, out);
+            return;
+        }
+    }
+    scalar::vecmat(x, m, rows, d, out)
+}
+
 /// Batched (prefill) form of [`matvec`]: `out[i * rows + r] = dot(m[r],
 /// xs[i])` for every query `i in 0..len`. The matrix is swept in
 /// [`SLOT_BLOCK`]-row tiles reused across every query, so a whole prompt
@@ -262,6 +283,27 @@ pub mod scalar {
             let m0 = &m[r * d..r * d + d];
             for j in 0..d {
                 acc[j] += w[r] * m0[j];
+            }
+        }
+    }
+
+    /// Scalar tile of [`super::vecmat`]: the exact row-order /
+    /// accumulation-order / zero-skip shape of the historical GDN and
+    /// linear-attention read loops, so routing those reads here is
+    /// bit-invisible on this backend.
+    pub fn vecmat(x: &[f32], m: &[f32], rows: usize, d: usize, out: &mut [f32]) {
+        debug_assert!(m.len() >= rows * d);
+        debug_assert!(x.len() >= rows);
+        debug_assert!(out.len() >= d);
+        let out = &mut out[..d];
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for i in 0..rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                let row = &m[i * d..(i + 1) * d];
+                for (o, &mj) in out.iter_mut().zip(row) {
+                    *o += xi * mj;
+                }
             }
         }
     }
@@ -534,6 +576,23 @@ pub(crate) mod simd {
         }
     }
 
+    /// AVX2 [`super::vecmat`]: zero the accumulator, then one broadcast
+    /// FMA sweep per nonzero-weight row, in the scalar path's row order.
+    pub fn vecmat(x: &[f32], m: &[f32], rows: usize, d: usize, out: &mut [f32]) {
+        debug_assert!(avx2_available());
+        debug_assert!(m.len() >= rows * d);
+        debug_assert!(x.len() >= rows);
+        debug_assert!(out.len() >= d);
+        let out = &mut out[..d];
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (i, &xi) in x[..rows].iter().enumerate() {
+            if xi != 0.0 {
+                // SAFETY: gated on avx2_available() above.
+                unsafe { axpy_row_avx2(&m[i * d..i * d + d], xi, out) };
+            }
+        }
+    }
+
     /// Same tiling as the scalar path; every (query, row) result is one
     /// `dot_avx2` call, so this is bit-identical to per-query
     /// [`matvec`] on this backend.
@@ -718,6 +777,26 @@ mod tests {
             for r in 0..rows {
                 let want = naive_dot(&m[r * d..(r + 1) * d], &x);
                 assert!((out[r] - want).abs() < 1e-3 * (1.0 + want.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn vecmat_matches_naive_and_overwrites() {
+        let mut rng = Rng::new(12);
+        for (rows, d) in [(1usize, 5usize), (4, 8), (7, 16), (65, 33)] {
+            let m = randv(&mut rng, rows * d);
+            let mut x = randv(&mut rng, rows);
+            x[0] = 0.0; // exercise the zero-weight skip
+            let mut out = vec![42.0f32; d]; // stale contents must vanish
+            vecmat(&x, &m, rows, d, &mut out);
+            for j in 0..d {
+                let want: f32 = (0..rows).map(|i| x[i] * m[i * d + j]).sum();
+                assert!(
+                    (out[j] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "rows={rows} d={d} j={j}: {} vs {want}",
+                    out[j]
+                );
             }
         }
     }
@@ -966,6 +1045,25 @@ mod simd_tests {
             scalar::matmul_rows(&m, rows, d, &xs, len, &mut want);
             for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
                 assert!(close(g, w), "rows={rows} d={d} flat={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_vecmat_matches_scalar_within_eps() {
+        let mut rng = Rng::new(27);
+        for &rows in &ROWS {
+            for &d in &DIMS {
+                let m = randv(&mut rng, rows * d);
+                let mut x = randv(&mut rng, rows);
+                x[0] = 0.0; // the zero-skip path must agree across backends
+                let mut got = vec![3.0f32; d];
+                let mut want = vec![-7.0f32; d];
+                vecmat(&x, &m, rows, d, &mut got);
+                scalar::vecmat(&x, &m, rows, d, &mut want);
+                for j in 0..d {
+                    assert!(close(got[j], want[j]), "rows={rows} d={d} j={j}");
+                }
             }
         }
     }

@@ -185,6 +185,26 @@ impl SeqMixer for KvCache {
         }
     }
 
+    /// Writes-only prefill: one bulk append and (when windowed) one front
+    /// drain. No reads happen, so this is trivially bit-identical in state
+    /// to [`Self::process_prefill`] and costs O(len*d) instead of the
+    /// full O(len*w*d) attention sweep.
+    fn prefill_writes(&mut self, keys: &[f32], values: &[f32], _scratch: &mut Scratch) {
+        let d = self.d;
+        let len = keys.len() / d;
+        debug_assert_eq!(values.len(), len * d);
+        self.keys.extend_from_slice(keys);
+        self.values.extend_from_slice(values);
+        self.t += len;
+        if let Some(w) = self.window {
+            let drop = self.len().saturating_sub(w);
+            if drop > 0 {
+                self.keys.drain(..drop * d);
+                self.values.drain(..drop * d);
+            }
+        }
+    }
+
     fn snapshot(&self, w: &mut snapshot::Writer) {
         w.usize(self.d);
         w.f32(self.beta);

@@ -33,7 +33,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::mixer::{LayerStat, Scratch, SeqMixer};
+use super::mixer::{LayerStat, PrefillMode, Scratch, SeqMixer};
 use super::quant::QuantTensor;
 use super::snapshot;
 use super::stack::{init_matrix, mixer_seed, LayerStack, StackConfig};
@@ -404,6 +404,14 @@ impl SeqMixer for LmModel {
         scratch: &mut Scratch,
     ) {
         self.stack.process_prefill(queries, keys, values, out, scratch);
+    }
+
+    fn set_prefill_mode(&mut self, mode: PrefillMode) {
+        self.stack.set_prefill_mode(mode);
+    }
+
+    fn prefill_writes(&mut self, keys: &[f32], values: &[f32], scratch: &mut Scratch) {
+        self.stack.prefill_writes(keys, values, scratch);
     }
 
     fn flush(&mut self) {

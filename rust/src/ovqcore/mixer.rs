@@ -64,6 +64,34 @@ impl Scratch {
     }
 }
 
+/// How [`SeqMixer::process_prefill`] treats a long prompt slice.
+///
+/// `Exact` (the default) is the bit-exact serial token order the golden
+/// tests pin — every mixer, every backend. `Chunkwise { chunk }` opts a
+/// dense-state scan mixer (GDN, linear attention) into its
+/// chunkwise-parallel scan form: the slice is cut into `chunk`-token
+/// blocks, intra-block terms come from tiled [`kernels::matmul_rows`]
+/// sweeps, and block states compose left-to-right. That reassociates the
+/// FP accumulation, so chunkwise outputs are held to the documented
+/// tolerance (`|par - serial| <= eps * (1 + |serial|)`, the simd-test
+/// idiom) instead of bit-equality — which is why it is opt-in (CLI
+/// `--prefill-tolerance`). Mixers without a chunkwise form ignore the
+/// mode entirely; the mode is runtime policy, never serialized into
+/// snapshots (a blob thaws in `Exact` and the serving layer re-applies
+/// its configured mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrefillMode {
+    /// Bit-exact serial token order (default; goldens pin it).
+    #[default]
+    Exact,
+    /// Chunkwise-parallel scan form with `chunk`-token blocks
+    /// (tolerance-mode; documented FP reassociation).
+    Chunkwise {
+        /// block length C; clamped to >= 1 by consumers
+        chunk: usize,
+    },
+}
+
 /// One row of a mixer's per-layer telemetry split. Plain mixers are their
 /// own single layer; [`super::stack::LayerStack`] reports one row per
 /// transformer layer so the serving engine can show where state bytes and
@@ -205,6 +233,36 @@ pub trait SeqMixer: Send {
         scratch: &mut Scratch,
     ) {
         self.process_chunk(queries, keys, values, out, scratch);
+    }
+
+    /// Select the prefill policy for subsequent [`SeqMixer::process_prefill`] /
+    /// [`SeqMixer::prefill_writes`] calls. Default no-op: mixers without a
+    /// chunkwise form (OVQ, VQ, KV cache — their blocked prefills are
+    /// already bit-exact) ignore the mode. GDN and linear attention store
+    /// it; [`super::stack::LayerStack`] / [`super::lm::LmModel`] forward it
+    /// to every head. The mode is runtime policy — never serialized, so
+    /// snapshot blobs stay byte-stable and the serving layer re-applies it
+    /// after every admit/restore.
+    fn set_prefill_mode(&mut self, _mode: PrefillMode) {}
+
+    /// Advance the mixer state over `len` (k, v) rows WITHOUT producing
+    /// outputs — the owner-side half of fanned-out prefill, where another
+    /// worker computes the outputs from a snapshot of the pre-advance
+    /// state. The post-call state MUST be bit-identical to what
+    /// [`SeqMixer::process_prefill`] over the same slice leaves behind
+    /// (writes never depend on reads, so the default serial write loop
+    /// satisfies this for every mixer). Overrides only buy speed: skipping
+    /// the read half is exactly the fan-out win — e.g. OVQ skips the
+    /// per-token softmax reads, KV skips everything but the append.
+    fn prefill_writes(&mut self, keys: &[f32], values: &[f32], scratch: &mut Scratch) {
+        let _ = scratch;
+        let di = self.d_in();
+        let dv = self.d_out();
+        let len = keys.len() / di;
+        debug_assert_eq!(values.len(), len * dv);
+        for i in 0..len {
+            self.write(&keys[i * di..(i + 1) * di], &values[i * dv..(i + 1) * dv]);
+        }
     }
 
     /// Flush any buffered chunk tail into the long-term state (no-op for

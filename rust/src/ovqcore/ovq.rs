@@ -465,6 +465,29 @@ impl SeqMixer for OvqState {
         }
     }
 
+    /// Writes-only prefill for the fan-out path: the exact staging +
+    /// lazy-merge loop of [`Self::process_prefill`] minus the read sweep
+    /// (no dictionary matmul, no per-token softmax). The post-call state
+    /// is bit-identical to `process_prefill` over the same slice — merges
+    /// fire at the same boundaries with the same segment contents — at
+    /// roughly half the cost.
+    fn prefill_writes(&mut self, keys: &[f32], values: &[f32], _scratch: &mut Scratch) {
+        let d = self.cfg.d;
+        let dlen = keys.len() / d;
+        debug_assert_eq!(values.len(), dlen * d);
+        let mut i = 0;
+        while i < dlen {
+            if self.pending_len == self.cfg.chunk {
+                self.flush();
+            }
+            let take = (self.cfg.chunk - self.pending_len).min(dlen - i);
+            self.pending_k.extend_from_slice(&keys[i * d..(i + take) * d]);
+            self.pending_v.extend_from_slice(&values[i * d..(i + take) * d]);
+            self.pending_len += take;
+            i += take;
+        }
+    }
+
     fn flush(&mut self) {
         if self.pending_len == 0 {
             return;

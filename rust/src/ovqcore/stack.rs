@@ -42,7 +42,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::memstate::MixerKind;
-use super::mixer::{LayerStat, Scratch, SeqMixer};
+use super::mixer::{LayerStat, PrefillMode, Scratch, SeqMixer};
 use super::quant::{QuantMode, QuantTensor};
 use super::snapshot;
 
@@ -317,7 +317,8 @@ impl StackLayer {
         }
         let (d, hd, dff) = (cfg.d_model, cfg.heads * cfg.d_head, cfg.d_ff);
         let mat = |tag: u64, rows: usize, cols: usize| {
-            QuantTensor::from_f32(q, rows, cols, &init_matrix(weight_seed(init_seed, layer, tag), rows, cols))
+            let w = init_matrix(weight_seed(init_seed, layer, tag), rows, cols);
+            QuantTensor::from_f32(q, rows, cols, &w)
         };
         StackLayer {
             wq: mat(1, hd, d),
@@ -737,6 +738,24 @@ impl SeqMixer for LayerStack {
         scratch: &mut Scratch,
     ) {
         self.process_block(queries, keys, values, out, scratch, true);
+    }
+
+    fn set_prefill_mode(&mut self, mode: PrefillMode) {
+        for layer in &mut self.layers {
+            for m in &mut layer.heads {
+                m.set_prefill_mode(mode);
+            }
+        }
+    }
+
+    /// Every layer's mixer output feeds the next layer, so a stack cannot
+    /// skip its read half — the writes-only contract is honored by running
+    /// the blocked prefill into a discarded output buffer, which keeps the
+    /// state evolution identical to `process_prefill` by construction
+    /// (including any chunkwise head mode).
+    fn prefill_writes(&mut self, keys: &[f32], values: &[f32], scratch: &mut Scratch) {
+        let mut out = vec![0.0f32; values.len()];
+        self.process_prefill(keys, keys, values, &mut out, scratch);
     }
 
     fn flush(&mut self) {

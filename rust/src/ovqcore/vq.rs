@@ -224,6 +224,38 @@ impl SeqMixer for VqState {
         }
     }
 
+    /// Writes-only prefill: the blocked nearest-centroid sweep plus the
+    /// per-token value merges of [`Self::process_prefill`], with the
+    /// count-biased softmax reads dropped. Assignments come from the
+    /// static key dictionary, so skipping the reads cannot change them —
+    /// the post-call state is bit-identical to the full prefill.
+    fn prefill_writes(&mut self, keys: &[f32], values: &[f32], scratch: &mut Scratch) {
+        let d = self.d;
+        let len = keys.len() / d;
+        debug_assert_eq!(values.len(), len * d);
+        let Scratch { buf, idx, .. } = scratch;
+        if idx.len() < len {
+            idx.resize(len, 0);
+        }
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        let best = &mut buf[..len];
+        best.iter_mut().for_each(|b| *b = f32::NEG_INFINITY);
+        self.dk.nearest_rows(keys, len, idx, best);
+        for i in 0..len {
+            let s = idx[i];
+            let c = self.counts[s];
+            self.dv.read_row(s, &mut self.row_v);
+            for j in 0..d {
+                self.row_v[j] = (c * self.row_v[j] + values[i * d + j]) / (c + 1.0);
+            }
+            self.dv.write_row(s, &self.row_v);
+            self.counts[s] = c + 1.0;
+            self.t += 1;
+        }
+    }
+
     fn snapshot(&self, w: &mut snapshot::Writer) {
         w.usize(self.d);
         w.f32(self.beta);

@@ -12,7 +12,7 @@ use ovq::coordinator::traffic::{self, TrafficConfig};
 use ovq::ovqcore::bank::{DecodeChunk, MixerBank, ShardBank};
 use ovq::ovqcore::lm::LmConfig;
 use ovq::ovqcore::memstate::{MixerGeom, MixerKind};
-use ovq::ovqcore::mixer::{Scratch, SeqMixer};
+use ovq::ovqcore::mixer::{PrefillMode, Scratch, SeqMixer};
 use ovq::ovqcore::stack::{LayerStack, StackConfig};
 use ovq::ovqcore::{gdn::GdnState, snapshot};
 use ovq::util::rng::Rng;
@@ -403,6 +403,104 @@ fn same_session_traffic_after_prefill_is_deferred_in_order() {
         s
     };
     assert_eq!(seqs, vec![1, 2, 3]);
+}
+
+// --------------------------------------------------------------- fan-out
+
+/// Long-prompt run exercising intra-request fan-out: one 600-token
+/// prompt session (10 quanta at quantum 64 — well past the 2-quantum
+/// eligibility floor) plus a decode neighbour and a post-prompt decode
+/// chunk on the prompt session itself. Outputs keyed by (session, seq).
+fn run_fanout(
+    kind: MixerKind,
+    mode: PrefillMode,
+    threads: usize,
+    fanout: bool,
+    evict_mid: bool,
+) -> HashMap<(u64, usize), Vec<f32>> {
+    let (heads, d_head) = (2usize, 8usize);
+    let hd = heads * d_head;
+    let mut cfg = EngineConfig::new(kind, heads, d_head, 16);
+    cfg.threads = threads;
+    cfg.queue_depth = 64;
+    cfg.prefill_quantum = 64;
+    cfg.prefill_mode = mode;
+    cfg.prefill_fanout = fanout;
+    cfg.collect_outputs = true;
+    let engine = DecodeEngine::start(cfg);
+    engine.submit_prefill(1, traffic::synth_chunk(0xFA0, 1, 0, 600, hd));
+    if evict_mid {
+        // freeze the prompt session between fan-out rounds: the owner
+        // must thaw the blob transparently and keep segmenting
+        engine.evict(1);
+    }
+    for seq in 0..4usize {
+        engine.submit(2, traffic::synth_chunk(0xD0, 2, seq, 8, hd));
+    }
+    // a decode chunk for the PROMPT session, submitted mid-fan-out: must
+    // defer behind the whole prompt and land on the fanned-out state
+    engine.submit(1, traffic::synth_chunk(0xD1, 1, 77, 8, hd));
+    engine.flush_all();
+    let report = engine.finish();
+    report.outputs.into_iter().map(|o| ((o.session, o.seq), o.out)).collect()
+}
+
+fn assert_same_outputs(
+    a: &HashMap<(u64, usize), Vec<f32>>,
+    b: &HashMap<(u64, usize), Vec<f32>>,
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: output count differs");
+    for (key, out) in a {
+        let got = b.get(key).unwrap_or_else(|| panic!("{what}: missing chunk {key:?}"));
+        assert_eq!(out.len(), got.len(), "{what}: chunk {key:?} length differs");
+        assert!(
+            out.iter().zip(got).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{what}: session {} chunk {} differs",
+            key.0,
+            key.1
+        );
+    }
+}
+
+#[test]
+fn fanned_out_prefill_bit_identical_across_threads_for_exact_mixers() {
+    // the fan-out golden for the exact-prefill mixers (OVQ / VQ / KV):
+    // segments always cut at prefill-quantum boundaries and segment
+    // outputs are computed from per-round state snapshots, so a 4-thread
+    // fanned-out run must reproduce the 1-thread serial run bit for bit
+    let kinds = [MixerKind::Ovq { n_max: 32 }, MixerKind::Vq { n: 32 }, MixerKind::FullAttention];
+    for kind in kinds {
+        let single = run_fanout(kind, PrefillMode::Exact, 1, false, false);
+        assert!(single.len() >= 6, "{kind:?}: prompt + decode outputs expected");
+        let fanned = run_fanout(kind, PrefillMode::Exact, 4, true, false);
+        assert_same_outputs(&single, &fanned, &format!("{kind:?} fan-out"));
+    }
+}
+
+#[test]
+fn chunkwise_prefill_reproducible_across_threads_for_scan_mixers() {
+    // tolerance mode on the scan mixers: chunkwise blocking restarts at
+    // every prefill quantum on BOTH the serial and the fanned-out path,
+    // so even the approximate mode is bit-reproducible across thread
+    // counts for a fixed --prefill-chunk
+    let mode = PrefillMode::Chunkwise { chunk: 24 };
+    for kind in [MixerKind::Gdn, MixerKind::LinearAttention] {
+        let single = run_fanout(kind, mode, 1, false, false);
+        let fanned = run_fanout(kind, mode, 4, true, false);
+        assert_same_outputs(&single, &fanned, &format!("{kind:?} chunkwise fan-out"));
+    }
+}
+
+#[test]
+fn evict_mid_fanout_prefill_is_invisible_to_the_stream() {
+    // snapshot/evict while a prompt is mid-fan-out: the owner shard
+    // thaws the blob on the next round and every output — the prompt's,
+    // the neighbour's, and the deferred same-session decode chunk's —
+    // stays bit-identical to the run that never froze
+    let plain = run_fanout(MixerKind::Ovq { n_max: 32 }, PrefillMode::Exact, 4, true, false);
+    let frozen = run_fanout(MixerKind::Ovq { n_max: 32 }, PrefillMode::Exact, 4, true, true);
+    assert_same_outputs(&plain, &frozen, "mid-fan-out evict");
 }
 
 // ---------------------------------------------------------------- stacks
