@@ -181,6 +181,11 @@ enum EngineMsg {
         params: SamplingParams,
         stop: StopCriteria,
         submitted: Instant,
+        /// per-request streaming channel: every sampled token is delivered
+        /// the moment it exists, then a terminal Done/Failed event. `None`
+        /// keeps the engine-wide [`GenOut`] completion channel as the only
+        /// output path (the pre-streaming behavior).
+        stream: Option<Sender<GenEvent>>,
     },
     Evict { session: u64 },
     FlushAll,
@@ -295,6 +300,41 @@ pub struct GenOut {
     pub seq: usize,
     pub tokens: Vec<TokenId>,
 }
+
+/// Per-request streaming events of one generation, delivered over the
+/// channel passed to [`EngineHandle::submit_generate_streamed`]. Tokens
+/// arrive in sampling order the moment the sampler produces them — the
+/// feed behind SSE token streaming at the HTTP edge. The stream is purely
+/// observational: whether one is attached cannot change what the engine
+/// computes, so streamed completions are bit-identical to unstreamed ones
+/// (and to [`GenOut`], which is still emitted on completion either way).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GenEvent {
+    /// one sampled token, sent before the model steps it
+    Token(TokenId),
+    /// the request completed; `tokens` is the full completion, identical
+    /// to the concatenation of the preceding [`GenEvent::Token`] events
+    /// and to the [`GenOut`] for this request
+    Done { seq: usize, tokens: Vec<TokenId> },
+    /// the request was dropped (non-LM engine, corrupt snapshot restore);
+    /// the reason mirrors the engine's `failed_chunks` diagnostics
+    Failed(String),
+}
+
+/// Non-blocking admission refused: the session's shard queue is full.
+/// The caller decides the shedding policy — the HTTP edge maps this to
+/// `429 Too Many Requests` with a `Retry-After` hint instead of letting
+/// the accept loop block on a saturated shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull;
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard queue full")
+    }
+}
+
+impl std::error::Error for QueueFull {}
 
 /// Telemetry of one shard over the engine's lifetime.
 #[derive(Debug, Clone)]
@@ -539,17 +579,179 @@ impl EngineReport {
     }
 }
 
+/// A cheap, cloneable submission handle onto a running [`DecodeEngine`].
+///
+/// The engine itself is not `Sync` (it owns the output `Receiver`s), so a
+/// network edge cannot share `&DecodeEngine` across connection threads.
+/// The handle carries only the `Send + Sync` half — the bounded shard
+/// senders and the queue gauges — and every submit path of the engine is
+/// available on it, plus the non-blocking [`EngineHandle::try_submit_generate`]
+/// the overload-shedding edge needs. Clone one per connection thread.
+///
+/// Shutdown contract: shard workers exit when their queues drain AND
+/// every sender is gone — the engine's own plus **every live handle
+/// clone**. [`DecodeEngine::finish`] drops the engine's copy; callers
+/// must drop their handles (e.g. stop the HTTP server) before `finish`
+/// can join the workers.
+#[derive(Clone)]
+pub struct EngineHandle {
+    txs: Vec<SyncSender<EngineMsg>>,
+    /// per-shard (gauge, high-water) of queued + in-service work items
+    queue_gauge: Vec<Arc<AtomicUsize>>,
+    queue_high: Vec<Arc<AtomicUsize>>,
+    queue_depth: usize,
+    threads: usize,
+    lm_vocab: Option<usize>,
+}
+
+impl EngineHandle {
+    /// Gauge bump + send on a session's shard (the shared submit core).
+    fn send_counted(&self, s: usize, msg: EngineMsg) {
+        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
+        self.queue_high[s].fetch_max(v, Ordering::SeqCst);
+        self.txs[s].send(msg).expect("shard worker died");
+    }
+
+    /// See [`DecodeEngine::submit`].
+    pub fn submit(&self, session: u64, chunk: DecodeChunk) {
+        let s = shard_of(session, self.threads);
+        self.send_counted(s, EngineMsg::Chunk { session, chunk, submitted: Instant::now() });
+    }
+
+    /// See [`DecodeEngine::submit_prefill`].
+    pub fn submit_prefill(&self, session: u64, chunk: DecodeChunk) {
+        let s = shard_of(session, self.threads);
+        self.send_counted(s, EngineMsg::Prefill { session, chunk, submitted: Instant::now() });
+    }
+
+    /// See [`DecodeEngine::submit_generate`].
+    pub fn submit_generate(
+        &self,
+        session: u64,
+        prompt: Vec<TokenId>,
+        params: SamplingParams,
+        stop: StopCriteria,
+    ) {
+        let s = shard_of(session, self.threads);
+        let msg = EngineMsg::Generate {
+            session,
+            prompt,
+            params,
+            stop,
+            submitted: Instant::now(),
+            stream: None,
+        };
+        self.send_counted(s, msg);
+    }
+
+    /// [`EngineHandle::submit_generate`] with a per-request streaming
+    /// channel: each sampled token arrives as [`GenEvent::Token`] the
+    /// moment it exists, followed by a terminal [`GenEvent::Done`] (or
+    /// [`GenEvent::Failed`]). Blocks on the shard queue like every
+    /// submit; pair with [`EngineHandle::try_submit_generate`] when the
+    /// caller must not block.
+    pub fn submit_generate_streamed(
+        &self,
+        session: u64,
+        prompt: Vec<TokenId>,
+        params: SamplingParams,
+        stop: StopCriteria,
+        stream: Sender<GenEvent>,
+    ) {
+        let s = shard_of(session, self.threads);
+        let msg = EngineMsg::Generate {
+            session,
+            prompt,
+            params,
+            stop,
+            submitted: Instant::now(),
+            stream: Some(stream),
+        };
+        self.send_counted(s, msg);
+    }
+
+    /// Non-blocking generate admission: like
+    /// [`EngineHandle::submit_generate_streamed`] (with `stream: None`
+    /// degrading to the plain completion path), but when the session's
+    /// shard queue is full it returns [`QueueFull`] immediately instead
+    /// of blocking the caller — the engine-backpressure signal the HTTP
+    /// edge turns into `429 Retry-After`.
+    pub fn try_submit_generate(
+        &self,
+        session: u64,
+        prompt: Vec<TokenId>,
+        params: SamplingParams,
+        stop: StopCriteria,
+        stream: Option<Sender<GenEvent>>,
+    ) -> Result<(), QueueFull> {
+        let s = shard_of(session, self.threads);
+        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
+        let msg = EngineMsg::Generate {
+            session,
+            prompt,
+            params,
+            stop,
+            submitted: Instant::now(),
+            stream,
+        };
+        match self.txs[s].try_send(msg) {
+            Ok(()) => {
+                self.queue_high[s].fetch_max(v, Ordering::SeqCst);
+                Ok(())
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.queue_gauge[s].fetch_sub(1, Ordering::SeqCst);
+                Err(QueueFull)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => panic!("shard worker died"),
+        }
+    }
+
+    /// See [`DecodeEngine::evict`].
+    pub fn evict(&self, session: u64) {
+        let s = shard_of(session, self.threads);
+        self.txs[s].send(EngineMsg::Evict { session }).expect("shard worker died");
+    }
+
+    /// See [`DecodeEngine::flush_all`].
+    pub fn flush_all(&self) {
+        for tx in &self.txs {
+            tx.send(EngineMsg::FlushAll).expect("shard worker died");
+        }
+    }
+
+    /// Shard worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Bounded per-shard queue depth (the backpressure threshold).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// The LM vocabulary when the engine serves language models.
+    pub fn lm_vocab(&self) -> Option<usize> {
+        self.lm_vocab
+    }
+
+    /// Live per-shard queue gauges: channel-queued + in-service work
+    /// items right now — the telemetry `/v1/stats` reports while the
+    /// engine runs (the [`EngineReport`] equivalents exist only at
+    /// [`DecodeEngine::finish`]).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.queue_gauge.iter().map(|g| g.load(Ordering::SeqCst)).collect()
+    }
+}
+
 /// The running engine. Dropping it without [`DecodeEngine::finish`]
 /// detaches the workers (they exit once their queues drain).
 pub struct DecodeEngine {
     cfg: EngineConfig,
-    txs: Vec<SyncSender<EngineMsg>>,
+    handle: EngineHandle,
     handles: Vec<thread::JoinHandle<(ShardReport, Vec<(u64, StreamStats)>)>>,
     out_rx: Receiver<EngineOut>,
     gen_rx: Receiver<GenOut>,
-    /// per-shard (gauge, high-water) of queued + in-service chunks
-    queue_gauge: Vec<Arc<AtomicUsize>>,
-    queue_high: Vec<Arc<AtomicUsize>>,
     t0: Instant,
 }
 
@@ -647,16 +849,22 @@ impl DecodeEngine {
         }
         drop(out_tx); // workers hold the only senders
         drop(gen_tx);
-        DecodeEngine {
-            cfg,
+        let handle = EngineHandle {
             txs,
-            handles,
-            out_rx,
-            gen_rx,
             queue_gauge,
             queue_high,
-            t0: Instant::now(),
-        }
+            queue_depth: cfg.queue_depth,
+            threads: cfg.threads,
+            lm_vocab: cfg.lm.as_ref().map(|l| l.vocab),
+        };
+        DecodeEngine { cfg, handle, handles, out_rx, gen_rx, t0: Instant::now() }
+    }
+
+    /// A cloneable `Send + Sync` submission handle — share one per
+    /// connection thread at a network edge (see [`EngineHandle`] for the
+    /// shutdown contract).
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
     }
 
     pub fn threads(&self) -> usize {
@@ -675,13 +883,7 @@ impl DecodeEngine {
     /// while the session's shard queue is full — open-loop producers feel
     /// backpressure here instead of growing an unbounded buffer.
     pub fn submit(&self, session: u64, chunk: DecodeChunk) {
-        let s = shard_of(session, self.cfg.threads);
-        let submitted = Instant::now();
-        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
-        self.queue_high[s].fetch_max(v, Ordering::SeqCst);
-        self.txs[s]
-            .send(EngineMsg::Chunk { session, chunk, submitted })
-            .expect("shard worker died");
+        self.handle.submit(session, chunk);
     }
 
     /// Enqueue a whole prompt for a session — the long-prompt admission
@@ -695,13 +897,7 @@ impl DecodeEngine {
     /// When outputs are collected, the whole prompt completes as ONE
     /// [`EngineOut`] sequenced like a single chunk.
     pub fn submit_prefill(&self, session: u64, chunk: DecodeChunk) {
-        let s = shard_of(session, self.cfg.threads);
-        let submitted = Instant::now();
-        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
-        self.queue_high[s].fetch_max(v, Ordering::SeqCst);
-        self.txs[s]
-            .send(EngineMsg::Prefill { session, chunk, submitted })
-            .expect("shard worker died");
+        self.handle.submit_prefill(session, chunk);
     }
 
     /// Enqueue a generation request: the prompt token ids are routed
@@ -723,13 +919,7 @@ impl DecodeEngine {
         params: SamplingParams,
         stop: StopCriteria,
     ) {
-        let s = shard_of(session, self.cfg.threads);
-        let submitted = Instant::now();
-        let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
-        self.queue_high[s].fetch_max(v, Ordering::SeqCst);
-        self.txs[s]
-            .send(EngineMsg::Generate { session, prompt, params, stop, submitted })
-            .expect("shard worker died");
+        self.handle.submit_generate(session, prompt, params, stop);
     }
 
     /// The LM vocabulary when this engine serves language models.
@@ -737,19 +927,21 @@ impl DecodeEngine {
         self.cfg.lm.as_ref().map(|l| l.vocab)
     }
 
+    /// Live per-shard queue gauges (see [`EngineHandle::queue_depths`]).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.handle.queue_depths()
+    }
+
     /// Ask a session's shard to evict it to a snapshot blob (client
     /// abandon). Queued chunks for the session are processed first (the
     /// message travels the same ordered queue).
     pub fn evict(&self, session: u64) {
-        let s = shard_of(session, self.cfg.threads);
-        self.txs[s].send(EngineMsg::Evict { session }).expect("shard worker died");
+        self.handle.evict(session);
     }
 
     /// Merge every resident session's buffered chunk tail (end-of-run).
     pub fn flush_all(&self) {
-        for tx in &self.txs {
-            tx.send(EngineMsg::FlushAll).expect("shard worker died");
-        }
+        self.handle.flush_all();
     }
 
     /// Non-blocking drain of completed outputs (empty unless
@@ -766,10 +958,12 @@ impl DecodeEngine {
     }
 
     /// Shut down: close the queues, join the workers, gather telemetry
-    /// and any remaining outputs.
+    /// and any remaining outputs. Blocks until every [`EngineHandle`]
+    /// clone has dropped too (handles hold queue senders — see
+    /// [`EngineHandle`]'s shutdown contract).
     pub fn finish(self) -> EngineReport {
-        let DecodeEngine { cfg, txs, handles, out_rx, gen_rx, t0, .. } = self;
-        drop(txs); // workers exit when their queues drain
+        let DecodeEngine { cfg, handle, handles, out_rx, gen_rx, t0 } = self;
+        drop(handle); // workers exit when their queues drain and all handles drop
         let mut shards = Vec::with_capacity(handles.len());
         let mut sessions: Vec<(u64, StreamStats)> = Vec::new();
         for h in handles {
@@ -874,6 +1068,9 @@ struct GenJob {
     /// logits of the last ingested/stepped position, `[vocab]`
     logits: Vec<f32>,
     out: Vec<TokenId>,
+    /// per-request streaming channel (see [`GenEvent`]); observational
+    /// only — attaching one cannot change the sampled tokens
+    stream: Option<Sender<GenEvent>>,
 }
 
 /// One slot of the worker's continuous-batching job queue. Jobs advance
@@ -1004,7 +1201,7 @@ impl WorkerState {
                     fan,
                 }));
             }
-            EngineMsg::Generate { session, prompt, params, stop, submitted } => {
+            EngineMsg::Generate { session, prompt, params, stop, submitted, stream } => {
                 // the sampling-RNG seed mixes engine seed, request seed
                 // and session id — never the shard or thread count, so
                 // generation is bit-identical across engine shapes. The
@@ -1024,6 +1221,7 @@ impl WorkerState {
                     started: false,
                     logits: vec![0.0; self.cfg.vocab.max(1)],
                     out: Vec::new(),
+                    stream,
                 }));
             }
             EngineMsg::Evict { session } => self.bank.evict(session),
@@ -1267,7 +1465,8 @@ impl WorkerState {
             self.prefill_busy += el;
             job.busy_ns += el.as_nanos() as f64;
             if let Err(e) = res {
-                self.drop_generate(job.session, &e);
+                let stream = job.stream.take();
+                self.drop_generate(job.session, stream, &e);
                 return;
             }
             job.done = b;
@@ -1279,7 +1478,7 @@ impl WorkerState {
             // round, so TTFT means time to the first sampled token
         }
 
-        let GenJob { session, sampler, started, logits, out, gen_seed, rep_window, .. } =
+        let GenJob { session, sampler, started, logits, out, gen_seed, rep_window, stream, .. } =
             &mut job;
         let quantum = self.cfg.gen_quantum;
         let first_round = out.is_empty();
@@ -1307,6 +1506,12 @@ impl WorkerState {
                 g.push(tok);
                 let produced = g.produced;
                 out.push(tok);
+                if let Some(tx) = stream.as_ref() {
+                    // a dead receiver (client hung up mid-stream) just
+                    // stops the delivery; the generation itself finishes
+                    // so the session state stays on its deterministic path
+                    let _ = tx.send(GenEvent::Token(tok));
+                }
                 if sampler.should_stop(tok, produced) {
                     finished = true;
                     break;
@@ -1319,7 +1524,8 @@ impl WorkerState {
         self.gen_busy += el;
         job.busy_ns += el.as_nanos() as f64;
         if let Err(e) = res {
-            self.drop_generate(job.session, &e);
+            let stream = job.stream.take();
+            self.drop_generate(job.session, stream, &e);
             return;
         }
         if first_round && !job.out.is_empty() {
@@ -1339,6 +1545,9 @@ impl WorkerState {
             // drop the sampler core so the session's state bytes and any
             // later eviction blob shrink back to mixer state
             let _ = self.bank.with_lm(job.session, |lm, _| lm.end_gen());
+            if let Some(tx) = job.stream.take() {
+                let _ = tx.send(GenEvent::Done { seq, tokens: job.out.clone() });
+            }
             let _ = self.gen_tx.send(GenOut { session: job.session, seq, tokens: job.out });
             self.redispatch();
         } else {
@@ -1347,8 +1556,12 @@ impl WorkerState {
     }
 
     /// A generate request that cannot proceed (non-LM engine, corrupt
-    /// restore) costs that request, not the shard.
-    fn drop_generate(&mut self, session: u64, e: &anyhow::Error) {
+    /// restore) costs that request, not the shard. A streaming client
+    /// learns why through a terminal [`GenEvent::Failed`].
+    fn drop_generate(&mut self, session: u64, stream: Option<Sender<GenEvent>>, e: &anyhow::Error) {
+        if let Some(tx) = stream {
+            let _ = tx.send(GenEvent::Failed(format!("{e:#}")));
+        }
         self.gauge.fetch_sub(1, Ordering::SeqCst);
         self.failed_chunks += 1;
         eprintln!(
@@ -1713,6 +1926,123 @@ mod tests {
                 "fan-out diverged from the serial path"
             );
         }
+    }
+
+    #[test]
+    fn streamed_generate_matches_the_completion_channel() {
+        // a per-request stream must deliver exactly the GenOut tokens, in
+        // order, Token-by-Token, with a terminal Done carrying the same
+        // vector — and attaching it must not change what is sampled
+        let lm = LmConfig::new(
+            24,
+            StackConfig::uniform(2, 8, 16, 2, 4, 8, MixerKind::Ovq { n_max: 16 }),
+        );
+        let mut cfg = EngineConfig::for_lm(lm);
+        cfg.threads = 2;
+        cfg.gen_quantum = 3;
+        let engine = DecodeEngine::start(cfg);
+        let handle = engine.handle();
+        let (tx, rx) = mpsc::channel();
+        handle.submit_generate_streamed(
+            5,
+            vec![1, 2, 3],
+            SamplingParams::sampled(0xF00D),
+            StopCriteria::max_new(10),
+            tx,
+        );
+        // an identical unstreamed request on a different session with the
+        // same params seed: same request-level determinism contract
+        handle.submit_generate(
+            5 + 64, // maps to whichever shard; independence is the point
+            vec![1, 2, 3],
+            SamplingParams::sampled(0xF00D),
+            StopCriteria::max_new(10),
+        );
+        let events: Vec<GenEvent> = rx.iter().collect();
+        drop(handle);
+        let r = engine.finish();
+        let done = events.last().expect("stream must end with a terminal event");
+        let streamed: Vec<TokenId> = events
+            .iter()
+            .filter_map(|e| match e {
+                GenEvent::Token(t) => Some(*t),
+                _ => None,
+            })
+            .collect();
+        match done {
+            GenEvent::Done { seq, tokens } => {
+                assert_eq!(*seq, 1);
+                assert_eq!(tokens, &streamed, "Done must replay the Token events");
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        let gen_out =
+            r.generations.iter().find(|g| g.session == 5).expect("GenOut still emitted");
+        assert_eq!(gen_out.tokens, streamed, "stream and completion channel must agree");
+        assert_eq!(r.completions(), 2);
+    }
+
+    #[test]
+    fn failed_streamed_generate_reports_through_the_stream() {
+        // generate against a non-LM engine: the request dies, the stream
+        // learns why, the shard keeps serving
+        let engine = DecodeEngine::start(EngineConfig::new(MixerKind::Gdn, 1, 4, 8));
+        let handle = engine.handle();
+        let (tx, rx) = mpsc::channel();
+        handle
+            .try_submit_generate(
+                1,
+                vec![0, 1],
+                SamplingParams::greedy(),
+                StopCriteria::max_new(4),
+                Some(tx),
+            )
+            .expect("empty queue must admit");
+        let events: Vec<GenEvent> = rx.iter().collect();
+        assert_eq!(events.len(), 1);
+        assert!(matches!(events[0], GenEvent::Failed(_)));
+        drop(handle);
+        let r = engine.finish();
+        assert_eq!(r.failed_chunks(), 1);
+    }
+
+    #[test]
+    fn try_submit_generate_sheds_on_a_full_queue() {
+        // a 1-thread LM engine with a depth-1 queue: hold the worker busy
+        // with a long generation, then try_submit until the bounded queue
+        // refuses — the call must return QueueFull, never block. The
+        // refused request costs nothing (gauge restored), and accepted
+        // requests all complete after the jam clears.
+        let lm = LmConfig::new(
+            24,
+            StackConfig::uniform(1, 8, 16, 2, 4, 8, MixerKind::Ovq { n_max: 16 }),
+        );
+        let mut cfg = EngineConfig::for_lm(lm);
+        cfg.threads = 1;
+        cfg.queue_depth = 1;
+        let engine = DecodeEngine::start(cfg);
+        let handle = engine.handle();
+        let mut admitted: Vec<u64> = Vec::new();
+        let mut shed = 0usize;
+        for session in 0..32u64 {
+            let r = handle.try_submit_generate(
+                session,
+                vec![1, 2, 3, 4, 5, 6, 7, 8],
+                SamplingParams::greedy(),
+                StopCriteria::max_new(32),
+                None,
+            );
+            match r {
+                Ok(()) => admitted.push(session),
+                Err(QueueFull) => shed += 1,
+            }
+        }
+        assert!(shed > 0, "32 instant submits must overrun a depth-1 queue");
+        assert!(!admitted.is_empty());
+        drop(handle);
+        let r = engine.finish();
+        assert_eq!(r.completions(), admitted.len(), "every admitted request completes");
+        assert_eq!(r.failed_chunks(), 0, "shedding is not a failure");
     }
 
     #[test]

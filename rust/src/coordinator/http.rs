@@ -1,0 +1,1029 @@
+//! The network edge: a dependency-light HTTP/1.1 server over the decode
+//! engine (`std::net` + the hand-rolled [`crate::util::json`] tree — no
+//! new crates, per the repo's offline dependency constraint).
+//!
+//! Endpoints (API.md is the client-facing reference):
+//!
+//! - `POST /v1/completions` — OpenAI-style generation over
+//!   [`EngineHandle::try_submit_generate`]: a blocking JSON completion,
+//!   or `"stream": true` for SSE token streaming over chunked
+//!   transfer-encoding, every sampled token forwarded the moment the
+//!   engine emits it on the request's [`GenEvent`] channel;
+//! - `GET /v1/health` — liveness;
+//! - `GET /v1/stats` — edge counters + live engine queue gauges.
+//!
+//! Production concerns are the point of this module:
+//!
+//! - **Admission control**: per-tenant token buckets ([`TenantGate`],
+//!   keyed by the `x-tenant` header) → `429 rate_limited`; a global
+//!   inflight cap → `429 overloaded`; and engine backpressure — a full
+//!   shard queue surfaces as [`super::engine::QueueFull`] from the
+//!   non-blocking submit
+//!   and maps to `429 overloaded` with `Retry-After`, so saturation
+//!   sheds load instead of blocking the accept loop or hanging clients.
+//! - **Determinism**: the edge is observational. Token sampling depends
+//!   only on (engine seed, sampling params, session id, prompt) — never
+//!   on the transport — so a completion served over the socket is
+//!   bit-identical to the same request through in-process
+//!   `submit_generate`, at any thread count (the golden test in
+//!   `tests/http.rs`; DESIGN.md "Network edge" has the argument).
+//! - **Robustness**: every malformed input — bad framing, truncated or
+//!   oversized bodies, invalid JSON, out-of-range params — maps to a
+//!   typed [`ApiError`] with a stable code and a clean 4xx, never a
+//!   panic or a hung connection (read timeouts bound slow clients).
+//!
+//! The module also ships a minimal client ([`http_post`] / [`http_get`]
+//! + chunked/SSE decoding in [`HttpResponse`]) so traffic replay
+//! (`--over-http`), the golden tests, and the benches can drive a real
+//! socket without new dependencies.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::engine::{DecodeEngine, EngineConfig, EngineHandle, GenEvent};
+use super::router::{parse_completion, route, ApiError, CompletionLimits, Route};
+use super::sampler::{SamplingParams, StopCriteria};
+use super::traffic;
+use crate::ovqcore::lm::{LmConfig, TokenId};
+use crate::ovqcore::memstate::parse_schedule;
+use crate::ovqcore::quant::QuantMode;
+use crate::ovqcore::stack::StackConfig;
+use crate::util::cli::Args;
+use crate::util::json::{parse as json_parse, Json};
+
+/// Edge configuration (`serve-http` flags map 1:1; README has the
+/// consolidated table).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// listen port on 127.0.0.1 (0 = ephemeral, for tests/benches)
+    pub port: u16,
+    /// global cap on concurrently served completions (`--max-inflight`)
+    pub max_inflight: usize,
+    /// per-tenant admitted requests/second (`--tenant-rate`, 0 = off)
+    pub tenant_rate: f64,
+    /// token-bucket capacity per tenant (`--tenant-burst`)
+    pub tenant_burst: f64,
+    /// request-body cap in bytes — larger is `413 body_too_large`
+    pub max_body: usize,
+    /// longest accepted prompt, tokens
+    pub max_prompt: usize,
+    /// largest accepted `max_tokens`
+    pub max_new_cap: usize,
+    /// per-connection read timeout: a stalled or truncated request is a
+    /// clean 400 after this long, not a leaked thread
+    pub read_timeout_ms: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            port: 0,
+            max_inflight: 256,
+            tenant_rate: 0.0,
+            tenant_burst: 8.0,
+            max_body: 1 << 20,
+            max_prompt: 1 << 16,
+            max_new_cap: 4096,
+            read_timeout_ms: 2000,
+        }
+    }
+}
+
+/// Edge counters, all monotonic except the `inflight` gauge. Served as
+/// JSON by `GET /v1/stats`.
+#[derive(Debug, Default)]
+pub struct EdgeStats {
+    /// HTTP requests successfully parsed (any endpoint)
+    pub requests: AtomicUsize,
+    /// completions finished and delivered (blocking + streamed)
+    pub completions: AtomicUsize,
+    /// subset of `completions` that streamed over SSE
+    pub streamed: AtomicUsize,
+    /// generated tokens delivered to clients
+    pub tokens_out: AtomicUsize,
+    /// 429s from the per-tenant token bucket
+    pub shed_rate_limited: AtomicUsize,
+    /// 429s from the global inflight cap
+    pub shed_overloaded: AtomicUsize,
+    /// 429s from engine shard-queue backpressure
+    /// ([`super::engine::QueueFull`])
+    pub shed_backpressure: AtomicUsize,
+    /// non-429 4xx responses (validation, routing, framing)
+    pub client_errors: AtomicUsize,
+    /// 5xx responses (engine-side failures after admission)
+    pub failed: AtomicUsize,
+    /// completions in service right now
+    pub inflight: AtomicUsize,
+}
+
+/// Per-tenant token-bucket rate limiter: `rate` admissions/second
+/// refilling up to `burst`. `rate <= 0` disables the gate entirely.
+pub struct TenantGate {
+    rate: f64,
+    burst: f64,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TenantGate {
+    pub fn new(rate: f64, burst: f64) -> TenantGate {
+        TenantGate { rate, burst: burst.max(1.0), buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Admit one request for `tenant`, or return the `Retry-After`
+    /// seconds until the bucket holds a full token again.
+    pub fn admit(&self, tenant: &str) -> std::result::Result<(), u64> {
+        if self.rate <= 0.0 {
+            return Ok(());
+        }
+        let mut m = self.buckets.lock().expect("tenant gate poisoned");
+        let now = Instant::now();
+        let b = m
+            .entry(tenant.to_string())
+            .or_insert_with(|| Bucket { tokens: self.burst, last: now });
+        let refill = now.duration_since(b.last).as_secs_f64() * self.rate;
+        b.tokens = (b.tokens + refill).min(self.burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(((1.0 - b.tokens) / self.rate).ceil().max(1.0) as u64)
+        }
+    }
+}
+
+/// Everything a connection handler needs, shared behind one `Arc`: the
+/// engine handle, limits, admission state, and counters.
+struct Edge {
+    cfg: HttpConfig,
+    handle: EngineHandle,
+    lim: CompletionLimits,
+    gate: TenantGate,
+    stats: EdgeStats,
+    /// server-assigned session ids for requests that don't pin one;
+    /// starts far above trace/client ids so the spaces never collide
+    next_session: AtomicU64,
+    t0: Instant,
+}
+
+/// Decrements the inflight gauge when the completion handler exits on
+/// any path (success, refusal, panic unwind).
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+// ----------------------------------------------------------- request IO
+
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+const MAX_DRAIN_BYTES: usize = 4 * 1024 * 1024;
+
+struct Request {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Request {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn find_seq(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.len() > hay.len() {
+        return None;
+    }
+    (0..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+/// Read one request: header block (bounded), then exactly
+/// `Content-Length` body bytes (bounded by the body cap). Every failure
+/// mode is a typed [`ApiError`], not a panic or a hang.
+fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> std::result::Result<Request, ApiError> {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_seq(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(ApiError::BadRequest("header block too large".to_string()));
+        }
+        let n = stream
+            .read(&mut tmp)
+            .map_err(|e| ApiError::BadRequest(format!("read failed: {e}")))?;
+        if n == 0 {
+            return Err(ApiError::BadRequest("connection closed mid-request".to_string()));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| ApiError::BadRequest("header block is not UTF-8".to_string()))?;
+    let mut lines = head.split("\r\n");
+    let req_line = lines.next().unwrap_or("");
+    let mut parts = req_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        return Err(ApiError::BadRequest(format!("malformed request line '{req_line}'")));
+    }
+    let mut headers = Vec::new();
+    for l in lines {
+        if let Some((k, v)) = l.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let req = Request { method, path, headers, body: Vec::new() };
+
+    let clen = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => v
+            .parse()
+            .map_err(|_| ApiError::BadRequest(format!("bad content-length '{v}'")))?,
+    };
+    if clen > max_body {
+        // refuse before buffering the body — but discard what the client
+        // already committed to sending (bounded; the read timeout caps a
+        // staller), so closing the socket doesn't reset the connection
+        // with unread data in flight and eat the 413 on its way out
+        let got = buf.len() - (header_end + 4);
+        let mut left = clen.saturating_sub(got).min(MAX_DRAIN_BYTES);
+        while left > 0 {
+            match stream.read(&mut tmp) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => left = left.saturating_sub(n),
+            }
+        }
+        return Err(ApiError::BodyTooLarge { limit: max_body });
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < clen {
+        let n = stream
+            .read(&mut tmp)
+            .map_err(|e| ApiError::BadRequest(format!("body read failed: {e}")))?;
+        if n == 0 {
+            return Err(ApiError::BadRequest("body shorter than content-length".to_string()));
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(clen);
+    Ok(Request { body, ..req })
+}
+
+// ---------------------------------------------------------- response IO
+
+fn write_response(
+    w: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!("HTTP/1.1 {status} {reason}\r\n");
+    head.push_str("content-type: application/json\r\n");
+    head.push_str(&format!("content-length: {}\r\n", body.len()));
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("connection: close\r\n\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)
+}
+
+fn write_error(w: &mut TcpStream, e: &ApiError) -> std::io::Result<()> {
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    if let Some(s) = e.retry_after() {
+        extra.push(("retry-after", s.to_string()));
+    }
+    if let ApiError::MethodNotAllowed { allow } = e {
+        extra.push(("allow", allow.to_string()));
+    }
+    write_response(w, e.status(), e.reason(), &extra, e.body().to_string().as_bytes())
+}
+
+fn write_sse_head(w: &mut TcpStream) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-store\r\n\
+          transfer-encoding: chunked\r\nconnection: close\r\n\r\n",
+    )
+}
+
+fn write_chunk(w: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")
+}
+
+/// One SSE event as one HTTP chunk: `data: <payload>\n\n`.
+fn write_sse_event(w: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    write_chunk(w, format!("data: {data}\n\n").as_bytes())
+}
+
+fn finish_chunks(w: &mut TcpStream) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")
+}
+
+// ------------------------------------------------------------- handlers
+
+fn tokens_json(tokens: &[TokenId]) -> Json {
+    Json::Arr(tokens.iter().map(|t| Json::Num(*t as f64)).collect())
+}
+
+/// Extract a token-id array from a completion response or SSE `done`
+/// event (client side of the wire format).
+pub fn token_ids(j: &Json) -> Option<Vec<TokenId>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| t.as_u64().map(|v| v as TokenId))
+        .collect()
+}
+
+fn finish_reason(tokens: &[TokenId], stop: &StopCriteria) -> &'static str {
+    if tokens.last().is_some_and(|t| stop.stop_tokens.contains(t)) {
+        "stop"
+    } else {
+        "length"
+    }
+}
+
+fn completion_json(session: u64, seq: usize, tokens: &[TokenId], stop: &StopCriteria) -> Json {
+    Json::obj([
+        ("object", Json::Str("ovq.completion".to_string())),
+        ("session", Json::Num(session as f64)),
+        ("seq", Json::Num(seq as f64)),
+        ("tokens", tokens_json(tokens)),
+        ("n_tokens", Json::Num(tokens.len() as f64)),
+        ("finish_reason", Json::Str(finish_reason(tokens, stop).to_string())),
+    ])
+}
+
+fn handle_conn(edge: &Arc<Edge>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(edge.cfg.read_timeout_ms)));
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream, edge.cfg.max_body) {
+        Ok(r) => r,
+        Err(e) => {
+            edge.stats.client_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = write_error(&mut stream, &e);
+            return;
+        }
+    };
+    edge.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let result = match route(&req.method, &req.path) {
+        Ok(Route::Health) => handle_health(edge, &mut stream),
+        Ok(Route::Stats) => handle_stats(edge, &mut stream),
+        Ok(Route::Completions) => handle_completion(edge, &req, &mut stream),
+        Err(e) => Err(e),
+    };
+    if let Err(e) = result {
+        match e.status() {
+            429 => {} // counted at the shed site, by kind
+            500 => {
+                edge.stats.failed.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                edge.stats.client_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let _ = write_error(&mut stream, &e);
+    }
+}
+
+fn handle_health(edge: &Arc<Edge>, w: &mut TcpStream) -> std::result::Result<(), ApiError> {
+    let body = Json::obj([
+        ("status", Json::Str("ok".to_string())),
+        ("threads", Json::Num(edge.handle.threads() as f64)),
+        ("vocab", Json::Num(edge.lim.vocab as f64)),
+        ("uptime_s", Json::Num(edge.t0.elapsed().as_secs_f64())),
+    ]);
+    let _ = write_response(w, 200, "OK", &[], body.to_string().as_bytes());
+    Ok(())
+}
+
+fn handle_stats(edge: &Arc<Edge>, w: &mut TcpStream) -> std::result::Result<(), ApiError> {
+    let s = &edge.stats;
+    let n = |a: &AtomicUsize| Json::Num(a.load(Ordering::Relaxed) as f64);
+    let mut queues = Vec::new();
+    for d in edge.handle.queue_depths() {
+        queues.push(Json::Num(d as f64));
+    }
+    let body = Json::obj([
+        ("uptime_s", Json::Num(edge.t0.elapsed().as_secs_f64())),
+        ("requests", n(&s.requests)),
+        ("completions", n(&s.completions)),
+        ("streamed", n(&s.streamed)),
+        ("tokens_out", n(&s.tokens_out)),
+        ("inflight", n(&s.inflight)),
+        ("client_errors", n(&s.client_errors)),
+        ("failed", n(&s.failed)),
+        (
+            "shed",
+            Json::obj([
+                ("rate_limited", n(&s.shed_rate_limited)),
+                ("overloaded", n(&s.shed_overloaded)),
+                ("backpressure", n(&s.shed_backpressure)),
+            ]),
+        ),
+        (
+            "engine",
+            Json::obj([
+                ("threads", Json::Num(edge.handle.threads() as f64)),
+                ("queue_depth", Json::Num(edge.handle.queue_depth() as f64)),
+                ("queues", Json::Arr(queues)),
+            ]),
+        ),
+    ]);
+    let _ = write_response(w, 200, "OK", &[], body.to_string().as_bytes());
+    Ok(())
+}
+
+/// The completions path: validate → admit (tenant bucket, inflight cap,
+/// engine queue) → submit with a per-request [`GenEvent`] channel →
+/// deliver blocking JSON or SSE. Every refusal happens before the
+/// engine sees the request.
+fn handle_completion(
+    edge: &Arc<Edge>,
+    req: &Request,
+    w: &mut TcpStream,
+) -> std::result::Result<(), ApiError> {
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| ApiError::BadJson("body is not UTF-8".to_string()))?;
+    let body = json_parse(text).map_err(ApiError::BadJson)?;
+    let creq = parse_completion(&body, &edge.lim)?;
+
+    let tenant = req.header("x-tenant").unwrap_or("anon");
+    edge.gate.admit(tenant).map_err(|retry_after| {
+        edge.stats.shed_rate_limited.fetch_add(1, Ordering::Relaxed);
+        ApiError::RateLimited { retry_after }
+    })?;
+
+    let inflight = edge.stats.inflight.fetch_add(1, Ordering::SeqCst);
+    let _guard = InflightGuard(&edge.stats.inflight);
+    if inflight >= edge.cfg.max_inflight {
+        edge.stats.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+        return Err(ApiError::Overloaded { retry_after: 1 });
+    }
+
+    let session = match creq.session {
+        Some(s) => s,
+        None => edge.next_session.fetch_add(1, Ordering::Relaxed),
+    };
+    let (tx, rx) = mpsc::channel();
+    edge.handle
+        .try_submit_generate(session, creq.prompt, creq.params, creq.stop.clone(), Some(tx))
+        .map_err(|_| {
+            edge.stats.shed_backpressure.fetch_add(1, Ordering::Relaxed);
+            ApiError::Overloaded { retry_after: 1 }
+        })?;
+
+    if creq.stream {
+        stream_completion(edge, w, session, &creq.stop, rx)
+    } else {
+        blocking_completion(edge, w, session, &creq.stop, rx)
+    }
+}
+
+fn blocking_completion(
+    edge: &Arc<Edge>,
+    w: &mut TcpStream,
+    session: u64,
+    stop: &StopCriteria,
+    rx: mpsc::Receiver<GenEvent>,
+) -> std::result::Result<(), ApiError> {
+    loop {
+        match rx.recv() {
+            Ok(GenEvent::Token(_)) => continue,
+            Ok(GenEvent::Done { seq, tokens }) => {
+                edge.stats.completions.fetch_add(1, Ordering::Relaxed);
+                edge.stats.tokens_out.fetch_add(tokens.len(), Ordering::Relaxed);
+                let body = completion_json(session, seq, &tokens, stop);
+                let _ = write_response(w, 200, "OK", &[], body.to_string().as_bytes());
+                return Ok(());
+            }
+            Ok(GenEvent::Failed(m)) => return Err(ApiError::Internal(m)),
+            Err(_) => {
+                return Err(ApiError::Internal("engine dropped the request".to_string()))
+            }
+        }
+    }
+}
+
+/// SSE delivery: one `data:` event per sampled token as it arrives, a
+/// final `done` record carrying the full completion, then `[DONE]`.
+/// Engine failures after the head is written surface as an in-stream
+/// `error` event (the status line is already on the wire). A client
+/// that disconnects mid-stream only detaches its observer — sampling
+/// already happened engine-side, so determinism is unaffected.
+fn stream_completion(
+    edge: &Arc<Edge>,
+    w: &mut TcpStream,
+    session: u64,
+    stop: &StopCriteria,
+    rx: mpsc::Receiver<GenEvent>,
+) -> std::result::Result<(), ApiError> {
+    if write_sse_head(w).is_err() {
+        return Ok(()); // client gone before the head — nothing to deliver
+    }
+    let mut index = 0usize;
+    loop {
+        let terminal = match rx.recv() {
+            Ok(GenEvent::Token(t)) => {
+                let ev = Json::obj([
+                    ("token", Json::Num(t as f64)),
+                    ("index", Json::Num(index as f64)),
+                ]);
+                index += 1;
+                if write_sse_event(w, &ev.to_string()).is_err() {
+                    return Ok(()); // client disconnected mid-stream
+                }
+                continue;
+            }
+            Ok(GenEvent::Done { seq, tokens }) => {
+                edge.stats.completions.fetch_add(1, Ordering::Relaxed);
+                edge.stats.streamed.fetch_add(1, Ordering::Relaxed);
+                edge.stats.tokens_out.fetch_add(tokens.len(), Ordering::Relaxed);
+                let mut done = completion_json(session, seq, &tokens, stop);
+                if let Json::Obj(m) = &mut done {
+                    m.insert("done".to_string(), Json::Bool(true));
+                }
+                done
+            }
+            Ok(GenEvent::Failed(m)) => {
+                edge.stats.failed.fetch_add(1, Ordering::Relaxed);
+                ApiError::Internal(m).body()
+            }
+            Err(_) => {
+                edge.stats.failed.fetch_add(1, Ordering::Relaxed);
+                ApiError::Internal("engine dropped the request".to_string()).body()
+            }
+        };
+        let _ = write_sse_event(w, &terminal.to_string());
+        let _ = write_sse_event(w, "[DONE]");
+        let _ = finish_chunks(w);
+        return Ok(());
+    }
+}
+
+// --------------------------------------------------------------- server
+
+/// The running edge. [`HttpServer::stop`] (or drop) shuts the accept
+/// loop down; connection handlers hold [`EngineHandle`] clones, so stop
+/// the server **before** [`DecodeEngine::finish`] — the engine joins
+/// its workers only once every handle is gone.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and start the accept loop:
+    /// one detached handler thread per connection, so a slow client
+    /// never blocks admission. Requires an LM engine (the completions
+    /// endpoint samples tokens).
+    pub fn start(cfg: HttpConfig, handle: EngineHandle) -> Result<HttpServer> {
+        let vocab = handle
+            .lm_vocab()
+            .context("serve-http needs an LM engine (vocab + layer stack)")?;
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr()?;
+        let lim = CompletionLimits {
+            vocab,
+            max_prompt: cfg.max_prompt,
+            max_new: cfg.max_new_cap,
+        };
+        let edge = Arc::new(Edge {
+            gate: TenantGate::new(cfg.tenant_rate, cfg.tenant_burst),
+            cfg,
+            handle,
+            lim,
+            stats: EdgeStats::default(),
+            next_session: AtomicU64::new(1 << 48),
+            t0: Instant::now(),
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let (edge, shutdown) = (Arc::clone(&edge), Arc::clone(&shutdown));
+            thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        let edge = Arc::clone(&edge);
+                        thread::spawn(move || handle_conn(&edge, stream));
+                    }
+                }
+            })
+        };
+        Ok(HttpServer { addr, shutdown, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn shutdown_now(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a dummy connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting and join the accept loop. In-service handlers
+    /// drain on their own (they hold no listener state).
+    pub fn stop(mut self) {
+        self.shutdown_now();
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_now();
+    }
+}
+
+// --------------------------------------------------------------- client
+
+/// A parsed HTTP response from the minimal client: status, lowercased
+/// headers, and the body with chunked transfer-encoding already decoded.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("body is not UTF-8")?;
+        json_parse(text).map_err(anyhow::Error::msg)
+    }
+
+    /// The `data:` payloads of an SSE body, in order (`[DONE]` included).
+    pub fn sse_data(&self) -> Vec<String> {
+        let text = String::from_utf8_lossy(&self.body);
+        text.lines()
+            .filter_map(|l| l.strip_prefix("data: "))
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+/// `POST path` with a JSON body over one `connection: close` exchange.
+pub fn http_post(
+    addr: SocketAddr,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<HttpResponse> {
+    request(addr, "POST", path, headers, body)
+}
+
+/// `GET path` over one `connection: close` exchange.
+pub fn http_get(addr: SocketAddr, path: &str) -> Result<HttpResponse> {
+    request(addr, "GET", path, &[], &[])
+}
+
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<HttpResponse> {
+    let mut s = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\n");
+    head.push_str("content-type: application/json\r\n");
+    head.push_str(&format!("content-length: {}\r\n", body.len()));
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("connection: close\r\n\r\n");
+    s.write_all(head.as_bytes())?;
+    s.write_all(body)?;
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw)?;
+    parse_response(&raw)
+}
+
+fn parse_response(raw: &[u8]) -> Result<HttpResponse> {
+    let pos = find_seq(raw, b"\r\n\r\n").context("no header terminator in response")?;
+    let head = std::str::from_utf8(&raw[..pos]).context("response head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .with_context(|| format!("bad status line '{status_line}'"))?
+        .parse()
+        .with_context(|| format!("bad status in '{status_line}'"))?;
+    let mut headers = Vec::new();
+    for l in lines {
+        if let Some((k, v)) = l.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let mut body = raw[pos + 4..].to_vec();
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.contains("chunked"));
+    if chunked {
+        body = dechunk(&body)?;
+    }
+    Ok(HttpResponse { status, headers, body })
+}
+
+fn dechunk(b: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    loop {
+        let rel = find_seq(&b[i..], b"\r\n").context("unterminated chunk-size line")?;
+        let size_txt = std::str::from_utf8(&b[i..i + rel]).context("chunk size not UTF-8")?;
+        let size = usize::from_str_radix(size_txt.trim(), 16)
+            .with_context(|| format!("bad chunk size '{size_txt}'"))?;
+        i += rel + 2;
+        if size == 0 {
+            return Ok(out);
+        }
+        anyhow::ensure!(i + size <= b.len(), "chunk overruns the body");
+        out.extend_from_slice(&b[i..i + size]);
+        i += size + 2; // past the chunk's trailing CRLF
+    }
+}
+
+/// Build a `POST /v1/completions` body for a generate request — the
+/// wire twin of in-process `submit_generate(session, prompt, params,
+/// stop)`. [`super::router::parse_completion`] reverses it exactly
+/// (round-trip pinned by a test), which is what makes socket replay
+/// bit-identical to in-process replay. Note `params.seed` crosses the
+/// wire as a JSON number: exact up to 2^53 (API.md documents the bound).
+pub fn completion_body(
+    session: Option<u64>,
+    prompt: &[TokenId],
+    params: &SamplingParams,
+    stop: &StopCriteria,
+    stream: bool,
+) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("prompt", tokens_json(prompt)),
+        ("max_tokens", Json::Num(stop.max_new as f64)),
+        ("temperature", Json::Num(params.temperature as f64)),
+        ("top_k", Json::Num(params.top_k as f64)),
+        ("top_p", Json::Num(params.top_p as f64)),
+        ("repetition_penalty", Json::Num(params.rep_penalty as f64)),
+        ("repetition_window", Json::Num(params.rep_window as f64)),
+        ("seed", Json::Num(params.seed as f64)),
+        ("stream", Json::Bool(stream)),
+    ];
+    if let Some(s) = session {
+        pairs.push(("session", Json::Num(s as f64)));
+    }
+    if let Some(t) = stop.stop_tokens.first() {
+        pairs.push(("stop_token", Json::Num(*t as f64)));
+    }
+    Json::obj(pairs)
+}
+
+// ------------------------------------------------------------------ CLI
+
+/// `ovq serve-http [--port P] [--max-inflight N] [--tenant-rate R]
+///                 [--tenant-burst B] [--max-body BYTES]
+///                 [--max-prompt T] [--max-new-cap T]
+///                 [--vocab V] [--layers L] [--d-model D] [--d-ff F]
+///                 [--heads H] [--dhead D] [--chunk C] [--schedule S]
+///                 [--quant none|f16|i8] [--threads W] [--queue-depth Q]
+///                 [--max-resident R] [--prefill-quantum Q]
+///                 [--gen-quantum G] [--seed S]
+///                 [--replay N [--over-http] [--stream] [--sessions S]
+///                  [--data-seed D]]`
+///
+/// Start the HTTP edge over a seeded LM engine (same model surface as
+/// `generate`). With `--replay N` it instead generates an N-event
+/// deterministic zipf trace, drives its generate requests through the
+/// engine — over a real localhost socket with `--over-http` (optionally
+/// SSE-streamed with `--stream`), in-process otherwise — prints the
+/// edge stats and the engine report, and exits; without it the server
+/// runs until killed. README has the walkthrough.
+pub fn cmd_serve_http(args: &Args) -> Result<()> {
+    let vocab = args.opt_usize("vocab", 256)?;
+    let layers = args.opt_usize("layers", 2)?;
+    let heads = args.opt_usize("heads", 2)?;
+    let d_head = args.opt_usize("dhead", 16)?;
+    let d_model = args.opt_usize("d-model", heads * d_head)?;
+    let d_ff = args.opt_usize("d-ff", 4 * d_model)?;
+    let chunk = args.opt_usize("chunk", 32)?;
+    let schedule = args.opt_or("schedule", "ovq:256,kv:win128");
+    let kinds = parse_schedule(&schedule, layers)?;
+    let quant = QuantMode::parse(&args.opt_or("quant", "none"))?;
+    let lm = LmConfig::new(
+        vocab,
+        StackConfig::hybrid(d_model, d_ff, heads, d_head, chunk, kinds).with_quant(quant),
+    );
+    lm.validate()?;
+
+    let mut ecfg = EngineConfig::for_lm(lm);
+    ecfg.threads = args.opt_usize("threads", 2)?;
+    ecfg.max_resident = args.opt_usize("max-resident", usize::MAX / 2)?;
+    ecfg.queue_depth = args.opt_usize("queue-depth", 64)?;
+    ecfg.prefill_quantum = args.opt_usize("prefill-quantum", 512)?;
+    ecfg.gen_quantum = args.opt_usize("gen-quantum", 16)?;
+    ecfg.seed = args.opt_u64("seed", 0x6E6E)?;
+
+    let replay_events = args.opt_usize("replay", 0)?;
+    // demo (--replay) mode defaults to an ephemeral port so repeated
+    // runs never clash; a served deployment defaults to 8080
+    let default_port = if replay_events > 0 { 0 } else { 8080 };
+    let d = HttpConfig::default();
+    let hcfg = HttpConfig {
+        port: args.opt_u16("port", default_port)?,
+        max_inflight: args.opt_usize("max-inflight", d.max_inflight)?,
+        tenant_rate: args.opt_f64("tenant-rate", d.tenant_rate)?,
+        tenant_burst: args.opt_f64("tenant-burst", d.tenant_burst)?,
+        max_body: args.opt_usize("max-body", d.max_body)?,
+        max_prompt: args.opt_usize("max-prompt", d.max_prompt)?,
+        max_new_cap: args.opt_usize("max-new-cap", d.max_new_cap)?,
+        read_timeout_ms: d.read_timeout_ms,
+    };
+
+    let engine = DecodeEngine::start(ecfg);
+    let server = HttpServer::start(hcfg, engine.handle())?;
+    crate::info!(
+        "serving http://{}  (POST /v1/completions, GET /v1/health, GET /v1/stats; \
+         [{schedule}] x {layers} layers, vocab {vocab}, {} shard threads)",
+        server.addr(),
+        engine.threads(),
+    );
+
+    if replay_events == 0 {
+        loop {
+            thread::park(); // serve until the process is killed
+        }
+    }
+
+    let sessions = args.opt_usize("sessions", 32)?;
+    let data_seed = args.opt_u64("data-seed", 0xDA7A)?;
+    let over_http = args.has_flag("over-http") || args.opt("over-http").is_some();
+    let stream = args.has_flag("stream") || args.opt("stream").is_some();
+    let tcfg = traffic::TrafficConfig::new(sessions, replay_events)
+        .with_generates(vec![16, 64], vec![8, 16, 32], 0.9, 0.5);
+    let events = traffic::generate(&tcfg);
+    let t0 = Instant::now();
+    let served = if over_http {
+        traffic::replay_over_http(server.addr(), &events, data_seed, vocab, stream)?.len()
+    } else {
+        traffic::replay(&engine, &events, data_seed, None);
+        events.iter().filter(|e| e.generate).count()
+    };
+    let wall = t0.elapsed();
+    let stats = http_get(server.addr(), "/v1/stats")?;
+    crate::info!(
+        "replayed {replay_events} events ({served} completions, {}) in {:.2}s",
+        if over_http { "over the socket" } else { "in-process" },
+        wall.as_secs_f64(),
+    );
+    println!("{}", String::from_utf8_lossy(&stats.body));
+    server.stop();
+    engine.finish().print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_lm_engine(threads: usize) -> DecodeEngine {
+        let kinds = parse_schedule("ovq:16", 1).unwrap();
+        let lm = LmConfig::new(32, StackConfig::hybrid(8, 16, 2, 4, 8, kinds));
+        let mut cfg = EngineConfig::for_lm(lm);
+        cfg.threads = threads;
+        cfg.seed = 0x6E6E;
+        DecodeEngine::start(cfg)
+    }
+
+    #[test]
+    fn tenant_gate_enforces_rate_with_a_retry_hint() {
+        let g = TenantGate::new(2.0, 2.0);
+        assert!(g.admit("a").is_ok());
+        assert!(g.admit("a").is_ok());
+        let retry = g.admit("a").expect_err("burst of 2 must refuse the 3rd");
+        assert!(retry >= 1, "retry hint {retry}");
+        assert!(g.admit("b").is_ok(), "tenants are isolated");
+        let off = TenantGate::new(0.0, 0.0);
+        for _ in 0..100 {
+            assert!(off.admit("a").is_ok(), "rate 0 disables the gate");
+        }
+    }
+
+    #[test]
+    fn completion_body_round_trips_through_the_validator() {
+        let params = SamplingParams::sampled(0xDA7A ^ 5);
+        let mut stop = StopCriteria::max_new(17);
+        stop.stop_tokens.push(9);
+        let body = completion_body(Some(5), &[1, 2, 3], &params, &stop, true);
+        let lim = CompletionLimits { vocab: 32, max_prompt: 64, max_new: 64 };
+        let wire = json_parse(&body.to_string()).unwrap();
+        let req = parse_completion(&wire, &lim).unwrap();
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.params, params, "sampling params must survive the wire");
+        assert_eq!(req.stop.max_new, 17);
+        assert_eq!(req.stop.stop_tokens, vec![9]);
+        assert_eq!(req.session, Some(5));
+        assert!(req.stream);
+    }
+
+    #[test]
+    fn chunked_sse_bodies_decode() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(b"HTTP/1.1 200 OK\r\ntransfer-encoding: chunked\r\n\r\n");
+        for ev in ["{\"token\":4,\"index\":0}", "[DONE]"] {
+            let data = format!("data: {ev}\n\n");
+            wire.extend_from_slice(format!("{:x}\r\n", data.len()).as_bytes());
+            wire.extend_from_slice(data.as_bytes());
+            wire.extend_from_slice(b"\r\n");
+        }
+        wire.extend_from_slice(b"0\r\n\r\n");
+        let resp = parse_response(&wire).unwrap();
+        assert_eq!(resp.status, 200);
+        let data = resp.sse_data();
+        assert_eq!(data, vec!["{\"token\":4,\"index\":0}".to_string(), "[DONE]".to_string()]);
+        let ev = json_parse(&data[0]).unwrap();
+        assert_eq!(ev.get("token").unwrap().as_u64(), Some(4));
+    }
+
+    #[test]
+    fn server_serves_health_completions_stats_and_404() {
+        let engine = tiny_lm_engine(2);
+        let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+        let addr = server.addr();
+
+        let h = http_get(addr, "/v1/health").unwrap();
+        assert_eq!(h.status, 200);
+        assert_eq!(h.json().unwrap().get("status").unwrap().as_str(), Some("ok"));
+
+        // a blocking completion over the socket ...
+        let prompt = traffic::synth_tokens(0xDA7A, 7, 12, 32);
+        let stop = StopCriteria::max_new(6);
+        let body = completion_body(Some(7), &prompt, &SamplingParams::greedy(), &stop, false);
+        let r = http_post(addr, "/v1/completions", &[], body.to_string().as_bytes()).unwrap();
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let j = r.json().unwrap();
+        let served = token_ids(j.get("tokens").unwrap()).unwrap();
+        assert_eq!(served.len(), 6);
+        assert_eq!(j.get("finish_reason").unwrap().as_str(), Some("length"));
+
+        // ... is bit-identical to the same request in-process
+        let local = tiny_lm_engine(1);
+        local.submit_generate(7, prompt, SamplingParams::greedy(), stop);
+        let report = local.finish();
+        assert_eq!(report.generations[0].tokens, served, "socket vs in-process");
+
+        let s = http_get(addr, "/v1/stats").unwrap();
+        assert_eq!(s.status, 200);
+        let sj = s.json().unwrap();
+        assert!(sj.get("completions").unwrap().as_u64().unwrap() >= 1);
+        assert_eq!(sj.at(&["engine", "threads"]).unwrap().as_u64(), Some(2));
+
+        let nf = http_get(addr, "/nope").unwrap();
+        assert_eq!(nf.status, 404);
+        let nfj = nf.json().unwrap();
+        assert_eq!(nfj.at(&["error", "code"]).unwrap().as_str(), Some("not_found"));
+
+        server.stop();
+        engine.finish();
+    }
+}

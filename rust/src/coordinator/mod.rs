@@ -2,13 +2,17 @@
 //! drivers (one per paper figure/table), the batched scoring server, and
 //! the serving stack's decode side — the sharded multi-threaded decode
 //! [`engine`] with session lifecycle (decode, prefill, and self-feeding
-//! generation via the [`sampler`] stack) and the [`traffic`] load
-//! generator that drives it.
+//! generation via the [`sampler`] stack), the [`traffic`] load generator
+//! that drives it, and the network edge: typed routing/validation in
+//! [`router`] under the [`http`] server (`serve-http`) with SSE token
+//! streaming, per-tenant admission control, and overload shedding.
 
 pub mod engine;
 pub mod evaluator;
 pub mod experiments;
+pub mod http;
 pub mod metrics;
+pub mod router;
 pub mod sampler;
 pub mod server;
 pub mod trainer;

@@ -1,0 +1,453 @@
+//! Typed routing and request validation for the HTTP serving edge.
+//!
+//! The edge's contract with clients lives here, split from the socket
+//! plumbing in [`super::http`] so it is testable without a listener:
+//!
+//! - [`route`] — method + path dispatch with the correct failure split
+//!   (`404 not_found` for unknown paths, `405 method_not_allowed` with an
+//!   `Allow` hint for known paths hit with the wrong verb);
+//! - [`parse_completion`] — the `POST /v1/completions` body schema:
+//!   typed extraction of every field, bounds from [`CompletionLimits`],
+//!   and sampling-parameter validation through
+//!   [`SamplingParams::validate`];
+//! - [`ApiError`] — the full error taxonomy: every way a request can be
+//!   refused, each with a stable machine-readable `code`, an HTTP
+//!   status, and a retryability bit. API.md documents the table; the
+//!   tests here pin every variant's code and status so the documented
+//!   surface cannot drift silently.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::sampler::{SamplingParams, StopCriteria};
+use crate::ovqcore::lm::TokenId;
+use crate::util::json::Json;
+
+/// The three endpoints of the serving edge (API.md has the reference).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /v1/health` — liveness probe
+    Health,
+    /// `GET /v1/stats` — edge + engine telemetry as JSON
+    Stats,
+    /// `POST /v1/completions` — blocking or SSE-streamed generation
+    Completions,
+}
+
+/// Method + path dispatch. Query strings are ignored for matching.
+pub fn route(method: &str, path: &str) -> Result<Route, ApiError> {
+    let path = path.split('?').next().unwrap_or(path);
+    let allow = |m: &str, allow: &'static str, r: Route| {
+        if method == m {
+            Ok(r)
+        } else {
+            Err(ApiError::MethodNotAllowed { allow })
+        }
+    };
+    match path {
+        "/v1/health" => allow("GET", "GET", Route::Health),
+        "/v1/stats" => allow("GET", "GET", Route::Stats),
+        "/v1/completions" => allow("POST", "POST", Route::Completions),
+        _ => Err(ApiError::NotFound(path.to_string())),
+    }
+}
+
+/// Everything that can refuse an API request, with a stable
+/// machine-readable code and HTTP status per variant (the taxonomy table
+/// in API.md). Construction sites: HTTP framing ([`super::http`]),
+/// routing ([`route`]), body validation ([`parse_completion`]), and the
+/// admission path (rate limit / inflight cap / engine backpressure).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// malformed HTTP framing: bad request line, unreadable headers, a
+    /// body shorter than its `Content-Length`
+    BadRequest(String),
+    /// the request body is not valid JSON (parser error attached)
+    BadJson(String),
+    /// a required field is absent (`field` names it)
+    MissingField(&'static str),
+    /// a field is present but out of range / of the wrong type
+    InvalidParam { field: &'static str, reason: String },
+    /// the declared `Content-Length` exceeds the configured body cap
+    BodyTooLarge { limit: usize },
+    /// no such endpoint
+    NotFound(String),
+    /// known endpoint, wrong verb (`allow` is the `Allow` header value)
+    MethodNotAllowed { allow: &'static str },
+    /// the tenant's token bucket is empty — per-tenant rate limit
+    RateLimited { retry_after: u64 },
+    /// the edge or the engine is saturated (inflight cap reached, or the
+    /// session's shard queue refused the request) — overload shedding
+    Overloaded { retry_after: u64 },
+    /// the engine dropped the request after admission (e.g. a corrupt
+    /// session restore) — the only 5xx in the taxonomy
+    Internal(String),
+}
+
+impl ApiError {
+    /// Stable machine-readable code, the `error.code` field of every
+    /// error body. Codes are API surface: never renamed, only added.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ApiError::BadRequest(_) => "bad_request",
+            ApiError::BadJson(_) => "bad_json",
+            ApiError::MissingField(_) => "missing_field",
+            ApiError::InvalidParam { .. } => "invalid_param",
+            ApiError::BodyTooLarge { .. } => "body_too_large",
+            ApiError::NotFound(_) => "not_found",
+            ApiError::MethodNotAllowed { .. } => "method_not_allowed",
+            ApiError::RateLimited { .. } => "rate_limited",
+            ApiError::Overloaded { .. } => "overloaded",
+            ApiError::Internal(_) => "internal",
+        }
+    }
+
+    /// HTTP status code.
+    pub fn status(&self) -> u16 {
+        match self {
+            ApiError::BadRequest(_)
+            | ApiError::BadJson(_)
+            | ApiError::MissingField(_)
+            | ApiError::InvalidParam { .. } => 400,
+            ApiError::NotFound(_) => 404,
+            ApiError::MethodNotAllowed { .. } => 405,
+            ApiError::BodyTooLarge { .. } => 413,
+            ApiError::RateLimited { .. } | ApiError::Overloaded { .. } => 429,
+            ApiError::Internal(_) => 500,
+        }
+    }
+
+    /// HTTP reason phrase for the status line.
+    pub fn reason(&self) -> &'static str {
+        match self.status() {
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            _ => "Internal Server Error",
+        }
+    }
+
+    /// Whether an identical retry can succeed without changing the
+    /// request: true for load-dependent refusals (and transient engine
+    /// failures), false for anything the client must fix first.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            ApiError::RateLimited { .. } | ApiError::Overloaded { .. } | ApiError::Internal(_)
+        )
+    }
+
+    /// `Retry-After` seconds for the 429 variants.
+    pub fn retry_after(&self) -> Option<u64> {
+        match self {
+            ApiError::RateLimited { retry_after } | ApiError::Overloaded { retry_after } => {
+                Some(*retry_after)
+            }
+            _ => None,
+        }
+    }
+
+    /// The JSON error body:
+    /// `{"error":{"code":..,"message":..,"retryable":..[,"retry_after_s":..]}}`.
+    pub fn body(&self) -> Json {
+        let mut e = BTreeMap::new();
+        e.insert("code".to_string(), Json::Str(self.code().to_string()));
+        e.insert("message".to_string(), Json::Str(self.to_string()));
+        e.insert("retryable".to_string(), Json::Bool(self.retryable()));
+        if let Some(s) = self.retry_after() {
+            e.insert("retry_after_s".to_string(), Json::Num(s as f64));
+        }
+        Json::Obj(BTreeMap::from([("error".to_string(), Json::Obj(e))]))
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::BadRequest(m) => write!(f, "malformed HTTP request: {m}"),
+            ApiError::BadJson(m) => write!(f, "request body is not valid JSON: {m}"),
+            ApiError::MissingField(k) => write!(f, "required field '{k}' is missing"),
+            ApiError::InvalidParam { field, reason } => write!(f, "invalid '{field}': {reason}"),
+            ApiError::BodyTooLarge { limit } => {
+                write!(f, "request body exceeds the {limit}-byte limit")
+            }
+            ApiError::NotFound(p) => write!(f, "no such endpoint: {p}"),
+            ApiError::MethodNotAllowed { allow } => {
+                write!(f, "method not allowed (allowed: {allow})")
+            }
+            ApiError::RateLimited { retry_after } => {
+                write!(f, "tenant rate limit exceeded; retry in {retry_after}s")
+            }
+            ApiError::Overloaded { retry_after } => {
+                write!(f, "server overloaded; retry in {retry_after}s")
+            }
+            ApiError::Internal(m) => write!(f, "request failed in the engine: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// Validation bounds of the completions endpoint, set by the server
+/// config (`--max-prompt` / `--max-new-cap` on `serve-http`).
+#[derive(Debug, Clone, Copy)]
+pub struct CompletionLimits {
+    /// LM vocabulary: every prompt/stop token id must be below it
+    pub vocab: usize,
+    /// longest accepted prompt, tokens
+    pub max_prompt: usize,
+    /// largest accepted `max_tokens`
+    pub max_new: usize,
+}
+
+/// A validated `POST /v1/completions` request, ready for
+/// [`super::engine::EngineHandle::try_submit_generate`].
+#[derive(Debug, Clone)]
+pub struct CompletionRequest {
+    /// client-pinned session id (`None` = the server assigns one).
+    /// Pinning matters for reproducibility: the generation RNG seeds on
+    /// (engine seed, sampling seed, session), so a replayed request only
+    /// reproduces bit-identically under the same session id.
+    pub session: Option<u64>,
+    pub prompt: Vec<TokenId>,
+    pub params: SamplingParams,
+    pub stop: StopCriteria,
+    /// SSE token streaming instead of a blocking JSON response
+    pub stream: bool,
+}
+
+fn f64_field(j: &Json, field: &'static str) -> Result<Option<f64>, ApiError> {
+    match j.get(field) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(_) => Err(ApiError::InvalidParam { field, reason: "must be a number".to_string() }),
+    }
+}
+
+fn uint_field(j: &Json, field: &'static str) -> Result<Option<u64>, ApiError> {
+    match f64_field(j, field)? {
+        None => Ok(None),
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 => Ok(Some(n as u64)),
+        Some(_) => Err(ApiError::InvalidParam {
+            field,
+            reason: "must be a non-negative integer".to_string(),
+        }),
+    }
+}
+
+fn bool_field(j: &Json, field: &'static str) -> Result<Option<bool>, ApiError> {
+    match j.get(field) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(ApiError::InvalidParam { field, reason: "must be a boolean".to_string() }),
+    }
+}
+
+/// Validate a parsed `POST /v1/completions` body against `lim`. Unknown
+/// fields are ignored (additive API evolution); every known field is
+/// type- and range-checked, and the assembled [`SamplingParams`] passes
+/// through [`SamplingParams::validate`] so the CLI and the HTTP edge
+/// refuse exactly the same parameter space.
+pub fn parse_completion(j: &Json, lim: &CompletionLimits) -> Result<CompletionRequest, ApiError> {
+    if j.as_obj().is_none() {
+        return Err(ApiError::InvalidParam {
+            field: "body",
+            reason: "must be a JSON object".to_string(),
+        });
+    }
+    let prompt_json = match j.get("prompt") {
+        None | Some(Json::Null) => return Err(ApiError::MissingField("prompt")),
+        Some(Json::Arr(a)) => a,
+        Some(_) => {
+            return Err(ApiError::InvalidParam {
+                field: "prompt",
+                reason: "must be an array of token ids".to_string(),
+            })
+        }
+    };
+    if prompt_json.len() > lim.max_prompt {
+        let n = prompt_json.len();
+        return Err(ApiError::InvalidParam {
+            field: "prompt",
+            reason: format!("{n} tokens exceeds the {}-token limit", lim.max_prompt),
+        });
+    }
+    let mut prompt = Vec::with_capacity(prompt_json.len());
+    for t in prompt_json {
+        match t {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && (*n as usize) < lim.vocab => {
+                prompt.push(*n as TokenId)
+            }
+            _ => {
+                return Err(ApiError::InvalidParam {
+                    field: "prompt",
+                    reason: format!("token ids must be integers in [0, {})", lim.vocab),
+                })
+            }
+        }
+    }
+
+    let max_tokens = uint_field(j, "max_tokens")?.unwrap_or(64);
+    if max_tokens as usize > lim.max_new {
+        return Err(ApiError::InvalidParam {
+            field: "max_tokens",
+            reason: format!("{} exceeds the cap of {}", max_tokens, lim.max_new),
+        });
+    }
+
+    let params = SamplingParams {
+        temperature: f64_field(j, "temperature")?.unwrap_or(0.0) as f32,
+        top_k: uint_field(j, "top_k")?.unwrap_or(0) as usize,
+        top_p: f64_field(j, "top_p")?.unwrap_or(1.0) as f32,
+        rep_penalty: f64_field(j, "repetition_penalty")?.unwrap_or(1.0) as f32,
+        rep_window: uint_field(j, "repetition_window")?.unwrap_or(64) as usize,
+        seed: uint_field(j, "seed")?.unwrap_or(0x5EED),
+    };
+    params.validate().map_err(|e| ApiError::InvalidParam {
+        field: "sampling",
+        reason: format!("{e:#}"),
+    })?;
+
+    let mut stop = StopCriteria::max_new(max_tokens as usize);
+    if let Some(t) = uint_field(j, "stop_token")? {
+        if (t as usize) >= lim.vocab {
+            return Err(ApiError::InvalidParam {
+                field: "stop_token",
+                reason: format!("token ids must be below the vocab of {}", lim.vocab),
+            });
+        }
+        stop.stop_tokens.push(t as TokenId);
+    }
+
+    Ok(CompletionRequest {
+        session: uint_field(j, "session")?,
+        prompt,
+        params,
+        stop,
+        stream: bool_field(j, "stream")?.unwrap_or(false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn lim() -> CompletionLimits {
+        CompletionLimits { vocab: 32, max_prompt: 16, max_new: 128 }
+    }
+
+    #[test]
+    fn routes_dispatch_with_the_right_failure_split() {
+        assert_eq!(route("GET", "/v1/health").unwrap(), Route::Health);
+        assert_eq!(route("GET", "/v1/stats?pretty=1").unwrap(), Route::Stats);
+        assert_eq!(route("POST", "/v1/completions").unwrap(), Route::Completions);
+        // wrong verb on a known path is 405 with an Allow hint, not 404
+        let e = route("POST", "/v1/health").unwrap_err();
+        assert_eq!(e.status(), 405);
+        assert_eq!(e, ApiError::MethodNotAllowed { allow: "GET" });
+        let e = route("GET", "/v1/completions").unwrap_err();
+        assert_eq!(e, ApiError::MethodNotAllowed { allow: "POST" });
+        // unknown path is 404 regardless of verb
+        assert_eq!(route("GET", "/v2/completions").unwrap_err().status(), 404);
+        assert_eq!(route("DELETE", "/").unwrap_err().status(), 404);
+    }
+
+    #[test]
+    fn every_error_variant_has_a_stable_code_status_and_retryability() {
+        // the documented taxonomy (API.md): one row per variant. A change
+        // here is an API break and must update API.md in the same PR.
+        let rows: Vec<(ApiError, &str, u16, bool)> = vec![
+            (ApiError::BadRequest("x".into()), "bad_request", 400, false),
+            (ApiError::BadJson("x".into()), "bad_json", 400, false),
+            (ApiError::MissingField("prompt"), "missing_field", 400, false),
+            (
+                ApiError::InvalidParam { field: "top_p", reason: "r".into() },
+                "invalid_param",
+                400,
+                false,
+            ),
+            (ApiError::NotFound("/x".into()), "not_found", 404, false),
+            (ApiError::MethodNotAllowed { allow: "GET" }, "method_not_allowed", 405, false),
+            (ApiError::BodyTooLarge { limit: 4096 }, "body_too_large", 413, false),
+            (ApiError::RateLimited { retry_after: 2 }, "rate_limited", 429, true),
+            (ApiError::Overloaded { retry_after: 1 }, "overloaded", 429, true),
+            (ApiError::Internal("x".into()), "internal", 500, true),
+        ];
+        for (e, code, status, retryable) in rows {
+            assert_eq!(e.code(), code, "{e:?}");
+            assert_eq!(e.status(), status, "{e:?}");
+            assert_eq!(e.retryable(), retryable, "{e:?}");
+            // serialization round-trips through the JSON layer with the
+            // machine fields present
+            let body = parse(&e.body().to_string()).unwrap();
+            assert_eq!(body.at(&["error", "code"]).unwrap().as_str(), Some(code));
+            assert_eq!(
+                body.at(&["error", "retryable"]).unwrap().as_bool(),
+                Some(retryable),
+                "{e:?}"
+            );
+            assert!(body.at(&["error", "message"]).unwrap().as_str().is_some());
+            assert_eq!(
+                body.at(&["error", "retry_after_s"]).and_then(|v| v.as_u64()),
+                e.retry_after(),
+                "{e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_completion_happy_path_and_defaults() {
+        let j = parse(r#"{"prompt":[1,2,3]}"#).unwrap();
+        let r = parse_completion(&j, &lim()).unwrap();
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.stop.max_new, 64, "default max_tokens");
+        assert!(r.params.is_greedy(), "default sampling is greedy");
+        assert!(!r.stream);
+        assert_eq!(r.session, None);
+
+        let j = parse(
+            r#"{"prompt":[0],"max_tokens":5,"temperature":0.8,"top_k":4,"top_p":0.9,
+                "repetition_penalty":1.1,"repetition_window":8,"seed":7,"stop_token":9,
+                "session":42,"stream":true,"unknown_field":"ignored"}"#,
+        )
+        .unwrap();
+        let r = parse_completion(&j, &lim()).unwrap();
+        assert_eq!(r.stop.max_new, 5);
+        assert_eq!(r.stop.stop_tokens, vec![9]);
+        assert_eq!(r.session, Some(42));
+        assert!(r.stream);
+        assert!(!r.params.is_greedy());
+        assert_eq!(r.params.seed, 7);
+    }
+
+    #[test]
+    fn parse_completion_refuses_each_bad_field_cleanly() {
+        let cases = [
+            (r#"{}"#, "missing_field"),
+            (r#"{"prompt":"abc"}"#, "invalid_param"),
+            (r#"{"prompt":[1,2,99]}"#, "invalid_param"),      // out of vocab
+            (r#"{"prompt":[1.5]}"#, "invalid_param"),          // non-integer id
+            (r#"{"prompt":[-1]}"#, "invalid_param"),           // negative id
+            (r#"{"prompt":[1],"max_tokens":100000}"#, "invalid_param"), // over cap
+            (r#"{"prompt":[1],"temperature":-1}"#, "invalid_param"),
+            (r#"{"prompt":[1],"top_p":0}"#, "invalid_param"),
+            (r#"{"prompt":[1],"stop_token":32}"#, "invalid_param"), // = vocab
+            (r#"{"prompt":[1],"stream":"yes"}"#, "invalid_param"),
+            (r#"{"prompt":[1],"session":-3}"#, "invalid_param"),
+            (r#"[1,2,3]"#, "invalid_param"),                   // body not an object
+        ];
+        for (body, code) in cases {
+            let e = parse_completion(&parse(body).unwrap(), &lim()).unwrap_err();
+            assert_eq!(e.code(), code, "body {body} -> {e:?}");
+            assert_eq!(e.status(), 400, "body {body}");
+        }
+        // a 17-token prompt overruns the 16-token limit
+        let long: Vec<String> = (0..17).map(|_| "1".to_string()).collect();
+        let body = format!("{{\"prompt\":[{}]}}", long.join(","));
+        let e = parse_completion(&parse(&body).unwrap(), &lim()).unwrap_err();
+        assert_eq!(e.code(), "invalid_param");
+    }
+}

@@ -26,8 +26,12 @@
 //! session bit-identical inputs (the engine golden test depends on this).
 
 use std::collections::HashMap;
+use std::net::SocketAddr;
+
+use anyhow::{Context, Result};
 
 use crate::coordinator::engine::DecodeEngine;
+use crate::coordinator::http;
 use crate::coordinator::sampler::{SamplingParams, StopCriteria};
 use crate::ovqcore::bank::DecodeChunk;
 use crate::ovqcore::lm::TokenId;
@@ -397,6 +401,70 @@ pub fn replay(
         }
     }
     tokens
+}
+
+/// Drive a trace's **generate events** over a real localhost socket
+/// (`--over-http`): the socket twin of the generate arm of [`replay`].
+/// Each event becomes a `POST /v1/completions` built by
+/// [`http::completion_body`] from the same deterministic (prompt,
+/// params, session) triple the in-process replayer submits — with
+/// `stream` choosing SSE delivery over blocking JSON. Returns the
+/// per-session completions sorted by session id.
+///
+/// Only generate events cross the wire — decode/prefill events carry
+/// raw activations, which the HTTP edge intentionally does not expose.
+/// The outputs still match a full in-process replay bit-for-bit: a
+/// generate is always its session's *first* arrival (the trace
+/// generator only opens fresh sessions with one), later same-session
+/// work defers behind the running generation, and sampling depends only
+/// on (engine seed, params, session, prompt) — never on co-resident
+/// load or transport (the golden test in `tests/http.rs` pins this).
+pub fn replay_over_http(
+    addr: SocketAddr,
+    events: &[TrafficEvent],
+    data_seed: u64,
+    vocab: usize,
+    stream: bool,
+) -> Result<Vec<(u64, Vec<TokenId>)>> {
+    let mut out = Vec::new();
+    for e in events.iter().filter(|e| e.generate) {
+        let prompt = synth_tokens(data_seed, e.session, e.len, vocab);
+        let params = if e.sampled {
+            SamplingParams::sampled(data_seed ^ e.session)
+        } else {
+            SamplingParams::greedy()
+        };
+        let stop = StopCriteria::max_new(e.max_new);
+        let body = http::completion_body(Some(e.session), &prompt, &params, &stop, stream);
+        let resp = http::http_post(addr, "/v1/completions", &[], body.to_string().as_bytes())?;
+        anyhow::ensure!(
+            resp.status == 200,
+            "session {} got HTTP {}: {}",
+            e.session,
+            resp.status,
+            String::from_utf8_lossy(&resp.body),
+        );
+        let tokens = if stream {
+            // the terminal `done` record is the last data event before
+            // the [DONE] sentinel and carries the full completion
+            let events = resp.sse_data();
+            let done = events
+                .iter()
+                .rev()
+                .find(|d| *d != "[DONE]")
+                .context("SSE stream has no done event")?;
+            let j = crate::util::json::parse(done).map_err(anyhow::Error::msg)?;
+            http::token_ids(j.get("tokens").context("done event lacks tokens")?)
+                .context("done event tokens are not ids")?
+        } else {
+            let j = resp.json()?;
+            http::token_ids(j.get("tokens").context("completion lacks tokens")?)
+                .context("completion tokens are not ids")?
+        };
+        out.push((e.session, tokens));
+    }
+    out.sort_by_key(|(s, _)| *s);
+    Ok(out)
 }
 
 #[cfg(test)]

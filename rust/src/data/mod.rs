@@ -2,8 +2,9 @@
 //! Rust on the request path (no Python involvement).
 //!
 //! Every generator implements [`TaskGen`]: it produces a token sequence of
-//! length T+1 plus a boolean "score" mask of length T, where score[t] means
-//! "the prediction of tokens[t+1] at position t counts toward the metric".
+//! length T+1 plus a boolean "score" mask of length T, where `score[t]`
+//! means "the prediction of `tokens[t+1]` at position t counts toward the
+//! metric".
 //! [`batch::Batch`] assembles these into the (tokens, targets, mask) triple
 //! the train/eval HLO programs take.
 

@@ -5,7 +5,10 @@
 //!  - [`runtime`]     — PJRT client + manifest-driven HLO execution
 //!  - [`coordinator`] — training/eval/serving orchestration, incl. the
 //!    sharded multi-threaded [`coordinator::engine::DecodeEngine`] with
-//!    session lifecycle and the [`coordinator::traffic`] load generator
+//!    session lifecycle, the [`coordinator::traffic`] load generator,
+//!    and the HTTP network edge ([`coordinator::http`] +
+//!    [`coordinator::router`]): `/v1/completions` with SSE token
+//!    streaming, admission control, and overload shedding (API.md)
 //!  - [`data`]        — task generators (ICR, positional ICR, ICL, LM, ...)
 //!  - [`ovqcore`]     — pure-Rust OVQ + baseline state machines behind the
 //!    [`ovqcore::mixer::SeqMixer`] trait, blocked microkernels, the

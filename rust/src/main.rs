@@ -29,6 +29,11 @@ fn usage() -> ! {
                                         --rep-penalty R --stop-token T --threads W]\n\
                                         plus the serve stack flags (--layers --d-model\n\
                                         --d-ff --schedule); --temp 0 = greedy\n\
+           serve-http                   HTTP edge over the engine (API.md): OpenAI-style\n\
+                                        POST /v1/completions with SSE streaming, /v1/health,\n\
+                                        /v1/stats [--port P --max-inflight N --tenant-rate R]\n\
+                                        plus the generate model flags; --replay N\n\
+                                        [--over-http --stream] drives a zipf trace and exits\n\
            flops                        print the App. D FLOPs tables\n\
          \n\
          options: --artifacts DIR (or $OVQ_ARTIFACTS), --out DIR (results)\n"
@@ -46,6 +51,7 @@ fn main() -> Result<()> {
         "exp" => ovq::coordinator::experiments::cmd_exp(&args),
         "serve" => ovq::coordinator::server::cmd_serve(&args),
         "generate" => ovq::coordinator::server::cmd_generate(&args),
+        "serve-http" => ovq::coordinator::http::cmd_serve_http(&args),
         "flops" => ovq::analysis::flops::cmd_flops(&args),
         _ => usage(),
     }

@@ -32,7 +32,7 @@ pub enum MixerKind {
     Ovq { n_max: usize },
     /// VQ (Lingle): static D_k + online D_v + counts (constant N)
     Vq { n: usize },
-    /// linear attention / SSD: S [d, d] (+ z [d])
+    /// linear attention / SSD: S [d, d] (+ `z [d]`)
     LinearAttention,
     /// gated delta net: S [d, d]
     Gdn,

@@ -84,6 +84,12 @@ impl Args {
         self.parsed(key, default, "an integer")
     }
 
+    /// Port-sized integers (`--port`): parse failures and out-of-range
+    /// values both surface as the usual usage-hint error.
+    pub fn opt_u16(&self, key: &str, default: u16) -> Result<u16> {
+        self.parsed(key, default, "a port number")
+    }
+
     pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
         self.parsed(key, default, "a number")
     }

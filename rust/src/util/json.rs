@@ -46,6 +46,17 @@ impl Json {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// Exact non-negative integer access: `Some` only when the number is
+    /// integral and fits `u64` (the HTTP edge validates ids/counts here).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -74,6 +85,17 @@ impl Json {
             cur = cur.get(p)?;
         }
         Some(cur)
+    }
+
+    /// Object builder: `Json::obj([("a", Json::Num(1.0)), ...])`. Saves
+    /// the `BTreeMap` + `.to_string()` boilerplate at response-assembly
+    /// sites (the HTTP edge builds every body this way).
+    pub fn obj<K, I>(pairs: I) -> Json
+    where
+        K: Into<String>,
+        I: IntoIterator<Item = (K, Json)>,
+    {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
     }
 }
 
@@ -345,6 +367,21 @@ mod tests {
         let j = parse(src).unwrap();
         let j2 = parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn u64_access_is_exact() {
+        assert_eq!(parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(parse("0").unwrap().as_u64(), Some(0));
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(parse("\"42\"").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn obj_builder_matches_literal_form() {
+        let j = Json::obj([("b", Json::Bool(true)), ("a", Json::Num(1.0))]);
+        assert_eq!(j.to_string(), r#"{"a":1,"b":true}"#);
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! Integration tests for the HTTP network edge: the socket-replay golden
+//! (a zipf trace's completions over a real localhost socket, blocking and
+//! SSE-streamed, bit-identical to the in-process run at a different
+//! thread count), deterministic overload shedding (engine backpressure,
+//! the inflight cap, and the per-tenant bucket all surface as 429 +
+//! Retry-After), and a malformed-request sweep over real sockets — every
+//! abuse gets a clean typed 4xx, never a panic or a hung connection.
+//! All offline (tier-1) — no artifacts or PJRT.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use ovq::coordinator::engine::{DecodeEngine, EngineConfig, EngineHandle};
+use ovq::coordinator::http::{self, HttpConfig, HttpServer};
+use ovq::coordinator::sampler::{SamplingParams, StopCriteria};
+use ovq::coordinator::traffic::{self, TrafficConfig};
+use ovq::ovqcore::lm::{LmConfig, TokenId};
+use ovq::ovqcore::memstate::parse_schedule;
+use ovq::ovqcore::stack::StackConfig;
+use ovq::util::json::Json;
+
+const VOCAB: usize = 32;
+const DATA_SEED: u64 = 0xDA7A;
+
+/// The tiny LM most edge tests serve: 1 OVQ layer, dims small enough
+/// that full traces stay tier-1-fast.
+fn lm_engine(threads: usize) -> DecodeEngine {
+    let kinds = parse_schedule("ovq:16", 1).unwrap();
+    let lm = LmConfig::new(VOCAB, StackConfig::hybrid(8, 16, 2, 4, 8, kinds));
+    let mut cfg = EngineConfig::for_lm(lm);
+    cfg.threads = threads;
+    cfg.seed = 0x6E6E;
+    cfg.prefill_quantum = 16;
+    cfg.gen_quantum = 8;
+    DecodeEngine::start(cfg)
+}
+
+fn greedy_body(session: u64, prompt_len: usize, max_new: usize) -> String {
+    let prompt = traffic::synth_tokens(DATA_SEED, session, prompt_len, VOCAB);
+    let stop = StopCriteria::max_new(max_new);
+    http::completion_body(Some(session), &prompt, &SamplingParams::greedy(), &stop, false)
+        .to_string()
+}
+
+fn error_code(j: &Json) -> String {
+    let code = j.at(&["error", "code"]).and_then(|c| c.as_str());
+    code.unwrap_or("<missing>").to_string()
+}
+
+// ---------------------------------------------------------------- golden
+
+#[test]
+fn socket_replay_is_bit_identical_to_in_process_replay() {
+    // the acceptance golden: the same zipf trace's generate requests,
+    // served (a) in-process through submit_generate on 1 thread, (b) over
+    // a real localhost socket as blocking JSON on 4 threads, and (c) over
+    // the socket as SSE streams on 4 threads — token streams must match
+    // bit for bit. The in-process run replays the FULL trace (decode and
+    // prefill neighbours included), so the comparison also pins that
+    // co-resident load never leaks into sampling.
+    let gen_lens = vec![6, 10, 16];
+    let trace = TrafficConfig::new(16, 120).with_generates(vec![12, 40], gen_lens, 0.9, 0.5);
+    let events = traffic::generate(&trace);
+    let n_gen = events.iter().filter(|e| e.generate).count();
+    assert!(n_gen >= 5, "trace shape drifted: only {n_gen} generate events");
+
+    // (a) in-process reference
+    let engine = lm_engine(1);
+    traffic::replay(&engine, &events, DATA_SEED, None);
+    engine.flush_all();
+    let report = engine.finish();
+    let mut want: Vec<(u64, Vec<TokenId>)> =
+        report.generations.iter().map(|g| (g.session, g.tokens.clone())).collect();
+    want.sort_by_key(|(s, _)| *s);
+    assert_eq!(want.len(), n_gen, "every generate event must complete");
+    assert!(want.iter().all(|(_, t)| !t.is_empty()));
+
+    // (b) and (c): fresh 4-thread engines (a session generates from its
+    // first-arrival state, so each wire mode gets an unused engine)
+    for stream in [false, true] {
+        let engine = lm_engine(4);
+        let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+        let got =
+            traffic::replay_over_http(server.addr(), &events, DATA_SEED, VOCAB, stream).unwrap();
+        server.stop();
+        engine.finish();
+        let mode = if stream { "SSE" } else { "blocking" };
+        assert_eq!(want, got, "{mode} socket replay diverged from the in-process run");
+    }
+}
+
+#[test]
+fn sse_stream_frames_every_token_then_a_done_record() {
+    // SSE framing over a real socket: one data event per token with a
+    // running index, a terminal done record repeating the full
+    // completion, then the [DONE] sentinel — and the incremental tokens
+    // must concatenate to exactly the done record's token list.
+    let engine = lm_engine(1);
+    let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+    let prompt = traffic::synth_tokens(DATA_SEED, 3, 12, VOCAB);
+    let stop = StopCriteria::max_new(7);
+    let body = http::completion_body(Some(3), &prompt, &SamplingParams::greedy(), &stop, true);
+    let resp = http::http_post(
+        server.addr(),
+        "/v1/completions",
+        &[],
+        body.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some("text/event-stream"));
+
+    let data = resp.sse_data();
+    assert_eq!(data.last().map(String::as_str), Some("[DONE]"));
+    let done = ovq::util::json::parse(&data[data.len() - 2]).unwrap();
+    assert_eq!(done.get("done").and_then(|d| d.as_bool()), Some(true));
+    assert_eq!(done.get("finish_reason").and_then(|f| f.as_str()), Some("length"));
+    let full = http::token_ids(done.get("tokens").unwrap()).unwrap();
+    assert_eq!(full.len(), 7);
+
+    let mut streamed = Vec::new();
+    for (i, ev) in data[..data.len() - 2].iter().enumerate() {
+        let j = ovq::util::json::parse(ev).unwrap();
+        assert_eq!(j.get("index").and_then(|x| x.as_u64()), Some(i as u64));
+        streamed.push(j.get("token").and_then(|t| t.as_u64()).unwrap() as TokenId);
+    }
+    assert_eq!(streamed, full, "incremental tokens must match the done record");
+    server.stop();
+    engine.finish();
+}
+
+// -------------------------------------------------------------- shedding
+
+/// A meatier LM for the jam test: enough per-token work that a
+/// 30k-token generation comfortably outlives the jam/post sequence.
+fn heavy_lm_engine() -> DecodeEngine {
+    let kinds = parse_schedule("ovq:32", 2).unwrap();
+    let lm = LmConfig::new(64, StackConfig::hybrid(32, 64, 2, 16, 16, kinds));
+    let mut cfg = EngineConfig::for_lm(lm);
+    cfg.threads = 1;
+    cfg.queue_depth = 1;
+    cfg.seed = 0x6E6E;
+    cfg.gen_quantum = 8;
+    DecodeEngine::start(cfg)
+}
+
+/// Submit 30k-token greedy generations (sessions `offset`, `offset`+1,
+/// ...) until the depth-1 queue refuses; returns how many were admitted.
+fn jam(handle: &EngineHandle, prompt: &[TokenId], offset: u64) -> usize {
+    let mut n = 0usize;
+    while handle
+        .try_submit_generate(
+            offset + n as u64,
+            prompt.to_vec(),
+            SamplingParams::greedy(),
+            StopCriteria::max_new(30_000),
+            None,
+        )
+        .is_ok()
+    {
+        n += 1;
+        assert!(n < 16, "a depth-1 queue never refused");
+    }
+    n
+}
+
+#[test]
+fn queue_saturation_sheds_429_with_retry_after() {
+    // engine backpressure: jam a 1-worker, depth-1 engine with long
+    // greedy generations until the bounded queue refuses in-process.
+    // The worker pops exactly one message before its drain gate closes
+    // (jobs >= queue_depth suppresses further channel reads until the
+    // 30k-token job completes), so once a whole jam round admits
+    // nothing on top of >= 2 admissions, the channel is provably full
+    // and stays full — the next HTTP completion deterministically hits
+    // QueueFull and must come back as 429 overloaded with Retry-After,
+    // not block or hang.
+    let engine = heavy_lm_engine();
+    let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+    let handle = engine.handle();
+    let long_prompt = traffic::synth_tokens(DATA_SEED, 7000, 32, VOCAB);
+    let mut jammed = jam(&handle, &long_prompt, 7000);
+    assert!(jammed >= 1, "an idle engine must admit the first long job");
+    for round in 1..200u64 {
+        thread::sleep(Duration::from_millis(5));
+        let extra = jam(&handle, &long_prompt, 7000 + round * 100);
+        if extra == 0 && jammed >= 2 {
+            break;
+        }
+        jammed += extra;
+    }
+    assert!(jammed >= 2, "the worker never took the first job in service");
+
+    let resp = http::http_post(
+        server.addr(),
+        "/v1/completions",
+        &[],
+        greedy_body(1, 8, 4).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 429, "a saturated queue must shed, not block");
+    let retry = resp.header("retry-after").expect("429 carries Retry-After");
+    assert!(retry.parse::<u64>().unwrap() >= 1);
+    let j = resp.json().unwrap();
+    assert_eq!(error_code(&j), "overloaded");
+    assert_eq!(j.at(&["error", "retryable"]).and_then(|r| r.as_bool()), Some(true));
+
+    // later posts may land after the jam clears: each must cleanly be a
+    // served 200 or another shed 429 — nothing else, and never a hang
+    let mut oks = 0usize;
+    for i in 2..5u64 {
+        let r = http::http_post(
+            server.addr(),
+            "/v1/completions",
+            &[],
+            greedy_body(i, 8, 4).as_bytes(),
+        )
+        .unwrap();
+        match r.status {
+            200 => oks += 1,
+            429 => assert_eq!(error_code(&r.json().unwrap()), "overloaded"),
+            s => panic!("unexpected status {s} under saturation"),
+        }
+    }
+
+    let stats = http::http_get(server.addr(), "/v1/stats").unwrap().json().unwrap();
+    let shed = stats.at(&["shed", "backpressure"]).and_then(|v| v.as_u64());
+    assert!(shed.is_some_and(|s| s >= 1), "stats must count the backpressure shed");
+
+    drop(handle);
+    server.stop();
+    let report = engine.finish();
+    assert_eq!(
+        report.completions(),
+        jammed + oks,
+        "every admitted request completes after the jam clears"
+    );
+}
+
+#[test]
+fn inflight_cap_sheds_overloaded_while_health_stays_up() {
+    // the global admission cap, pinned deterministically at 0: every
+    // completion is refused as 429 overloaded before the engine sees it,
+    // while health and stats keep answering 200
+    let engine = lm_engine(1);
+    let cfg = HttpConfig { max_inflight: 0, ..HttpConfig::default() };
+    let server = HttpServer::start(cfg, engine.handle()).unwrap();
+    for i in 0..3u64 {
+        let resp = http::http_post(
+            server.addr(),
+            "/v1/completions",
+            &[],
+            greedy_body(i, 4, 2).as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(error_code(&resp.json().unwrap()), "overloaded");
+        assert!(resp.header("retry-after").is_some());
+    }
+    let health = http::http_get(server.addr(), "/v1/health").unwrap();
+    assert_eq!(health.status, 200);
+    let stats = http::http_get(server.addr(), "/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.at(&["shed", "overloaded"]).and_then(|v| v.as_u64()), Some(3));
+    assert_eq!(stats.get("completions").and_then(|v| v.as_u64()), Some(0));
+    server.stop();
+    engine.finish();
+}
+
+#[test]
+fn tenant_rate_limit_sheds_429_rate_limited_per_tenant() {
+    // per-tenant token buckets: burst 1 at 0.5/s means a tenant's second
+    // immediate request is refused with a retry hint, while a different
+    // tenant (and the anonymous bucket) are still admitted
+    let engine = lm_engine(1);
+    let cfg = HttpConfig { tenant_rate: 0.5, tenant_burst: 1.0, ..HttpConfig::default() };
+    let server = HttpServer::start(cfg, engine.handle()).unwrap();
+    let post = |tenant: Option<&str>, session: u64| {
+        let headers: Vec<(&str, &str)> = tenant.map(|t| ("x-tenant", t)).into_iter().collect();
+        http::http_post(
+            server.addr(),
+            "/v1/completions",
+            &headers,
+            greedy_body(session, 4, 2).as_bytes(),
+        )
+        .unwrap()
+    };
+    assert_eq!(post(Some("alice"), 1).status, 200, "burst admits the first request");
+    let refused = post(Some("alice"), 2);
+    assert_eq!(refused.status, 429, "an empty bucket must refuse");
+    assert_eq!(error_code(&refused.json().unwrap()), "rate_limited");
+    let retry: u64 = refused.header("retry-after").unwrap().parse().unwrap();
+    assert!(retry >= 1);
+    assert_eq!(post(Some("bob"), 3).status, 200, "tenants are isolated");
+    assert_eq!(post(None, 4).status, 200, "the anonymous bucket is its own tenant");
+
+    let stats = http::http_get(server.addr(), "/v1/stats").unwrap().json().unwrap();
+    assert_eq!(stats.at(&["shed", "rate_limited"]).and_then(|v| v.as_u64()), Some(1));
+    server.stop();
+    engine.finish();
+}
+
+// -------------------------------------------------------------- malformed
+
+/// Fire a raw byte blob at the server and return the (lossy) response
+/// text — for abuse the well-formed client in `http` cannot produce.
+fn raw_exchange(addr: std::net::SocketAddr, payload: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(payload).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[test]
+fn malformed_requests_get_clean_4xx_never_a_panic() {
+    // the fuzz sweep, over real sockets: truncated JSON, missing and
+    // out-of-range fields, oversized and short-changed bodies, bad verbs,
+    // unknown paths, garbage framing — each one a typed 4xx with a stable
+    // code, and the server still healthy afterwards
+    let engine = lm_engine(1);
+    let cfg = HttpConfig { max_body: 256, ..HttpConfig::default() };
+    let server = HttpServer::start(cfg, engine.handle()).unwrap();
+    let addr = server.addr();
+
+    let post_cases: &[(&str, u16, &str)] = &[
+        (r#"{"prompt": [1, 2"#, 400, "bad_json"),
+        ("prompt=1,2,3", 400, "bad_json"),
+        (r#"{}"#, 400, "missing_field"),
+        (r#"{"prompt": "abc"}"#, 400, "invalid_param"),
+        (r#"{"prompt": [999]}"#, 400, "invalid_param"),
+        (r#"{"prompt": [1], "temperature": -1}"#, 400, "invalid_param"),
+        (r#"{"prompt": [1], "max_tokens": 100000}"#, 400, "invalid_param"),
+        (r#"{"prompt": [1], "stream": "yes"}"#, 400, "invalid_param"),
+    ];
+    for (body, status, code) in post_cases {
+        let resp = http::http_post(addr, "/v1/completions", &[], body.as_bytes()).unwrap();
+        assert_eq!(resp.status, *status, "body {body:?}");
+        assert_eq!(error_code(&resp.json().unwrap()), *code, "body {body:?}");
+    }
+
+    // oversized body: refused as 413 from the Content-Length alone
+    let big = vec![b'x'; 1000];
+    let resp = http::http_post(addr, "/v1/completions", &[], &big).unwrap();
+    assert_eq!(resp.status, 413);
+    assert_eq!(error_code(&resp.json().unwrap()), "body_too_large");
+
+    // wrong verb on known endpoints: 405 with an Allow header
+    let resp = http::http_get(addr, "/v1/completions").unwrap();
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("POST"));
+    assert_eq!(error_code(&resp.json().unwrap()), "method_not_allowed");
+    let resp = http::http_post(addr, "/v1/health", &[], b"").unwrap();
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("GET"));
+
+    // unknown path
+    let resp = http::http_get(addr, "/v1/nope").unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(error_code(&resp.json().unwrap()), "not_found");
+
+    // body shorter than Content-Length: EOF mid-body is a clean 400
+    let short = raw_exchange(
+        addr,
+        b"POST /v1/completions HTTP/1.1\r\ncontent-length: 50\r\n\r\n{\"pro",
+    );
+    assert!(short.starts_with("HTTP/1.1 400"), "got: {short}");
+    assert!(short.contains("bad_request"), "got: {short}");
+
+    // garbage request line
+    let garbage = raw_exchange(addr, b"BLARG\r\n\r\n");
+    assert!(garbage.starts_with("HTTP/1.1 400"), "got: {garbage}");
+
+    // a connection dropped before any bytes: no response owed, no panic
+    drop(TcpStream::connect(addr).unwrap());
+
+    // after all that abuse the server still serves
+    let health = http::http_get(addr, "/v1/health").unwrap();
+    assert_eq!(health.status, 200);
+    assert_eq!(health.json().unwrap().get("status").and_then(|s| s.as_str()), Some("ok"));
+    let stats = http::http_get(addr, "/v1/stats").unwrap().json().unwrap();
+    assert!(stats.get("client_errors").and_then(|v| v.as_u64()).unwrap() >= 12);
+    server.stop();
+    engine.finish();
+}
