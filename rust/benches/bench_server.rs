@@ -538,6 +538,111 @@ fn main() -> anyhow::Result<()> {
         engine.finish();
     }
 
+    // ---- tiered memory: shared-prefix fork TTFT ------------------------
+    println!("\n-- tiered memory: shared-prefix fork, cold vs warm TTFT --");
+    let prefix_len = if quick { 4096usize } else { 65_536 };
+    let mut warm_speedup = 0.0f64;
+    {
+        let mut ecfg = EngineConfig::for_lm(mk_lm(2));
+        ecfg.threads = 1;
+        ecfg.prefill_quantum = 512;
+        let engine = DecodeEngine::start(ecfg);
+        let handle = engine.handle();
+        let prefix = traffic::synth_tokens(0x5EED, u64::MAX, prefix_len, gen_vocab);
+        let mut ttfts = BTreeMap::new();
+        // cold: the first request to name the prefix prefills it and
+        // freezes the template; warm: the next session forks the frozen
+        // snapshot and pays only its own 16-token suffix before sampling
+        for (name, session) in [("ttft64k_prefix_cold", 1u64), ("ttft64k_prefix_warm", 2)] {
+            let mut prompt = prefix.clone();
+            prompt.extend(traffic::synth_tokens(0x5EED, session, 16, gen_vocab));
+            let (tx, rx) = mpsc::channel();
+            let t0 = Instant::now();
+            handle
+                .try_submit_generate_prefixed(
+                    session,
+                    prompt,
+                    prefix_len,
+                    None,
+                    SamplingParams::greedy(),
+                    StopCriteria::max_new(8),
+                    Some(tx),
+                )
+                .expect("idle engine must admit");
+            rx.recv().expect("a first streamed token");
+            let ttft_us = t0.elapsed().as_secs_f64() * 1e6;
+            while rx.recv().is_ok() {} // drain to completion
+            ttfts.insert(name, ttft_us);
+            println!("{name:>22}: ttft {:>9.2} ms", ttft_us / 1e3);
+            rows.push(Row {
+                name: name.to_string(),
+                threads: 1,
+                tok_per_s: prefix_len as f64 / (ttft_us / 1e6),
+                extra: BTreeMap::from([
+                    ("ttft_us".to_string(), Json::Num(ttft_us)),
+                    ("prefix_tokens".to_string(), Json::Num(prefix_len as f64)),
+                ]),
+            });
+        }
+        warm_speedup =
+            ttfts["ttft64k_prefix_cold"] / ttfts["ttft64k_prefix_warm"].max(1e-9);
+        println!("prefix-fork warm TTFT speedup: {warm_speedup:.1}x");
+        drop(handle);
+        engine.finish();
+    }
+
+    // ---- disk tier: spill/restore churn under a tight residency cap ----
+    println!("\n-- disk tier: async spill + restore on the eviction trace --");
+    {
+        use ovq::ovqcore::store::TempDir;
+        let dir = TempDir::new("bench-spill");
+        let mut ecfg = EngineConfig::new(MixerKind::Ovq { n_max: 1024 }, 4, 32, 32);
+        ecfg.threads = 2;
+        ecfg.max_resident = 4;
+        ecfg.spill_dir = Some(dir.path().to_path_buf());
+        ecfg.ram_blob_budget = 0; // every frozen blob heads to disk
+        let engine = DecodeEngine::start(ecfg);
+        let t0 = Instant::now();
+        let tokens = traffic::replay(&engine, &events2, tcfg2.seed, None);
+        engine.flush_all();
+        let report = engine.finish();
+        let tps = tokens as f64 / t0.elapsed().as_secs_f64();
+        let disk_sessions = report.disk_sessions();
+        let ram_sessions = report.sessions.len().saturating_sub(disk_sessions);
+        println!(
+            "cap4 + spill: {tps:>10.0} tok/s  {} spills, {} disk restores, \
+             {:.1} KiB on disk; at shutdown {ram_sessions} sessions in RAM, \
+             {disk_sessions} on disk",
+            report.spills(),
+            report.disk_restores(),
+            report.disk_bytes() as f64 / 1024.0,
+        );
+        rows.push(Row {
+            name: "spill_restore".to_string(),
+            threads: 2,
+            tok_per_s: tps,
+            extra: BTreeMap::from([
+                ("spills".to_string(), Json::Num(report.spills() as f64)),
+                ("disk_restores".to_string(), Json::Num(report.disk_restores() as f64)),
+                ("disk_bytes".to_string(), Json::Num(report.disk_bytes() as f64)),
+            ]),
+        });
+        // capacity gauges: how the trace's sessions split across the two
+        // tiers at shutdown (counts, not rates)
+        rows.push(Row {
+            name: "resident_sessions_ram".to_string(),
+            threads: 2,
+            tok_per_s: ram_sessions as f64,
+            extra: BTreeMap::new(),
+        });
+        rows.push(Row {
+            name: "resident_sessions_disk".to_string(),
+            threads: 2,
+            tok_per_s: disk_sessions as f64,
+            extra: BTreeMap::new(),
+        });
+    }
+
     // ---- machine-readable summary --------------------------------------
     let json_rows: Vec<Json> = rows
         .iter()
@@ -559,6 +664,7 @@ fn main() -> anyhow::Result<()> {
     top.insert("speedup_4t_over_1t".to_string(), Json::Num(speedup_4t));
     top.insert("fanout_speedup_4t".to_string(), Json::Num(fanout_speedup_4t));
     top.insert("eviction_slowdown".to_string(), Json::Num(evict_overhead));
+    top.insert("prefix_warm_speedup".to_string(), Json::Num(warm_speedup));
     top.insert("results".to_string(), Json::Arr(json_rows));
     let path = "BENCH_server.json";
     match std::fs::write(path, format!("{}\n", Json::Obj(top))) {
@@ -576,7 +682,9 @@ fn main() -> anyhow::Result<()> {
          moves only the e2e rate, and the sampled chain costs a small factor over\n \
          greedy; the HTTP edge delivers the same tokens at a modest factor under\n \
          in-process generation, with streamed time-to-first-token well under the\n \
-         blocking path's full-completion latency)"
+         blocking path's full-completion latency; a warm shared-prefix fork cuts\n \
+         TTFT >= 5x vs the cold build of the same prefix; the disk tier trades a\n \
+         bounded tok/s factor for RAM that no longer grows with cold sessions)"
     );
     Ok(())
 }

@@ -24,6 +24,7 @@
 //! test (rust/tests/engine.rs) cross-checks this.
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -41,6 +42,7 @@ use crate::ovqcore::mixer::{
 };
 use crate::ovqcore::quant::QuantMode;
 use crate::ovqcore::stack::{LayerStack, StackConfig};
+use crate::ovqcore::store::{prefix_key, PrefixCache, PrefixReport, StoreConfig, TierStats};
 use crate::util::stats;
 
 /// Engine shape and policy. `threads` is the shard count (one worker
@@ -108,6 +110,26 @@ pub struct EngineConfig {
     /// gain nothing from writes-only prefill, so they keep the serial
     /// path regardless
     pub prefill_fanout: bool,
+    /// disk tier for eviction blobs: when set, each shard writes cold
+    /// snapshot blobs to `<spill_dir>/shard<N>/` through an async
+    /// writeback thread once its RAM blob cache exceeds
+    /// [`EngineConfig::ram_blob_budget`]. A spilled session's RAM cost
+    /// drops to an index entry; restores verify length + checksum and
+    /// route corruption through the typed
+    /// [`crate::ovqcore::snapshot::SnapshotError`] path (a torn file
+    /// costs one request, never the shard). `None` keeps the pure-RAM
+    /// store
+    pub spill_dir: Option<PathBuf>,
+    /// per-shard byte budget for the RAM blob cache — only meaningful
+    /// with [`EngineConfig::spill_dir`] set (a RAM-only store is
+    /// unbounded, the pre-tier behaviour)
+    pub ram_blob_budget: usize,
+    /// shared-prefix caching on the generate path: the first LM session
+    /// to prefill a given prompt prefix freezes its snapshot as an
+    /// immutable copy-on-write template; later sessions whose request
+    /// names the same prefix fork from it bit-identically instead of
+    /// re-running the prefill ([`EngineHandle::submit_generate_prefixed`])
+    pub prefix_cache: bool,
 }
 
 impl EngineConfig {
@@ -129,6 +151,9 @@ impl EngineConfig {
             quant: QuantMode::None,
             prefill_mode: PrefillMode::Exact,
             prefill_fanout: true,
+            spill_dir: None,
+            ram_blob_budget: usize::MAX / 2,
+            prefix_cache: true,
         }
     }
 
@@ -186,6 +211,12 @@ enum EngineMsg {
         /// keeps the engine-wide [`GenOut`] completion channel as the only
         /// output path (the pre-streaming behavior).
         stream: Option<Sender<GenEvent>>,
+        /// leading tokens of `prompt` shared with other requests — the
+        /// prefix-cache candidate span (0 = no shared prefix)
+        prefix_len: usize,
+        /// the prefix-cache key for those tokens (caller-supplied
+        /// `prefix_id`, or hashed from the tokens at submit)
+        prefix_key: u64,
     },
     Evict { session: u64 },
     FlushAll,
@@ -375,6 +406,19 @@ pub struct ShardReport {
     pub ttft_ns: Vec<f64>,
     pub evictions: usize,
     pub restores: usize,
+    /// eviction blobs written back to the disk tier
+    pub spills: usize,
+    /// sessions restored from the disk tier
+    pub disk_restores: usize,
+    /// sessions frozen on the disk tier at shutdown
+    pub disk_sessions: usize,
+    /// blob payload bytes on the disk tier at shutdown
+    pub disk_bytes: usize,
+    /// generate requests that forked their prompt prefix from a cached
+    /// template instead of prefilling it
+    pub prefix_forks: usize,
+    /// prompt tokens those forks skipped (the prefill work saved)
+    pub prefix_fork_tokens: usize,
     /// high-water mark of in-flight work the gauge saw: channel-queued +
     /// in-service (+ one blocked submitter), plus — when prompts are in
     /// play — admitted-but-unfinished prefill jobs and order-deferred
@@ -385,7 +429,9 @@ pub struct ShardReport {
     pub failed_chunks: usize,
     /// live mixer bytes of resident sessions at shutdown
     pub resident_bytes: usize,
-    /// snapshot blob bytes of evicted sessions at shutdown
+    /// RAM held for frozen sessions at shutdown: RAM-tier blobs in full
+    /// plus an index entry per disk-spilled session (disk payload bytes
+    /// are in `disk_bytes`)
     pub snapshot_bytes: usize,
     /// submit→completion wall latency of the most recent
     /// [`crate::ovqcore::bank::LATENCY_WINDOW`] chunks, nanoseconds (ring)
@@ -409,6 +455,8 @@ pub struct EngineReport {
     pub outputs: Vec<EngineOut>,
     /// completed generations, sorted by (session, seq) — always collected
     pub generations: Vec<GenOut>,
+    /// engine-wide prefix-cache statistics at shutdown
+    pub prefix: PrefixReport,
 }
 
 impl EngineReport {
@@ -424,12 +472,45 @@ impl EngineReport {
         self.shards.iter().map(|s| s.restores).sum()
     }
 
+    /// Eviction blobs written back to the disk tier, all shards.
+    pub fn spills(&self) -> usize {
+        self.shards.iter().map(|s| s.spills).sum()
+    }
+
+    /// Sessions restored from the disk tier, all shards.
+    pub fn disk_restores(&self) -> usize {
+        self.shards.iter().map(|s| s.disk_restores).sum()
+    }
+
+    /// Sessions frozen on the disk tier at shutdown, all shards.
+    pub fn disk_sessions(&self) -> usize {
+        self.shards.iter().map(|s| s.disk_sessions).sum()
+    }
+
+    /// Blob payload bytes on the disk tier at shutdown, all shards.
+    pub fn disk_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.disk_bytes).sum()
+    }
+
+    /// Generate requests that forked their prefix from a cached
+    /// template, all shards.
+    pub fn prefix_forks(&self) -> usize {
+        self.shards.iter().map(|s| s.prefix_forks).sum()
+    }
+
+    /// Prompt tokens skipped by prefix forks, all shards.
+    pub fn prefix_fork_tokens(&self) -> usize {
+        self.shards.iter().map(|s| s.prefix_fork_tokens).sum()
+    }
+
     /// Chunks dropped on failed session admit/restore across all shards.
     pub fn failed_chunks(&self) -> usize {
         self.shards.iter().map(|s| s.failed_chunks).sum()
     }
 
-    /// Total state at shutdown: live mixers + evicted snapshot blobs.
+    /// Total RAM state at shutdown: live mixers + the RAM cost of
+    /// frozen sessions (disk-spilled blobs count their index entry
+    /// only; the payload is in [`EngineReport::disk_bytes`]).
     pub fn state_bytes(&self) -> usize {
         self.shards.iter().map(|s| s.resident_bytes + s.snapshot_bytes).sum()
     }
@@ -554,6 +635,27 @@ impl EngineReport {
                 self.completion_us(99.0),
             );
         }
+        if self.spills() > 0 || self.disk_restores() > 0 {
+            println!(
+                "  disk tier: {} spills, {} restores  |  {} sessions / {:.1} KiB on disk at exit",
+                self.spills(),
+                self.disk_restores(),
+                self.disk_sessions(),
+                self.disk_bytes() as f64 / 1024.0,
+            );
+        }
+        if self.prefix.hits + self.prefix.misses > 0 {
+            println!(
+                "  prefix cache: {} hits / {} misses  |  {} forks skipped {} prompt tokens  \
+                 |  {} templates / {:.1} KiB resident",
+                self.prefix.hits,
+                self.prefix.misses,
+                self.prefix_forks(),
+                self.prefix_fork_tokens(),
+                self.prefix.entries,
+                self.prefix.bytes as f64 / 1024.0,
+            );
+        }
         if self.failed_chunks() > 0 {
             println!("  WARNING: {} chunks dropped on failed restores", self.failed_chunks());
         }
@@ -602,6 +704,11 @@ pub struct EngineHandle {
     queue_depth: usize,
     threads: usize,
     lm_vocab: Option<usize>,
+    /// live disk-tier gauges mirrored by every shard's TieredStore —
+    /// `/v1/stats` reads these while the engine runs
+    tier: Arc<TierStats>,
+    /// the engine-wide prefix template cache (shared with every shard)
+    prefix: Arc<PrefixCache>,
 }
 
 impl EngineHandle {
@@ -632,7 +739,33 @@ impl EngineHandle {
         params: SamplingParams,
         stop: StopCriteria,
     ) {
+        self.submit_generate_prefixed(session, prompt, 0, None, params, stop);
+    }
+
+    /// [`EngineHandle::submit_generate`] naming a shared prompt prefix:
+    /// the first `prefix_len` prompt tokens are a prefix-cache
+    /// candidate. On a cache hit the session forks bit-identically from
+    /// the cached template instead of prefilling those tokens (TTFT
+    /// drops from O(prefix) to O(restore)); on a miss the session
+    /// prefills normally and freezes its state at the prefix boundary
+    /// as the template for later requests. `prefix_id` overrides the
+    /// cache key (callers that already name their system prompts);
+    /// `None` hashes the prefix tokens. Outputs are bit-identical
+    /// either way — hit, miss, or cache disabled — which the golden
+    /// tests pin. `prefix_len` must leave at least one non-prefix
+    /// prompt token (the fork needs a fresh token to compute logits
+    /// from); oversized values are ignored, not errors, at this level.
+    pub fn submit_generate_prefixed(
+        &self,
+        session: u64,
+        prompt: Vec<TokenId>,
+        prefix_len: usize,
+        prefix_id: Option<u64>,
+        params: SamplingParams,
+        stop: StopCriteria,
+    ) {
         let s = shard_of(session, self.threads);
+        let key = prefix_id.unwrap_or_else(|| prefix_key(&prompt[..prefix_len.min(prompt.len())]));
         let msg = EngineMsg::Generate {
             session,
             prompt,
@@ -640,6 +773,8 @@ impl EngineHandle {
             stop,
             submitted: Instant::now(),
             stream: None,
+            prefix_len,
+            prefix_key: key,
         };
         self.send_counted(s, msg);
     }
@@ -666,6 +801,8 @@ impl EngineHandle {
             stop,
             submitted: Instant::now(),
             stream: Some(stream),
+            prefix_len: 0,
+            prefix_key: 0,
         };
         self.send_counted(s, msg);
     }
@@ -684,8 +821,27 @@ impl EngineHandle {
         stop: StopCriteria,
         stream: Option<Sender<GenEvent>>,
     ) -> Result<(), QueueFull> {
+        self.try_submit_generate_prefixed(session, prompt, 0, None, params, stop, stream)
+    }
+
+    /// [`EngineHandle::try_submit_generate`] naming a shared prompt
+    /// prefix (see [`EngineHandle::submit_generate_prefixed`]) — the
+    /// HTTP edge's admission path for requests carrying `prefix_len` /
+    /// `prefix_id`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_submit_generate_prefixed(
+        &self,
+        session: u64,
+        prompt: Vec<TokenId>,
+        prefix_len: usize,
+        prefix_id: Option<u64>,
+        params: SamplingParams,
+        stop: StopCriteria,
+        stream: Option<Sender<GenEvent>>,
+    ) -> Result<(), QueueFull> {
         let s = shard_of(session, self.threads);
         let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
+        let key = prefix_id.unwrap_or_else(|| prefix_key(&prompt[..prefix_len.min(prompt.len())]));
         let msg = EngineMsg::Generate {
             session,
             prompt,
@@ -693,6 +849,8 @@ impl EngineHandle {
             stop,
             submitted: Instant::now(),
             stream,
+            prefix_len,
+            prefix_key: key,
         };
         match self.txs[s].try_send(msg) {
             Ok(()) => {
@@ -742,6 +900,25 @@ impl EngineHandle {
     pub fn queue_depths(&self) -> Vec<usize> {
         self.queue_gauge.iter().map(|g| g.load(Ordering::SeqCst)).collect()
     }
+
+    /// Live disk-tier counters across every shard, in order: (spills,
+    /// disk restores, sessions on disk now, payload bytes on disk now).
+    /// The monotonic pair lags writeback completion by at most the
+    /// writer thread's in-flight job.
+    pub fn tier_counters(&self) -> (usize, usize, usize, usize) {
+        (
+            self.tier.spills.load(Ordering::Relaxed),
+            self.tier.disk_restores.load(Ordering::Relaxed),
+            self.tier.disk_sessions.load(Ordering::Relaxed),
+            self.tier.disk_bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Live prefix-cache statistics (hits, misses, resident template
+    /// bytes, entries).
+    pub fn prefix_stats(&self) -> PrefixReport {
+        self.prefix.stats()
+    }
 }
 
 /// The running engine. Dropping it without [`DecodeEngine::finish`]
@@ -767,9 +944,16 @@ impl DecodeEngine {
                 "lm engines pack one [len, d_model] row per token \
                  (build the config with EngineConfig::for_lm)"
             );
-            return Self::start_with(cfg, move |session, _head| {
-                Box::new(LmModel::new(lm.clone(), session_seed(seed, session, 0)))
-                    as Box<dyn SeqMixer>
+            // one shared weight seed for every session: a served model is
+            // ONE set of weights, and shared weights are what make a
+            // prefix-cache fork bit-identical to running the prefill
+            // locally (per-session weights would make the template's
+            // state meaningless to any other session). Sampling stays
+            // per-session — the generation RNG seeds on (engine seed,
+            // request seed, session) at dispatch, not here.
+            let wseed = session_seed(seed, 0, 0);
+            return Self::start_with(cfg, move |_session, _head| {
+                Box::new(LmModel::new(lm.clone(), wseed)) as Box<dyn SeqMixer>
             });
         }
         if let Some(stack) = cfg.stack.clone() {
@@ -808,6 +992,11 @@ impl DecodeEngine {
         // (bare mixers; stack/LM prefill_writes is the full forward pass)
         let fanout = cfg.prefill_fanout && cfg.stack.is_none() && cfg.threads > 1;
         let pool = Arc::new(PrefillPool::default());
+        let tier = Arc::new(TierStats::default());
+        // prefix forking requires the shared-weight LM factory above:
+        // only LM engines arm it (a bare-mixer template would smuggle
+        // one session's per-session dictionary seeds into another)
+        let prefix = Arc::new(PrefixCache::new(cfg.prefix_cache && cfg.lm.is_some()));
         for shard in 0..cfg.threads {
             let (tx, rx) = mpsc::sync_channel::<EngineMsg>(cfg.queue_depth);
             let gauge = Arc::new(AtomicUsize::new(0));
@@ -829,8 +1018,13 @@ impl DecodeEngine {
                 seed: cfg.seed,
                 prefill_mode: cfg.prefill_mode,
                 fanout,
+                // shards never share blob files: each gets a subdir
+                spill_dir: cfg.spill_dir.as_ref().map(|d| d.join(format!("shard{shard}"))),
+                ram_blob_budget: cfg.ram_blob_budget,
             };
             let worker_pool = Arc::clone(&pool);
+            let worker_tier = Arc::clone(&tier);
+            let worker_prefix = Arc::clone(&prefix);
             handles.push(thread::spawn(move || {
                 shard_worker(
                     wcfg,
@@ -841,6 +1035,8 @@ impl DecodeEngine {
                     worker_gauge,
                     worker_high,
                     worker_pool,
+                    worker_tier,
+                    worker_prefix,
                 )
             }));
             txs.push(tx);
@@ -856,6 +1052,8 @@ impl DecodeEngine {
             queue_depth: cfg.queue_depth,
             threads: cfg.threads,
             lm_vocab: cfg.lm.as_ref().map(|l| l.vocab),
+            tier,
+            prefix,
         };
         DecodeEngine { cfg, handle, handles, out_rx, gen_rx, t0: Instant::now() }
     }
@@ -963,6 +1161,9 @@ impl DecodeEngine {
     /// [`EngineHandle`]'s shutdown contract).
     pub fn finish(self) -> EngineReport {
         let DecodeEngine { cfg, handle, handles, out_rx, gen_rx, t0 } = self;
+        // keep the cache stats alive past the handle drop; read them only
+        // after the joins below so every worker's counts are final
+        let prefix_cache = Arc::clone(&handle.prefix);
         drop(handle); // workers exit when their queues drain and all handles drop
         let mut shards = Vec::with_capacity(handles.len());
         let mut sessions: Vec<(u64, StreamStats)> = Vec::new();
@@ -980,6 +1181,7 @@ impl DecodeEngine {
         generations.sort_by_key(|g| (g.session, g.seq));
         let tokens = shards.iter().map(|s| s.tokens).sum();
         let chunks = shards.iter().map(|s| s.chunks).sum();
+        let prefix = prefix_cache.stats();
         EngineReport {
             threads: cfg.threads,
             wall,
@@ -989,12 +1191,13 @@ impl DecodeEngine {
             sessions,
             outputs,
             generations,
+            prefix,
         }
     }
 }
 
 /// Static per-worker shape (one struct so the spawn site stays readable).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 struct WorkerCfg {
     shard: usize,
     heads: usize,
@@ -1013,6 +1216,10 @@ struct WorkerCfg {
     prefill_mode: PrefillMode,
     /// intra-request fan-out armed for this engine (see EngineConfig)
     fanout: bool,
+    /// this shard's private disk-spill directory (None = RAM-only store)
+    spill_dir: Option<PathBuf>,
+    /// RAM budget for frozen snapshot blobs, bytes (only with spill_dir)
+    ram_blob_budget: usize,
 }
 
 /// An in-flight long-prompt admission, ingested one quantum at a time.
@@ -1056,6 +1263,16 @@ struct GenJob {
     prompt: Vec<TokenId>,
     /// prompt tokens ingested so far
     done: usize,
+    /// leading prompt tokens eligible for prefix-cache fork/registration
+    /// (0 = plain request; forced to 0 when forking cannot apply)
+    prefix_len: usize,
+    /// cache key of the prefix (caller-supplied id or prefix-token hash)
+    prefix_key: u64,
+    /// the prefix decision (fork / build / disable) has been made
+    prefix_armed: bool,
+    /// this job is the one computing the template: snapshot and register
+    /// the session state when ingestion reaches prefix_len
+    prefix_build: bool,
     sampler: SamplerStack,
     /// deterministic sampling-RNG seed (engine seed x params seed x
     /// session — never the shard or thread count)
@@ -1141,6 +1358,12 @@ struct WorkerState {
     prefill_tokens: usize,
     gen_tokens: usize,
     completions: usize,
+    /// engine-wide copy-on-write shared-prefix template cache
+    prefix: Arc<PrefixCache>,
+    /// sessions admitted by forking a cached prefix template
+    prefix_forks: usize,
+    /// prompt tokens skipped by those forks
+    prefix_fork_tokens: usize,
 }
 
 impl WorkerState {
@@ -1201,7 +1424,16 @@ impl WorkerState {
                     fan,
                 }));
             }
-            EngineMsg::Generate { session, prompt, params, stop, submitted, stream } => {
+            EngineMsg::Generate {
+                session,
+                prompt,
+                prefix_len,
+                prefix_key,
+                params,
+                stop,
+                submitted,
+                stream,
+            } => {
                 // the sampling-RNG seed mixes engine seed, request seed
                 // and session id — never the shard or thread count, so
                 // generation is bit-identical across engine shapes. The
@@ -1213,6 +1445,10 @@ impl WorkerState {
                     session,
                     prompt,
                     done: 0,
+                    prefix_len,
+                    prefix_key,
+                    prefix_armed: false,
+                    prefix_build: false,
                     gen_seed,
                     rep_window: params.rep_window,
                     sampler: SamplerStack::new(&params, stop),
@@ -1452,8 +1688,18 @@ impl WorkerState {
     /// transparent — the history ring, RNG and produced count thaw from
     /// the `"lm"` blob and the stream continues bit-identically.
     fn advance_generate(&mut self, mut job: GenJob) {
+        if !job.prefix_armed {
+            job.prefix_armed = true;
+            self.arm_prefix(&mut job);
+        }
         if job.done < job.prompt.len() {
-            let take = self.cfg.prefill_quantum.min(job.prompt.len() - job.done);
+            let mut take = self.cfg.prefill_quantum.min(job.prompt.len() - job.done);
+            if job.prefix_build && job.done < job.prefix_len {
+                // never ingest across the prefix boundary: the template
+                // snapshot must capture exactly prefix_len tokens, so a
+                // fork lands bit-identically regardless of quantum size
+                take = take.min(job.prefix_len - job.done);
+            }
             let (a, b) = (job.done, job.done + take);
             let (prompt, logits) = (&job.prompt, &mut job.logits);
             let t0 = Instant::now();
@@ -1470,6 +1716,20 @@ impl WorkerState {
                 return;
             }
             job.done = b;
+            if job.prefix_build && job.done == job.prefix_len {
+                job.prefix_build = false;
+                // freeze the stack/LM state as an immutable copy-on-write
+                // template; later requests with the same key fork from it
+                // instead of re-ingesting the prefix. A snapshot failure
+                // only loses the cache entry, never the request.
+                match self.bank.snapshot_session(job.session) {
+                    Ok(blob) => self.prefix.register(job.prefix_key, blob),
+                    Err(e) => eprintln!(
+                        "shard {}: prefix template snapshot failed for session {}: {e}",
+                        self.cfg.shard, job.session
+                    ),
+                }
+            }
             if job.done < job.prompt.len() {
                 self.jobs.push_back(Job::Generate(job));
                 return;
@@ -1555,6 +1815,50 @@ impl WorkerState {
         }
     }
 
+    /// Decide, once per generate job, how the shared-prefix cache applies:
+    /// fork from a cached template (skip ingesting the prefix), build the
+    /// template (this job snapshots at the boundary), or disable. Runs
+    /// before the first prompt quantum. Every branch preserves the
+    /// determinism contract: a fork restores the bit-exact state the
+    /// builder had at prefix_len, and the LM factory seeds weights
+    /// identically for every session, so cache hit/miss timing changes
+    /// only the work done, never the sampled tokens.
+    fn arm_prefix(&mut self, job: &mut GenJob) {
+        if job.prefix_len == 0 {
+            return;
+        }
+        // a fork needs at least one non-prefix prompt token to compute
+        // fresh logits from (logits are job-local, not in the template);
+        // a session with existing state must keep its own history.
+        // Oversized values are ignored, not errors, at this level — the
+        // HTTP edge rejects them loudly.
+        if !self.prefix.enabled()
+            || job.prefix_len >= job.prompt.len()
+            || self.bank.has_state(job.session)
+        {
+            job.prefix_len = 0;
+            return;
+        }
+        match self.prefix.lookup(job.prefix_key) {
+            Some(blob) => match self.bank.admit_from_blob(job.session, &blob) {
+                Ok(()) => {
+                    job.done = job.prefix_len;
+                    self.prefix_forks += 1;
+                    self.prefix_fork_tokens += job.prefix_len;
+                }
+                Err(e) => {
+                    // fail open: ingest the whole prompt locally
+                    eprintln!(
+                        "shard {}: prefix fork failed for session {}: {e}",
+                        self.cfg.shard, job.session
+                    );
+                    job.prefix_len = 0;
+                }
+            },
+            None => job.prefix_build = true,
+        }
+    }
+
     /// A generate request that cannot proceed (non-LM engine, corrupt
     /// restore) costs that request, not the shard. A streaming client
     /// learns why through a terminal [`GenEvent::Failed`].
@@ -1591,9 +1895,18 @@ fn shard_worker(
     gauge: Arc<AtomicUsize>,
     high: Arc<AtomicUsize>,
     pool: Arc<PrefillPool>,
+    tier: Arc<TierStats>,
+    prefix: Arc<PrefixCache>,
 ) -> (ShardReport, Vec<(u64, StreamStats)>) {
     let mut bank = ShardBank::new(cfg.heads, cfg.max_resident, factory);
     bank.set_prefill_mode(cfg.prefill_mode);
+    if cfg.spill_dir.is_some() {
+        bank.configure_store(StoreConfig {
+            spill_dir: cfg.spill_dir.clone(),
+            ram_budget: cfg.ram_blob_budget,
+            shared: Some(tier),
+        });
+    }
     let mut st = WorkerState {
         cfg,
         bank,
@@ -1622,6 +1935,9 @@ fn shard_worker(
         prefill_tokens: 0,
         gen_tokens: 0,
         completions: 0,
+        prefix,
+        prefix_forks: 0,
+        prefix_fork_tokens: 0,
     };
     let mut open = true;
     loop {
@@ -1689,6 +2005,9 @@ fn shard_worker(
         }
         st.run_quantum();
     }
+    // park the writeback thread cleanly so disk gauges are final before
+    // the report reads them
+    st.bank.sync_store();
     let report = ShardReport {
         shard: st.cfg.shard,
         sessions: st.bank.sessions(),
@@ -1707,6 +2026,12 @@ fn shard_worker(
         ttft_ns: st.ttft_ns,
         evictions: st.bank.evictions,
         restores: st.bank.restores,
+        spills: st.bank.spills(),
+        disk_restores: st.bank.disk_restores(),
+        disk_sessions: st.bank.disk_sessions(),
+        disk_bytes: st.bank.disk_bytes(),
+        prefix_forks: st.prefix_forks,
+        prefix_fork_tokens: st.prefix_fork_tokens,
         max_queue: high.load(Ordering::SeqCst),
         failed_chunks: st.failed_chunks,
         resident_bytes: st.bank.resident_bytes(),
@@ -1858,6 +2183,137 @@ mod tests {
         assert_eq!(r.gen_tokens(), 0, "max_new 0 must sample nothing");
         assert!(r.generations[0].tokens.is_empty());
         assert_eq!(r.tokens, 3, "the prompt is still ingested and counted");
+    }
+
+    #[test]
+    fn prefix_forked_generations_match_plain_ones_bit_exactly() {
+        // six requests sharing a 9-token system prefix: the first builds
+        // the copy-on-write template, the other five fork from it — and
+        // every sampled token must match the no-prefix-hint run
+        let mk = || {
+            let lm = LmConfig::new(
+                24,
+                StackConfig::uniform(2, 8, 16, 2, 4, 8, MixerKind::Ovq { n_max: 16 }),
+            );
+            EngineConfig::for_lm(lm)
+        };
+        let prefix: Vec<TokenId> = (0..9u32).map(|i| (i * 5 + 3) % 24).collect();
+        let prompt_of = |s: u64| {
+            let mut p = prefix.clone();
+            p.extend([s as TokenId % 24, (s as TokenId + 7) % 24]);
+            p
+        };
+        let plain = {
+            let engine = DecodeEngine::start(mk());
+            for s in 0..6u64 {
+                engine.submit_generate(
+                    s,
+                    prompt_of(s),
+                    SamplingParams::greedy(),
+                    StopCriteria::max_new(10),
+                );
+            }
+            let r = engine.finish();
+            assert_eq!(r.prefix_forks(), 0, "no hints, no forks");
+            r.generations.iter().map(|g| (g.session, g.tokens.clone())).collect::<Vec<_>>()
+        };
+        let engine = DecodeEngine::start(mk());
+        for s in 0..6u64 {
+            engine.submit_generate_prefixed(
+                s,
+                prompt_of(s),
+                prefix.len(),
+                None,
+                SamplingParams::greedy(),
+                StopCriteria::max_new(10),
+            );
+        }
+        let r = engine.finish();
+        let forked: Vec<_> =
+            r.generations.iter().map(|g| (g.session, g.tokens.clone())).collect();
+        assert_eq!(plain, forked, "prefix forking must not change sampled tokens");
+        // single shard, round-robin quanta: the first job registers the
+        // template at the prefix boundary before any other job arms
+        assert_eq!(r.prefix_forks(), 5);
+        assert_eq!(r.prefix_fork_tokens(), 5 * prefix.len());
+        assert_eq!(r.prefix.hits, 5);
+        assert_eq!(r.prefix.misses, 1);
+        assert!(r.prefix.bytes > 0);
+        assert_eq!(r.prefix.entries, 1);
+    }
+
+    #[test]
+    fn prefix_fork_disabled_when_prefix_covers_the_whole_prompt() {
+        // a fork needs one non-prefix token for fresh logits; an
+        // oversized prefix_len silently degrades to a plain request
+        let lm = LmConfig::new(24, StackConfig::uniform(1, 8, 16, 2, 4, 8, MixerKind::Gdn));
+        let engine = DecodeEngine::start(EngineConfig::for_lm(lm));
+        for s in 0..2u64 {
+            engine.submit_generate_prefixed(
+                s,
+                vec![1, 2, 3],
+                3,
+                None,
+                SamplingParams::greedy(),
+                StopCriteria::max_new(4),
+            );
+        }
+        let r = engine.finish();
+        assert_eq!(r.completions(), 2);
+        assert_eq!(r.prefix_forks(), 0);
+        assert_eq!(r.prefix.hits + r.prefix.misses, 0, "cache never consulted");
+        for g in &r.generations {
+            assert_eq!(g.tokens.len(), 4);
+        }
+    }
+
+    #[test]
+    fn spilled_engine_matches_ram_only_engine_bit_exactly() {
+        use crate::ovqcore::store::TempDir;
+        // max_resident=1 with a zero RAM blob budget churns every session
+        // through the disk tier; outputs must match the pure-RAM engine
+        let run = |spill: Option<&TempDir>| {
+            let lm = LmConfig::new(24, StackConfig::uniform(1, 8, 16, 2, 4, 8, MixerKind::Gdn));
+            let mut cfg = EngineConfig::for_lm(lm);
+            cfg.max_resident = 1;
+            if let Some(td) = spill {
+                cfg.spill_dir = Some(td.path().to_path_buf());
+                cfg.ram_blob_budget = 0;
+            }
+            let engine = DecodeEngine::start(cfg);
+            for round in 0..3u32 {
+                for s in 0..3u64 {
+                    engine.submit_generate(
+                        s,
+                        vec![(round + s as TokenId) % 24, 5, 9],
+                        SamplingParams::greedy(),
+                        StopCriteria::max_new(6),
+                    );
+                }
+                // let the async writebacks land between rounds, so the
+                // next round's restores deterministically hit the disk
+                // tier instead of racing the still-pending RAM copy
+                // (either way the outputs are identical — this only
+                // pins the disk_restores counter assertion below)
+                thread::sleep(Duration::from_millis(150));
+            }
+            engine.finish()
+        };
+        let td = TempDir::new("engine-spill");
+        let ram = run(None);
+        let disk = run(Some(&td));
+        let key = |r: &EngineReport| {
+            r.generations
+                .iter()
+                .map(|g| (g.session, g.seq, g.tokens.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&ram), key(&disk), "disk tier must be invisible to outputs");
+        assert_eq!(disk.completions(), 9);
+        assert!(disk.spills() >= 1, "zero budget must spill");
+        assert!(disk.disk_restores() >= 1, "churn must restore from disk");
+        assert_eq!(ram.spills(), 0);
+        assert_eq!(ram.disk_restores(), 0);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!   transfer-encoding, every sampled token forwarded the moment the
 //!   engine emits it on the request's [`GenEvent`] channel;
 //! - `GET /v1/health` — liveness;
-//! - `GET /v1/stats` — edge counters + live engine queue gauges.
+//! - `GET /v1/stats` — edge counters, live engine queue gauges, and the
+//!   memory-tier counters (disk spills/restores, prefix-cache hit rate).
 //!
 //! Production concerns are the point of this module:
 //!
@@ -456,6 +457,21 @@ fn handle_stats(edge: &Arc<Edge>, w: &mut TcpStream) -> std::result::Result<(), 
                 ("queues", Json::Arr(queues)),
             ]),
         ),
+        ("tiers", {
+            let (spills, disk_restores, disk_sessions, disk_bytes) =
+                edge.handle.tier_counters();
+            let p = edge.handle.prefix_stats();
+            Json::obj([
+                ("spills", Json::Num(spills as f64)),
+                ("disk_restores", Json::Num(disk_restores as f64)),
+                ("disk_sessions", Json::Num(disk_sessions as f64)),
+                ("disk_bytes", Json::Num(disk_bytes as f64)),
+                ("prefix_hits", Json::Num(p.hits as f64)),
+                ("prefix_misses", Json::Num(p.misses as f64)),
+                ("prefix_bytes", Json::Num(p.bytes as f64)),
+                ("prefix_entries", Json::Num(p.entries as f64)),
+            ])
+        }),
     ]);
     let _ = write_response(w, 200, "OK", &[], body.to_string().as_bytes());
     Ok(())
@@ -494,7 +510,15 @@ fn handle_completion(
     };
     let (tx, rx) = mpsc::channel();
     edge.handle
-        .try_submit_generate(session, creq.prompt, creq.params, creq.stop.clone(), Some(tx))
+        .try_submit_generate_prefixed(
+            session,
+            creq.prompt,
+            creq.prefix_len,
+            creq.prefix_id,
+            creq.params,
+            creq.stop.clone(),
+            Some(tx),
+        )
         .map_err(|_| {
             edge.stats.shed_backpressure.fetch_add(1, Ordering::Relaxed);
             ApiError::Overloaded { retry_after: 1 }
@@ -799,6 +823,21 @@ pub fn completion_body(
     stop: &StopCriteria,
     stream: bool,
 ) -> Json {
+    completion_body_prefixed(session, prompt, params, stop, stream, 0, None)
+}
+
+/// [`completion_body`] naming a shared prompt prefix: the wire twin of
+/// `submit_generate_prefixed`. `prefix_len` 0 omits both prefix fields
+/// (byte-identical to the pre-prefix wire format).
+pub fn completion_body_prefixed(
+    session: Option<u64>,
+    prompt: &[TokenId],
+    params: &SamplingParams,
+    stop: &StopCriteria,
+    stream: bool,
+    prefix_len: usize,
+    prefix_id: Option<u64>,
+) -> Json {
     let mut pairs: Vec<(&str, Json)> = vec![
         ("prompt", tokens_json(prompt)),
         ("max_tokens", Json::Num(stop.max_new as f64)),
@@ -816,6 +855,12 @@ pub fn completion_body(
     if let Some(t) = stop.stop_tokens.first() {
         pairs.push(("stop_token", Json::Num(*t as f64)));
     }
+    if prefix_len > 0 {
+        pairs.push(("prefix_len", Json::Num(prefix_len as f64)));
+        if let Some(id) = prefix_id {
+            pairs.push(("prefix_id", Json::Num(id as f64)));
+        }
+    }
     Json::obj(pairs)
 }
 
@@ -829,8 +874,10 @@ pub fn completion_body(
 ///                 [--quant none|f16|i8] [--threads W] [--queue-depth Q]
 ///                 [--max-resident R] [--prefill-quantum Q]
 ///                 [--gen-quantum G] [--seed S]
+///                 [--spill-dir DIR] [--ram-blob-budget B]
+///                 [--no-prefix-cache]
 ///                 [--replay N [--over-http] [--stream] [--sessions S]
-///                  [--data-seed D]]`
+///                  [--data-seed D] [--prefix-tokens P]]`
 ///
 /// Start the HTTP edge over a seeded LM engine (same model surface as
 /// `generate`). With `--replay N` it instead generates an N-event
@@ -863,6 +910,9 @@ pub fn cmd_serve_http(args: &Args) -> Result<()> {
     ecfg.prefill_quantum = args.opt_usize("prefill-quantum", 512)?;
     ecfg.gen_quantum = args.opt_usize("gen-quantum", 16)?;
     ecfg.seed = args.opt_u64("seed", 0x6E6E)?;
+    ecfg.spill_dir = args.opt("spill-dir").map(std::path::PathBuf::from);
+    ecfg.ram_blob_budget = args.opt_usize("ram-blob-budget", ecfg.ram_blob_budget)?;
+    ecfg.prefix_cache = !args.has_flag("no-prefix-cache");
 
     let replay_events = args.opt_usize("replay", 0)?;
     // demo (--replay) mode defaults to an ephemeral port so repeated
@@ -899,8 +949,13 @@ pub fn cmd_serve_http(args: &Args) -> Result<()> {
     let data_seed = args.opt_u64("data-seed", 0xDA7A)?;
     let over_http = args.has_flag("over-http") || args.opt("over-http").is_some();
     let stream = args.has_flag("stream") || args.opt("stream").is_some();
+    // --prefix-tokens P arms the shared-system-prompt mix: half the
+    // generate requests open with the same P-token prefix, exercising
+    // the engine's copy-on-write prefix cache over the wire
+    let prefix_tokens = args.opt_usize("prefix-tokens", 0)?;
     let tcfg = traffic::TrafficConfig::new(sessions, replay_events)
-        .with_generates(vec![16, 64], vec![8, 16, 32], 0.9, 0.5);
+        .with_generates(vec![16, 64], vec![8, 16, 32], 0.9, 0.5)
+        .with_prefix(prefix_tokens, 0.5);
     let events = traffic::generate(&tcfg);
     let t0 = Instant::now();
     let served = if over_http {

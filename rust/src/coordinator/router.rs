@@ -216,6 +216,15 @@ pub struct CompletionRequest {
     pub stop: StopCriteria,
     /// SSE token streaming instead of a blocking JSON response
     pub stream: bool,
+    /// leading prompt tokens shared with other requests — the prefix-cache
+    /// candidate span. The first request computes them once and freezes a
+    /// copy-on-write template; later requests fork from it bit-identically.
+    /// Must leave at least one non-prefix prompt token. 0 = no sharing.
+    pub prefix_len: usize,
+    /// explicit prefix-cache key. Defaults to a hash of the prefix tokens,
+    /// so requests that share tokens share the template automatically;
+    /// setting it lets clients namespace templates instead.
+    pub prefix_id: Option<u64>,
 }
 
 fn f64_field(j: &Json, field: &'static str) -> Result<Option<f64>, ApiError> {
@@ -321,12 +330,27 @@ pub fn parse_completion(j: &Json, lim: &CompletionLimits) -> Result<CompletionRe
         stop.stop_tokens.push(t as TokenId);
     }
 
+    let prefix_len = uint_field(j, "prefix_len")?.unwrap_or(0) as usize;
+    if prefix_len > 0 && prefix_len >= prompt.len() {
+        return Err(ApiError::InvalidParam {
+            field: "prefix_len",
+            reason: format!(
+                "must leave at least one non-prefix prompt token ({} prefix tokens \
+                 for a {}-token prompt)",
+                prefix_len,
+                prompt.len()
+            ),
+        });
+    }
+
     Ok(CompletionRequest {
         session: uint_field(j, "session")?,
         prompt,
         params,
         stop,
         stream: bool_field(j, "stream")?.unwrap_or(false),
+        prefix_len,
+        prefix_id: uint_field(j, "prefix_id")?,
     })
 }
 
@@ -421,6 +445,27 @@ mod tests {
         assert!(r.stream);
         assert!(!r.params.is_greedy());
         assert_eq!(r.params.seed, 7);
+        assert_eq!(r.prefix_len, 0, "default: no shared prefix");
+        assert_eq!(r.prefix_id, None);
+    }
+
+    #[test]
+    fn parse_completion_accepts_and_bounds_prefix_fields() {
+        let j = parse(r#"{"prompt":[1,2,3,4],"prefix_len":3,"prefix_id":99}"#).unwrap();
+        let r = parse_completion(&j, &lim()).unwrap();
+        assert_eq!(r.prefix_len, 3);
+        assert_eq!(r.prefix_id, Some(99));
+        // prefix_len must leave >= 1 non-prefix token for fresh logits
+        for body in [
+            r#"{"prompt":[1,2,3],"prefix_len":3}"#,
+            r#"{"prompt":[1,2,3],"prefix_len":4}"#,
+            r#"{"prompt":[1],"prefix_len":-1}"#,
+            r#"{"prompt":[1,2],"prefix_id":1.5}"#,
+        ] {
+            let e = parse_completion(&parse(body).unwrap(), &lim()).unwrap_err();
+            assert_eq!(e.code(), "invalid_param", "body {body} -> {e:?}");
+            assert_eq!(e.status(), 400, "body {body}");
+        }
     }
 
     #[test]

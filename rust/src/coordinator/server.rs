@@ -18,6 +18,7 @@
 //! batcher loop (single device owner) -> per-request oneshot-style
 //! channels back.
 
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -205,6 +206,17 @@ pub struct DecodeConfig {
     /// intra-request fan-out of long prompts across idle shard workers
     /// (`--no-prefill-fanout` disables it)
     pub prefill_fanout: bool,
+    /// disk tier for eviction blobs (`--spill-dir DIR`): cold snapshot
+    /// blobs write back asynchronously to per-shard subdirectories once
+    /// the RAM blob cache exceeds `ram_blob_budget`; a spilled session's
+    /// RAM cost drops to an index entry. `None` keeps the pure-RAM store
+    pub spill_dir: Option<PathBuf>,
+    /// per-shard RAM budget for frozen snapshot blobs, bytes
+    /// (`--ram-blob-budget B`; only meaningful with `spill_dir`)
+    pub ram_blob_budget: usize,
+    /// copy-on-write shared-prefix templates on the LM generate path
+    /// (`--no-prefix-cache` disables forking)
+    pub prefix_cache: bool,
 }
 
 impl DecodeConfig {
@@ -226,6 +238,9 @@ impl DecodeConfig {
             quant: QuantMode::None,
             prefill_mode: PrefillMode::Exact,
             prefill_fanout: true,
+            spill_dir: None,
+            ram_blob_budget: usize::MAX / 2,
+            prefix_cache: true,
         }
     }
 
@@ -250,6 +265,9 @@ impl DecodeConfig {
         e.prefill_quantum = self.prefill_quantum;
         e.prefill_mode = self.prefill_mode;
         e.prefill_fanout = self.prefill_fanout;
+        e.spill_dir = self.spill_dir.clone();
+        e.ram_blob_budget = self.ram_blob_budget;
+        e.prefix_cache = self.prefix_cache;
         e.seed = self.seed;
         e
     }
@@ -451,6 +469,7 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 ///            [--queue-depth Q] [--prompt-tokens P] [--prefill-quantum Q]
 ///            [--quant none|f16|i8] [--prefill-tolerance]
 ///            [--prefill-chunk C] [--no-prefill-fanout]
+///            [--spill-dir DIR] [--ram-blob-budget B]
 ///            [--layers L --d-model D --d-ff F --schedule S]`
 /// Demo driver: phase 1 runs the batched scorer against the compiled HLO
 /// program (skipped with a notice when no backend/artifacts are
@@ -492,6 +511,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         dcfg.prefill_mode = PrefillMode::Chunkwise { chunk: args.opt_usize("prefill-chunk", 64)? };
     }
     dcfg.prefill_fanout = !args.has_flag("no-prefill-fanout");
+    dcfg.spill_dir = args.opt("spill-dir").map(PathBuf::from);
+    dcfg.ram_blob_budget = args.opt_usize("ram-blob-budget", dcfg.ram_blob_budget)?;
     dcfg.quant = QuantMode::parse(&args.opt_or("quant", "none"))?;
     let layers = args.opt_usize("layers", 0)?;
     if layers > 0 {
@@ -534,7 +555,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 ///               [--layers L] [--d-model D] [--d-ff F] [--heads H]
 ///               [--dhead D] [--chunk C] [--schedule S] [--threads W]
 ///               [--max-resident R] [--prefill-quantum Q]
-///               [--gen-quantum G] [--quant none|f16|i8] [--seed S]`
+///               [--gen-quantum G] [--quant none|f16|i8] [--seed S]
+///               [--spill-dir DIR] [--ram-blob-budget B]
+///               [--no-prefix-cache]`
 ///
 /// End-to-end autoregressive generation: every session submits a
 /// deterministic synthetic token prompt; the engine prefills it in
@@ -585,6 +608,9 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     ecfg.prefill_quantum = args.opt_usize("prefill-quantum", 512)?;
     ecfg.gen_quantum = args.opt_usize("gen-quantum", 16)?;
     ecfg.seed = args.opt_u64("seed", 0x6E6E)?;
+    ecfg.spill_dir = args.opt("spill-dir").map(PathBuf::from);
+    ecfg.ram_blob_budget = args.opt_usize("ram-blob-budget", ecfg.ram_blob_budget)?;
+    ecfg.prefix_cache = !args.has_flag("no-prefix-cache");
     crate::info!(
         "generate: {sessions} sessions x {prompt_tokens}-token prompts -> up to {} new tokens \
          ({} sampling, [{schedule}] x {layers} layers, vocab {vocab}, quant {}, {} kernels) \

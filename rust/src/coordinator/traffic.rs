@@ -82,6 +82,15 @@ pub struct TrafficConfig {
     /// share of generate requests using the sampled (temperature/top-k/
     /// top-p/repetition-penalty) parameter mix instead of greedy
     pub gen_sampled_p: f64,
+    /// shared-system-prompt mix: when > 0, a generate request opens,
+    /// with probability `prefix_p`, with this many shared prefix tokens
+    /// prepended to its own prompt and named as a prefix-cache candidate
+    /// (the multi-tenant "same system prompt, different user turn"
+    /// workload). 0 leaves legacy traces untouched.
+    pub prefix_tokens: usize,
+    /// probability a generate request uses the shared prefix (only
+    /// consulted when `prefix_tokens > 0`)
+    pub prefix_p: f64,
     pub seed: u64,
 }
 
@@ -102,6 +111,8 @@ impl TrafficConfig {
             gen_p: 0.0,
             gen_max_new: Vec::new(),
             gen_sampled_p: 0.0,
+            prefix_tokens: 0,
+            prefix_p: 0.0,
             seed: 0x7AFF1C,
         }
     }
@@ -133,7 +144,21 @@ impl TrafficConfig {
         self.gen_sampled_p = sampled_p;
         self
     }
+
+    /// Enable the shared-system-prompt mix: a `p`-share of generate
+    /// requests prepend the same `tokens`-long synthetic system prefix
+    /// to their own prompt and name it for the engine's prefix cache.
+    pub fn with_prefix(mut self, tokens: usize, p: f64) -> TrafficConfig {
+        self.prefix_tokens = tokens;
+        self.prefix_p = p;
+        self
+    }
 }
+
+/// The reserved synthetic stream id of the shared system prefix —
+/// outside the session-id space, so [`synth_tokens`] derives prefix
+/// tokens no real session's prompt can collide with.
+pub const SHARED_PREFIX_STREAM: u64 = u64::MAX;
 
 /// One open-loop arrival: session `session` submits `len` tokens at trace
 /// offset `at_us`. `abandon` marks the client departing right after this
@@ -155,6 +180,9 @@ pub struct TrafficEvent {
     pub max_new: usize,
     /// generate event uses the sampled parameter mix (greedy otherwise)
     pub sampled: bool,
+    /// shared-system-prompt tokens prepended to this generate request's
+    /// prompt and named as a prefix-cache candidate (0 = none)
+    pub prefix_len: usize,
 }
 
 /// Generate a deterministic arrival trace.
@@ -209,6 +237,13 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<TrafficEvent> {
         } else {
             (0, false)
         };
+        // the shared-system-prompt coin is likewise guarded: configs with
+        // prefix_tokens == 0 draw nothing and keep their legacy streams
+        let prefix_len = if generate && cfg.prefix_tokens > 0 && rng.bool(cfg.prefix_p) {
+            cfg.prefix_tokens
+        } else {
+            0
+        };
         let abandon = rng.bool(cfg.abandon_p);
         events.push(TrafficEvent {
             at_us: t_us,
@@ -219,6 +254,7 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<TrafficEvent> {
             generate,
             max_new,
             sampled,
+            prefix_len,
         });
         if abandon {
             dormant[session as usize] = true;
@@ -245,6 +281,8 @@ pub struct TraceSummary {
     /// completion-cap tokens requested by generate events (not part of
     /// `tokens` — the completion is produced by the engine, not offered)
     pub gen_max_new_total: usize,
+    /// generate requests that open with the shared system prefix
+    pub prefix_generates: usize,
     /// share of all events going to the single hottest session
     pub hottest_share: f64,
     /// longest same-session back-to-back run
@@ -257,6 +295,7 @@ pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
     let mut tokens = 0usize;
     let (mut prompts, mut prompt_tokens) = (0usize, 0usize);
     let (mut generates, mut gen_max_new_total) = (0usize, 0usize);
+    let mut prefix_generates = 0usize;
     let (mut max_burst, mut cur_burst) = (0usize, 0usize);
     let mut last: Option<u64> = None;
     for e in events {
@@ -269,6 +308,9 @@ pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
         if e.generate {
             generates += 1;
             gen_max_new_total += e.max_new;
+            if e.prefix_len > 0 {
+                prefix_generates += 1;
+            }
         }
         cur_burst = if last == Some(e.session) { cur_burst + 1 } else { 1 };
         max_burst = max_burst.max(cur_burst);
@@ -283,6 +325,7 @@ pub fn summarize(events: &[TrafficEvent]) -> TraceSummary {
         prompt_tokens,
         generates,
         gen_max_new_total,
+        prefix_generates,
         hottest_share: hottest as f64 / events.len().max(1) as f64,
         max_burst,
         span_us: events.last().map_or(0, |e| e.at_us),
@@ -310,6 +353,17 @@ pub fn synth_tokens(data_seed: u64, session: u64, len: usize, vocab: usize) -> V
         data_seed ^ session.wrapping_mul(0xA076_1D64_78BD_642F) ^ 0x7E4E_6E5E_ED01_C0DE,
     );
     (0..len).map(|_| rng.below(vocab as u64) as TokenId).collect()
+}
+
+/// Full prompt of a generate event: the shared system prefix (when the
+/// event carries one) followed by the session's own suffix. Both halves
+/// are [`synth_tokens`] streams, so the assembly is a pure function of
+/// (data_seed, event) — the engine-side and HTTP-side replayers build
+/// bit-identical prompts.
+pub fn prefixed_prompt(data_seed: u64, e: &TrafficEvent, vocab: usize) -> Vec<TokenId> {
+    let mut prompt = synth_tokens(data_seed, SHARED_PREFIX_STREAM, e.prefix_len, vocab);
+    prompt.extend(synth_tokens(data_seed, e.session, e.len, vocab));
+    prompt
 }
 
 /// Number of distinct payload variants the replay pool keeps per chunk
@@ -352,15 +406,26 @@ pub fn replay(
             let vocab = engine
                 .lm_vocab()
                 .expect("trace has generate events but the engine is not in LM mode");
-            let prompt = synth_tokens(data_seed, e.session, e.len, vocab);
+            // a prefixed event prepends the one shared system prompt (a
+            // reserved token stream no session id can produce) to its own
+            // suffix and names the boundary for the engine's prefix cache
+            let prompt = prefixed_prompt(data_seed, e, vocab);
+            let offered = prompt.len();
             let params = if e.sampled {
                 SamplingParams::sampled(data_seed ^ e.session)
             } else {
                 SamplingParams::greedy()
             };
-            engine.submit_generate(e.session, prompt, params, StopCriteria::max_new(e.max_new));
+            engine.submit_generate_prefixed(
+                e.session,
+                prompt,
+                e.prefix_len,
+                None,
+                params,
+                StopCriteria::max_new(e.max_new),
+            );
             *seq.entry(e.session).or_insert(0) += 1;
-            tokens += e.len;
+            tokens += offered;
             if e.abandon {
                 engine.evict(e.session);
             }
@@ -428,14 +493,22 @@ pub fn replay_over_http(
 ) -> Result<Vec<(u64, Vec<TokenId>)>> {
     let mut out = Vec::new();
     for e in events.iter().filter(|e| e.generate) {
-        let prompt = synth_tokens(data_seed, e.session, e.len, vocab);
+        let prompt = prefixed_prompt(data_seed, e, vocab);
         let params = if e.sampled {
             SamplingParams::sampled(data_seed ^ e.session)
         } else {
             SamplingParams::greedy()
         };
         let stop = StopCriteria::max_new(e.max_new);
-        let body = http::completion_body(Some(e.session), &prompt, &params, &stop, stream);
+        let body = http::completion_body_prefixed(
+            Some(e.session),
+            &prompt,
+            &params,
+            &stop,
+            stream,
+            e.prefix_len,
+            None,
+        );
         let resp = http::http_post(addr, "/v1/completions", &[], body.to_string().as_bytes())?;
         anyhow::ensure!(
             resp.status == 200,
@@ -565,6 +638,87 @@ mod tests {
         // generate-free configs keep their legacy streams
         let plain = TrafficConfig::new(64, 2000);
         assert!(generate(&plain).iter().all(|e| !e.generate));
+    }
+
+    #[test]
+    fn shared_prefix_rides_generate_arrivals_and_guards_legacy_streams() {
+        let base = TrafficConfig::new(64, 2000).with_generates(vec![64, 256], vec![16, 64], 0.7, 0.5);
+        let cfg = base.clone().with_prefix(128, 0.6);
+        let events = generate(&cfg);
+        let t = summarize(&events);
+        assert!(t.prefix_generates > 5, "expected prefixed generates, got {}", t.prefix_generates);
+        assert!(t.prefix_generates < t.generates, "both prefix mixes must appear");
+        for e in &events {
+            if e.prefix_len > 0 {
+                assert!(e.generate, "the shared prefix only rides generate arrivals");
+                assert_eq!(e.prefix_len, 128, "one shared prefix, one length");
+            }
+        }
+        // a zero-length prefix draws no coins: the stream is byte-for-byte
+        // the prefix-free one (the guarded-coin contract every mix keeps)
+        assert_eq!(generate(&base), generate(&base.clone().with_prefix(0, 0.6)));
+    }
+
+    #[test]
+    fn prefixed_prompt_prepends_the_shared_stream() {
+        let e = TrafficEvent {
+            at_us: 0,
+            session: 7,
+            len: 8,
+            abandon: false,
+            prefill: false,
+            generate: true,
+            max_new: 4,
+            sampled: false,
+            prefix_len: 5,
+        };
+        let p = prefixed_prompt(0x5EED, &e, 24);
+        assert_eq!(p.len(), 13);
+        assert_eq!(p[..5], synth_tokens(0x5EED, SHARED_PREFIX_STREAM, 5, 24));
+        assert_eq!(p[5..], synth_tokens(0x5EED, 7, 8, 24));
+        let plain = TrafficEvent { prefix_len: 0, ..e };
+        assert_eq!(prefixed_prompt(0x5EED, &plain, 24), synth_tokens(0x5EED, 7, 8, 24));
+    }
+
+    #[test]
+    fn shared_prefix_replay_forks_and_matches_uncached_engine() {
+        use crate::coordinator::engine::{EngineConfig, EngineReport};
+        use crate::ovqcore::lm::LmConfig;
+        use crate::ovqcore::memstate::MixerKind;
+        use crate::ovqcore::stack::StackConfig;
+        let cfg = TrafficConfig::new(8, 40)
+            .with_generates(vec![8, 16], vec![4, 8], 0.9, 0.5)
+            .with_prefix(32, 0.7);
+        let events = generate(&cfg);
+        let shape = summarize(&events);
+        assert!(shape.prefix_generates >= 2, "trace must reuse the shared prefix");
+        let run = |prefix_cache: bool| -> EngineReport {
+            let lm = LmConfig::new(
+                24,
+                StackConfig::uniform(1, 8, 16, 2, 4, 8, MixerKind::Ovq { n_max: 16 }),
+            );
+            let mut ecfg = EngineConfig::for_lm(lm);
+            ecfg.threads = 1;
+            ecfg.prefix_cache = prefix_cache;
+            let engine = DecodeEngine::start(ecfg);
+            replay(&engine, &events, 0x5EED, None);
+            engine.finish()
+        };
+        let (cached, plain) = (run(true), run(false));
+        // one thread, one shard: the first prefixed generate builds the
+        // template inside its first 512-token quantum, so every later one
+        // forks — the count is exact, not a lower bound
+        assert_eq!(cached.prefix_forks(), shape.prefix_generates - 1);
+        assert_eq!(cached.prefix_fork_tokens(), (shape.prefix_generates - 1) * 32);
+        assert_eq!(cached.prefix.misses, 1);
+        assert_eq!(plain.prefix_forks(), 0);
+        let toks = |r: &EngineReport| {
+            let mut g: Vec<(u64, usize, Vec<TokenId>)> =
+                r.generations.iter().map(|o| (o.session, o.seq, o.tokens.clone())).collect();
+            g.sort();
+            g
+        };
+        assert_eq!(toks(&cached), toks(&plain), "forking must not change a single sampled token");
     }
 
     #[test]

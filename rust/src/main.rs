@@ -32,8 +32,10 @@ fn usage() -> ! {
            serve-http                   HTTP edge over the engine (API.md): OpenAI-style\n\
                                         POST /v1/completions with SSE streaming, /v1/health,\n\
                                         /v1/stats [--port P --max-inflight N --tenant-rate R]\n\
-                                        plus the generate model flags; --replay N\n\
-                                        [--over-http --stream] drives a zipf trace and exits\n\
+                                        plus the generate model flags and the tiered-memory\n\
+                                        flags [--spill-dir DIR --ram-blob-budget B\n\
+                                        --no-prefix-cache]; --replay N [--over-http --stream\n\
+                                        --prefix-tokens P] drives a zipf trace and exits\n\
            flops                        print the App. D FLOPs tables\n\
          \n\
          options: --artifacts DIR (or $OVQ_ARTIFACTS), --out DIR (results)\n"

@@ -30,6 +30,7 @@ use anyhow::{Context, Result};
 use super::lm::LmModel;
 use super::mixer::{merge_layer_stats, LayerStat, PrefillMode, Scratch, SeqMixer};
 use super::snapshot;
+use super::store::{StoreConfig, TieredStore};
 
 /// One queued decode chunk for a stream, packed `[len, heads, d]`.
 #[derive(Debug, Clone)]
@@ -427,8 +428,9 @@ pub struct ShardBank {
     max_resident: usize,
     factory: MixerFactory,
     resident: Vec<Resident>,
-    /// evicted sessions, session id -> packed per-head snapshot blob
-    evicted: HashMap<u64, Vec<u8>>,
+    /// frozen sessions: a tiered (RAM + optional disk) blob store keyed
+    /// by session id — see [`super::store::TieredStore`]
+    store: TieredStore,
     /// telemetry for every session ever seen — survives eviction (stats
     /// are engine state, not mixer state, so they are not in the blob)
     stats: HashMap<u64, StreamStats>,
@@ -463,7 +465,7 @@ impl ShardBank {
             max_resident,
             factory: Box::new(factory),
             resident: Vec::new(),
-            evicted: HashMap::new(),
+            store: TieredStore::in_ram(),
             stats: HashMap::new(),
             clock: 0,
             evictions: 0,
@@ -492,6 +494,13 @@ impl ShardBank {
         self.prefill_mode
     }
 
+    /// Replace the frozen-session store with a configured tiered store
+    /// (disk spill dir, RAM blob budget, shared gauges). Call before
+    /// serving traffic: any blobs in the old store are dropped.
+    pub fn configure_store(&mut self, cfg: StoreConfig) {
+        self.store = TieredStore::new(cfg);
+    }
+
     pub fn heads(&self) -> usize {
         self.heads
     }
@@ -501,7 +510,40 @@ impl ShardBank {
     }
 
     pub fn evicted_sessions(&self) -> usize {
-        self.evicted.len()
+        self.store.frozen_sessions()
+    }
+
+    /// Frozen sessions whose blob sits on the disk tier.
+    pub fn disk_sessions(&self) -> usize {
+        self.store.disk_sessions()
+    }
+
+    /// Blob payload bytes on the disk tier.
+    pub fn disk_bytes(&self) -> usize {
+        self.store.disk_bytes()
+    }
+
+    /// Blobs written back to the disk tier so far.
+    pub fn spills(&self) -> usize {
+        self.store.spills as usize
+    }
+
+    /// Blobs read back from the disk tier so far.
+    pub fn disk_restores(&self) -> usize {
+        self.store.disk_restores as usize
+    }
+
+    /// True if the bank holds any state for `id` — resident or frozen
+    /// in either tier. The prefix-fork path uses this to refuse forking
+    /// into a session that already has history.
+    pub fn has_state(&self, id: u64) -> bool {
+        self.resident.iter().any(|r| r.id == id) || self.store.contains(id)
+    }
+
+    /// Block until every queued disk writeback has landed, so spill
+    /// counters and tier byte gauges are exact (end-of-run reports).
+    pub fn sync_store(&mut self) {
+        self.store.sync();
     }
 
     /// Every session this shard has ever served.
@@ -517,9 +559,13 @@ impl ShardBank {
             .sum()
     }
 
-    /// Bytes held in snapshot blobs for evicted sessions.
+    /// RAM held for frozen sessions: snapshot blobs still in the RAM
+    /// tier in full, plus one index entry per disk-spilled session —
+    /// a spilled session costs ~nothing in RAM, which is the point of
+    /// the disk tier. Disk payload bytes are reported separately by
+    /// [`ShardBank::disk_bytes`].
     pub fn snapshot_bytes(&self) -> usize {
-        self.evicted.values().map(|b| b.len()).sum()
+        self.store.ram_footprint()
     }
 
     /// Per-layer telemetry aggregated over every *resident* session
@@ -552,13 +598,14 @@ impl ShardBank {
         acc
     }
 
-    /// What one session costs right now: live mixer bytes while resident,
-    /// the snapshot blob size after eviction, None if never seen.
+    /// What one session costs in RAM right now: live mixer bytes while
+    /// resident, the snapshot blob size while frozen in the RAM tier,
+    /// one index entry once spilled to disk, None if never seen.
     pub fn session_state_bytes(&self, id: u64) -> Option<usize> {
         if let Some(r) = self.resident.iter().find(|r| r.id == id) {
             return Some(r.mixers.iter().map(|m| m.state_bytes()).sum());
         }
-        self.evicted.get(&id).map(|b| b.len())
+        self.store.session_ram_bytes(id)
     }
 
     pub fn session_stats(&self, id: u64) -> Option<&StreamStats> {
@@ -700,8 +747,8 @@ impl ShardBank {
         while self.resident.len() >= self.max_resident {
             self.evict_lru();
         }
-        let mut mixers = match self.evicted.remove(&id) {
-            Some(blob) => {
+        let mixers = match self.store.take(id) {
+            Ok(Some(blob)) => {
                 // the blob is consumed either way: on a decode failure the
                 // session is discarded and a re-arrival starts it fresh
                 let m = unpack_session(&blob, self.heads)
@@ -709,8 +756,22 @@ impl ShardBank {
                 self.restores += 1;
                 m
             }
-            None => (0..self.heads).map(|h| (self.factory)(id, h)).collect(),
+            Ok(None) => (0..self.heads).map(|h| (self.factory)(id, h)).collect(),
+            // torn/corrupt/missing disk blob: a typed, recoverable error
+            // that costs this request only — the entry is consumed, so a
+            // re-arrival starts the session fresh and the shard keeps
+            // serving everyone else
+            Err(e) => {
+                return Err(anyhow::Error::new(e)
+                    .context(format!("restoring session {id} from the disk tier")))
+            }
         };
+        self.admit_mixers(id, mixers)
+    }
+
+    /// The shared admission tail: re-apply the shard prefill policy,
+    /// enforce the dim invariants, and push the session resident.
+    fn admit_mixers(&mut self, id: u64, mut mixers: Vec<Box<dyn SeqMixer>>) -> Result<usize> {
         // the shard's prefill policy is runtime state, not session state:
         // snapshots thaw in Exact mode and the policy is re-applied here,
         // on admission and on every restore
@@ -742,6 +803,26 @@ impl ShardBank {
         Ok(self.resident.len() - 1)
     }
 
+    /// Admit session `id` directly from a packed-session blob — the
+    /// prefix-fork path: the blob is an immutable template captured by
+    /// [`ShardBank::snapshot_session`] after prefilling a shared prefix,
+    /// and forking from it is bit-identical to having run that prefill
+    /// (snapshot restore is bit-exact). Refuses if the bank already
+    /// holds any state for `id`: forking must never clobber history.
+    pub fn admit_from_blob(&mut self, id: u64, blob: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            !self.has_state(id),
+            "session {id} already has state; refusing prefix fork"
+        );
+        while self.resident.len() >= self.max_resident {
+            self.evict_lru();
+        }
+        let mixers = unpack_session(blob, self.heads)
+            .with_context(|| format!("forking session {id} from prefix template"))?;
+        self.admit_mixers(id, mixers)?;
+        Ok(())
+    }
+
     /// Evict the least-recently-used resident session to a snapshot blob.
     fn evict_lru(&mut self) {
         let Some(i) = self
@@ -754,7 +835,7 @@ impl ShardBank {
             return;
         };
         let r = self.resident.swap_remove(i);
-        self.evicted.insert(r.id, pack_session(&r.mixers));
+        self.store.insert(r.id, pack_session(&r.mixers));
         self.evictions += 1;
     }
 
@@ -763,7 +844,7 @@ impl ShardBank {
     pub fn evict(&mut self, id: u64) {
         if let Some(i) = self.resident.iter().position(|r| r.id == id) {
             let r = self.resident.swap_remove(i);
-            self.evicted.insert(r.id, pack_session(&r.mixers));
+            self.store.insert(r.id, pack_session(&r.mixers));
             self.evictions += 1;
         }
     }
@@ -1227,5 +1308,141 @@ mod tests {
             assert_eq!(a.state_bytes(), b.state_bytes());
         }
         assert!(unpack_session(&blob, 2).is_err(), "head-count mismatch must fail");
+    }
+
+    // ---------------------------------------------------- tiered store
+
+    use crate::ovqcore::store::{StoreConfig, TempDir, INDEX_ENTRY_BYTES};
+
+    fn disk_shard(dir: &std::path::Path, cap: usize, budget: usize) -> ShardBank {
+        let mut shard = ovq_shard(2, 8, 32, 16, cap);
+        shard.configure_store(StoreConfig {
+            spill_dir: Some(dir.to_path_buf()),
+            ram_budget: budget,
+            shared: None,
+        });
+        shard
+    }
+
+    #[test]
+    fn shard_spills_to_disk_and_restores_bit_identically() {
+        // budget 0: every eviction blob goes straight to disk. Serving
+        // through the disk tier must stay bit-identical to an uncapped
+        // RAM-only shard.
+        let (heads, d, len) = (2usize, 8usize, 16usize);
+        let td = TempDir::new("bank-spill");
+        let mut rng = Rng::new(21);
+        let mut shard = disk_shard(td.path(), 1, 0);
+        let mut mirror = ovq_shard(heads, d, 32, 16, 8);
+
+        let chunks: Vec<(u64, DecodeChunk)> = [1u64, 2, 1, 2, 1]
+            .iter()
+            .map(|&id| (id, chunk_of(&mut rng, len, heads * d)))
+            .collect();
+        for (id, c) in &chunks {
+            let (got, _) = shard.process(*id, c).unwrap();
+            let (want, _) = mirror.process(*id, c).unwrap();
+            assert_eq!(got, want, "disk-tier churn diverged for session {id}");
+        }
+        shard.sync_store();
+        assert!(shard.spills() >= 1, "cap 1 + budget 0 must have spilled");
+        assert!(shard.disk_restores() >= 1, "revisits must have restored from disk");
+        assert_eq!(shard.resident_sessions(), 1);
+        assert_eq!(shard.disk_sessions(), 1);
+    }
+
+    #[test]
+    fn tier_accounting_charges_spilled_sessions_an_index_entry_only() {
+        // satellite: a disk-spilled session costs ~0 RAM. Cross-check the
+        // reported numbers exactly against live bank state.
+        let (heads, d, len) = (2usize, 8usize, 16usize);
+        let td = TempDir::new("bank-acct");
+        let mut rng = Rng::new(22);
+        let mut shard = disk_shard(td.path(), 1, 0);
+        shard.process(1, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        shard.process(2, &chunk_of(&mut rng, len, heads * d)).unwrap(); // evicts 1
+        shard.sync_store();
+        assert_eq!(shard.evictions, 1);
+        assert_eq!(shard.spills(), 1);
+        // Frozen session 1 sits on disk: its RAM cost is one index entry,
+        // and the bank-wide snapshot accounting says exactly that.
+        assert_eq!(shard.session_state_bytes(1), Some(INDEX_ENTRY_BYTES));
+        assert_eq!(shard.snapshot_bytes(), INDEX_ENTRY_BYTES);
+        assert!(shard.disk_bytes() > 0, "the payload lives on disk");
+        // Resident session 2 is charged its live mixer bytes; layer_stats
+        // covers residents only and must sum to resident_bytes.
+        assert_eq!(
+            shard.layer_stats().iter().map(|s| s.state_bytes).sum::<usize>(),
+            shard.resident_bytes()
+        );
+        // Pull 1 back: the disk entry disappears, RAM accounting follows.
+        shard.process(1, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        shard.sync_store();
+        assert_eq!(shard.disk_restores(), 1);
+        assert_eq!(shard.session_state_bytes(2), Some(INDEX_ENTRY_BYTES));
+        assert_eq!(shard.snapshot_bytes(), INDEX_ENTRY_BYTES);
+    }
+
+    #[test]
+    fn corrupt_disk_blob_costs_one_request_not_the_shard() {
+        let (heads, d, len) = (2usize, 8usize, 16usize);
+        let td = TempDir::new("bank-corrupt");
+        let mut rng = Rng::new(23);
+        let mut shard = disk_shard(td.path(), 1, 0);
+        shard.process(1, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        shard.process(2, &chunk_of(&mut rng, len, heads * d)).unwrap(); // spills 1
+        shard.sync_store();
+        // Flip a payload bit in session 1's spilled frame.
+        let p = td.path().join(format!("s{:016x}.blob", 1u64));
+        let mut raw = std::fs::read(&p).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 1;
+        std::fs::write(&p, &raw).unwrap();
+        // The torn blob is a clean typed error on the victim...
+        let err = shard.process(1, &chunk_of(&mut rng, len, heads * d)).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        // ...the shard keeps serving other sessions...
+        shard.process(2, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        // ...and a re-arrival of the victim starts fresh instead of
+        // hitting the same corpse again.
+        let (out, seq) = shard.process(1, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        assert_eq!(out.len(), len * heads * d);
+        assert_eq!(seq, 2, "stats survive; state restarted");
+    }
+
+    #[test]
+    fn missing_disk_blob_is_a_clean_error() {
+        let (heads, d, len) = (2usize, 8usize, 16usize);
+        let td = TempDir::new("bank-missing");
+        let mut rng = Rng::new(24);
+        let mut shard = disk_shard(td.path(), 1, 0);
+        shard.process(1, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        shard.process(2, &chunk_of(&mut rng, len, heads * d)).unwrap();
+        shard.sync_store();
+        std::fs::remove_file(td.path().join(format!("s{:016x}.blob", 1u64))).unwrap();
+        let err = shard.process(1, &chunk_of(&mut rng, len, heads * d)).unwrap_err();
+        assert!(format!("{err:#}").contains("unreadable"), "{err:#}");
+        shard.process(2, &chunk_of(&mut rng, len, heads * d)).unwrap();
+    }
+
+    #[test]
+    fn prefix_fork_admits_template_bit_identically() {
+        // freeze a prefilled session as a template, fork a fresh id from
+        // it, and the fork's packed state must equal the template's.
+        let (heads, d, total) = (2usize, 8usize, 40usize);
+        let mut rng = Rng::new(25);
+        let mut shard = ovq_shard(heads, d, 32, 16, 4);
+        let c = chunk_of(&mut rng, total, heads * d);
+        shard.process_prefill(1, &c.queries, &c.keys, &c.values).unwrap();
+        let template = shard.snapshot_session(1).unwrap();
+
+        shard.admit_from_blob(9, &template).unwrap();
+        assert_eq!(shard.snapshot_session(9).unwrap(), template, "fork must be bit-identical");
+        // Forking into a session that already has state must refuse.
+        let err = shard.admit_from_blob(1, &template).unwrap_err();
+        assert!(format!("{err}").contains("already has state"), "{err}");
+        shard.evict(9);
+        let err = shard.admit_from_blob(9, &template).unwrap_err();
+        assert!(format!("{err}").contains("already has state"), "{err}");
     }
 }

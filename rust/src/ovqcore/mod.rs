@@ -39,6 +39,7 @@ pub mod ovq;
 pub mod quant;
 pub mod snapshot;
 pub mod stack;
+pub mod store;
 pub mod vq;
 
 /// Growth schedule (paper eqs. 17-18): N_t = floor(t*N / (t+N)).

@@ -63,6 +63,10 @@ pub enum SnapshotError {
     BadLength { claimed: usize, remaining: usize },
     /// a string field is not UTF-8
     NotUtf8,
+    /// a disk-tier frame's payload checksum does not match its header
+    BadChecksum { expect: u64, got: u64 },
+    /// the disk tier could not read a blob file at all
+    Io(String),
 }
 
 impl fmt::Display for SnapshotError {
@@ -89,6 +93,13 @@ impl fmt::Display for SnapshotError {
                 "snapshot array length {claimed} exceeds remaining {remaining} bytes"
             ),
             SnapshotError::NotUtf8 => write!(f, "snapshot kind name is not utf8"),
+            SnapshotError::BadChecksum { expect, got } => write!(
+                f,
+                "spilled blob checksum mismatch: header says {expect:#018x}, payload hashes to {got:#018x}"
+            ),
+            SnapshotError::Io(what) => {
+                write!(f, "spilled blob unreadable: {what}")
+            }
         }
     }
 }
@@ -449,6 +460,8 @@ mod tests {
             SnapshotError::TrailingBytes { kind: "ovq".into(), extra: 2 },
             SnapshotError::BadLength { claimed: 1 << 60, remaining: 4 },
             SnapshotError::NotUtf8,
+            SnapshotError::BadChecksum { expect: 0xAB, got: 0xCD },
+            SnapshotError::Io("gone.blob: no such file".into()),
         ];
         let msgs: Vec<String> = variants.iter().map(|v| v.to_string()).collect();
         for (i, a) in msgs.iter().enumerate() {

@@ -1,0 +1,850 @@
+//! Tiered session-blob storage: a bounded RAM cache in front of an
+//! asynchronous disk spill tier, plus the copy-on-write shared-prefix
+//! cache.
+//!
+//! `ShardBank` owns one [`TieredStore`] per shard. Evicted session
+//! blobs land in the RAM tier; when the RAM tier exceeds its byte
+//! budget the coldest blobs are queued to a per-shard writeback thread
+//! that frames them (magic | length | checksum) and writes them to the
+//! spill directory. A spilled session's RAM cost collapses to an index
+//! entry. Restores read the frame back, verify length and checksum,
+//! and route any corruption through the typed [`SnapshotError`] path —
+//! a torn file is a clean error, never a panic.
+//!
+//! The [`PrefixCache`] is engine-wide (shared across shards): the
+//! first session to prefill a given prompt prefix freezes its packed
+//! snapshot as an immutable `Arc<[u8]>` template keyed by the prefix
+//! hash; later sessions fork from the template bit-identically instead
+//! of re-running the prefill.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use super::snapshot::SnapshotError;
+
+/// Magic word framing every spilled blob on disk: `b"OVQD"` little-endian
+/// (`D` for the disk tier; snapshots themselves carry `b"OVQS"`).
+pub const SPILL_MAGIC: u32 = 0x4451_564F;
+
+/// Frame header size on disk: magic u32 | payload length u64 | checksum u64.
+const FRAME_HEADER: usize = 4 + 8 + 8;
+
+/// RAM cost we account for a disk-spilled session: one index entry
+/// (session id + length) — the whole point of the disk tier.
+pub const INDEX_ENTRY_BYTES: usize = std::mem::size_of::<(u64, usize)>();
+
+/// FNV-1a 64-bit checksum over a byte slice. Dependency-free and
+/// deterministic; strong enough to catch torn writes and bit flips,
+/// which is all the disk tier needs (it is not a cryptographic seal).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Live tier gauges shared between shard-local stores and the engine
+/// handle, so `/v1/stats` can report spill activity while the engine
+/// is still running (ShardReports only exist after worker exit).
+#[derive(Debug, Default)]
+pub struct TierStats {
+    pub spills: AtomicUsize,
+    pub disk_restores: AtomicUsize,
+    pub disk_bytes: AtomicUsize,
+    pub disk_sessions: AtomicUsize,
+}
+
+/// Configuration for a shard's tiered store.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Directory for spilled blobs; `None` disables the disk tier
+    /// entirely (pure-RAM store, the pre-tier behaviour).
+    pub spill_dir: Option<PathBuf>,
+    /// Byte budget for the RAM blob tier; blobs beyond it are queued
+    /// for writeback (coldest first).
+    pub ram_budget: usize,
+    /// Optional engine-shared live gauges mirrored on spill/restore.
+    pub shared: Option<Arc<TierStats>>,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { spill_dir: None, ram_budget: usize::MAX / 2, shared: None }
+    }
+}
+
+struct RamEntry {
+    bytes: Arc<Vec<u8>>,
+    touch: u64,
+    /// Generation of the writeback in flight for this blob, if any.
+    pending: Option<u64>,
+}
+
+struct WriteJob {
+    id: u64,
+    gen: u64,
+    bytes: Arc<Vec<u8>>,
+    path: PathBuf,
+}
+
+struct WriteDone {
+    id: u64,
+    gen: u64,
+    len: usize,
+    ok: bool,
+}
+
+/// Two-tier (RAM + disk) blob store with LRU writeback.
+///
+/// Single-owner like the `ShardBank` that embeds it; the only
+/// concurrency is the private writeback thread, coordinated over
+/// channels with generation tags so a `take()` racing a writeback can
+/// never resurrect stale bytes.
+pub struct TieredStore {
+    dir: Option<PathBuf>,
+    budget: usize,
+    ram: HashMap<u64, RamEntry>,
+    ram_bytes_: usize,
+    /// Disk index: session id -> payload length of the blob on disk.
+    disk: HashMap<u64, usize>,
+    disk_bytes_: usize,
+    clock: u64,
+    gen: u64,
+    outstanding: usize,
+    tx: Option<Sender<WriteJob>>,
+    done_rx: Option<Receiver<WriteDone>>,
+    writer: Option<thread::JoinHandle<()>>,
+    shared: Option<Arc<TierStats>>,
+    /// Blobs handed to the writeback thread that have landed on disk.
+    pub spills: u64,
+    /// Blobs read back from the disk tier.
+    pub disk_restores: u64,
+    /// Writeback attempts that failed (blob stayed safely in RAM).
+    pub spill_failures: u64,
+}
+
+impl TieredStore {
+    /// Pure-RAM store: no budget, no disk tier. Matches the behaviour
+    /// the bank had before tiering existed.
+    pub fn in_ram() -> Self {
+        Self::new(StoreConfig::default())
+    }
+
+    pub fn new(cfg: StoreConfig) -> Self {
+        let mut tx = None;
+        let mut done_rx = None;
+        let mut writer = None;
+        if let Some(dir) = &cfg.spill_dir {
+            // Best-effort: create the tier directory and clear any
+            // stale blobs a previous run left behind (session ids are
+            // process-local, so leftovers can only alias wrongly).
+            let _ = std::fs::create_dir_all(dir);
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let p = e.path();
+                    let stale = p
+                        .extension()
+                        .map(|x| x == "blob" || x == "tmp")
+                        .unwrap_or(false);
+                    if stale {
+                        let _ = std::fs::remove_file(&p);
+                    }
+                }
+            }
+            let (jtx, jrx) = channel::<WriteJob>();
+            let (dtx, drx) = channel::<WriteDone>();
+            writer = Some(thread::spawn(move || writeback_loop(jrx, dtx)));
+            tx = Some(jtx);
+            done_rx = Some(drx);
+        }
+        TieredStore {
+            dir: cfg.spill_dir,
+            budget: cfg.ram_budget,
+            ram: HashMap::new(),
+            ram_bytes_: 0,
+            disk: HashMap::new(),
+            disk_bytes_: 0,
+            clock: 0,
+            gen: 0,
+            outstanding: 0,
+            tx,
+            done_rx,
+            writer,
+            shared: cfg.shared,
+            spills: 0,
+            disk_restores: 0,
+            spill_failures: 0,
+        }
+    }
+
+    fn blob_path(&self, id: u64) -> PathBuf {
+        self.dir
+            .as_ref()
+            .expect("blob_path requires a spill dir")
+            .join(format!("s{id:016x}.blob"))
+    }
+
+    /// Insert (or replace) a session blob. May queue cold blobs for
+    /// disk writeback if the RAM tier is over budget.
+    pub fn insert(&mut self, id: u64, blob: Vec<u8>) {
+        self.drain_done(false);
+        self.clock += 1;
+        let len = blob.len();
+        let old = self.ram.insert(
+            id,
+            RamEntry { bytes: Arc::new(blob), touch: self.clock, pending: None },
+        );
+        if let Some(old) = old {
+            self.ram_bytes_ -= old.bytes.len();
+        }
+        // A fresh blob supersedes any disk copy of the same session.
+        if let Some(len) = self.disk.remove(&id) {
+            self.disk_bytes_ -= len;
+            if let Some(sh) = &self.shared {
+                sh.disk_bytes.fetch_sub(len, Ordering::Relaxed);
+                sh.disk_sessions.fetch_sub(1, Ordering::Relaxed);
+            }
+            if self.dir.is_some() {
+                let _ = std::fs::remove_file(self.blob_path(id));
+            }
+        }
+        self.ram_bytes_ += len;
+        self.enforce_budget();
+    }
+
+    /// Remove and return a session's blob, restoring from disk if it
+    /// was spilled. `Ok(None)` means the store has no state for `id`.
+    /// A corrupt or missing disk blob is a typed error; the entry is
+    /// consumed either way so the session can start fresh.
+    pub fn take(&mut self, id: u64) -> Result<Option<Vec<u8>>, SnapshotError> {
+        self.drain_done(false);
+        if let Some(entry) = self.ram.remove(&id) {
+            self.ram_bytes_ -= entry.bytes.len();
+            // If a writeback is in flight the Arc is shared; clone the
+            // bytes and let apply_done garbage-collect the orphan file.
+            let bytes = match Arc::try_unwrap(entry.bytes) {
+                Ok(v) => v,
+                Err(arc) => (*arc).clone(),
+            };
+            return Ok(Some(bytes));
+        }
+        if let Some(len) = self.disk.remove(&id) {
+            self.disk_bytes_ -= len;
+            if let Some(sh) = &self.shared {
+                sh.disk_bytes.fetch_sub(len, Ordering::Relaxed);
+                sh.disk_sessions.fetch_sub(1, Ordering::Relaxed);
+            }
+            let path = self.blob_path(id);
+            let read = read_blob(&path);
+            let _ = std::fs::remove_file(&path);
+            let blob = read?;
+            self.disk_restores += 1;
+            if let Some(sh) = &self.shared {
+                sh.disk_restores.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(Some(blob));
+        }
+        Ok(None)
+    }
+
+    /// True if the store holds state for `id` in either tier.
+    pub fn contains(&self, id: u64) -> bool {
+        self.ram.contains_key(&id) || self.disk.contains_key(&id)
+    }
+
+    /// Sessions held in either tier.
+    pub fn frozen_sessions(&self) -> usize {
+        self.ram.len() + self.disk.len()
+    }
+
+    pub fn ram_sessions(&self) -> usize {
+        self.ram.len()
+    }
+
+    pub fn disk_sessions(&self) -> usize {
+        self.disk.len()
+    }
+
+    /// Bytes of blob payload resident in the RAM tier.
+    pub fn ram_bytes(&self) -> usize {
+        self.ram_bytes_
+    }
+
+    /// Bytes of blob payload on the disk tier (payload, not framing).
+    pub fn disk_bytes(&self) -> usize {
+        self.disk_bytes_
+    }
+
+    /// The RAM this store actually costs: RAM-tier blobs in full, plus
+    /// one index entry per disk-tier session. This is the number the
+    /// bank's memstate accounting reports.
+    pub fn ram_footprint(&self) -> usize {
+        self.ram_bytes_ + self.disk.len() * INDEX_ENTRY_BYTES
+    }
+
+    /// RAM cost attributable to one stored session, if stored.
+    pub fn session_ram_bytes(&self, id: u64) -> Option<usize> {
+        if let Some(e) = self.ram.get(&id) {
+            return Some(e.bytes.len());
+        }
+        if self.disk.contains_key(&id) {
+            return Some(INDEX_ENTRY_BYTES);
+        }
+        None
+    }
+
+    /// Block until every queued writeback has completed and its
+    /// outcome is applied. Makes spill counters deterministic for
+    /// tests and end-of-run reports.
+    pub fn sync(&mut self) {
+        self.drain_done(true);
+    }
+
+    fn enforce_budget(&mut self) {
+        if self.tx.is_none() {
+            return; // no disk tier: RAM tier is unbounded, as before
+        }
+        while self.ram_bytes_ > self.budget {
+            // Coldest non-pending blob. `touch` values are unique
+            // (monotone clock), so the choice is deterministic even
+            // though HashMap iteration order is not.
+            let victim = self
+                .ram
+                .iter()
+                .filter(|(_, e)| e.pending.is_none())
+                .min_by_key(|(_, e)| e.touch)
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            self.gen += 1;
+            let gen = self.gen;
+            let entry = self.ram.get_mut(&id).unwrap();
+            entry.pending = Some(gen);
+            let job = WriteJob {
+                id,
+                gen,
+                bytes: Arc::clone(&entry.bytes),
+                path: self.blob_path(id),
+            };
+            self.outstanding += 1;
+            if self.tx.as_ref().unwrap().send(job).is_err() {
+                // Writer died; undo and stop trying.
+                self.outstanding -= 1;
+                self.ram.get_mut(&id).unwrap().pending = None;
+                self.spill_failures += 1;
+                break;
+            }
+            // The blob stays RAM-resident (and counted) until the
+            // writeback completes; drain below may free it already.
+            self.drain_done(false);
+            if self.ram_bytes_ <= self.budget {
+                break;
+            }
+            // All remaining blobs pending? Nothing more to queue now.
+            if self.ram.values().all(|e| e.pending.is_some()) {
+                break;
+            }
+        }
+    }
+
+    fn drain_done(&mut self, wait: bool) {
+        let mut msgs = Vec::new();
+        if let Some(rx) = &self.done_rx {
+            while let Ok(m) = rx.try_recv() {
+                msgs.push(m);
+            }
+            if wait {
+                while self.outstanding > msgs.len() {
+                    match rx.recv() {
+                        Ok(m) => msgs.push(m),
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+        for m in msgs {
+            self.outstanding -= 1;
+            self.apply_done(m);
+        }
+    }
+
+    fn apply_done(&mut self, m: WriteDone) {
+        let live = self
+            .ram
+            .get(&m.id)
+            .map(|e| e.pending == Some(m.gen))
+            .unwrap_or(false);
+        if !live {
+            // The blob was taken or replaced while the write was in
+            // flight. If no newer write for this id is queued and the
+            // id has no disk index entry, the file is an orphan.
+            let newer_queued = self
+                .ram
+                .get(&m.id)
+                .map(|e| matches!(e.pending, Some(g) if g > m.gen))
+                .unwrap_or(false);
+            if m.ok && !newer_queued && !self.disk.contains_key(&m.id) {
+                let _ = std::fs::remove_file(self.blob_path(m.id));
+            }
+            return;
+        }
+        if m.ok {
+            let entry = self.ram.remove(&m.id).unwrap();
+            self.ram_bytes_ -= entry.bytes.len();
+            self.disk.insert(m.id, m.len);
+            self.disk_bytes_ += m.len;
+            self.spills += 1;
+            if let Some(sh) = &self.shared {
+                sh.spills.fetch_add(1, Ordering::Relaxed);
+                sh.disk_bytes.fetch_add(m.len, Ordering::Relaxed);
+                sh.disk_sessions.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            // Disk refused the write; keep serving from RAM.
+            self.spill_failures += 1;
+            if let Some(e) = self.ram.get_mut(&m.id) {
+                e.pending = None;
+            }
+        }
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        self.tx = None; // close the job channel so the writer exits
+        self.drain_done(true);
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+        // Indexed files stay on disk; a future run pointed at the same
+        // dir clears them as stale on startup.
+    }
+}
+
+fn writeback_loop(rx: Receiver<WriteJob>, done: Sender<WriteDone>) {
+    for job in rx {
+        let ok = write_blob(&job.path, &job.bytes).is_ok();
+        let msg = WriteDone { id: job.id, gen: job.gen, len: job.bytes.len(), ok };
+        if done.send(msg).is_err() {
+            break;
+        }
+    }
+}
+
+/// Frame and write a blob: `SPILL_MAGIC | len u64 | fnv64 | payload`,
+/// staged through a `.tmp` sibling and renamed so a crashed write
+/// never leaves a half-frame under the final name.
+fn write_blob(path: &Path, payload: &[u8]) -> std::io::Result<()> {
+    let mut frame = Vec::with_capacity(FRAME_HEADER + payload.len());
+    frame.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+    frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    frame.extend_from_slice(&checksum(payload).to_le_bytes());
+    frame.extend_from_slice(payload);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &frame)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Read a framed blob back, verifying magic, length, and checksum.
+/// Every way a file can be wrong maps to a typed [`SnapshotError`].
+pub fn read_blob(path: &Path) -> Result<Vec<u8>, SnapshotError> {
+    let raw = std::fs::read(path)
+        .map_err(|e| SnapshotError::Io(format!("{}: {e}", path.display())))?;
+    if raw.len() < FRAME_HEADER {
+        return Err(SnapshotError::Truncated {
+            offset: 0,
+            need: FRAME_HEADER,
+            have: raw.len(),
+        });
+    }
+    let magic = u32::from_le_bytes(raw[0..4].try_into().unwrap());
+    if magic != SPILL_MAGIC {
+        return Err(SnapshotError::BadMagic(magic));
+    }
+    let claimed = u64::from_le_bytes(raw[4..12].try_into().unwrap()) as usize;
+    let remaining = raw.len() - FRAME_HEADER;
+    if claimed != remaining {
+        return Err(SnapshotError::BadLength { claimed, remaining });
+    }
+    let expect = u64::from_le_bytes(raw[12..20].try_into().unwrap());
+    let payload = &raw[FRAME_HEADER..];
+    let got = checksum(payload);
+    if got != expect {
+        return Err(SnapshotError::BadChecksum { expect, got });
+    }
+    Ok(payload.to_vec())
+}
+
+/// Stable key for a prompt prefix: FNV-1a over the little-endian token
+/// bytes, mixed with the length so a prefix and its own prefix never
+/// collide trivially.
+pub fn prefix_key(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325 ^ (tokens.len() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Point-in-time prefix-cache statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixReport {
+    pub hits: usize,
+    pub misses: usize,
+    pub bytes: usize,
+    pub entries: usize,
+}
+
+/// Engine-wide copy-on-write prefix template cache.
+///
+/// Templates are immutable `Arc<[u8]>` packed-session blobs keyed by
+/// prefix hash. Forking a session from a template is a plain snapshot
+/// restore, so forks are bit-identical to having run the prefill —
+/// the determinism argument lives in DESIGN.md "Memory hierarchy".
+pub struct PrefixCache {
+    enabled: bool,
+    entries: Mutex<HashMap<u64, Arc<[u8]>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    bytes: AtomicUsize,
+}
+
+impl PrefixCache {
+    pub fn new(enabled: bool) -> Self {
+        PrefixCache {
+            enabled,
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            bytes: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Look up a template, counting the hit or miss.
+    pub fn lookup(&self, key: u64) -> Option<Arc<[u8]>> {
+        if !self.enabled {
+            return None;
+        }
+        let got = self.entries.lock().unwrap().get(&key).cloned();
+        match &got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Freeze a packed-session blob as the template for `key`.
+    /// Replacing an existing template (two sessions racing to build
+    /// the same prefix produce identical bytes) keeps byte accounting
+    /// straight.
+    pub fn register(&self, key: u64, blob: Vec<u8>) {
+        if !self.enabled {
+            return;
+        }
+        let len = blob.len();
+        let old = self
+            .entries
+            .lock()
+            .unwrap()
+            .insert(key, Arc::from(blob.into_boxed_slice()));
+        if let Some(old) = old {
+            self.bytes.fetch_sub(old.len(), Ordering::Relaxed);
+        }
+        self.bytes.fetch_add(len, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> PrefixReport {
+        PrefixReport {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            entries: self.entries.lock().unwrap().len(),
+        }
+    }
+}
+
+/// Self-cleaning temp directory for tests and benches: unique path
+/// under the system temp dir, removed (best-effort) on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(tag: &str) -> Self {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "ovq-{tag}-{}-{seq}",
+            std::process::id()
+        ));
+        let _ = std::fs::create_dir_all(&path);
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn blob(seed: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| seed.wrapping_add(i as u8)).collect()
+    }
+
+    fn store_with_budget(dir: &Path, budget: usize) -> TieredStore {
+        TieredStore::new(StoreConfig {
+            spill_dir: Some(dir.to_path_buf()),
+            ram_budget: budget,
+            shared: None,
+        })
+    }
+
+    #[test]
+    fn ram_only_store_never_touches_disk() {
+        let mut s = TieredStore::in_ram();
+        s.insert(1, blob(1, 100));
+        s.insert(2, blob(2, 100));
+        assert_eq!(s.ram_sessions(), 2);
+        assert_eq!(s.disk_sessions(), 0);
+        assert_eq!(s.ram_bytes(), 200);
+        assert_eq!(s.ram_footprint(), 200);
+        assert_eq!(s.take(1).unwrap(), Some(blob(1, 100)));
+        assert_eq!(s.take(1).unwrap(), None);
+        assert_eq!(s.ram_bytes(), 100);
+    }
+
+    #[test]
+    fn over_budget_blobs_spill_coldest_first_and_restore_bit_identically() {
+        let td = TempDir::new("spill-lru");
+        let mut s = store_with_budget(td.path(), 250);
+        s.insert(1, blob(1, 100)); // coldest
+        s.insert(2, blob(2, 100));
+        s.insert(3, blob(3, 100)); // over budget: 1 spills
+        s.sync();
+        assert_eq!(s.spills, 1);
+        assert_eq!(s.ram_sessions(), 2);
+        assert_eq!(s.disk_sessions(), 1);
+        assert_eq!(s.ram_bytes(), 200);
+        assert_eq!(s.disk_bytes(), 100);
+        assert_eq!(s.ram_footprint(), 200 + INDEX_ENTRY_BYTES);
+        assert_eq!(s.session_ram_bytes(1), Some(INDEX_ENTRY_BYTES));
+        assert_eq!(s.session_ram_bytes(2), Some(100));
+        // Restore from disk is bit-identical and consumes the entry.
+        assert_eq!(s.take(1).unwrap(), Some(blob(1, 100)));
+        assert_eq!(s.disk_restores, 1);
+        assert_eq!(s.disk_sessions(), 0);
+        assert!(!s.contains(1));
+    }
+
+    #[test]
+    fn zero_budget_spills_everything() {
+        let td = TempDir::new("spill-all");
+        let mut s = store_with_budget(td.path(), 0);
+        for id in 0..6u64 {
+            s.insert(id, blob(id as u8, 64));
+        }
+        s.sync();
+        assert_eq!(s.ram_bytes(), 0);
+        assert_eq!(s.ram_sessions(), 0);
+        assert_eq!(s.disk_sessions(), 6);
+        assert_eq!(s.disk_bytes(), 6 * 64);
+        assert_eq!(s.spills, 6);
+        assert_eq!(s.ram_footprint(), 6 * INDEX_ENTRY_BYTES);
+        for id in 0..6u64 {
+            assert_eq!(s.take(id).unwrap(), Some(blob(id as u8, 64)), "session {id}");
+        }
+        assert_eq!(s.disk_restores, 6);
+    }
+
+    #[test]
+    fn take_before_writeback_completes_returns_ram_bytes() {
+        let td = TempDir::new("spill-race");
+        let mut s = store_with_budget(td.path(), 0);
+        // Insert queues a writeback immediately (budget 0); take right
+        // away — whatever the writer thread is doing, we must get the
+        // exact bytes back and the store must stay consistent.
+        for round in 0..20u64 {
+            s.insert(round, blob(round as u8, 256));
+            assert_eq!(s.take(round).unwrap(), Some(blob(round as u8, 256)));
+            assert!(!s.contains(round));
+        }
+        s.sync();
+        assert_eq!(s.ram_bytes(), 0);
+        assert_eq!(s.disk_bytes(), 0);
+    }
+
+    #[test]
+    fn reinsert_supersedes_disk_copy() {
+        let td = TempDir::new("spill-supersede");
+        let mut s = store_with_budget(td.path(), 0);
+        s.insert(7, blob(1, 128));
+        s.sync();
+        assert_eq!(s.disk_sessions(), 1);
+        // Newer state for the same session replaces the spilled copy.
+        s.insert(7, blob(9, 64));
+        assert_eq!(s.take(7).unwrap(), Some(blob(9, 64)));
+        s.sync();
+        assert!(!s.contains(7));
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let td = TempDir::new("frame-rt");
+        let p = td.path().join("x.blob");
+        let payload = blob(42, 1000);
+        write_blob(&p, &payload).unwrap();
+        assert_eq!(read_blob(&p).unwrap(), payload);
+    }
+
+    #[test]
+    fn corrupt_frames_are_typed_errors_never_panics() {
+        let td = TempDir::new("frame-corrupt");
+        let p = td.path().join("x.blob");
+        let payload = blob(3, 200);
+        write_blob(&p, &payload).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // Truncated below the header.
+        std::fs::write(&p, &good[..10]).unwrap();
+        assert!(matches!(read_blob(&p), Err(SnapshotError::Truncated { .. })));
+
+        // Truncated payload: length claim no longer matches.
+        std::fs::write(&p, &good[..good.len() - 5]).unwrap();
+        assert!(matches!(read_blob(&p), Err(SnapshotError::BadLength { .. })));
+
+        // Flipped payload bit: checksum catches it.
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        std::fs::write(&p, &flipped).unwrap();
+        assert!(matches!(read_blob(&p), Err(SnapshotError::BadChecksum { .. })));
+
+        // Wrong magic.
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        std::fs::write(&p, &bad_magic).unwrap();
+        assert!(matches!(read_blob(&p), Err(SnapshotError::BadMagic(_))));
+
+        // Missing file entirely.
+        std::fs::remove_file(&p).unwrap();
+        assert!(matches!(read_blob(&p), Err(SnapshotError::Io(_))));
+    }
+
+    #[test]
+    fn corrupt_disk_blob_is_a_clean_take_error_and_store_keeps_serving() {
+        let td = TempDir::new("spill-corrupt");
+        let mut s = store_with_budget(td.path(), 0);
+        s.insert(1, blob(1, 300));
+        s.insert(2, blob(2, 300));
+        s.sync();
+        assert_eq!(s.disk_sessions(), 2);
+        // Corrupt session 1's file behind the store's back.
+        let p1 = td.path().join(format!("s{:016x}.blob", 1u64));
+        let mut raw = std::fs::read(&p1).unwrap();
+        raw[FRAME_HEADER + 3] ^= 1;
+        std::fs::write(&p1, &raw).unwrap();
+        assert!(matches!(s.take(1), Err(SnapshotError::BadChecksum { .. })));
+        // The bad entry is consumed; the store still serves others.
+        assert!(!s.contains(1));
+        assert_eq!(s.take(2).unwrap(), Some(blob(2, 300)));
+    }
+
+    #[test]
+    fn fuzzed_frames_never_panic() {
+        let td = TempDir::new("frame-fuzz");
+        let p = td.path().join("f.blob");
+        let payload = blob(17, 500);
+        write_blob(&p, &payload).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        let mut rng = Rng::new(0xF0CC);
+        for _ in 0..200 {
+            let mut bytes = good.clone();
+            if rng.bool(0.5) {
+                let cut = (rng.next_u64() as usize) % bytes.len();
+                bytes.truncate(cut);
+            } else {
+                let at = (rng.next_u64() as usize) % bytes.len();
+                bytes[at] ^= 1 << ((rng.next_u64() % 8) as u8);
+            }
+            std::fs::write(&p, &bytes).unwrap();
+            match read_blob(&p) {
+                Ok(got) => assert_eq!(got, payload), // flip in dead space? impossible here, but Ok must mean intact
+                Err(_) => {}                         // typed error: fine
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_counts_hits_misses_and_bytes() {
+        let c = PrefixCache::new(true);
+        let k = prefix_key(&[1, 2, 3, 4]);
+        assert!(c.lookup(k).is_none());
+        c.register(k, vec![0u8; 512]);
+        let t = c.lookup(k).expect("registered template");
+        assert_eq!(t.len(), 512);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.bytes, st.entries), (1, 1, 512, 1));
+        // Replacement keeps the byte gauge straight.
+        c.register(k, vec![0u8; 128]);
+        assert_eq!(c.stats().bytes, 128);
+        // Disabled cache: no lookups, no registrations, no counting.
+        let off = PrefixCache::new(false);
+        assert!(off.lookup(k).is_none());
+        off.register(k, vec![0u8; 64]);
+        let st = off.stats();
+        assert_eq!((st.hits, st.misses, st.bytes, st.entries), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn prefix_keys_distinguish_prefixes() {
+        let a = prefix_key(&[1, 2, 3]);
+        assert_eq!(a, prefix_key(&[1, 2, 3]));
+        assert_ne!(a, prefix_key(&[1, 2]));
+        assert_ne!(a, prefix_key(&[1, 2, 4]));
+        assert_ne!(a, prefix_key(&[]));
+    }
+
+    #[test]
+    fn temp_dirs_clean_up_after_themselves() {
+        let kept;
+        {
+            let td = TempDir::new("cleanup");
+            kept = td.path().to_path_buf();
+            std::fs::write(td.path().join("x"), b"y").unwrap();
+            assert!(kept.exists());
+        }
+        assert!(!kept.exists());
+    }
+
+    #[test]
+    fn stale_blobs_are_cleared_on_startup() {
+        let td = TempDir::new("stale");
+        std::fs::write(td.path().join("s00.blob"), b"junk").unwrap();
+        std::fs::write(td.path().join("w.tmp"), b"junk").unwrap();
+        let _s = store_with_budget(td.path(), 0);
+        assert!(!td.path().join("s00.blob").exists());
+        assert!(!td.path().join("w.tmp").exists());
+    }
+}

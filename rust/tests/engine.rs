@@ -844,6 +844,120 @@ fn generation_interleaves_with_decode_and_prefill_traffic() {
     assert_eq!(pick(&mixed), pick(&plain), "a neighbour's generation changed decode bits");
 }
 
+// ---------------------------------------------------------- tiered memory
+
+#[test]
+fn spill_and_prefix_fork_matrix_is_bit_identical_under_churn() {
+    // the tiered-memory acceptance golden: the same generation workload —
+    // a 64-token shared system prefix opening six sessions, then two more
+    // rounds of per-session turns under max_resident = 1 churn — must
+    // produce bit-identical completions with disk spill + prefix forking
+    // ON vs OFF, at 1 vs 4 shard threads. The sleeps between rounds let
+    // the async writeback land, so the 1-thread tiered run deterministically
+    // restores from the disk tier rather than catching blobs still in RAM.
+    use ovq::ovqcore::store::TempDir;
+    let prefix: Vec<u32> = (0..64u32).map(|i| (i * 7 + 5) % 24).collect();
+    let run = |threads: usize, tiered: bool| {
+        let dir = tiered.then(|| TempDir::new("tiered-matrix"));
+        let mut cfg = EngineConfig::for_lm(gen_lm_cfg());
+        cfg.threads = threads;
+        cfg.max_resident = 1;
+        cfg.prefill_quantum = 64; // the whole prefix fits one quantum
+        cfg.gen_quantum = 4;
+        cfg.prefix_cache = tiered;
+        if let Some(d) = &dir {
+            cfg.spill_dir = Some(d.path().to_path_buf());
+            cfg.ram_blob_budget = 0; // every evicted blob heads to disk
+        }
+        let engine = DecodeEngine::start(cfg);
+        for round in 0..3usize {
+            for s in 0..6u64 {
+                let (prompt, plen) = if round == 0 {
+                    let mut p = prefix.clone();
+                    p.extend(traffic::synth_tokens(0x7E4, s, 8, 24));
+                    let plen = prefix.len();
+                    (p, plen)
+                } else {
+                    (traffic::synth_tokens(0x7E4 + round as u64, s, 8, 24), 0)
+                };
+                engine.submit_generate_prefixed(
+                    s,
+                    prompt,
+                    plen,
+                    None,
+                    SamplingParams::greedy(),
+                    StopCriteria::max_new(12),
+                );
+            }
+            std::thread::sleep(std::time::Duration::from_millis(150));
+        }
+        let report = engine.finish();
+        let mut outs: HashMap<u64, Vec<(usize, Vec<u32>)>> = HashMap::new();
+        for g in &report.generations {
+            outs.entry(g.session).or_default().push((g.seq, g.tokens.clone()));
+        }
+        outs.values_mut().for_each(|v| v.sort());
+        (outs, report, dir)
+    };
+
+    let (base, rb, _) = run(1, false);
+    assert_eq!(rb.completions(), 18, "3 rounds x 6 sessions");
+    assert_eq!(rb.prefix_forks(), 0, "cache off must never fork");
+    assert_eq!(rb.spills(), 0, "no spill dir, no spills");
+    for threads in [1usize, 4] {
+        let (tiered, rt, _dir) = run(threads, true);
+        assert_eq!(
+            tiered, base,
+            "spill + prefix forking changed a completion at {threads} threads"
+        );
+        assert_eq!(rt.completions(), 18);
+        if threads == 1 {
+            // one shard, prefix inside the first quantum: session 0 builds
+            // the template, sessions 1..=5 fork it — the count is exact
+            assert_eq!(rt.prefix_forks(), 5);
+            assert_eq!(rt.prefix_fork_tokens(), 5 * prefix.len());
+            assert!(rt.spills() >= 1, "budget 0 under churn must spill");
+            assert!(rt.disk_restores() >= 1, "later rounds must thaw from disk");
+        }
+    }
+}
+
+#[test]
+fn spilled_sessions_cost_an_index_entry_of_ram() {
+    // eviction-accounting satellite: once a session's blob is on disk its
+    // RAM cost must drop to the store's per-entry index bookkeeping —
+    // cross-checked EXACTLY against the store's own constant
+    use ovq::ovqcore::store::{TempDir, INDEX_ENTRY_BYTES};
+    let dir = TempDir::new("spill-accounting");
+    let mut cfg = EngineConfig::new(MixerKind::Ovq { n_max: 32 }, 2, 8, 16);
+    cfg.threads = 1;
+    cfg.max_resident = 1;
+    cfg.spill_dir = Some(dir.path().to_path_buf());
+    cfg.ram_blob_budget = 0;
+    let engine = DecodeEngine::start(cfg);
+    let hd = engine.heads() * engine.d_head();
+    for round in 0..3usize {
+        for session in [0u64, 1, 2] {
+            engine.submit(session, traffic::synth_chunk(1, session, round, 8, hd));
+        }
+        // let the writeback drain so every frozen blob really leaves RAM
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    }
+    let report = engine.finish();
+    let shard = &report.shards[0];
+    assert_eq!(shard.sessions, 3);
+    assert!(shard.spills >= 2, "two of three sessions are always frozen");
+    // finish() syncs the store, so at shutdown every non-resident blob is
+    // on disk: snapshot accounting must be exactly index entries
+    assert_eq!(shard.disk_sessions, 2, "cap 1 leaves two sessions frozen");
+    assert!(shard.disk_bytes > 0);
+    assert_eq!(
+        shard.snapshot_bytes,
+        2 * INDEX_ENTRY_BYTES,
+        "a spilled session must cost an index entry of RAM, not its blob"
+    );
+}
+
 // ------------------------------------------------------------ backpressure
 
 /// A deliberately slow mixer: delegates to GDN but sleeps per chunk, so a

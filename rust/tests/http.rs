@@ -131,6 +131,99 @@ fn sse_stream_frames_every_token_then_a_done_record() {
     engine.finish();
 }
 
+// ---------------------------------------------------------- tiered memory
+
+#[test]
+fn prefix_forked_completions_match_and_tier_stats_surface() {
+    // the memory-tier edge contract: three wire requests sharing one
+    // 24-token system prefix — plain (prefix unnamed), builder (first to
+    // name it), forked (served from the copy-on-write template) — must
+    // return identical greedy completions, on an engine spilling every
+    // evicted blob to disk. /v1/stats then surfaces the tier counters.
+    use ovq::ovqcore::store::TempDir;
+    let dir = TempDir::new("http-tiers");
+    let kinds = parse_schedule("ovq:16", 1).unwrap();
+    let lm = LmConfig::new(VOCAB, StackConfig::hybrid(8, 16, 2, 4, 8, kinds));
+    let mut cfg = EngineConfig::for_lm(lm);
+    cfg.threads = 1;
+    cfg.seed = 0x6E6E;
+    cfg.prefill_quantum = 32;
+    cfg.gen_quantum = 8;
+    cfg.max_resident = 1;
+    cfg.spill_dir = Some(dir.path().to_path_buf());
+    cfg.ram_blob_budget = 0;
+    let engine = DecodeEngine::start(cfg);
+    let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+
+    let prefix = traffic::synth_tokens(DATA_SEED, u64::MAX, 24, VOCAB);
+    // one shared suffix too: greedy sampling depends only on the prompt
+    // and the (session-shared) LM weights, so all three must match
+    let suffix = traffic::synth_tokens(DATA_SEED, 12345, 6, VOCAB);
+    let post = |session: u64, prefix_len: usize| -> Vec<TokenId> {
+        let mut prompt = prefix.clone();
+        prompt.extend_from_slice(&suffix);
+        let stop = StopCriteria::max_new(8);
+        let body = http::completion_body_prefixed(
+            Some(session),
+            &prompt,
+            &SamplingParams::greedy(),
+            &stop,
+            false,
+            prefix_len,
+            None,
+        );
+        let resp = http::http_post(
+            server.addr(),
+            "/v1/completions",
+            &[],
+            body.to_string().as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "session {session}");
+        http::token_ids(resp.json().unwrap().get("tokens").unwrap()).unwrap()
+    };
+    let plain = post(1, 0);
+    let built = post(2, prefix.len());
+    let forked = post(3, prefix.len());
+    assert_eq!(plain.len(), 8);
+    assert_eq!(plain, built, "naming the prefix changed a completion");
+    assert_eq!(plain, forked, "forking the template changed a completion");
+
+    // a fully-covering prefix leaves no token to compute logits from —
+    // the edge refuses it as a typed 400 before the engine sees it
+    let body = http::completion_body_prefixed(
+        Some(4),
+        &prefix,
+        &SamplingParams::greedy(),
+        &StopCriteria::max_new(4),
+        false,
+        prefix.len(),
+        None,
+    );
+    let resp = http::http_post(
+        server.addr(),
+        "/v1/completions",
+        &[],
+        body.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp.json().unwrap()), "invalid_param");
+
+    // let the async writebacks land, then read the tier counters
+    thread::sleep(Duration::from_millis(200));
+    let stats = http::http_get(server.addr(), "/v1/stats").unwrap().json().unwrap();
+    let tier = |k: &str| stats.at(&["tiers", k]).and_then(|v| v.as_u64());
+    assert_eq!(tier("prefix_hits"), Some(1), "one fork served from the template");
+    assert_eq!(tier("prefix_misses"), Some(1), "one build populated it");
+    assert_eq!(tier("prefix_entries"), Some(1));
+    assert!(tier("prefix_bytes").unwrap() > 0);
+    assert!(tier("spills").unwrap() >= 1, "budget 0 under cap-1 churn must spill");
+    assert!(tier("disk_restores").is_some() && tier("disk_bytes").is_some());
+    server.stop();
+    engine.finish();
+}
+
 // -------------------------------------------------------------- shedding
 
 /// A meatier LM for the jam test: enough per-token work that a
