@@ -43,7 +43,7 @@ use crate::ovqcore::mixer::{
 use crate::ovqcore::quant::QuantMode;
 use crate::ovqcore::stack::{LayerStack, StackConfig};
 use crate::ovqcore::store::{prefix_key, PrefixCache, PrefixReport, StoreConfig, TierStats};
-use crate::util::stats;
+use crate::util::obs::{self, HistSnapshot, Registry, Span, Stage, Timing, Trace};
 
 /// Engine shape and policy. `threads` is the shard count (one worker
 /// thread per shard); `max_resident` and `queue_depth` are per shard.
@@ -202,6 +202,9 @@ enum EngineMsg {
     Prefill { session: u64, chunk: DecodeChunk, submitted: Instant },
     Generate {
         session: u64,
+        /// request id for trace spans and the response `timing` echo —
+        /// minted at submit (or carried in from the HTTP edge)
+        req: u64,
         prompt: Vec<TokenId>,
         params: SamplingParams,
         stop: StopCriteria,
@@ -345,8 +348,10 @@ pub enum GenEvent {
     Token(TokenId),
     /// the request completed; `tokens` is the full completion, identical
     /// to the concatenation of the preceding [`GenEvent::Token`] events
-    /// and to the [`GenOut`] for this request
-    Done { seq: usize, tokens: Vec<TokenId> },
+    /// and to the [`GenOut`] for this request. `timing` is the request's
+    /// wall-clock split (queue / prefill / decode / total) — observational
+    /// only, it never feeds computation
+    Done { seq: usize, tokens: Vec<TokenId>, timing: Timing },
     /// the request was dropped (non-LM engine, corrupt snapshot restore);
     /// the reason mirrors the engine's `failed_chunks` diagnostics
     Failed(String),
@@ -457,6 +462,14 @@ pub struct EngineReport {
     pub generations: Vec<GenOut>,
     /// engine-wide prefix-cache statistics at shutdown
     pub prefix: PrefixReport,
+    /// merged submit→completion decode-chunk latency histogram, ns —
+    /// the registry view the percentile methods read (bounded memory
+    /// over the whole run, unlike the windowed `ShardReport` rings)
+    pub latency_hist: HistSnapshot,
+    /// merged submit→first-token latency histogram, ns
+    pub ttft_hist: HistSnapshot,
+    /// merged submit→last-token generation latency histogram, ns
+    pub completion_hist: HistSnapshot,
 }
 
 impl EngineReport {
@@ -516,18 +529,18 @@ impl EngineReport {
     }
 
     /// Cross-shard submit→completion latency percentile, microseconds.
+    /// Read from the run-lifetime log-bucketed histogram (within one
+    /// bucket width, ~26%, of the exact sample percentile); 0 when no
+    /// chunks completed.
     pub fn latency_us(&self, p: f64) -> f64 {
-        let all: Vec<f64> =
-            self.shards.iter().flat_map(|s| s.latency_ns.iter().copied()).collect();
-        stats::percentile(&all, p) / 1e3
+        self.latency_hist.percentile(p) / 1e3
     }
 
-    /// Prompt time-to-first-token percentile across shards, microseconds
-    /// (submit → last prefill quantum complete). NaN when no prompts ran.
+    /// Prompt time-to-first-token percentile, microseconds (submit →
+    /// first token; histogram view, like [`EngineReport::latency_us`]).
+    /// 0 when no prompts ran.
     pub fn ttft_us(&self, p: f64) -> f64 {
-        let all: Vec<f64> =
-            self.shards.iter().flat_map(|s| s.ttft_ns.iter().copied()).collect();
-        stats::percentile(&all, p) / 1e3
+        self.ttft_hist.percentile(p) / 1e3
     }
 
     /// Prompt tokens ingested through the prefill path, all shards.
@@ -550,12 +563,10 @@ impl EngineReport {
         self.shards.iter().map(|s| s.completions).sum()
     }
 
-    /// End-to-end completion latency percentile across shards (submit →
-    /// last sampled token), microseconds. NaN when nothing generated.
+    /// End-to-end completion latency percentile (submit → last sampled
+    /// token), microseconds (histogram view). 0 when nothing generated.
     pub fn completion_us(&self, p: f64) -> f64 {
-        let all: Vec<f64> =
-            self.shards.iter().flat_map(|s| s.completion_ns.iter().copied()).collect();
-        stats::percentile(&all, p) / 1e3
+        self.completion_hist.percentile(p) / 1e3
     }
 
     /// Aggregate generation throughput: sampled tokens per wall second.
@@ -681,6 +692,54 @@ impl EngineReport {
     }
 }
 
+/// Shared observability state of one engine: the metrics registry the
+/// report views and `GET /metrics` read, the per-shard trace rings
+/// `GET /v1/trace` dumps, and the pre-registered hot-path handles
+/// (histograms, counters) the shard workers record into. Owned per
+/// engine — never process-global — so concurrent engines (and tests)
+/// cannot contaminate each other's metrics.
+pub struct EngineObs {
+    registry: Arc<Registry>,
+    trace: Arc<Trace>,
+    /// submit→completion latency of decode chunks, nanoseconds
+    latency: obs::Histogram,
+    /// submit→first-token latency of prompts and generations, ns
+    ttft: obs::Histogram,
+    /// submit→last-token latency of completed generations, ns
+    completion: obs::Histogram,
+    /// all tokens ingested (decode + prefill + sampled)
+    tokens: obs::Counter,
+    /// completed generation requests
+    completions: obs::Counter,
+}
+
+impl EngineObs {
+    fn new(shards: usize) -> EngineObs {
+        let registry = Arc::new(Registry::new());
+        EngineObs {
+            trace: Arc::new(Trace::new(shards, obs::TRACE_RING_CAP)),
+            latency: registry.histogram("ovq_decode_latency_ns", &[]),
+            ttft: registry.histogram("ovq_ttft_ns", &[]),
+            completion: registry.histogram("ovq_completion_ns", &[]),
+            tokens: registry.counter("ovq_tokens_total", &[]),
+            completions: registry.counter("ovq_completions_total", &[]),
+            registry,
+        }
+    }
+
+    /// The metrics registry (render with
+    /// [`Registry::render_prometheus`] for `GET /metrics`; edges
+    /// register their own counters here too).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The trace rings (`GET /v1/trace` dumps them).
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
+    }
+}
+
 /// A cheap, cloneable submission handle onto a running [`DecodeEngine`].
 ///
 /// The engine itself is not `Sync` (it owns the output `Receiver`s), so a
@@ -709,6 +768,8 @@ pub struct EngineHandle {
     tier: Arc<TierStats>,
     /// the engine-wide prefix template cache (shared with every shard)
     prefix: Arc<PrefixCache>,
+    /// metrics registry + trace rings shared with every shard worker
+    obs: Arc<EngineObs>,
 }
 
 impl EngineHandle {
@@ -768,6 +829,7 @@ impl EngineHandle {
         let key = prefix_id.unwrap_or_else(|| prefix_key(&prompt[..prefix_len.min(prompt.len())]));
         let msg = EngineMsg::Generate {
             session,
+            req: obs::next_request_id(),
             prompt,
             params,
             stop,
@@ -796,6 +858,7 @@ impl EngineHandle {
         let s = shard_of(session, self.threads);
         let msg = EngineMsg::Generate {
             session,
+            req: obs::next_request_id(),
             prompt,
             params,
             stop,
@@ -839,11 +902,40 @@ impl EngineHandle {
         stop: StopCriteria,
         stream: Option<Sender<GenEvent>>,
     ) -> Result<(), QueueFull> {
+        self.try_submit_generate_traced(
+            obs::next_request_id(),
+            session,
+            prompt,
+            prefix_len,
+            prefix_id,
+            params,
+            stop,
+            stream,
+        )
+    }
+
+    /// [`EngineHandle::try_submit_generate_prefixed`] with a
+    /// caller-supplied request id — the HTTP edge mints (or hashes from
+    /// the client's `x-request-id` header) the id before admission, so
+    /// the trace spans carry the same id the response echoes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_submit_generate_traced(
+        &self,
+        req: u64,
+        session: u64,
+        prompt: Vec<TokenId>,
+        prefix_len: usize,
+        prefix_id: Option<u64>,
+        params: SamplingParams,
+        stop: StopCriteria,
+        stream: Option<Sender<GenEvent>>,
+    ) -> Result<(), QueueFull> {
         let s = shard_of(session, self.threads);
         let v = self.queue_gauge[s].fetch_add(1, Ordering::SeqCst) + 1;
         let key = prefix_id.unwrap_or_else(|| prefix_key(&prompt[..prefix_len.min(prompt.len())]));
         let msg = EngineMsg::Generate {
             session,
+            req,
             prompt,
             params,
             stop,
@@ -918,6 +1010,18 @@ impl EngineHandle {
     /// bytes, entries).
     pub fn prefix_stats(&self) -> PrefixReport {
         self.prefix.stats()
+    }
+
+    /// The engine's observability hub (metrics registry + trace rings)
+    /// — what the HTTP edge serves `/metrics` and `/v1/trace` from.
+    pub fn obs(&self) -> &Arc<EngineObs> {
+        &self.obs
+    }
+
+    /// Merged live snapshot of a request-latency histogram by registry
+    /// name — the `/v1/stats` percentile source while the engine runs.
+    pub fn histogram_snapshot(&self, name: &str) -> HistSnapshot {
+        self.obs.registry.histogram_snapshot(name)
     }
 }
 
@@ -997,6 +1101,11 @@ impl DecodeEngine {
         // only LM engines arm it (a bare-mixer template would smuggle
         // one session's per-session dictionary seeds into another)
         let prefix = Arc::new(PrefixCache::new(cfg.prefix_cache && cfg.lm.is_some()));
+        let obs = Arc::new(EngineObs::new(cfg.threads));
+        // report structs that already own atomics join the registry as
+        // render-time views instead of duplicating their storage
+        tier.register_metrics(&obs.registry);
+        prefix.register_metrics(&obs.registry);
         for shard in 0..cfg.threads {
             let (tx, rx) = mpsc::sync_channel::<EngineMsg>(cfg.queue_depth);
             let gauge = Arc::new(AtomicUsize::new(0));
@@ -1025,6 +1134,13 @@ impl DecodeEngine {
             let worker_pool = Arc::clone(&pool);
             let worker_tier = Arc::clone(&tier);
             let worker_prefix = Arc::clone(&prefix);
+            let worker_obs = Arc::clone(&obs);
+            let view_gauge = Arc::clone(&gauge);
+            obs.registry.gauge_fn(
+                "ovq_queue_depth",
+                &[("shard", &format!("{shard}"))],
+                move || view_gauge.load(Ordering::SeqCst) as f64,
+            );
             handles.push(thread::spawn(move || {
                 shard_worker(
                     wcfg,
@@ -1037,6 +1153,7 @@ impl DecodeEngine {
                     worker_pool,
                     worker_tier,
                     worker_prefix,
+                    worker_obs,
                 )
             }));
             txs.push(tx);
@@ -1054,6 +1171,7 @@ impl DecodeEngine {
             lm_vocab: cfg.lm.as_ref().map(|l| l.vocab),
             tier,
             prefix,
+            obs,
         };
         DecodeEngine { cfg, handle, handles, out_rx, gen_rx, t0: Instant::now() }
     }
@@ -1161,9 +1279,11 @@ impl DecodeEngine {
     /// [`EngineHandle`]'s shutdown contract).
     pub fn finish(self) -> EngineReport {
         let DecodeEngine { cfg, handle, handles, out_rx, gen_rx, t0 } = self;
-        // keep the cache stats alive past the handle drop; read them only
-        // after the joins below so every worker's counts are final
+        // keep the cache stats and registry alive past the handle drop;
+        // read them only after the joins below so every worker's counts
+        // are final
         let prefix_cache = Arc::clone(&handle.prefix);
+        let obs = Arc::clone(&handle.obs);
         drop(handle); // workers exit when their queues drain and all handles drop
         let mut shards = Vec::with_capacity(handles.len());
         let mut sessions: Vec<(u64, StreamStats)> = Vec::new();
@@ -1192,6 +1312,9 @@ impl DecodeEngine {
             outputs,
             generations,
             prefix,
+            latency_hist: obs.latency.snapshot(),
+            ttft_hist: obs.ttft.snapshot(),
+            completion_hist: obs.completion.snapshot(),
         }
     }
 }
@@ -1260,6 +1383,12 @@ struct FanState {
 /// lives inside the session's [`LmModel`] snapshot.
 struct GenJob {
     session: u64,
+    /// request id carried into trace spans and the `timing` echo
+    req: u64,
+    /// submit→dispatch wall time, nanoseconds (the `timing` queue share)
+    queue_ns: f64,
+    /// busy time ingesting the prompt (incl. a prefix-fork restore), ns
+    prefill_ns: f64,
     prompt: Vec<TokenId>,
     /// prompt tokens ingested so far
     done: usize,
@@ -1364,9 +1493,35 @@ struct WorkerState {
     prefix_forks: usize,
     /// prompt tokens skipped by those forks
     prefix_fork_tokens: usize,
+    /// engine-wide metrics registry + trace rings (histogram recording
+    /// is always on; span capture is gated on [`obs::trace_enabled`])
+    obs: Arc<EngineObs>,
 }
 
 impl WorkerState {
+    /// Record a stage span ending *now* with duration `dur_us` into this
+    /// shard's trace ring. One relaxed load when tracing is off; paths
+    /// without a real request id (raw chunk/prompt submits) pass the
+    /// session id as `req`.
+    fn span(&self, stage: Stage, req: u64, session: u64, dur_us: f64) {
+        if !obs::trace_enabled() {
+            return;
+        }
+        let dur = dur_us as u64;
+        let now = self.obs.trace.now_us();
+        self.obs.trace.push(
+            self.cfg.shard,
+            Span {
+                req,
+                session,
+                stage,
+                shard: self.cfg.shard as u32,
+                start_us: now.saturating_sub(dur),
+                dur_us: dur,
+            },
+        );
+    }
+
     /// Would processing a message for `session` now break per-session
     /// (or flush) ordering?
     fn session_blocked(&self, session: u64) -> bool {
@@ -1398,6 +1553,12 @@ impl WorkerState {
                 self.process_decode(session, chunk, submitted)
             }
             EngineMsg::Prefill { session, chunk, submitted } => {
+                self.span(
+                    Stage::Queue,
+                    session,
+                    session,
+                    submitted.elapsed().as_nanos() as f64 / 1e3,
+                );
                 let total = chunk.keys.len() / self.cfg.hd;
                 let out = self.out_tx.is_some().then(|| Vec::with_capacity(chunk.values.len()));
                 // fan out only when the prompt spans at least two quanta —
@@ -1426,6 +1587,7 @@ impl WorkerState {
             }
             EngineMsg::Generate {
                 session,
+                req,
                 prompt,
                 prefix_len,
                 prefix_key,
@@ -1434,6 +1596,8 @@ impl WorkerState {
                 submitted,
                 stream,
             } => {
+                let queue_ns = submitted.elapsed().as_nanos() as f64;
+                self.span(Stage::Queue, req, session, queue_ns / 1e3);
                 // the sampling-RNG seed mixes engine seed, request seed
                 // and session id — never the shard or thread count, so
                 // generation is bit-identical across engine shapes. The
@@ -1443,6 +1607,9 @@ impl WorkerState {
                     session_seed(self.cfg.seed ^ params.seed.rotate_left(17), session, 1 << 20);
                 self.jobs.push_back(Job::Generate(GenJob {
                     session,
+                    req,
+                    queue_ns,
+                    prefill_ns: 0.0,
                     prompt,
                     done: 0,
                     prefix_len,
@@ -1468,7 +1635,8 @@ impl WorkerState {
     fn process_decode(&mut self, session: u64, chunk: DecodeChunk, submitted: Instant) {
         let t0 = Instant::now();
         let processed = self.bank.process(session, &chunk);
-        self.busy += t0.elapsed();
+        let el = t0.elapsed();
+        self.busy += el;
         self.gauge.fetch_sub(1, Ordering::SeqCst);
         let (out, seq) = match processed {
             Ok(r) => r,
@@ -1482,10 +1650,18 @@ impl WorkerState {
                 return;
             }
         };
-        ring_push(&mut self.latency_ns, self.latency_i, submitted.elapsed().as_nanos() as f64);
+        let lat = submitted.elapsed().as_nanos() as f64;
+        ring_push(&mut self.latency_ns, self.latency_i, lat);
         self.latency_i += 1;
+        let toks = chunk.keys.len() / self.cfg.hd;
+        // the decode hot path's entire obs cost: one histogram record
+        // (binary search + 3 relaxed adds), one counter add, and — only
+        // at trace level — a span push into the shard-local ring
+        self.obs.latency.record(lat);
+        self.obs.tokens.add(toks as u64);
+        self.span(Stage::Decode, session, session, el.as_nanos() as f64 / 1e3);
         self.chunks += 1;
-        self.tokens += chunk.keys.len() / self.cfg.hd;
+        self.tokens += toks;
         if let Some(tx) = &self.out_tx {
             let _ = tx.send(EngineOut { session, seq, out });
         }
@@ -1529,6 +1705,7 @@ impl WorkerState {
         self.busy += el;
         self.prefill_busy += el;
         job.busy_ns += el.as_nanos() as f64;
+        self.span(Stage::Prefill, job.session, job.session, el.as_nanos() as f64 / 1e3);
         let failed = match res {
             Ok(out) => {
                 if let Some(acc) = &mut job.out {
@@ -1553,6 +1730,8 @@ impl WorkerState {
                 let ttft = job.submitted.elapsed().as_nanos() as f64;
                 ring_push(&mut self.ttft_ns, self.ttft_i, ttft);
                 self.ttft_i += 1;
+                self.obs.ttft.record(ttft);
+                self.obs.tokens.add(job.total as u64);
                 self.prefill_chunks += 1;
                 self.prefill_tokens += job.total;
                 self.tokens += job.total;
@@ -1612,6 +1791,7 @@ impl WorkerState {
         self.busy += el;
         self.prefill_busy += el;
         job.busy_ns += el.as_nanos() as f64;
+        self.span(Stage::Prefill, job.session, job.session, el.as_nanos() as f64 / 1e3);
         match res {
             Ok(()) => job.done += take,
             Err(e) => {
@@ -1658,6 +1838,8 @@ impl WorkerState {
         let ttft = job.submitted.elapsed().as_nanos() as f64;
         ring_push(&mut self.ttft_ns, self.ttft_i, ttft);
         self.ttft_i += 1;
+        self.obs.ttft.record(ttft);
+        self.obs.tokens.add(job.total as u64);
         self.prefill_chunks += 1;
         self.prefill_tokens += job.total;
         self.tokens += job.total;
@@ -1676,9 +1858,13 @@ impl WorkerState {
     /// core); the owner additionally folds the reported nanoseconds into
     /// the prompt's own telemetry.
     fn help_segment(&mut self, task: SegmentTask) {
+        let fan_job = task.job;
         let el = run_segment(task, &mut self.helper_scratch, &mut self.helper_panel);
         self.busy += el;
         self.prefill_busy += el;
+        // fan-out segments carry the owner's job id, not a request id;
+        // the span still shows which shard ran the segment and when
+        self.span(Stage::Segment, fan_job, fan_job, el.as_nanos() as f64 / 1e3);
     }
 
     /// One scheduling round of a generation request: a prompt quantum
@@ -1710,6 +1896,8 @@ impl WorkerState {
             self.busy += el;
             self.prefill_busy += el;
             job.busy_ns += el.as_nanos() as f64;
+            job.prefill_ns += el.as_nanos() as f64;
+            self.span(Stage::Prefill, job.req, job.session, el.as_nanos() as f64 / 1e3);
             if let Err(e) = res {
                 let stream = job.stream.take();
                 self.drop_generate(job.session, stream, &e);
@@ -1783,14 +1971,17 @@ impl WorkerState {
         self.busy += el;
         self.gen_busy += el;
         job.busy_ns += el.as_nanos() as f64;
+        self.span(Stage::Sample, job.req, job.session, el.as_nanos() as f64 / 1e3);
         if let Err(e) = res {
             let stream = job.stream.take();
             self.drop_generate(job.session, stream, &e);
             return;
         }
         if first_round && !job.out.is_empty() {
-            ring_push(&mut self.ttft_ns, self.ttft_i, job.submitted.elapsed().as_nanos() as f64);
+            let ttft = job.submitted.elapsed().as_nanos() as f64;
+            ring_push(&mut self.ttft_ns, self.ttft_i, ttft);
             self.ttft_i += 1;
+            self.obs.ttft.record(ttft);
         }
         if finished {
             self.gauge.fetch_sub(1, Ordering::SeqCst);
@@ -1801,12 +1992,26 @@ impl WorkerState {
             let done_ns = job.submitted.elapsed().as_nanos() as f64;
             ring_push(&mut self.completion_ns, self.completion_i, done_ns);
             self.completion_i += 1;
+            self.obs.completion.record(done_ns);
+            self.obs.completions.inc();
+            self.obs.tokens.add((job.prompt.len() + job.out.len()) as u64);
+            // wall-clock split echoed on the completion: queue until
+            // dispatch, busy prefill, busy decode/sampling, total. Busy
+            // shares are measured on this thread and disjoint from the
+            // queue wait, so (floored to integer µs) the parts never
+            // exceed the total.
+            let timing = Timing {
+                queue_us: (job.queue_ns / 1e3) as u64,
+                prefill_us: (job.prefill_ns / 1e3) as u64,
+                decode_us: ((job.busy_ns - job.prefill_ns).max(0.0) / 1e3) as u64,
+                total_us: (done_ns / 1e3) as u64,
+            };
             let seq = self.bank.record_generate(job.session, job.prompt.len(), job.out.len());
             // drop the sampler core so the session's state bytes and any
             // later eviction blob shrink back to mixer state
             let _ = self.bank.with_lm(job.session, |lm, _| lm.end_gen());
             if let Some(tx) = job.stream.take() {
-                let _ = tx.send(GenEvent::Done { seq, tokens: job.out.clone() });
+                let _ = tx.send(GenEvent::Done { seq, tokens: job.out.clone(), timing });
             }
             let _ = self.gen_tx.send(GenOut { session: job.session, seq, tokens: job.out });
             self.redispatch();
@@ -1840,21 +2045,31 @@ impl WorkerState {
             return;
         }
         match self.prefix.lookup(job.prefix_key) {
-            Some(blob) => match self.bank.admit_from_blob(job.session, &blob) {
-                Ok(()) => {
-                    job.done = job.prefix_len;
-                    self.prefix_forks += 1;
-                    self.prefix_fork_tokens += job.prefix_len;
+            Some(blob) => {
+                let t0 = Instant::now();
+                match self.bank.admit_from_blob(job.session, &blob) {
+                    Ok(()) => {
+                        // the restore is the fork's prefill cost: charge it
+                        // to the job's timing split (the shard-level busy
+                        // accounting is unchanged) and span it
+                        let ns = t0.elapsed().as_nanos() as f64;
+                        job.busy_ns += ns;
+                        job.prefill_ns += ns;
+                        self.span(Stage::PrefixFork, job.req, job.session, ns / 1e3);
+                        job.done = job.prefix_len;
+                        self.prefix_forks += 1;
+                        self.prefix_fork_tokens += job.prefix_len;
+                    }
+                    Err(e) => {
+                        // fail open: ingest the whole prompt locally
+                        eprintln!(
+                            "shard {}: prefix fork failed for session {}: {e}",
+                            self.cfg.shard, job.session
+                        );
+                        job.prefix_len = 0;
+                    }
                 }
-                Err(e) => {
-                    // fail open: ingest the whole prompt locally
-                    eprintln!(
-                        "shard {}: prefix fork failed for session {}: {e}",
-                        self.cfg.shard, job.session
-                    );
-                    job.prefix_len = 0;
-                }
-            },
+            }
             None => job.prefix_build = true,
         }
     }
@@ -1897,6 +2112,7 @@ fn shard_worker(
     pool: Arc<PrefillPool>,
     tier: Arc<TierStats>,
     prefix: Arc<PrefixCache>,
+    obs: Arc<EngineObs>,
 ) -> (ShardReport, Vec<(u64, StreamStats)>) {
     let mut bank = ShardBank::new(cfg.heads, cfg.max_resident, factory);
     bank.set_prefill_mode(cfg.prefill_mode);
@@ -1938,6 +2154,7 @@ fn shard_worker(
         prefix,
         prefix_forks: 0,
         prefix_fork_tokens: 0,
+        obs,
     };
     let mut open = true;
     loop {
@@ -2426,9 +2643,15 @@ mod tests {
             })
             .collect();
         match done {
-            GenEvent::Done { seq, tokens } => {
+            GenEvent::Done { seq, tokens, timing } => {
                 assert_eq!(*seq, 1);
                 assert_eq!(tokens, &streamed, "Done must replay the Token events");
+                // the timing split is wall-clock/busy measured on one
+                // thread: parts (floored to µs) can never exceed total
+                assert!(
+                    timing.queue_us + timing.prefill_us + timing.decode_us <= timing.total_us,
+                    "timing parts {timing:?} exceed the total"
+                );
             }
             other => panic!("expected Done, got {other:?}"),
         }
@@ -2436,6 +2659,48 @@ mod tests {
             r.generations.iter().find(|g| g.session == 5).expect("GenOut still emitted");
         assert_eq!(gen_out.tokens, streamed, "stream and completion channel must agree");
         assert_eq!(r.completions(), 2);
+    }
+
+    #[test]
+    fn trace_spans_cover_the_generate_pipeline_and_reports_read_histograms() {
+        let _guard = crate::util::obs::test_level_lock();
+        let prev = obs::level();
+        obs::set_level(obs::ObsLevel::Trace);
+        let lm = LmConfig::new(24, StackConfig::uniform(1, 8, 16, 2, 4, 8, MixerKind::Gdn));
+        let engine = DecodeEngine::start(EngineConfig::for_lm(lm));
+        let hub = Arc::clone(engine.handle().obs());
+        engine.submit_generate(
+            3,
+            vec![1, 2, 3],
+            SamplingParams::greedy(),
+            StopCriteria::max_new(6),
+        );
+        let r = engine.finish();
+        obs::set_level(prev);
+        assert_eq!(r.completions(), 1);
+        // the report percentiles are views over the registry histograms
+        assert_eq!(r.completion_hist.count, 1);
+        assert!(r.ttft_hist.count >= 1);
+        assert!(r.completion_us(50.0) > 0.0);
+        assert!(r.completion_us(99.0) >= r.completion_us(50.0));
+        // every pipeline stage of the request left a span, all carrying
+        // the request id minted at submit, ordered by start time
+        let spans = hub.trace().dump(usize::MAX);
+        let stages: Vec<&str> = spans.iter().map(|s| s.stage.as_str()).collect();
+        for want in ["queue", "prefill", "sample"] {
+            assert!(stages.contains(&want), "missing {want} span in {stages:?}");
+        }
+        let req = spans.iter().find(|s| s.stage == Stage::Queue).expect("queue span").req;
+        assert!(req > 0);
+        assert!(spans.iter().filter(|s| s.session == 3).all(|s| s.req == req));
+        for w in spans.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us);
+        }
+        // the registry renders all of it as Prometheus text
+        let text = hub.registry().render_prometheus();
+        assert!(text.contains("# TYPE ovq_completion_ns histogram"));
+        assert!(text.contains("ovq_completions_total 1"));
+        assert!(text.contains("ovq_queue_depth{shard=\"0\"} 0"));
     }
 
     #[test]

@@ -11,7 +11,19 @@
 //!   engine emits it on the request's [`GenEvent`] channel;
 //! - `GET /v1/health` — liveness;
 //! - `GET /v1/stats` — edge counters, live engine queue gauges, and the
-//!   memory-tier counters (disk spills/restores, prefix-cache hit rate).
+//!   memory-tier counters (disk spills/restores, prefix-cache hit rate);
+//! - `GET /metrics` — the engine's metrics registry in Prometheus text
+//!   exposition format (counters, gauges, latency histograms);
+//! - `GET /v1/trace` — the last N trace spans (`?n=` caps them) from the
+//!   per-shard span rings, populated at `--obs trace`.
+//!
+//! Every response carries an `x-request-id` header: a client-supplied id
+//! is echoed verbatim (and FNV-hashed to the u64 the trace spans carry);
+//! otherwise the edge mints one and echoes it in hex. The same id flows
+//! through admission → shard queue → prefill → decode → sampling spans,
+//! and the completion response carries a `timing` object (queue /
+//! prefill / decode / total microseconds) sourced from the engine's
+//! per-request accounting.
 //!
 //! Production concerns are the point of this module:
 //!
@@ -58,6 +70,7 @@ use crate::ovqcore::quant::QuantMode;
 use crate::ovqcore::stack::StackConfig;
 use crate::util::cli::Args;
 use crate::util::json::{parse as json_parse, Json};
+use crate::util::obs::{self, ObsLevel, Span, Stage};
 
 /// Edge configuration (`serve-http` flags map 1:1; README has the
 /// consolidated table).
@@ -210,6 +223,44 @@ impl Request {
     }
 }
 
+/// The per-request trace identity: the u64 the spans carry plus the
+/// exact string echoed back as `x-request-id` on every response.
+struct ReqId {
+    num: u64,
+    text: String,
+}
+
+impl ReqId {
+    /// Honor a client-supplied `x-request-id` (echoed verbatim, hashed
+    /// via [`obs::hash_request_id`] for span correlation); otherwise
+    /// mint a fresh id and echo its hex form.
+    fn derive(req: &Request) -> ReqId {
+        match req.header("x-request-id") {
+            Some(h) if !h.is_empty() => {
+                ReqId { num: obs::hash_request_id(h), text: h.to_string() }
+            }
+            _ => {
+                let n = obs::next_request_id();
+                ReqId { num: n, text: format!("{n:x}") }
+            }
+        }
+    }
+}
+
+/// The `x-request-id` echo, in the shape `write_response` extras take.
+fn rid_header(rid: &ReqId) -> [(&'static str, String); 1] {
+    [("x-request-id", rid.text.clone())]
+}
+
+/// `key`'s value in the request path's query string, if any.
+fn query_param<'a>(path: &'a str, key: &str) -> Option<&'a str> {
+    let q = path.split_once('?')?.1;
+    q.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
 fn find_seq(hay: &[u8], needle: &[u8]) -> Option<usize> {
     if needle.len() > hay.len() {
         return None;
@@ -304,8 +355,21 @@ fn write_response(
     extra: &[(&str, String)],
     body: &[u8],
 ) -> std::io::Result<()> {
+    write_response_typed(w, status, reason, "application/json", extra, body)
+}
+
+/// [`write_response`] with an explicit content type — `GET /metrics`
+/// serves Prometheus text, everything else JSON.
+fn write_response_typed(
+    w: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    ctype: &str,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
     let mut head = format!("HTTP/1.1 {status} {reason}\r\n");
-    head.push_str("content-type: application/json\r\n");
+    head.push_str(&format!("content-type: {ctype}\r\n"));
     head.push_str(&format!("content-length: {}\r\n", body.len()));
     for (k, v) in extra {
         head.push_str(&format!("{k}: {v}\r\n"));
@@ -315,8 +379,11 @@ fn write_response(
     w.write_all(body)
 }
 
-fn write_error(w: &mut TcpStream, e: &ApiError) -> std::io::Result<()> {
+fn write_error(w: &mut TcpStream, e: &ApiError, rid: Option<&ReqId>) -> std::io::Result<()> {
     let mut extra: Vec<(&str, String)> = Vec::new();
+    if let Some(r) = rid {
+        extra.push(("x-request-id", r.text.clone()));
+    }
     if let Some(s) = e.retry_after() {
         extra.push(("retry-after", s.to_string()));
     }
@@ -326,11 +393,13 @@ fn write_error(w: &mut TcpStream, e: &ApiError) -> std::io::Result<()> {
     write_response(w, e.status(), e.reason(), &extra, e.body().to_string().as_bytes())
 }
 
-fn write_sse_head(w: &mut TcpStream) -> std::io::Result<()> {
-    w.write_all(
-        b"HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-store\r\n\
-          transfer-encoding: chunked\r\nconnection: close\r\n\r\n",
-    )
+fn write_sse_head(w: &mut TcpStream, rid: &ReqId) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-store\r\n\
+         x-request-id: {}\r\ntransfer-encoding: chunked\r\nconnection: close\r\n\r\n",
+        rid.text,
+    );
+    w.write_all(head.as_bytes())
 }
 
 fn write_chunk(w: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
@@ -388,16 +457,20 @@ fn handle_conn(edge: &Arc<Edge>, mut stream: TcpStream) {
     let req = match read_request(&mut stream, edge.cfg.max_body) {
         Ok(r) => r,
         Err(e) => {
+            // framing failed before headers parsed — no request id yet
             edge.stats.client_errors.fetch_add(1, Ordering::Relaxed);
-            let _ = write_error(&mut stream, &e);
+            let _ = write_error(&mut stream, &e, None);
             return;
         }
     };
     edge.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let rid = ReqId::derive(&req);
     let result = match route(&req.method, &req.path) {
-        Ok(Route::Health) => handle_health(edge, &mut stream),
-        Ok(Route::Stats) => handle_stats(edge, &mut stream),
-        Ok(Route::Completions) => handle_completion(edge, &req, &mut stream),
+        Ok(Route::Health) => handle_health(edge, &rid, &mut stream),
+        Ok(Route::Stats) => handle_stats(edge, &rid, &mut stream),
+        Ok(Route::Metrics) => handle_metrics(edge, &rid, &mut stream),
+        Ok(Route::Trace) => handle_trace(edge, &req, &rid, &mut stream),
+        Ok(Route::Completions) => handle_completion(edge, &req, &rid, &mut stream),
         Err(e) => Err(e),
     };
     if let Err(e) = result {
@@ -410,22 +483,76 @@ fn handle_conn(edge: &Arc<Edge>, mut stream: TcpStream) {
                 edge.stats.client_errors.fetch_add(1, Ordering::Relaxed);
             }
         }
-        let _ = write_error(&mut stream, &e);
+        let _ = write_error(&mut stream, &e, Some(&rid));
     }
 }
 
-fn handle_health(edge: &Arc<Edge>, w: &mut TcpStream) -> std::result::Result<(), ApiError> {
+fn handle_health(
+    edge: &Arc<Edge>,
+    rid: &ReqId,
+    w: &mut TcpStream,
+) -> std::result::Result<(), ApiError> {
     let body = Json::obj([
         ("status", Json::Str("ok".to_string())),
         ("threads", Json::Num(edge.handle.threads() as f64)),
         ("vocab", Json::Num(edge.lim.vocab as f64)),
         ("uptime_s", Json::Num(edge.t0.elapsed().as_secs_f64())),
     ]);
-    let _ = write_response(w, 200, "OK", &[], body.to_string().as_bytes());
+    let _ = write_response(w, 200, "OK", &rid_header(rid), body.to_string().as_bytes());
     Ok(())
 }
 
-fn handle_stats(edge: &Arc<Edge>, w: &mut TcpStream) -> std::result::Result<(), ApiError> {
+/// `GET /metrics` — every counter, gauge, and histogram in the engine's
+/// registry (edge counters included, registered at server start) in
+/// Prometheus text exposition format 0.0.4.
+fn handle_metrics(
+    edge: &Arc<Edge>,
+    rid: &ReqId,
+    w: &mut TcpStream,
+) -> std::result::Result<(), ApiError> {
+    let text = edge.handle.obs().registry().render_prometheus();
+    let _ = write_response_typed(
+        w,
+        200,
+        "OK",
+        "text/plain; version=0.0.4",
+        &rid_header(rid),
+        text.as_bytes(),
+    );
+    Ok(())
+}
+
+/// `GET /v1/trace[?n=N]` — the last N spans (default 256) merged across
+/// the per-shard rings, start-time ordered. Empty below `--obs trace`.
+fn handle_trace(
+    edge: &Arc<Edge>,
+    req: &Request,
+    rid: &ReqId,
+    w: &mut TcpStream,
+) -> std::result::Result<(), ApiError> {
+    let n = match query_param(&req.path, "n") {
+        None => 256,
+        Some(v) => v.parse::<usize>().map_err(|_| ApiError::InvalidParam {
+            field: "n",
+            reason: format!("'{v}' is not a non-negative integer"),
+        })?,
+    };
+    let spans = edge.handle.obs().trace().dump(n);
+    let body = Json::obj([
+        ("object", Json::Str("ovq.trace".to_string())),
+        ("level", Json::Str(obs::level().as_str().to_string())),
+        ("n", Json::Num(spans.len() as f64)),
+        ("spans", Json::Arr(spans.iter().map(Span::to_json).collect())),
+    ]);
+    let _ = write_response(w, 200, "OK", &rid_header(rid), body.to_string().as_bytes());
+    Ok(())
+}
+
+fn handle_stats(
+    edge: &Arc<Edge>,
+    rid: &ReqId,
+    w: &mut TcpStream,
+) -> std::result::Result<(), ApiError> {
     let s = &edge.stats;
     let n = |a: &AtomicUsize| Json::Num(a.load(Ordering::Relaxed) as f64);
     let mut queues = Vec::new();
@@ -473,19 +600,22 @@ fn handle_stats(edge: &Arc<Edge>, w: &mut TcpStream) -> std::result::Result<(), 
             ])
         }),
     ]);
-    let _ = write_response(w, 200, "OK", &[], body.to_string().as_bytes());
+    let _ = write_response(w, 200, "OK", &rid_header(rid), body.to_string().as_bytes());
     Ok(())
 }
 
 /// The completions path: validate → admit (tenant bucket, inflight cap,
 /// engine queue) → submit with a per-request [`GenEvent`] channel →
 /// deliver blocking JSON or SSE. Every refusal happens before the
-/// engine sees the request.
+/// engine sees the request. At `--obs trace` the validate-and-admit
+/// interval is recorded as an `admission` span under the request's id.
 fn handle_completion(
     edge: &Arc<Edge>,
     req: &Request,
+    rid: &ReqId,
     w: &mut TcpStream,
 ) -> std::result::Result<(), ApiError> {
+    let t_adm = Instant::now();
     let text = std::str::from_utf8(&req.body)
         .map_err(|_| ApiError::BadJson("body is not UTF-8".to_string()))?;
     let body = json_parse(text).map_err(ApiError::BadJson)?;
@@ -508,9 +638,27 @@ fn handle_completion(
         Some(s) => s,
         None => edge.next_session.fetch_add(1, Ordering::Relaxed),
     };
+    if obs::trace_enabled() {
+        // edge-side spans land in ring 0 — the edge has no shard of its own
+        let tr = edge.handle.obs().trace();
+        let dur_us = t_adm.elapsed().as_micros() as u64;
+        let now = tr.now_us();
+        tr.push(
+            0,
+            Span {
+                req: rid.num,
+                session,
+                stage: Stage::Admission,
+                shard: 0,
+                start_us: now.saturating_sub(dur_us),
+                dur_us,
+            },
+        );
+    }
     let (tx, rx) = mpsc::channel();
     edge.handle
-        .try_submit_generate_prefixed(
+        .try_submit_generate_traced(
+            rid.num,
             session,
             creq.prompt,
             creq.prefix_len,
@@ -525,15 +673,16 @@ fn handle_completion(
         })?;
 
     if creq.stream {
-        stream_completion(edge, w, session, &creq.stop, rx)
+        stream_completion(edge, w, rid, session, &creq.stop, rx)
     } else {
-        blocking_completion(edge, w, session, &creq.stop, rx)
+        blocking_completion(edge, w, rid, session, &creq.stop, rx)
     }
 }
 
 fn blocking_completion(
     edge: &Arc<Edge>,
     w: &mut TcpStream,
+    rid: &ReqId,
     session: u64,
     stop: &StopCriteria,
     rx: mpsc::Receiver<GenEvent>,
@@ -541,11 +690,21 @@ fn blocking_completion(
     loop {
         match rx.recv() {
             Ok(GenEvent::Token(_)) => continue,
-            Ok(GenEvent::Done { seq, tokens }) => {
+            Ok(GenEvent::Done { seq, tokens, timing }) => {
                 edge.stats.completions.fetch_add(1, Ordering::Relaxed);
                 edge.stats.tokens_out.fetch_add(tokens.len(), Ordering::Relaxed);
-                let body = completion_json(session, seq, &tokens, stop);
-                let _ = write_response(w, 200, "OK", &[], body.to_string().as_bytes());
+                let mut body = completion_json(session, seq, &tokens, stop);
+                if let Json::Obj(m) = &mut body {
+                    m.insert("timing".to_string(), timing.to_json());
+                }
+                crate::debug_req!(
+                    &rid.text,
+                    "completion session={session} tokens={} total_us={}",
+                    tokens.len(),
+                    timing.total_us,
+                );
+                let _ =
+                    write_response(w, 200, "OK", &rid_header(rid), body.to_string().as_bytes());
                 return Ok(());
             }
             Ok(GenEvent::Failed(m)) => return Err(ApiError::Internal(m)),
@@ -565,11 +724,12 @@ fn blocking_completion(
 fn stream_completion(
     edge: &Arc<Edge>,
     w: &mut TcpStream,
+    rid: &ReqId,
     session: u64,
     stop: &StopCriteria,
     rx: mpsc::Receiver<GenEvent>,
 ) -> std::result::Result<(), ApiError> {
-    if write_sse_head(w).is_err() {
+    if write_sse_head(w, rid).is_err() {
         return Ok(()); // client gone before the head — nothing to deliver
     }
     let mut index = 0usize;
@@ -586,13 +746,14 @@ fn stream_completion(
                 }
                 continue;
             }
-            Ok(GenEvent::Done { seq, tokens }) => {
+            Ok(GenEvent::Done { seq, tokens, timing }) => {
                 edge.stats.completions.fetch_add(1, Ordering::Relaxed);
                 edge.stats.streamed.fetch_add(1, Ordering::Relaxed);
                 edge.stats.tokens_out.fetch_add(tokens.len(), Ordering::Relaxed);
                 let mut done = completion_json(session, seq, &tokens, stop);
                 if let Json::Obj(m) = &mut done {
                     m.insert("done".to_string(), Json::Bool(true));
+                    m.insert("timing".to_string(), timing.to_json());
                 }
                 done
             }
@@ -609,6 +770,44 @@ fn stream_completion(
         let _ = write_sse_event(w, "[DONE]");
         let _ = finish_chunks(w);
         return Ok(());
+    }
+}
+
+/// Join the edge counters to the engine's metrics registry as render-time
+/// views over the [`EdgeStats`] atomics — `GET /metrics` then exposes
+/// them without a second store, and `GET /v1/stats` keeps its JSON shape
+/// over the very same values. Idempotent by metric name, so restarting
+/// the edge over a live engine re-points the views at the new stats.
+///
+/// The closures hold a `Weak<Edge>`: the registry lives inside the
+/// engine's `EngineObs`, which the shard workers reference, so a strong
+/// `Arc<Edge>` here would cycle back through the edge's `EngineHandle`
+/// (and its queue senders) and keep the workers from ever seeing
+/// disconnect — `finish()` would join forever. A stopped edge's gauges
+/// render 0 instead.
+fn register_edge_metrics(edge: &Arc<Edge>) {
+    let views: &[(&str, fn(&EdgeStats) -> usize)] = &[
+        ("ovq_http_requests_total", |s| s.requests.load(Ordering::Relaxed)),
+        ("ovq_http_completions_total", |s| s.completions.load(Ordering::Relaxed)),
+        ("ovq_http_streamed_total", |s| s.streamed.load(Ordering::Relaxed)),
+        ("ovq_http_tokens_out_total", |s| s.tokens_out.load(Ordering::Relaxed)),
+        ("ovq_http_shed_rate_limited_total", |s| {
+            s.shed_rate_limited.load(Ordering::Relaxed)
+        }),
+        ("ovq_http_shed_overloaded_total", |s| s.shed_overloaded.load(Ordering::Relaxed)),
+        ("ovq_http_shed_backpressure_total", |s| {
+            s.shed_backpressure.load(Ordering::Relaxed)
+        }),
+        ("ovq_http_client_errors_total", |s| s.client_errors.load(Ordering::Relaxed)),
+        ("ovq_http_failed_total", |s| s.failed.load(Ordering::Relaxed)),
+        ("ovq_http_inflight", |s| s.inflight.load(Ordering::Relaxed)),
+    ];
+    let reg = Arc::clone(edge.handle.obs().registry());
+    for &(name, read) in views {
+        let me = Arc::downgrade(edge);
+        reg.gauge_fn(name, &[], move || {
+            me.upgrade().map_or(0.0, |e| read(&e.stats) as f64)
+        });
     }
 }
 
@@ -650,6 +849,7 @@ impl HttpServer {
             next_session: AtomicU64::new(1 << 48),
             t0: Instant::now(),
         });
+        register_edge_metrics(&edge);
         let shutdown = Arc::new(AtomicBool::new(false));
         let accept = {
             let (edge, shutdown) = (Arc::clone(&edge), Arc::clone(&shutdown));
@@ -875,9 +1075,14 @@ pub fn completion_body_prefixed(
 ///                 [--max-resident R] [--prefill-quantum Q]
 ///                 [--gen-quantum G] [--seed S]
 ///                 [--spill-dir DIR] [--ram-blob-budget B]
-///                 [--no-prefix-cache]
+///                 [--no-prefix-cache] [--obs off|metrics|trace]
 ///                 [--replay N [--over-http] [--stream] [--sessions S]
 ///                  [--data-seed D] [--prefix-tokens P]]`
+///
+/// `--obs` sets the process observability level (default `metrics`):
+/// `trace` additionally captures per-stage spans for `GET /v1/trace`,
+/// `off` silences the request-id log field and span capture. Metrics
+/// recording itself is always on — it backs the end-of-run reports.
 ///
 /// Start the HTTP edge over a seeded LM engine (same model surface as
 /// `generate`). With `--replay N` it instead generates an N-event
@@ -887,6 +1092,9 @@ pub fn completion_body_prefixed(
 /// edge stats and the engine report, and exits; without it the server
 /// runs until killed. README has the walkthrough.
 pub fn cmd_serve_http(args: &Args) -> Result<()> {
+    crate::util::log::init();
+    let level = ObsLevel::parse(&args.opt_or("obs", "metrics")).map_err(anyhow::Error::msg)?;
+    obs::set_level(level);
     let vocab = args.opt_usize("vocab", 256)?;
     let layers = args.opt_usize("layers", 2)?;
     let heads = args.opt_usize("heads", 2)?;
@@ -933,9 +1141,11 @@ pub fn cmd_serve_http(args: &Args) -> Result<()> {
     let engine = DecodeEngine::start(ecfg);
     let server = HttpServer::start(hcfg, engine.handle())?;
     crate::info!(
-        "serving http://{}  (POST /v1/completions, GET /v1/health, GET /v1/stats; \
-         [{schedule}] x {layers} layers, vocab {vocab}, {} shard threads)",
+        "serving http://{}  (POST /v1/completions, GET /v1/health, GET /v1/stats, \
+         GET /metrics, GET /v1/trace; obs={}; [{schedule}] x {layers} layers, \
+         vocab {vocab}, {} shard threads)",
         server.addr(),
+        level.as_str(),
         engine.threads(),
     );
 
@@ -1077,6 +1287,65 @@ mod tests {
         assert_eq!(nf.status, 404);
         let nfj = nf.json().unwrap();
         assert_eq!(nfj.at(&["error", "code"]).unwrap().as_str(), Some("not_found"));
+
+        server.stop();
+        engine.finish();
+    }
+
+    #[test]
+    fn metrics_trace_and_request_id_serve_over_the_socket() {
+        let engine = tiny_lm_engine(2);
+        let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+        let addr = server.addr();
+
+        // a minted request id echoes as hex on every endpoint
+        let h = http_get(addr, "/v1/health").unwrap();
+        let minted = h.header("x-request-id").expect("health echoes a request id");
+        assert!(
+            !minted.is_empty() && minted.chars().all(|c| c.is_ascii_hexdigit()),
+            "minted id '{minted}' should be hex",
+        );
+
+        // a client-supplied id echoes verbatim, and the completion
+        // carries a timing object with consistent parts
+        let stop = StopCriteria::max_new(4);
+        let body = completion_body(Some(3), &[1, 2, 3], &SamplingParams::greedy(), &stop, false);
+        let r = http_post(
+            addr,
+            "/v1/completions",
+            &[("x-request-id", "req-abc-123")],
+            body.to_string().as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        assert_eq!(r.header("x-request-id"), Some("req-abc-123"));
+        let j = r.json().unwrap();
+        let total = j.at(&["timing", "total_us"]).unwrap().as_u64().unwrap();
+        let parts: u64 = ["queue_us", "prefill_us", "decode_us"]
+            .into_iter()
+            .map(|k| j.at(&["timing", k]).unwrap().as_u64().unwrap())
+            .sum();
+        assert!(parts <= total, "timing parts {parts} exceed total {total}");
+
+        // /metrics speaks Prometheus text and includes engine + edge rows
+        let m = http_get(addr, "/metrics").unwrap();
+        assert_eq!(m.status, 200);
+        assert!(
+            m.header("content-type").unwrap().starts_with("text/plain"),
+            "metrics content type",
+        );
+        let text = String::from_utf8_lossy(&m.body);
+        assert!(text.contains("# TYPE ovq_completion_ns histogram"), "{text}");
+        assert!(text.contains("ovq_http_completions_total 1"), "{text}");
+
+        // /v1/trace serves the span list (empty unless --obs trace —
+        // the level is process-global, so this test doesn't flip it)
+        let tr = http_get(addr, "/v1/trace?n=8").unwrap();
+        assert_eq!(tr.status, 200);
+        let tj = tr.json().unwrap();
+        assert!(tj.get("spans").unwrap().as_arr().is_some(), "spans is an array");
+        let bad = http_get(addr, "/v1/trace?n=zap").unwrap();
+        assert_eq!(bad.status, 400, "non-numeric ?n= is a clean 400");
 
         server.stop();
         engine.finish();

@@ -1,29 +1,36 @@
 //! Metrics logging: per-step CSV + simple aggregation helpers.
 
+use std::collections::BTreeSet;
+
 use anyhow::Result;
 
 use crate::util::csv::CsvWriter;
 
 pub struct MetricsLog {
     csv: CsvWriter,
-    keys: Vec<String>,
+    keys: BTreeSet<String>,
 }
 
 impl MetricsLog {
     pub fn create(path: &str) -> Result<MetricsLog> {
         let csv = CsvWriter::create(path, &["step", "key", "value"])?;
-        Ok(MetricsLog { csv, keys: Vec::new() })
+        Ok(MetricsLog { csv, keys: BTreeSet::new() })
     }
 
     pub fn record(&mut self, step: usize, kv: &[(&str, f64)]) -> Result<()> {
         for (k, v) in kv {
-            if !self.keys.iter().any(|x| x == k) {
-                self.keys.push(k.to_string());
+            if !self.keys.contains(*k) {
+                self.keys.insert(k.to_string());
             }
             self.csv
                 .row(&[step.to_string(), k.to_string(), format!("{v}")])?;
         }
         Ok(())
+    }
+
+    /// Distinct keys seen so far, in sorted order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.keys.iter().map(|s| s.as_str())
     }
 
     pub fn flush(&mut self) -> Result<()> {
@@ -64,5 +71,26 @@ mod tests {
         a.add(&[1.0, 0.0, 1.0], &[1.0, 1.0, 1.0]);
         a.add(&[0.0, 0.0], &[1.0, 0.0]);
         assert!((a.value() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_pins_the_csv_shape_and_dedups_keys() {
+        let dir = std::env::temp_dir().join(format!("ovq-metrics-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.csv");
+        let mut log = MetricsLog::create(path.to_str().unwrap()).unwrap();
+        log.record(0, &[("loss", 2.5), ("lr", 0.1)]).unwrap();
+        log.record(1, &[("loss", 2.0), ("lr", 0.1)]).unwrap();
+        log.flush().unwrap();
+        assert_eq!(log.keys().collect::<Vec<_>>(), ["loss", "lr"]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,key,value");
+        assert_eq!(lines[1], "0,loss,2.5");
+        assert_eq!(lines[2], "0,lr,0.1");
+        assert_eq!(lines[3], "1,loss,2");
+        assert_eq!(lines[4], "1,lr,0.1");
+        assert_eq!(lines.len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

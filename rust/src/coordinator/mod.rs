@@ -6,6 +6,10 @@
 //! that drives it, and the network edge: typed routing/validation in
 //! [`router`] under the [`http`] server (`serve-http`) with SSE token
 //! streaming, per-tenant admission control, and overload shedding.
+//! Observability threads through the whole stack: the engine records
+//! into a lock-free registry ([`crate::util::obs`]) that the edge serves
+//! as Prometheus text (`GET /metrics`), with per-request trace spans
+//! (`GET /v1/trace`) and `x-request-id` correlation at `--obs trace`.
 
 pub mod engine;
 pub mod evaluator;

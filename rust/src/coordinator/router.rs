@@ -23,13 +23,17 @@ use super::sampler::{SamplingParams, StopCriteria};
 use crate::ovqcore::lm::TokenId;
 use crate::util::json::Json;
 
-/// The three endpoints of the serving edge (API.md has the reference).
+/// The endpoints of the serving edge (API.md has the reference).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Route {
     /// `GET /v1/health` — liveness probe
     Health,
     /// `GET /v1/stats` — edge + engine telemetry as JSON
     Stats,
+    /// `GET /metrics` — the registry in Prometheus text exposition
+    Metrics,
+    /// `GET /v1/trace` — recent trace spans as JSON (`?n=` caps them)
+    Trace,
     /// `POST /v1/completions` — blocking or SSE-streamed generation
     Completions,
 }
@@ -47,6 +51,8 @@ pub fn route(method: &str, path: &str) -> Result<Route, ApiError> {
     match path {
         "/v1/health" => allow("GET", "GET", Route::Health),
         "/v1/stats" => allow("GET", "GET", Route::Stats),
+        "/metrics" => allow("GET", "GET", Route::Metrics),
+        "/v1/trace" => allow("GET", "GET", Route::Trace),
         "/v1/completions" => allow("POST", "POST", Route::Completions),
         _ => Err(ApiError::NotFound(path.to_string())),
     }
@@ -367,11 +373,21 @@ mod tests {
     fn routes_dispatch_with_the_right_failure_split() {
         assert_eq!(route("GET", "/v1/health").unwrap(), Route::Health);
         assert_eq!(route("GET", "/v1/stats?pretty=1").unwrap(), Route::Stats);
+        assert_eq!(route("GET", "/metrics").unwrap(), Route::Metrics);
+        assert_eq!(route("GET", "/v1/trace?n=32").unwrap(), Route::Trace);
         assert_eq!(route("POST", "/v1/completions").unwrap(), Route::Completions);
         // wrong verb on a known path is 405 with an Allow hint, not 404
         let e = route("POST", "/v1/health").unwrap_err();
         assert_eq!(e.status(), 405);
         assert_eq!(e, ApiError::MethodNotAllowed { allow: "GET" });
+        assert_eq!(
+            route("POST", "/metrics").unwrap_err(),
+            ApiError::MethodNotAllowed { allow: "GET" }
+        );
+        assert_eq!(
+            route("POST", "/v1/trace").unwrap_err(),
+            ApiError::MethodNotAllowed { allow: "GET" }
+        );
         let e = route("GET", "/v1/completions").unwrap_err();
         assert_eq!(e, ApiError::MethodNotAllowed { allow: "POST" });
         // unknown path is 404 regardless of verb

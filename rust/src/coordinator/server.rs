@@ -439,8 +439,8 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
         .map(|(id, st)| StreamLatency {
             stream: *id as usize,
             tokens: st.tokens,
-            p50_us: stats::percentile(&st.chunk_ns, 50.0) / 1e3,
-            p99_us: stats::percentile(&st.chunk_ns, 99.0) / 1e3,
+            p50_us: st.chunk_p_us(50.0),
+            p99_us: st.chunk_p_us(99.0),
         })
         .collect();
     DecodeReport {
@@ -485,6 +485,7 @@ pub fn run_decode_engine(cfg: &DecodeConfig) -> DecodeReport {
 /// idle shard workers whenever `--threads > 1`; `--no-prefill-fanout`
 /// pins prompt ingestion back onto the owner shard.
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    crate::util::log::init();
     match super::runtime_from(args) {
         Ok(rt) => serve_batched(&rt, args)?,
         Err(e) => {
@@ -568,6 +569,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 /// is a seeded `--layers`-deep hybrid stack under a `--vocab` embedding
 /// (`--schedule` as in `serve`).
 pub fn cmd_generate(args: &Args) -> Result<()> {
+    crate::util::log::init();
     let vocab = args.opt_usize("vocab", 256)?;
     let sessions = args.opt_usize("sessions", 4)?;
     let prompt_tokens = args.opt_usize("prompt-tokens", 128)?;

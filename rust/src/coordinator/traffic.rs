@@ -509,13 +509,26 @@ pub fn replay_over_http(
             e.prefix_len,
             None,
         );
-        let resp = http::http_post(addr, "/v1/completions", &[], body.to_string().as_bytes())?;
+        // a deterministic per-event request id, so trace spans from a
+        // replay correlate back to trace events without a lookup table
+        let rid = format!("replay-{}-{}", e.session, e.at_us);
+        let resp = http::http_post(
+            addr,
+            "/v1/completions",
+            &[("x-request-id", &rid)],
+            body.to_string().as_bytes(),
+        )?;
         anyhow::ensure!(
             resp.status == 200,
             "session {} got HTTP {}: {}",
             e.session,
             resp.status,
             String::from_utf8_lossy(&resp.body),
+        );
+        anyhow::ensure!(
+            resp.header("x-request-id") == Some(rid.as_str()),
+            "session {} response did not echo x-request-id '{rid}'",
+            e.session,
         );
         let tokens = if stream {
             // the terminal `done` record is the last data event before

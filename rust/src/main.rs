@@ -31,7 +31,9 @@ fn usage() -> ! {
                                         --d-ff --schedule); --temp 0 = greedy\n\
            serve-http                   HTTP edge over the engine (API.md): OpenAI-style\n\
                                         POST /v1/completions with SSE streaming, /v1/health,\n\
-                                        /v1/stats [--port P --max-inflight N --tenant-rate R]\n\
+                                        /v1/stats, Prometheus /metrics, and /v1/trace spans\n\
+                                        [--port P --max-inflight N --tenant-rate R]\n\
+                                        [--obs off|metrics|trace] (span capture level)\n\
                                         plus the generate model flags and the tiered-memory\n\
                                         flags [--spill-dir DIR --ram-blob-budget B\n\
                                         --no-prefix-cache]; --replay N [--over-http --stream\n\
@@ -44,6 +46,9 @@ fn usage() -> ! {
 }
 
 fn main() -> Result<()> {
+    // pin the log epoch before any work, so `[elapsed]` stamps measure
+    // from process start rather than from the first log call
+    ovq::util::log::init();
     let args = Args::from_env();
     match args.subcommand.as_str() {
         "smoke" => cmd_smoke(&args),

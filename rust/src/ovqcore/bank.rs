@@ -115,6 +115,19 @@ impl StreamStats {
         self.gen_chunks += 1;
         self.chunks
     }
+
+    /// Decode-chunk latency percentile over the recent window,
+    /// microseconds (NaN while the stream has no processed chunks) —
+    /// the per-session view `/v1/stats` reports.
+    pub fn chunk_p_us(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.chunk_ns, p) / 1e3
+    }
+
+    /// Per-prompt prefill latency percentile over the recent window,
+    /// microseconds (NaN while the stream has no completed prompts).
+    pub fn prefill_p_us(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.prefill_ns, p) / 1e3
+    }
 }
 
 /// Push a sample into a [`LATENCY_WINDOW`]-bounded ring. `count` is how

@@ -25,6 +25,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 
 use super::snapshot::SnapshotError;
+use crate::util::obs::Registry;
 
 /// Magic word framing every spilled blob on disk: `b"OVQD"` little-endian
 /// (`D` for the disk tier; snapshots themselves carry `b"OVQS"`).
@@ -58,6 +59,24 @@ pub struct TierStats {
     pub disk_restores: AtomicUsize,
     pub disk_bytes: AtomicUsize,
     pub disk_sessions: AtomicUsize,
+}
+
+impl TierStats {
+    /// Join a metrics registry as render-time views over these atomics
+    /// — the `/metrics` exposition reads the same storage `/v1/stats`
+    /// and the shard reports already use, no double counting.
+    pub fn register_metrics(self: &Arc<Self>, reg: &Registry) {
+        let views: [(&str, fn(&TierStats) -> usize); 4] = [
+            ("ovq_tier_spills_total", |t| t.spills.load(Ordering::Relaxed)),
+            ("ovq_tier_disk_restores_total", |t| t.disk_restores.load(Ordering::Relaxed)),
+            ("ovq_tier_disk_bytes", |t| t.disk_bytes.load(Ordering::Relaxed)),
+            ("ovq_tier_disk_sessions", |t| t.disk_sessions.load(Ordering::Relaxed)),
+        ];
+        for (name, read) in views {
+            let me = Arc::clone(self);
+            reg.gauge_fn(name, &[], move || read(&me) as f64);
+        }
+    }
 }
 
 /// Configuration for a shard's tiered store.
@@ -571,6 +590,22 @@ impl PrefixCache {
             misses: self.misses.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
             entries: self.entries.lock().unwrap().len(),
+        }
+    }
+
+    /// Join a metrics registry as render-time views (see
+    /// [`TierStats::register_metrics`]; `register` is already taken by
+    /// template registration above).
+    pub fn register_metrics(self: &Arc<Self>, reg: &Registry) {
+        let views: [(&str, fn(&PrefixCache) -> usize); 4] = [
+            ("ovq_prefix_hits_total", |c| c.hits.load(Ordering::Relaxed)),
+            ("ovq_prefix_misses_total", |c| c.misses.load(Ordering::Relaxed)),
+            ("ovq_prefix_bytes", |c| c.bytes.load(Ordering::Relaxed)),
+            ("ovq_prefix_entries", |c| c.entries.lock().unwrap().len()),
+        ];
+        for (name, read) in views {
+            let me = Arc::clone(self);
+            reg.gauge_fn(name, &[], move || read(&me) as f64);
         }
     }
 }

@@ -11,6 +11,14 @@ pub fn set_level(level: u8) {
     LEVEL.store(level, Ordering::Relaxed);
 }
 
+/// Pin the timestamp epoch to *now*. Call this first thing in main (and
+/// server startup) so log timestamps measure from process start — without
+/// it, `START` is lazily pinned by the first log line and every timestamp
+/// is skewed by however long startup took before that line.
+pub fn init() {
+    let _ = START.set(Instant::now());
+}
+
 pub fn elapsed() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
@@ -18,6 +26,19 @@ pub fn elapsed() -> f64 {
 pub fn log(level: u8, tag: &str, msg: &str) {
     if level <= LEVEL.load(Ordering::Relaxed) {
         eprintln!("[{:9.3}s] {:5} {}", elapsed(), tag, msg);
+    }
+}
+
+/// Like [`log`], with the request id attached as a structured `req=` field
+/// — the serving edge's per-request log form. Suppressed (falls back to
+/// the plain form without the id) when observability is `--obs off`.
+pub fn log_req(level: u8, tag: &str, req: &str, msg: &str) {
+    if level <= LEVEL.load(Ordering::Relaxed) {
+        if crate::util::obs::level() == crate::util::obs::ObsLevel::Off {
+            eprintln!("[{:9.3}s] {:5} {}", elapsed(), tag, msg);
+        } else {
+            eprintln!("[{:9.3}s] {:5} req={} {}", elapsed(), tag, req, msg);
+        }
     }
 }
 
@@ -34,4 +55,36 @@ macro_rules! debug {
 #[macro_export]
 macro_rules! error {
     ($($arg:tt)*) => { $crate::util::log::log(0, "ERROR", &format!($($arg)*)) };
+}
+
+/// `info!` with a leading request-id field: `info_req!(rid, "fmt", ...)`.
+#[macro_export]
+macro_rules! info_req {
+    ($req:expr, $($arg:tt)*) => {
+        $crate::util::log::log_req(1, "INFO", $req, &format!($($arg)*))
+    };
+}
+
+/// `debug!` with a leading request-id field: `debug_req!(rid, "fmt", ...)`.
+#[macro_export]
+macro_rules! debug_req {
+    ($req:expr, $($arg:tt)*) => {
+        $crate::util::log::log_req(2, "DEBUG", $req, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotonic_from_init() {
+        init(); // idempotent — a second init elsewhere is a no-op
+        let a = elapsed();
+        let b = elapsed();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+        init();
+        assert!(elapsed() >= b);
+    }
 }

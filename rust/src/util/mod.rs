@@ -6,6 +6,7 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod log;
+pub mod obs;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,926 @@
+//! Dependency-light observability: a lock-free metrics registry (atomic
+//! counters, gauges, and log-bucketed latency histograms), bounded
+//! per-shard trace-span rings, and Prometheus text exposition — std only.
+//!
+//! Cost contract (see DESIGN.md "Observability"): recording a histogram
+//! sample is a 6-step binary search over 63 static bucket bounds plus
+//! three relaxed atomic adds; recording a trace span is one push into a
+//! bounded, shard-local ring behind an uncontended mutex, and happens
+//! only at [`ObsLevel::Trace`]. Spans record wall-clock time but never
+//! feed computation, so the engine's bit-identity goldens hold at every
+//! `--obs` level.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// observability level
+// ---------------------------------------------------------------------------
+
+/// How much the serving stack records: `Off` disables spans and the
+/// request-id log field, `Metrics` (default) keeps the registry live,
+/// `Trace` additionally captures per-stage spans into the trace rings.
+/// Histogram/counter recording is always on — the registry is the source
+/// of truth for `/v1/stats` and the end-of-run reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObsLevel {
+    Off,
+    Metrics,
+    Trace,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=off 1=metrics 2=trace
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> Result<ObsLevel, String> {
+        match s {
+            "off" => Ok(ObsLevel::Off),
+            "metrics" => Ok(ObsLevel::Metrics),
+            "trace" => Ok(ObsLevel::Trace),
+            other => Err(format!("unknown obs level '{other}' (want off|metrics|trace)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Metrics => "metrics",
+            ObsLevel::Trace => "trace",
+        }
+    }
+}
+
+pub fn set_level(level: ObsLevel) {
+    let v = match level {
+        ObsLevel::Off => 0,
+        ObsLevel::Metrics => 1,
+        ObsLevel::Trace => 2,
+    };
+    LEVEL.store(v, Ordering::Relaxed);
+}
+
+pub fn level() -> ObsLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => ObsLevel::Off,
+        2 => ObsLevel::Trace,
+        _ => ObsLevel::Metrics,
+    }
+}
+
+/// One relaxed load — the decode hot path's only obligation when spans
+/// are not being captured.
+#[inline]
+pub fn trace_enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) == 2
+}
+
+/// Serializes tests that flip the global obs level: the level is
+/// process-wide state, so concurrent set/restore pairs in parallel unit
+/// tests would make span-capture assertions flaky.
+#[cfg(test)]
+pub(crate) fn test_level_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// request ids
+// ---------------------------------------------------------------------------
+
+static NEXT_REQ: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a fresh process-unique request id (the HTTP edge echoes it as
+/// `x-request-id` in hex).
+pub fn next_request_id() -> u64 {
+    NEXT_REQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Fold a client-supplied `x-request-id` string to the u64 the trace
+/// spans carry (FNV-1a; the original string is still echoed verbatim).
+pub fn hash_request_id(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// counters and gauges
+// ---------------------------------------------------------------------------
+
+/// Monotone event counter; clone shares the underlying atomic.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, inflight requests).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// log-bucketed histograms
+// ---------------------------------------------------------------------------
+
+/// Bucket count: 63 finite log-spaced upper bounds plus one overflow
+/// bucket. Bounds grow by 2^(2/3) from 1, so values from 1 ns to ~48 min
+/// land in a finite bucket — bounded memory for any latency the serving
+/// path can plausibly produce, with ~26% worst-case relative error.
+pub const HIST_BUCKETS: usize = 64;
+
+/// The shared finite upper bounds (`le` values); bucket `i` holds
+/// `bounds[i-1] < v <= bounds[i]`, bucket 63 is the +Inf overflow.
+pub fn bucket_bounds() -> &'static [f64; HIST_BUCKETS - 1] {
+    static BOUNDS: OnceLock<[f64; HIST_BUCKETS - 1]> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut b = [0.0; HIST_BUCKETS - 1];
+        for (i, slot) in b.iter_mut().enumerate() {
+            *slot = 2f64.powf(i as f64 * 2.0 / 3.0);
+        }
+        b
+    })
+}
+
+/// Index of the bucket containing `v` (binary search on the monotone
+/// predicate, so the bucket's bounds always contain the value exactly).
+pub fn bucket_index(v: f64) -> usize {
+    bucket_bounds().partition_point(|&b| b < v)
+}
+
+#[derive(Debug)]
+struct HistInner {
+    counts: [AtomicU64; HIST_BUCKETS],
+    /// Accumulated in integer units (the histograms store nanoseconds),
+    /// so the sum needs no CAS loop.
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-size log-bucketed histogram; p50/p99 come from bounded memory
+/// instead of an unbounded `Vec<f64>`. Clone shares the buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(HistInner {
+            counts: [const { AtomicU64::new(0) }; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample. Non-finite or negative inputs clamp to zero
+    /// (bucket 0) rather than poisoning the distribution.
+    pub fn record(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let i = bucket_index(v);
+        self.0.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v as u64, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self
+            .0
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        HistSnapshot {
+            counts,
+            sum: self.0.sum.load(Ordering::Relaxed) as f64,
+            count: self.0.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a histogram; merges across shards/label sets
+/// are exact because every histogram shares the same bucket bounds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile with linear interpolation inside the winning bucket.
+    /// Uses the same rank convention as `stats::percentile` (rank =
+    /// p/100 * (n-1)), so the result is within one bucket-width of the
+    /// exact sample percentile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let bounds = bucket_bounds();
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let hi = seen + c;
+            // rank falls inside this bucket's run of samples
+            if rank < hi as f64 || i == self.counts.len() - 1 {
+                let lower = if i == 0 { 0.0 } else { bounds[i - 1] };
+                let upper = if i < bounds.len() {
+                    bounds[i]
+                } else {
+                    // overflow bucket: report its lower bound rather
+                    // than inventing an upper one
+                    return bounds[bounds.len() - 1];
+                };
+                let w = ((rank - seen as f64 + 1.0) / c as f64).clamp(0.0, 1.0);
+                return lower + (upper - lower) * w;
+            }
+            seen = hi;
+        }
+        bounds[bounds.len() - 1]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    /// Render-time view over state owned elsewhere (e.g. `TierStats`
+    /// atomics) — lets existing report structs join the registry without
+    /// duplicating their storage.
+    GaugeFn(Arc<dyn Fn() -> f64 + Send + Sync>),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) | Metric::GaugeFn(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// Metric registry: typed handles registered by name + labels. Handles
+/// are lock-free atomics; the mutex guards only registration and
+/// render-time iteration, never the record path.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn owned(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+        labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    /// Register (or fetch the existing handle for) a counter.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let want = Self::owned(labels);
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && e.labels == want {
+                if let Metric::Counter(c) = &e.metric {
+                    return c.clone();
+                }
+            }
+        }
+        let c = Counter::default();
+        es.push(Entry { name: name.to_string(), labels: want, metric: Metric::Counter(c.clone()) });
+        c
+    }
+
+    /// Register (or fetch the existing handle for) a gauge.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let want = Self::owned(labels);
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && e.labels == want {
+                if let Metric::Gauge(g) = &e.metric {
+                    return g.clone();
+                }
+            }
+        }
+        let g = Gauge::default();
+        es.push(Entry { name: name.to_string(), labels: want, metric: Metric::Gauge(g.clone()) });
+        g
+    }
+
+    /// Register a render-time gauge view (idempotent by name+labels: a
+    /// second registration replaces the first closure).
+    pub fn gauge_fn<F>(&self, name: &str, labels: &[(&str, &str)], f: F)
+    where
+        F: Fn() -> f64 + Send + Sync + 'static,
+    {
+        let want = Self::owned(labels);
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter_mut() {
+            if e.name == name && e.labels == want {
+                if matches!(e.metric, Metric::GaugeFn(_)) {
+                    e.metric = Metric::GaugeFn(Arc::new(f));
+                    return;
+                }
+            }
+        }
+        es.push(Entry {
+            name: name.to_string(),
+            labels: want,
+            metric: Metric::GaugeFn(Arc::new(f)),
+        });
+    }
+
+    /// Register (or fetch the existing handle for) a histogram.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        let want = Self::owned(labels);
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && e.labels == want {
+                if let Metric::Histogram(h) = &e.metric {
+                    return h.clone();
+                }
+            }
+        }
+        let h = Histogram::new();
+        es.push(Entry {
+            name: name.to_string(),
+            labels: want,
+            metric: Metric::Histogram(h.clone()),
+        });
+        h
+    }
+
+    /// Merged snapshot of every histogram registered under `name`
+    /// (across all label sets) — the percentile source for the reports.
+    pub fn histogram_snapshot(&self, name: &str) -> HistSnapshot {
+        let es = self.entries.lock().unwrap();
+        let mut snap = HistSnapshot::default();
+        for e in es.iter() {
+            if e.name == name {
+                if let Metric::Histogram(h) = &e.metric {
+                    snap.merge(&h.snapshot());
+                }
+            }
+        }
+        snap
+    }
+
+    fn fmt_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+        let mut parts: Vec<String> = labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+            .collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (one `# TYPE` line per metric name, `_bucket`/`_sum`/`_count`
+    /// series for histograms).
+    pub fn render_prometheus(&self) -> String {
+        let es = self.entries.lock().unwrap();
+        let mut out = String::new();
+        let mut typed: Vec<&str> = Vec::new();
+        for e in es.iter() {
+            if !typed.contains(&e.name.as_str()) {
+                typed.push(&e.name);
+                out.push_str(&format!("# TYPE {} {}\n", e.name, e.metric.type_name()));
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        e.name,
+                        Self::fmt_labels(&e.labels, None),
+                        c.get()
+                    ));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        e.name,
+                        Self::fmt_labels(&e.labels, None),
+                        g.get()
+                    ));
+                }
+                Metric::GaugeFn(f) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        e.name,
+                        Self::fmt_labels(&e.labels, None),
+                        f()
+                    ));
+                }
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    let bounds = bucket_bounds();
+                    let mut cum = 0u64;
+                    for (i, c) in snap.counts.iter().enumerate() {
+                        cum += c;
+                        let le = if i < bounds.len() {
+                            format!("{}", bounds[i])
+                        } else {
+                            "+Inf".to_string()
+                        };
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            e.name,
+                            Self::fmt_labels(&e.labels, Some(("le", &le))),
+                            cum
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        e.name,
+                        Self::fmt_labels(&e.labels, None),
+                        snap.sum
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        e.name,
+                        Self::fmt_labels(&e.labels, None),
+                        snap.count
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace spans
+// ---------------------------------------------------------------------------
+
+/// Pipeline stage a span was recorded from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Admission,
+    Queue,
+    Prefill,
+    Segment,
+    PrefixFork,
+    Decode,
+    Sample,
+}
+
+impl Stage {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::Prefill => "prefill",
+            Stage::Segment => "segment",
+            Stage::PrefixFork => "prefix_fork",
+            Stage::Decode => "decode",
+            Stage::Sample => "sample",
+        }
+    }
+}
+
+/// One recorded stage: request id, session, stage, owning shard, and
+/// start/duration in microseconds relative to the trace epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub req: u64,
+    pub session: u64,
+    pub stage: Stage,
+    pub shard: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("req", Json::Str(format!("{:x}", self.req))),
+            ("session", Json::Num(self.session as f64)),
+            ("stage", Json::Str(self.stage.as_str().to_string())),
+            ("shard", Json::Num(self.shard as f64)),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+        ])
+    }
+}
+
+/// Bounded span ring: at capacity the oldest span is dropped, so memory
+/// stays fixed under sustained traffic.
+pub struct TraceRing {
+    cap: usize,
+    buf: Mutex<VecDeque<Span>>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap: cap.max(1), buf: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn push(&self, s: Span) {
+        let mut b = self.buf.lock().unwrap();
+        if b.len() == self.cap {
+            b.pop_front();
+        }
+        b.push_back(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.buf.lock().unwrap().iter().copied().collect()
+    }
+}
+
+/// Per-shard trace rings sharing one epoch. Shard workers push into
+/// their own ring (uncontended); `dump` merges and time-sorts for
+/// `GET /v1/trace`.
+pub struct Trace {
+    rings: Vec<TraceRing>,
+    t0: Instant,
+}
+
+/// Default per-shard span capacity (spans are 48 bytes, so the default
+/// bound is ~25 KiB per shard).
+pub const TRACE_RING_CAP: usize = 512;
+
+impl Trace {
+    pub fn new(shards: usize, cap_per_shard: usize) -> Trace {
+        Trace {
+            rings: (0..shards.max(1)).map(|_| TraceRing::new(cap_per_shard)).collect(),
+            t0: Instant::now(),
+        }
+    }
+
+    /// Microseconds since the trace epoch — span start timestamps.
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Record a span into `shard`'s ring. No-op below `Trace` level.
+    pub fn push(&self, shard: usize, span: Span) {
+        if !trace_enabled() {
+            return;
+        }
+        self.rings[shard % self.rings.len()].push(span);
+    }
+
+    /// Last `n` spans across all shards, ordered by start time.
+    pub fn dump(&self, n: usize) -> Vec<Span> {
+        let mut all: Vec<Span> = self.rings.iter().flat_map(|r| r.snapshot()).collect();
+        all.sort_by_key(|s| (s.start_us, s.dur_us, s.shard));
+        if all.len() > n {
+            all.drain(..all.len() - n);
+        }
+        all
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-request timing summary
+// ---------------------------------------------------------------------------
+
+/// Wall-clock split of one completion, reported in the blocking response
+/// and the SSE `done` record. All fields are microseconds; integer so
+/// the carrying enums keep their derived `Eq`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Timing {
+    /// Submission until the first shard dispatch picked the request up.
+    pub queue_us: u64,
+    /// Time spent in prompt prefill (incl. fan-out and prefix fork).
+    pub prefill_us: u64,
+    /// Time spent in decode + sampling quanta.
+    pub decode_us: u64,
+    /// Submission until the completion was sent.
+    pub total_us: u64,
+}
+
+impl Timing {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_us", Json::Num(self.queue_us as f64)),
+            ("prefill_us", Json::Num(self.prefill_us as f64)),
+            ("decode_us", Json::Num(self.decode_us as f64)),
+            ("total_us", Json::Num(self.total_us as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::stats;
+
+    #[test]
+    fn level_parses_and_round_trips() {
+        for s in ["off", "metrics", "trace"] {
+            assert_eq!(ObsLevel::parse(s).unwrap().as_str(), s);
+        }
+        assert!(ObsLevel::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_hashing_is_stable() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert_ne!(a, b);
+        assert_eq!(hash_request_id("abc"), hash_request_id("abc"));
+        assert_ne!(hash_request_id("abc"), hash_request_id("abd"));
+    }
+
+    #[test]
+    fn every_recorded_value_lands_in_its_containing_bucket() {
+        // property: for any positive magnitude, the chosen bucket's
+        // bounds actually contain the value
+        Prop::new(0x0b5_0001).cases(500).check(|case| {
+            let exp = case.rng.f64() * 50.0 - 4.0; // 2^-4 .. 2^46
+            let v = 2f64.powf(exp);
+            let i = bucket_index(v);
+            let bounds = bucket_bounds();
+            let lower = if i == 0 { 0.0 } else { bounds[i - 1] };
+            if v <= lower {
+                return Err(format!("v={v} at bucket {i} not above lower {lower}"));
+            }
+            if i < bounds.len() && v > bounds[i] {
+                return Err(format!("v={v} at bucket {i} above upper {}", bounds[i]));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merged_percentiles_stay_within_one_bucket_width_of_exact() {
+        Prop::new(0x0b5_0002).cases(60).check(|case| {
+            let n = 2 + case.rng.usize_below(400);
+            let xs: Vec<f64> = (0..n)
+                .map(|_| 2f64.powf(case.rng.f64() * 30.0))
+                .collect();
+            // split the sample across two histograms, then merge — the
+            // merged snapshot must agree with the whole-sample exact
+            // percentile to within the winning bucket's width
+            let (ha, hb) = (Histogram::new(), Histogram::new());
+            for (i, &x) in xs.iter().enumerate() {
+                if i % 2 == 0 { ha.record(x) } else { hb.record(x) };
+            }
+            let mut snap = ha.snapshot();
+            snap.merge(&hb.snapshot());
+            let bounds = bucket_bounds();
+            let mut sorted = xs.clone();
+            sorted.sort_by(f64::total_cmp);
+            for p in [0.0, 50.0, 90.0, 99.0, 100.0] {
+                let approx = snap.percentile(p);
+                // the sample at the histogram's rank convention — the
+                // approx percentile must land inside (within) the bucket
+                // containing it, i.e. within one bucket-width of the
+                // exact sample percentile at that rank
+                let rank = (p / 100.0) * (n - 1) as f64;
+                let exact = sorted[rank.floor() as usize];
+                let i = bucket_index(exact);
+                let lower = if i == 0 { 0.0 } else { bounds[i - 1] };
+                let upper = if i < bounds.len() { bounds[i] } else { f64::MAX };
+                if approx < lower - 1e-9 || approx > upper + 1e-9 {
+                    return Err(format!(
+                        "p{p}: approx {approx} outside bucket [{lower}, {upper}] \
+                         of exact rank sample {exact} (n={n})"
+                    ));
+                }
+                // and the interpolated stats::percentile stays within the
+                // bucket span bridging its two neighbouring samples
+                let full = stats::percentile(&xs, p);
+                let hi_s = sorted[rank.ceil() as usize];
+                let hi_i = bucket_index(hi_s);
+                let hi_up = if hi_i < bounds.len() { bounds[hi_i] } else { f64::MAX };
+                if (approx - full).abs() > (hi_up - lower) + 1e-9 {
+                    return Err(format!(
+                        "p{p}: approx {approx} vs interpolated {full} beyond \
+                         bridged bucket span (n={n})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn histogram_snapshot_counts_and_sum_are_exact() {
+        let h = Histogram::new();
+        for v in [1.0, 10.0, 100.0, 1000.0] {
+            h.record(v);
+        }
+        h.record(f64::NAN); // clamps to 0, still counted
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1111.0);
+        assert_eq!(s.counts.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn trace_ring_wraps_keeping_the_newest_spans_in_order() {
+        let ring = TraceRing::new(8);
+        let span = |i: u64| Span {
+            req: i,
+            session: 7,
+            stage: Stage::Decode,
+            shard: 0,
+            start_us: i,
+            dur_us: 1,
+        };
+        for i in 0..20 {
+            ring.push(span(i));
+        }
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 8);
+        let want: Vec<u64> = (12..20).collect();
+        assert_eq!(got.iter().map(|s| s.req).collect::<Vec<_>>(), want);
+    }
+
+    #[test]
+    fn trace_dump_merges_shards_sorted_by_start() {
+        let _guard = test_level_lock();
+        let prev = level();
+        set_level(ObsLevel::Trace);
+        let tr = Trace::new(2, 16);
+        for i in 0..10u64 {
+            let span = Span {
+                req: i,
+                session: i,
+                stage: Stage::Queue,
+                shard: (i % 2) as u32,
+                start_us: 100 - i, // pushed in reverse start order
+                dur_us: 1,
+            };
+            tr.push((i % 2) as usize, span);
+        }
+        let got = tr.dump(6);
+        set_level(prev);
+        assert_eq!(got.len(), 6);
+        for w in got.windows(2) {
+            assert!(w[0].start_us <= w[1].start_us);
+        }
+    }
+
+    #[test]
+    fn concurrent_hammer_loses_no_updates() {
+        let reg = Registry::new();
+        let c = reg.counter("ovq_hammer_total", &[]);
+        let h = reg.histogram("ovq_hammer_ns", &[]);
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let (c, h) = (c.clone(), h.clone());
+                scope.spawn(move || {
+                    for i in 0..10_000u64 {
+                        c.inc();
+                        h.record((t * 10_000 + i) as f64 % 997.0 + 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 40_000);
+        let s = reg.histogram_snapshot("ovq_hammer_ns");
+        assert_eq!(s.count, 40_000);
+        assert_eq!(s.counts.iter().sum::<u64>(), 40_000);
+    }
+
+    #[test]
+    fn registry_handles_are_idempotent_by_name_and_labels() {
+        let reg = Registry::new();
+        let a = reg.counter("ovq_x_total", &[("route", "a")]);
+        let b = reg.counter("ovq_x_total", &[("route", "a")]);
+        let other = reg.counter("ovq_x_total", &[("route", "b")]);
+        a.inc();
+        b.inc();
+        other.inc();
+        assert_eq!(a.get(), 2);
+        assert_eq!(other.get(), 1);
+    }
+
+    #[test]
+    fn prometheus_rendering_emits_typed_series() {
+        let reg = Registry::new();
+        reg.counter("ovq_req_total", &[("route", "completions")]).add(3);
+        reg.gauge("ovq_inflight", &[]).set(2);
+        reg.gauge_fn("ovq_view", &[], || 1.5);
+        let h = reg.histogram("ovq_lat_ns", &[("stage", "decode")]);
+        h.record(5.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE ovq_req_total counter"));
+        assert!(text.contains("ovq_req_total{route=\"completions\"} 3"));
+        assert!(text.contains("ovq_inflight 2"));
+        assert!(text.contains("ovq_view 1.5"));
+        assert!(text.contains("# TYPE ovq_lat_ns histogram"));
+        assert!(text.contains("le=\"+Inf\""));
+        assert!(text.contains("ovq_lat_ns_sum{stage=\"decode\"} 5"));
+        assert!(text.contains("ovq_lat_ns_count{stage=\"decode\"} 1"));
+        // cumulative bucket counts end at the total
+        let last_bucket = text
+            .lines()
+            .filter(|l| l.starts_with("ovq_lat_ns_bucket"))
+            .last()
+            .unwrap();
+        assert!(last_bucket.ends_with(" 1"));
+    }
+
+    #[test]
+    fn timing_serializes_every_field() {
+        let t = Timing { queue_us: 1, prefill_us: 2, decode_us: 3, total_us: 6 };
+        let j = t.to_json();
+        for k in ["queue_us", "prefill_us", "decode_us", "total_us"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+}

@@ -17,12 +17,14 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on the sorted copy; p in [0, 100].
+/// Sorted with `total_cmp`, so a stray NaN latency sorts last instead of
+/// panicking the reporting path.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -95,6 +97,16 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_inputs() {
+        // regression: partial_cmp().unwrap() used to panic here; with
+        // total_cmp the NaN sorts last and the low percentiles stay sane
+        let xs = [4.0, f64::NAN, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use ovq::ovqcore::lm::{LmConfig, TokenId};
 use ovq::ovqcore::memstate::parse_schedule;
 use ovq::ovqcore::stack::StackConfig;
 use ovq::util::json::Json;
+use ovq::util::obs::{self, ObsLevel};
 
 const VOCAB: usize = 32;
 const DATA_SEED: u64 = 0xDA7A;
@@ -390,6 +391,169 @@ fn tenant_rate_limit_sheds_429_rate_limited_per_tenant() {
 
     let stats = http::http_get(server.addr(), "/v1/stats").unwrap().json().unwrap();
     assert_eq!(stats.at(&["shed", "rate_limited"]).and_then(|v| v.as_u64()), Some(1));
+    server.stop();
+    engine.finish();
+}
+
+// ---------------------------------------------------------- observability
+
+/// Assert one line of Prometheus text exposition is well formed: a
+/// `# TYPE <name> <kind>` comment or a `<series> <value>` sample whose
+/// value parses as a float and whose metric name is a legal identifier.
+fn assert_prometheus_line(line: &str) {
+    if let Some(rest) = line.strip_prefix("# TYPE ") {
+        let mut it = rest.split_whitespace();
+        let name = it.next().expect("TYPE line names a metric");
+        let kind = it.next().expect("TYPE line declares a kind");
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name in {line:?}",
+        );
+        assert!(
+            ["counter", "gauge", "histogram"].contains(&kind),
+            "unknown metric kind in {line:?}",
+        );
+        assert!(it.next().is_none(), "trailing tokens in {line:?}");
+        return;
+    }
+    assert!(!line.starts_with('#'), "unexpected comment form {line:?}");
+    let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+        panic!("sample line {line:?} has no value");
+    });
+    assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+    let name = series.split('{').next().unwrap();
+    assert!(
+        !name.is_empty()
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+        "bad series name in {line:?}",
+    );
+    if series.contains('{') {
+        assert!(series.ends_with('}'), "unterminated label set in {line:?}");
+    }
+}
+
+#[test]
+fn metrics_endpoint_serves_well_formed_prometheus_text() {
+    // the scrape contract: after real traffic, EVERY line of GET /metrics
+    // parses as Prometheus text exposition, and the engine histograms +
+    // edge counters are all present with the values the traffic implies
+    let engine = lm_engine(2);
+    let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+    for s in 0..3u64 {
+        let r = http::http_post(
+            server.addr(),
+            "/v1/completions",
+            &[],
+            greedy_body(s, 6, 4).as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(r.status, 200);
+    }
+
+    let resp = http::http_get(server.addr(), "/metrics").unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(
+        resp.header("content-type").unwrap().starts_with("text/plain"),
+        "metrics must be text exposition, got {:?}",
+        resp.header("content-type"),
+    );
+    let text = String::from_utf8(resp.body.clone()).unwrap();
+    for line in text.lines().filter(|l| !l.is_empty()) {
+        assert_prometheus_line(line);
+    }
+    for want in [
+        "# TYPE ovq_completion_ns histogram",
+        "# TYPE ovq_ttft_ns histogram",
+        "ovq_completions_total 3",
+        "ovq_http_completions_total 3",
+        "ovq_http_requests_total",
+        "ovq_queue_depth{shard=\"0\"}",
+        "ovq_prefix_hits_total",
+        "ovq_tier_spills_total",
+    ] {
+        assert!(text.contains(want), "metrics output lacks {want:?}:\n{text}");
+    }
+    // histogram series must carry the cumulative +Inf bucket
+    assert!(text.contains("ovq_completion_ns_bucket{le=\"+Inf\"} 3"), "{text}");
+    server.stop();
+    engine.finish();
+}
+
+#[test]
+fn trace_endpoint_orders_spans_and_request_ids_propagate() {
+    // the tracing contract over a real socket: at --obs trace a
+    // completion's spans land in /v1/trace start-ordered, covering the
+    // pipeline stages, all carrying the id hashed from the client's
+    // x-request-id header — which the response (blocking and SSE) echoes
+    // verbatim alongside a consistent timing object.
+    obs::set_level(ObsLevel::Trace);
+    let engine = lm_engine(2);
+    let server = HttpServer::start(HttpConfig::default(), engine.handle()).unwrap();
+
+    let prompt = traffic::synth_tokens(DATA_SEED, 5, 10, VOCAB);
+    let stop = StopCriteria::max_new(5);
+    let body = http::completion_body(Some(5), &prompt, &SamplingParams::greedy(), &stop, false);
+    let resp = http::http_post(
+        server.addr(),
+        "/v1/completions",
+        &[("x-request-id", "e2e-trace-1")],
+        body.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-request-id"), Some("e2e-trace-1"), "echo is verbatim");
+    let j = resp.json().unwrap();
+    let t = |k: &str| j.at(&["timing", k]).unwrap().as_u64().unwrap();
+    assert!(
+        t("queue_us") + t("prefill_us") + t("decode_us") <= t("total_us"),
+        "timing parts exceed the total",
+    );
+
+    // an SSE stream echoes the id on the head and times the done record
+    let sse_body =
+        http::completion_body(Some(6), &prompt, &SamplingParams::greedy(), &stop, true);
+    let sse = http::http_post(
+        server.addr(),
+        "/v1/completions",
+        &[("x-request-id", "e2e-trace-2")],
+        sse_body.to_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(sse.header("x-request-id"), Some("e2e-trace-2"));
+    let data = sse.sse_data();
+    let done = ovq::util::json::parse(&data[data.len() - 2]).unwrap();
+    assert!(
+        done.at(&["timing", "total_us"]).and_then(|v| v.as_u64()).is_some(),
+        "SSE done record lacks timing: {done}",
+    );
+
+    let trace = http::http_get(server.addr(), "/v1/trace?n=256").unwrap();
+    assert_eq!(trace.status, 200);
+    let tj = trace.json().unwrap();
+    assert_eq!(tj.get("object").unwrap().as_str(), Some("ovq.trace"));
+    let spans = tj.get("spans").unwrap().as_arr().unwrap().to_vec();
+    assert!(!spans.is_empty(), "trace level must capture spans");
+    let starts: Vec<u64> =
+        spans.iter().map(|s| s.get("start_us").unwrap().as_u64().unwrap()).collect();
+    assert!(starts.windows(2).all(|w| w[0] <= w[1]), "spans must be start-ordered");
+
+    let want_req = format!("{:x}", obs::hash_request_id("e2e-trace-1"));
+    let mine: Vec<&Json> = spans
+        .iter()
+        .filter(|s| s.get("req").unwrap().as_str() == Some(want_req.as_str()))
+        .collect();
+    assert!(!mine.is_empty(), "no spans carry the hashed client request id");
+    let stages: Vec<&str> =
+        mine.iter().filter_map(|s| s.get("stage").unwrap().as_str()).collect();
+    for want in ["admission", "queue", "prefill", "sample"] {
+        assert!(stages.contains(&want), "stage {want} missing from {stages:?}");
+    }
+    assert!(
+        mine.iter().all(|s| s.get("session").unwrap().as_u64() == Some(5)),
+        "request spans must all carry the request's session",
+    );
+
+    obs::set_level(ObsLevel::Metrics);
     server.stop();
     engine.finish();
 }
